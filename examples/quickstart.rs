@@ -1,0 +1,73 @@
+//! Quickstart: the full ZeRO-topo API in one file.
+//!
+//! 1. Describe the cluster (Frontier nodes) and resolve a sharding scheme.
+//! 2. Inspect the per-device memory the scheme costs.
+//! 3. Predict throughput with the analytical simulator.
+//! 4. Train a tiny GPT for a few steps with REAL numerics: AOT-compiled
+//!    JAX/Pallas HLO executed via PJRT, quantized collectives in Rust.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`)
+
+use zero_topo::config::RunConfig;
+use zero_topo::engine::TrainEngine;
+use zero_topo::memory::MemoryModel;
+use zero_topo::model::TransformerSpec;
+use zero_topo::runtime::Runtime;
+use zero_topo::sharding::{Scheme, ShardingSpec};
+use zero_topo::sim::{simulate_step, SimConfig};
+use zero_topo::topology::Cluster;
+use zero_topo::util::table::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. cluster + scheme -------------------------------------------
+    let cluster = Cluster::frontier(2); // 2 nodes = 16 GCDs
+    let scheme = Scheme::ZeroTopo { sec_degree: 2 };
+    let spec = ShardingSpec::resolve(scheme, &cluster)?;
+    println!(
+        "{} on {} GCDs: weights/{} grads/{} optim/{} (secondary {})",
+        scheme.name(),
+        cluster.world_size(),
+        spec.weights,
+        spec.grads,
+        spec.optim,
+        spec.secondary
+    );
+
+    // --- 2. memory story ------------------------------------------------
+    let model = TransformerSpec::neox20b();
+    let mm = MemoryModel::new(scheme, spec);
+    let m = mm.per_device(model.n_params() as f64);
+    println!(
+        "{}: per-GCD weights {} + secondary {} + grads {} + optim {} = {}",
+        model.name,
+        human_bytes(m.weights),
+        human_bytes(m.secondary),
+        human_bytes(m.grads),
+        human_bytes(m.optim),
+        human_bytes(m.total())
+    );
+
+    // --- 3. throughput prediction ---------------------------------------
+    let sim = SimConfig::default();
+    let b = simulate_step(&model, scheme, &Cluster::frontier(48), &sim);
+    println!(
+        "predicted @384 GCDs: step {:.1}s (compute {:.1}s, gather {:.1}s, grad-sync {:.1}s)",
+        b.step_s, b.compute_s, b.prefetchable_s, b.grad_sync_s
+    );
+
+    // --- 4. real training ------------------------------------------------
+    let rt = Runtime::load(Runtime::default_dir())?;
+    let runner = rt.model("tiny")?;
+    let cfg = RunConfig { model: "tiny".into(), scheme, nodes: 1, steps: 5, ..Default::default() };
+    let mut engine = TrainEngine::new(cfg, &runner)?;
+    println!("training 'tiny' ({} params) on 8 simulated GCDs:", runner.manifest.n_params);
+    for s in 0..5 {
+        let loss = engine.step()?;
+        println!("  step {} loss {:.4}", s + 1, loss);
+    }
+    let first = engine.log.losses.first().unwrap().loss;
+    let last = engine.log.losses.last().unwrap().loss;
+    anyhow::ensure!(last < first, "loss should decrease ({first:.4} -> {last:.4})");
+    println!("loss decreased {:.4} -> {:.4}; comm(sim) {:.6}s  OK", first, last, engine.comm_seconds());
+    Ok(())
+}

@@ -1,0 +1,182 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO *text* artifacts for the
+Rust runtime.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Python runs ONLY here (`make artifacts`); the Rust binary is self-contained
+afterwards.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--configs tiny,mini,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels import attention as A
+from compile.kernels import quant as Q
+
+QUANT_N = 65536  # element count baked into the exported quant graphs
+QUANT_BLOCK = Q.DEFAULT_BLOCK
+ATTN_SHAPE = (4, 128, 32)  # (heads, seq, head_dim) for the fused-attn artifact
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(out_dir: str, fname: str, text: str) -> str:
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    return fname
+
+
+def lower_model(cfg: M.ModelConfig, out_dir: str) -> dict:
+    n = M.n_params(cfg)
+    tok = jax.ShapeDtypeStruct((cfg.mbs, cfg.seq), jnp.int32)
+    flat = jax.ShapeDtypeStruct((n,), jnp.float32)
+    seed = jax.ShapeDtypeStruct((), jnp.int32)
+
+    init = jax.jit(functools.partial(M.init_params, cfg=cfg)).lower(seed)
+    train = jax.jit(functools.partial(M.train_step, cfg=cfg)).lower(flat, tok, tok)
+    evalf = jax.jit(functools.partial(M.loss_fn, cfg=cfg)).lower(flat, tok, tok)
+
+    artifacts = {
+        "init": _write(out_dir, f"init_{cfg.name}.hlo.txt", to_hlo_text(init)),
+        "train_step": _write(out_dir, f"train_{cfg.name}.hlo.txt", to_hlo_text(train)),
+        "eval_loss": _write(out_dir, f"eval_{cfg.name}.hlo.txt", to_hlo_text(evalf)),
+    }
+
+    params, off = [], 0
+    for name, shape in M.param_specs(cfg):
+        size = math.prod(shape)
+        params.append({"name": name, "shape": list(shape), "offset": off, "size": size})
+        off += size
+
+    return {
+        "name": cfg.name,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "vocab": cfg.vocab,
+        "seq": cfg.seq,
+        "mbs": cfg.mbs,
+        "n_params": n,
+        "tied_lm_head": True,
+        "flops_per_token_fwd": M.flops_per_token(cfg, fwd_only=True),
+        "flops_per_token": M.flops_per_token(cfg),
+        "params": params,
+        "artifacts": artifacts,
+    }
+
+
+def lower_quant(out_dir: str) -> dict:
+    """Export the L1 Pallas quantizers as standalone graphs.
+
+    The Rust comm path uses a native bit-exact port for speed; these
+    artifacts exist so integration tests can assert native == Pallas via
+    PJRT (rust/tests/pjrt_quant.rs).
+    """
+    x = jax.ShapeDtypeStruct((QUANT_N,), jnp.float32)
+    q8 = jax.ShapeDtypeStruct((QUANT_N,), jnp.int8)
+    p4 = jax.ShapeDtypeStruct((QUANT_N // 2,), jnp.uint8)
+    s = jax.ShapeDtypeStruct((QUANT_N // QUANT_BLOCK,), jnp.float32)
+
+    arts = {
+        "quant_int8": _write(
+            out_dir,
+            "quant_int8.hlo.txt",
+            to_hlo_text(jax.jit(lambda v: Q.quantize_int8(v, QUANT_BLOCK)).lower(x)),
+        ),
+        "dequant_int8": _write(
+            out_dir,
+            "dequant_int8.hlo.txt",
+            to_hlo_text(
+                jax.jit(lambda q, sc: Q.dequantize_int8(q, sc, QUANT_BLOCK)).lower(q8, s)
+            ),
+        ),
+        "quant_int4": _write(
+            out_dir,
+            "quant_int4.hlo.txt",
+            to_hlo_text(jax.jit(lambda v: Q.quantize_int4(v, QUANT_BLOCK)).lower(x)),
+        ),
+        "dequant_int4": _write(
+            out_dir,
+            "dequant_int4.hlo.txt",
+            to_hlo_text(
+                jax.jit(lambda p, sc: Q.dequantize_int4(p, sc, QUANT_BLOCK)).lower(p4, s)
+            ),
+        ),
+        "roundtrip_int8": _write(
+            out_dir,
+            "roundtrip_int8.hlo.txt",
+            to_hlo_text(jax.jit(lambda v: Q.roundtrip_int8(v, QUANT_BLOCK)).lower(x)),
+        ),
+        "roundtrip_int4": _write(
+            out_dir,
+            "roundtrip_int4.hlo.txt",
+            to_hlo_text(jax.jit(lambda v: Q.roundtrip_int4(v, QUANT_BLOCK)).lower(x)),
+        ),
+    }
+    return {"n": QUANT_N, "block": QUANT_BLOCK, "artifacts": arts}
+
+
+def lower_attention(out_dir: str) -> dict:
+    h, s, hd = ATTN_SHAPE
+    t = jax.ShapeDtypeStruct(ATTN_SHAPE, jnp.float32)
+    art = _write(
+        out_dir,
+        "attn_fused.hlo.txt",
+        to_hlo_text(jax.jit(lambda q, k, v: A.attention(q, k, v)).lower(t, t, t)),
+    )
+    return {"heads": h, "seq": s, "head_dim": hd, "artifacts": {"attn_fused": art}}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default="tiny,mini,loss10b_proxy,loss20b_proxy,e2e",
+        help="comma-separated preset names from model.PRESETS",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"quant": lower_quant(args.out_dir), "attention": lower_attention(args.out_dir), "models": {}}
+    for name in args.configs.split(","):
+        cfg = M.PRESETS[name.strip()]
+        print(f"lowering {cfg.name}: n_params={M.n_params(cfg):,}")
+        manifest["models"][cfg.name] = lower_model(cfg, args.out_dir)
+
+    blob = json.dumps(manifest, indent=1, sort_keys=True)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        f.write(blob)
+    print(
+        f"wrote {len(manifest['models'])} model configs + quant/attn artifacts; "
+        f"manifest sha256={hashlib.sha256(blob.encode()).hexdigest()[:12]}"
+    )
+
+
+if __name__ == "__main__":
+    main()

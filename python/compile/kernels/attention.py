@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: fused causal attention (flash-attention style).
+
+The paper enables flash attention in its training stack (Section VI). The
+CUDA flash-attention kernel keeps the running softmax statistics in
+registers/shared memory and streams KV through threadblocks; the TPU/Pallas
+adaptation (DESIGN.md §6) makes each grid cell own one (head, q-block) and
+streams KV *tiles* through VMEM with the online-softmax recurrence:
+
+    m_new = max(m, rowmax(S))            # S = q_tile @ k_tile^T / sqrt(d)
+    l_new = exp(m - m_new) * l + rowsum(exp(S - m_new))
+    acc   = exp(m - m_new) * acc + exp(S - m_new) @ v_tile
+
+Both matmuls are MXU-shaped (q_block x head_dim @ head_dim x kv_block).
+interpret=True for CPU-PJRT execution; see quant.py docstring.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_Q_BLOCK = 64
+DEFAULT_KV_BLOCK = 64
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, kv_block: int, causal: bool):
+    """Grid cell: one (head, q-block). KV streamed in `kv_block` tiles."""
+    q = q_ref[0]  # (q_block, head_dim)
+    q_block, head_dim = q.shape
+    seq = k_ref.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(head_dim))
+    qi = pl.program_id(1)
+    q_start = qi * q_block
+
+    nkv = seq // kv_block
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = jax.lax.dynamic_slice(k_ref[0], (j * kv_block, 0), (kv_block, head_dim))
+        v = jax.lax.dynamic_slice(v_ref[0], (j * kv_block, 0), (kv_block, head_dim))
+        s = (q @ k.T) * scale  # (q_block, kv_block)
+        if causal:
+            q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 0)
+            k_pos = j * kv_block + jax.lax.broadcasted_iota(
+                jnp.int32, (q_block, kv_block), 1
+            )
+            s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((q_block, head_dim), jnp.float32)
+    m0 = jnp.full((q_block,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((q_block,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, nkv, body, (acc0, m0, l0))
+    # Fully-masked rows cannot occur for causal (diagonal always visible),
+    # but guard the division anyway.
+    o_ref[0] = acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4, 5))
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    q_block: int = DEFAULT_Q_BLOCK,
+    kv_block: int = DEFAULT_KV_BLOCK,
+) -> jax.Array:
+    """Fused attention over (heads, seq, head_dim) tensors."""
+    heads, seq, head_dim = q.shape
+    q_block = min(q_block, seq)
+    kv_block = min(kv_block, seq)
+    if seq % q_block or seq % kv_block:
+        raise ValueError(f"seq {seq} not divisible by blocks {q_block}/{kv_block}")
+    grid = (heads, seq // q_block)
+    kernel = functools.partial(_attn_kernel, kv_block=kv_block, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, head_dim), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, seq, head_dim), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((1, seq, head_dim), lambda h, i: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, head_dim), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((heads, seq, head_dim), jnp.float32),
+        interpret=True,
+    )(q, k, v)

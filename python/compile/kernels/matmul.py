@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: tiled matmul (MXU-shaped building block).
+
+The classic (i, j, k) grid: each cell multiplies an (bm, bk) A-tile by a
+(bk, bn) B-tile and accumulates into the (bm, bn) output tile, relying on
+Pallas's revisiting semantics over the k axis. Tiles are sized for the MXU
+(128-aligned) and comfortably fit VMEM (see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+) -> jax.Array:
+    """C = A @ B with explicit (bm, bn, bk) tiling."""
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {k} vs {k2}")
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"shape ({m},{k})x({k},{n}) not divisible by tiles {bm},{bn},{bk}")
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,82 @@
+"""Pure-jnp correctness oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels (and the Rust ports) are tested
+against: straight-line jnp with no tiling, no pallas, no cleverness.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_BLOCK = 256
+
+
+# -- block quantization ------------------------------------------------------
+
+
+def quantize_int8_ref(x: jax.Array, block: int = DEFAULT_BLOCK):
+    n = x.shape[0]
+    xb = x.reshape(n // block, block)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = jnp.where(amax > 0.0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127.0, 127.0).astype(jnp.int8)
+    return q.reshape(n), scale.astype(jnp.float32)
+
+
+def dequantize_int8_ref(q: jax.Array, scales: jax.Array, block: int = DEFAULT_BLOCK):
+    n = q.shape[0]
+    qb = q.reshape(n // block, block).astype(jnp.float32)
+    return (qb * scales[:, None]).reshape(n)
+
+
+def quantize_int4_ref(x: jax.Array, block: int = DEFAULT_BLOCK):
+    n = x.shape[0]
+    xb = x.reshape(n // block, block)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = jnp.where(amax > 0.0, amax / 7.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -7.0, 7.0).astype(jnp.int32)
+    nib = q + 8
+    packed = (nib[:, 0::2] + nib[:, 1::2] * 16).astype(jnp.uint8)
+    return packed.reshape(n // 2), scale.astype(jnp.float32)
+
+
+def dequantize_int4_ref(packed: jax.Array, scales: jax.Array, block: int = DEFAULT_BLOCK):
+    half = packed.shape[0]
+    n = half * 2
+    pb = packed.reshape(n // block, block // 2).astype(jnp.int32)
+    lo = (pb % 16) - 8
+    hi = (pb // 16) - 8
+    q = jnp.stack([lo, hi], axis=-1).reshape(n // block, block)
+    return (q.astype(jnp.float32) * scales[:, None]).reshape(n)
+
+
+def roundtrip_int8_ref(x: jax.Array, block: int = DEFAULT_BLOCK):
+    q, s = quantize_int8_ref(x, block)
+    return dequantize_int8_ref(q, s, block)
+
+
+def roundtrip_int4_ref(x: jax.Array, block: int = DEFAULT_BLOCK):
+    p, s = quantize_int4_ref(x, block)
+    return dequantize_int4_ref(p, s, block)
+
+
+# -- attention ---------------------------------------------------------------
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True):
+    """Plain softmax attention. q,k,v: (heads, seq, head_dim)."""
+    _, s, hd = q.shape
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", w, v)
+
+
+# -- matmul ------------------------------------------------------------------
+
+
+def matmul_ref(a: jax.Array, b: jax.Array):
+    return a @ b

@@ -1,0 +1,200 @@
+"""L2: GPT-NeoX-style transformer in JAX — the compute graph the Rust
+coordinator executes via AOT-compiled HLO.
+
+The paper trains GPT-NeoX-10B/20B; this module defines the same
+architecture family (pre-LN decoder, learned positions, GELU MLP, causal
+attention, tied LM head) parameterized so the reproduction can instantiate
+laptop-scale proxies (DESIGN.md §1, substitution table).
+
+Everything works on ONE FLAT f32 PARAMETER VECTOR. This mirrors how ZeRO
+implementations flatten model state into contiguous partitions: the Rust
+engine shards, gathers, quantizes and updates the flat vector, and the HLO
+entry points take/return the flat vector so host<->device marshalling is a
+single buffer. `param_specs` fixes the layout; the AOT manifest exports it.
+
+Exported entry points (lowered by aot.py):
+  init_params(seed)                     -> flat f32[n_params]
+  train_step(flat, tokens, targets)     -> (loss, flat_grads)
+  eval_loss(flat, tokens, targets)      -> loss
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + batch geometry (static for AOT lowering)."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    vocab: int
+    seq: int
+    mbs: int  # micro-batch size baked into the lowered train_step
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def __post_init__(self):
+        if self.d_model % self.n_heads != 0:
+            raise ValueError("d_model must divide n_heads")
+
+
+# Laptop-scale proxies for the paper's models (see DESIGN.md §8: 1 CPU core).
+# "neox10b"/"neox20b" carry the real paper geometries for the analytical
+# simulator; the *_proxy configs are what the PJRT-CPU numerics path runs.
+PRESETS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig("tiny", 64, 2, 2, 256, 64, 2),
+    "mini": ModelConfig("mini", 128, 3, 4, 512, 128, 2),
+    "loss10b_proxy": ModelConfig("loss10b_proxy", 256, 4, 4, 512, 128, 1),
+    "loss20b_proxy": ModelConfig("loss20b_proxy", 320, 6, 5, 512, 128, 1),
+    "e2e": ModelConfig("e2e", 512, 8, 8, 2048, 256, 1),
+}
+
+
+# --------------------------------------------------------------------------
+# Parameter layout
+# --------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list defining the flat-vector layout."""
+    d = cfg.d_model
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed.weight", (cfg.vocab, d)),
+        ("pos.weight", (cfg.seq, d)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        specs += [
+            (p + "ln1.scale", (d,)),
+            (p + "ln1.bias", (d,)),
+            (p + "attn.qkv", (d, 3 * d)),
+            (p + "attn.out", (d, d)),
+            (p + "ln2.scale", (d,)),
+            (p + "ln2.bias", (d,)),
+            (p + "mlp.fc", (d, 4 * d)),
+            (p + "mlp.proj", (4 * d, d)),
+        ]
+    specs += [("final_ln.scale", (d,)), ("final_ln.bias", (d,))]
+    # LM head is tied to embed.weight (GPT-NeoX offers both; tied keeps the
+    # proxy models small — recorded in the manifest).
+    return specs
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return sum(math.prod(s) for _, s in param_specs(cfg))
+
+
+def unflatten(flat: jax.Array, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    params = {}
+    off = 0
+    for name, shape in param_specs(cfg):
+        size = math.prod(shape)
+        params[name] = flat[off : off + size].reshape(shape)
+        off += size
+    return params
+
+
+def init_params(seed: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """GPT-NeoX init: N(0, 0.02), residual projections scaled by 1/sqrt(2L)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    resid_scale = 0.02 / math.sqrt(2.0 * cfg.n_layers)
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        size = math.prod(shape)
+        if name.endswith("ln1.scale") or name.endswith("ln2.scale") or name == "final_ln.scale":
+            chunks.append(jnp.ones((size,), jnp.float32))
+        elif name.endswith(".bias"):
+            chunks.append(jnp.zeros((size,), jnp.float32))
+        elif name.endswith("attn.out") or name.endswith("mlp.proj"):
+            chunks.append(jax.random.normal(sub, (size,), jnp.float32) * resid_scale)
+        else:
+            chunks.append(jax.random.normal(sub, (size,), jnp.float32) * 0.02)
+    return jnp.concatenate(chunks)
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _causal_attention(x, qkv_w, out_w, cfg: ModelConfig):
+    b, s, d = x.shape
+    qkv = x @ qkv_w  # (b, s, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):  # (b, s, d) -> (b, h, s, hd)
+        return t.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(cfg.head_dim)
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", w, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return o @ out_w
+
+
+def forward(flat: jax.Array, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """tokens: int32 (mbs, seq) -> logits f32 (mbs, seq, vocab)."""
+    p = unflatten(flat, cfg)
+    x = p["embed.weight"][tokens] + p["pos.weight"][None, : tokens.shape[1]]
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}."
+        h = _layer_norm(x, p[pre + "ln1.scale"], p[pre + "ln1.bias"])
+        x = x + _causal_attention(h, p[pre + "attn.qkv"], p[pre + "attn.out"], cfg)
+        h = _layer_norm(x, p[pre + "ln2.scale"], p[pre + "ln2.bias"])
+        h = jax.nn.gelu(h @ p[pre + "mlp.fc"]) @ p[pre + "mlp.proj"]
+        x = x + h
+    x = _layer_norm(x, p["final_ln.scale"], p["final_ln.bias"])
+    return x @ p["embed.weight"].T  # tied head
+
+
+def loss_fn(flat: jax.Array, tokens: jax.Array, targets: jax.Array, cfg: ModelConfig):
+    """Mean next-token cross-entropy."""
+    logits = forward(flat, tokens, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def train_step(flat: jax.Array, tokens: jax.Array, targets: jax.Array, cfg: ModelConfig):
+    """One microbatch fwd+bwd: returns (loss, flat grads)."""
+    loss, grads = jax.value_and_grad(loss_fn)(flat, tokens, targets, cfg)
+    return loss, grads
+
+
+# --------------------------------------------------------------------------
+# FLOPs accounting (used to cross-check the Rust model:: calculator)
+# --------------------------------------------------------------------------
+
+
+def flops_per_token(cfg: ModelConfig, fwd_only: bool = False) -> float:
+    """Dense matmul FLOPs per token (fwd = 2*mac; bwd = 2x fwd)."""
+    d, s = cfg.d_model, cfg.seq
+    per_layer = (
+        2 * d * 3 * d  # qkv proj
+        + 2 * 2 * s * d  # QK^T and AV (per token: 2 * seq * d each)
+        + 2 * d * d  # out proj
+        + 2 * d * 4 * d * 2  # mlp fc + proj
+    )
+    total = cfg.n_layers * per_layer + 2 * d * cfg.vocab  # lm head
+    return total if fwd_only else 3 * total

@@ -1,0 +1,126 @@
+"""L2 correctness: flat-parameter GPT model — shapes, init statistics,
+gradients, and trainability (loss decreases when overfitting one batch)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.PRESETS["tiny"]
+
+
+def _batch(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (cfg.mbs, cfg.seq + 1), 0, cfg.vocab)
+    return toks[:, :-1].astype(jnp.int32), toks[:, 1:].astype(jnp.int32)
+
+
+def test_param_specs_layout_is_dense():
+    """Flat layout covers [0, n_params) with no gaps or overlaps."""
+    off = 0
+    for name, shape in M.param_specs(CFG):
+        size = math.prod(shape)
+        assert size > 0, name
+        off += size
+    assert off == M.n_params(CFG)
+
+
+def test_param_count_formula():
+    """n_params == vocab*d + seq*d + L*(12d^2 + 4d) + 2d (tied head)."""
+    d, L = CFG.d_model, CFG.n_layers
+    expected = CFG.vocab * d + CFG.seq * d + L * (12 * d * d + 4 * d) + 2 * d
+    assert M.n_params(CFG) == expected
+
+
+def test_init_statistics():
+    flat = M.init_params(jnp.int32(0), CFG)
+    assert flat.shape == (M.n_params(CFG),)
+    p = M.unflatten(flat, CFG)
+    np.testing.assert_array_equal(np.asarray(p["final_ln.scale"]), np.ones(CFG.d_model))
+    np.testing.assert_array_equal(np.asarray(p["final_ln.bias"]), np.zeros(CFG.d_model))
+    emb_std = float(jnp.std(p["embed.weight"]))
+    assert 0.015 < emb_std < 0.025
+    # residual projections scaled down by 1/sqrt(2L)
+    out_std = float(jnp.std(p["layers.0.attn.out"]))
+    assert out_std < emb_std
+
+
+def test_init_seed_determinism():
+    a = M.init_params(jnp.int32(42), CFG)
+    b = M.init_params(jnp.int32(42), CFG)
+    c = M.init_params(jnp.int32(43), CFG)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_forward_shapes_and_loss_at_init():
+    flat = M.init_params(jnp.int32(0), CFG)
+    toks, tgts = _batch(CFG)
+    logits = M.forward(flat, toks, CFG)
+    assert logits.shape == (CFG.mbs, CFG.seq, CFG.vocab)
+    loss = float(M.loss_fn(flat, toks, tgts, CFG))
+    # near-uniform prediction at init => CE ~ ln(vocab)
+    assert abs(loss - math.log(CFG.vocab)) < 0.5
+
+
+def test_train_step_grad_shapes_finite():
+    flat = M.init_params(jnp.int32(0), CFG)
+    toks, tgts = _batch(CFG)
+    loss, grads = M.train_step(flat, toks, tgts, CFG)
+    assert grads.shape == flat.shape
+    assert np.isfinite(float(loss))
+    assert np.isfinite(np.asarray(grads)).all()
+    assert float(jnp.linalg.norm(grads)) > 0
+
+
+def test_grads_match_finite_difference():
+    """Directional derivative vs finite difference on the flat vector."""
+    cfg = M.ModelConfig("fd", 32, 1, 2, 64, 16, 1)
+    flat = M.init_params(jnp.int32(1), cfg)
+    toks, tgts = _batch(cfg, seed=2)
+    loss, grads = M.train_step(flat, toks, tgts, cfg)
+    key = jax.random.PRNGKey(3)
+    d = jax.random.normal(key, flat.shape)
+    d = d / jnp.linalg.norm(d)
+    eps = 1e-3
+    lp = float(M.loss_fn(flat + eps * d, toks, tgts, cfg))
+    lm = float(M.loss_fn(flat - eps * d, toks, tgts, cfg))
+    fd = (lp - lm) / (2 * eps)
+    an = float(jnp.dot(grads, d))
+    assert abs(fd - an) < 5e-3 * max(1.0, abs(an)), (fd, an)
+
+
+def test_sgd_overfits_single_batch():
+    flat = M.init_params(jnp.int32(0), CFG)
+    toks, tgts = _batch(CFG, seed=7)
+    step = jax.jit(lambda f: M.train_step(f, toks, tgts, CFG))
+    losses = []
+    for _ in range(30):
+        loss, g = step(flat)
+        losses.append(float(loss))
+        flat = flat - 0.5 * g
+    assert losses[-1] < losses[0] - 0.5, losses[:3] + losses[-3:]
+
+
+def test_causal_masking_in_model():
+    """Changing future tokens must not affect earlier logits."""
+    flat = M.init_params(jnp.int32(0), CFG)
+    toks, _ = _batch(CFG, seed=1)
+    logits1 = M.forward(flat, toks, CFG)
+    toks2 = toks.at[:, -1].set((toks[:, -1] + 1) % CFG.vocab)
+    logits2 = M.forward(flat, toks2, CFG)
+    np.testing.assert_allclose(
+        np.asarray(logits1[:, :-1]), np.asarray(logits2[:, :-1]), atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("name", list(M.PRESETS))
+def test_all_presets_have_valid_geometry(name):
+    cfg = M.PRESETS[name]
+    assert cfg.d_model % cfg.n_heads == 0
+    assert M.n_params(cfg) > 0
+    assert M.flops_per_token(cfg) == 3 * M.flops_per_token(cfg, fwd_only=True)

@@ -1,0 +1,152 @@
+"""L1 correctness: Pallas block-quantization kernels vs the pure-jnp oracle.
+
+This is the core correctness signal for the paper's communication
+compression. hypothesis sweeps shapes and value distributions; exact
+integer-output equality is required (the Rust port is held to the same
+contract, cross-checked in rust/tests/).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant as Q
+from compile.kernels import ref as R
+
+BLOCKS = [32, 64, 256]
+
+
+def _rand(n, seed=0, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32) * scale
+
+
+# ------------------------------------------------------------------ INT8
+
+
+@pytest.mark.parametrize("block", BLOCKS)
+@pytest.mark.parametrize("nblocks", [1, 2, 7, 64, 130])
+def test_int8_matches_ref(block, nblocks):
+    x = _rand(block * nblocks, seed=block + nblocks)
+    q, s = Q.quantize_int8(x, block)
+    qr, sr = R.quantize_int8_ref(x, block)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(Q.dequantize_int8(q, s, block)),
+        np.asarray(R.dequantize_int8_ref(qr, sr, block)),
+        rtol=1e-6, atol=1e-7,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nblocks=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-6, 1e-2, 1.0, 1e3]),
+)
+def test_int8_error_bound(nblocks, seed, scale):
+    """|x - dq(q(x))| <= scale/2 per block (half a quantization step)."""
+    block = 64
+    x = _rand(block * nblocks, seed=seed, scale=scale)
+    q, s = Q.quantize_int8(x, block)
+    xd = Q.dequantize_int8(q, s, block)
+    err = np.abs(np.asarray(x - xd)).reshape(nblocks, block)
+    bound = np.asarray(s)[:, None] * 0.5 + 1e-12
+    assert (err <= bound).all()
+
+
+def test_int8_zero_block_exact():
+    x = jnp.zeros((512,), jnp.float32)
+    q, s = Q.quantize_int8(x, 256)
+    assert (np.asarray(q) == 0).all()
+    np.testing.assert_array_equal(np.asarray(s), np.ones(2, np.float32))
+    np.testing.assert_array_equal(np.asarray(Q.dequantize_int8(q, s, 256)), np.zeros(512))
+
+
+def test_int8_idempotent():
+    """Quantization is a projection: q(dq(q(x))) == q(x)."""
+    x = _rand(1024, seed=7)
+    q1, s1 = Q.quantize_int8(x, 256)
+    xd = Q.dequantize_int8(q1, s1, 256)
+    q2, s2 = Q.quantize_int8(xd, 256)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+def test_int8_extremes_hit_limits():
+    x = jnp.concatenate([jnp.full((128,), 5.0), jnp.full((128,), -5.0)])
+    q, s = Q.quantize_int8(x, 256)
+    assert np.asarray(q).max() == 127 and np.asarray(q).min() == -127
+
+
+def test_int8_rejects_misaligned():
+    with pytest.raises(ValueError):
+        Q.quantize_int8(_rand(100), 256)
+
+
+# ------------------------------------------------------------------ INT4
+
+
+@pytest.mark.parametrize("block", BLOCKS)
+@pytest.mark.parametrize("nblocks", [1, 3, 64])
+def test_int4_matches_ref(block, nblocks):
+    x = _rand(block * nblocks, seed=block * 31 + nblocks)
+    p, s = Q.quantize_int4(x, block)
+    pr, sr = R.quantize_int4_ref(x, block)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(pr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(Q.dequantize_int4(p, s, block)),
+        np.asarray(R.dequantize_int4_ref(pr, sr, block)),
+        rtol=1e-6, atol=1e-7,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(nblocks=st.integers(1, 12), seed=st.integers(0, 2**31 - 1))
+def test_int4_error_bound(nblocks, seed):
+    block = 64
+    x = _rand(block * nblocks, seed=seed)
+    p, s = Q.quantize_int4(x, block)
+    xd = Q.dequantize_int4(p, s, block)
+    err = np.abs(np.asarray(x - xd)).reshape(nblocks, block)
+    bound = np.asarray(s)[:, None] * 0.5 + 1e-12
+    assert (err <= bound).all()
+
+
+def test_int4_nibble_layout():
+    """Element 2i in low nibble, 2i+1 in high nibble, offset-8 encoding."""
+    # block of 4: values scaled so q = [7, -7, 0, 1] exactly (amax 7 -> scale 1)
+    x = jnp.array([7.0, -7.0, 0.0, 1.0], jnp.float32)
+    p, s = Q.quantize_int4(x, 4)
+    assert float(s[0]) == 1.0
+    b0, b1 = int(np.asarray(p)[0]), int(np.asarray(p)[1])
+    assert b0 == (7 + 8) + 16 * (-7 + 8)
+    assert b1 == (0 + 8) + 16 * (1 + 8)
+
+
+def test_int4_worse_than_int8():
+    x = _rand(4096, seed=3)
+    e8 = np.abs(np.asarray(x - Q.dequantize_int8(*Q.quantize_int8(x, 256), 256))).mean()
+    e4 = np.abs(np.asarray(x - Q.dequantize_int4(*Q.quantize_int4(x, 256), 256))).mean()
+    assert e4 > e8 > 0
+
+
+def test_int4_odd_block_rejected():
+    with pytest.raises(ValueError):
+        Q.quantize_int4(_rand(99 * 2), 99)
+
+
+# ------------------------------------------------------------------ roundtrip jits
+
+
+def test_roundtrips_match_ref():
+    x = _rand(8192, seed=11)
+    np.testing.assert_allclose(
+        np.asarray(Q.roundtrip_int8(x, 256)), np.asarray(R.roundtrip_int8_ref(x, 256)), rtol=1e-6, atol=1e-7
+    )
+    np.testing.assert_allclose(
+        np.asarray(Q.roundtrip_int4(x, 256)), np.asarray(R.roundtrip_int4_ref(x, 256)), rtol=1e-6, atol=1e-7
+    )

@@ -1,0 +1,36 @@
+//! Bench: regenerate **Fig 7** — TFLOPS/GPU + scaling efficiency for
+//! GPT-NeoX-20B under ZeRO-3 / ZeRO++ / ZeRO-topo, 64→384 GCDs, and check
+//! the paper's headline ratios.
+
+use zero_topo::model::TransformerSpec;
+use zero_topo::report::{render_scaling_figure, ScalingSeries};
+use zero_topo::sharding::Scheme;
+use zero_topo::sim::{scaling_series, SimConfig};
+
+fn main() {
+    let model = TransformerSpec::neox20b();
+    let nodes = [8usize, 16, 24, 32, 48];
+    let cfg = SimConfig::default();
+    let schemes = [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }];
+    let series: Vec<ScalingSeries> = schemes
+        .iter()
+        .map(|&scheme| ScalingSeries {
+            scheme,
+            points: scaling_series(&model, scheme, &nodes, &cfg),
+        })
+        .collect();
+    println!("{}", render_scaling_figure("Fig 7 — GPT-NeoX-20B (paper: +40.5% / +70.7% / +139.8%, eff 0.94)", &series));
+
+    let last = series[0].points.len() - 1;
+    let tf = |i: usize| series[i].points[last].tflops_per_gpu();
+    let (z3, zpp, topo) = (tf(0), tf(1), tf(2));
+    let eff = {
+        let pts = &series[2].points;
+        pts[last].tflops_per_gpu() / pts[0].tflops_per_gpu()
+    };
+    println!("measured @384: zpp/z3 = {:.3} (paper 1.405)", zpp / z3);
+    println!("measured @384: topo/zpp = {:.3} (paper 1.707)", topo / zpp);
+    println!("measured @384: topo/z3 = {:.3} (paper 2.398)", topo / z3);
+    println!("measured topo scaling efficiency = {:.3} (paper 0.94)", eff);
+    assert!(topo > zpp && zpp > z3, "ordering must match the paper");
+}

@@ -1,0 +1,51 @@
+//! Bench: **Figs 9 & 10** (fast variant) — loss curves of quantized
+//! ZeRO-topo vs fp16 ZeRO-3 on identical data/init must stay within ~1%
+//! (the paper's convergence claim). Uses the `tiny` artifact for speed;
+//! `examples/loss_curve.rs` runs the full proxy models.
+//!
+//! Requires `make artifacts`.
+
+use zero_topo::config::RunConfig;
+use zero_topo::engine::TrainEngine;
+use zero_topo::runtime::Runtime;
+use zero_topo::sharding::Scheme;
+
+fn main() {
+    let rt = Runtime::load("artifacts").expect("run `make artifacts`");
+    let runner = rt.model("tiny").unwrap();
+    let steps = 15;
+    let mut curves = Vec::new();
+    for scheme in [Scheme::Zero3, Scheme::ZeroTopo { sec_degree: 2 }] {
+        let cfg = RunConfig {
+            model: "tiny".into(),
+            scheme,
+            nodes: 1,
+            steps,
+            seed: 2024,
+            ..Default::default()
+        };
+        let mut e = TrainEngine::new(cfg, &runner).unwrap();
+        for _ in 0..steps {
+            e.step().unwrap();
+        }
+        println!("{:<18} first {:.4}  last {:.4}  comm(sim) {:.5}s",
+            scheme.name(),
+            e.log.losses.first().unwrap().loss,
+            e.log.final_loss().unwrap(),
+            e.comm_seconds());
+        curves.push(e.log);
+    }
+    println!("\nstep  {:<12} {:<12} gap%", "ZeRO-3", "ZeRO-topo");
+    let mut max_gap = 0f64;
+    for (a, b) in curves[0].losses.iter().zip(&curves[1].losses) {
+        let gap = (a.loss - b.loss).abs() / a.loss * 100.0;
+        max_gap = max_gap.max(gap);
+        println!("{:>4}  {:<12.4} {:<12.4} {:.2}%", a.step, a.loss, b.loss, gap);
+    }
+    println!("\nmax relative gap over {steps} steps: {max_gap:.2}% (paper: final loss off by ~1%)");
+    assert!(max_gap < 5.0, "curves diverged: {max_gap}%");
+    // both must actually learn
+    for c in &curves {
+        assert!(c.final_loss().unwrap() < c.losses[0].loss);
+    }
+}

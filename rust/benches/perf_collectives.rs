@@ -1,0 +1,70 @@
+//! Perf bench: data-movement throughput of the collective engine (the L3
+//! hot path outside PJRT compute). Target: within 2x of memcpy for the
+//! fp32 all-gather. Tracked in EXPERIMENTS.md §Perf.
+
+use zero_topo::comm::{CommWorld, Wire};
+use zero_topo::topology::Cluster;
+use zero_topo::util::benchkit::{black_box, report, time_fn};
+use zero_topo::util::rng::Rng;
+
+fn main() {
+    let world = 8;
+    let shard = 2 * 1024 * 1024; // 2M f32 per rank
+    let mut rng = Rng::new(9);
+    let shards: Vec<Vec<f32>> = (0..world)
+        .map(|_| {
+            let mut v = vec![0f32; shard];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let views: Vec<&[f32]> = shards.iter().map(|v| v.as_slice()).collect();
+    let group: Vec<usize> = (0..world).collect();
+    let total_bytes = world * shard * 4;
+
+    // memcpy baseline
+    let src = vec![0u8; total_bytes];
+    let s = time_fn(1, 5, || {
+        black_box(src.clone());
+    });
+    report("memcpy baseline (clone)", &s, Some(total_bytes));
+    let memcpy_gbs = total_bytes as f64 / s.mean / 1e9;
+
+    let mut w = CommWorld::new(Cluster::frontier(1));
+    let s = time_fn(1, 5, || {
+        black_box(w.all_gather(&group, &views, Wire::F32));
+    });
+    report("all_gather f32 (8 ranks)", &s, Some(total_bytes));
+    let ag_gbs = total_bytes as f64 / s.mean / 1e9;
+
+    let s = time_fn(1, 5, || {
+        black_box(w.all_gather(&group, &views, Wire::F16));
+    });
+    report("all_gather f16-wire", &s, Some(total_bytes));
+
+    let s = time_fn(1, 3, || {
+        black_box(w.all_gather(&group, &views, Wire::Int8 { block: 256 }));
+    });
+    report("all_gather int8-wire", &s, Some(total_bytes));
+
+    let s = time_fn(1, 3, || {
+        black_box(w.reduce_scatter_ring(&group, &views, Wire::F16));
+    });
+    report("reduce_scatter_ring f16", &s, Some(total_bytes));
+
+    let s = time_fn(1, 3, || {
+        black_box(w.reduce_scatter_a2a(&group, &views, Wire::Int4 { block: 256 }));
+    });
+    report("reduce_scatter_a2a int4 (ZeRO++ 1-hop)", &s, Some(total_bytes));
+
+    let s = time_fn(1, 3, || {
+        black_box(w.all_reduce(&group, &views, Wire::F16));
+    });
+    report("all_reduce f16", &s, Some(total_bytes));
+
+    println!(
+        "\nf32 all-gather at {:.0}% of memcpy (target >= 50%)",
+        ag_gbs / memcpy_gbs * 100.0
+    );
+    assert!(ag_gbs > memcpy_gbs * 0.2, "all-gather too slow vs memcpy");
+}

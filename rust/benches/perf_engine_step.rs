@@ -1,0 +1,61 @@
+//! Perf bench: end-to-end engine step on the `tiny` artifact, split into
+//! PJRT compute vs coordinator overhead (collectives + quantization +
+//! optimizer). Target (DESIGN.md §7): coordinator overhead < 5% of step.
+//!
+//! Requires `make artifacts`.
+
+use std::time::Instant;
+
+use zero_topo::config::RunConfig;
+use zero_topo::engine::TrainEngine;
+use zero_topo::runtime::Runtime;
+use zero_topo::sharding::Scheme;
+use zero_topo::util::benchkit::report;
+use zero_topo::util::stats::summarize;
+
+fn main() {
+    let rt = Runtime::load("artifacts").expect("run `make artifacts`");
+    let runner = rt.model("tiny").unwrap();
+    let m = &runner.manifest;
+
+    // raw PJRT step cost (one rank-microbatch)
+    let flat = runner.init_params(3).unwrap();
+    let tokens = vec![1i32; m.mbs * m.seq];
+    let mut samples = Vec::new();
+    for _ in 0..10 {
+        let t0 = Instant::now();
+        let _ = runner.train_step(&flat, &tokens, &tokens).unwrap();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let pjrt = summarize(&samples);
+    report("pjrt train_step (1 rank-microbatch)", &pjrt, None);
+
+    for scheme in [Scheme::Zero3, Scheme::ZeroTopo { sec_degree: 2 }] {
+        let cfg = RunConfig {
+            model: "tiny".into(),
+            scheme,
+            nodes: 1,
+            steps: 6,
+            seed: 5,
+            ..Default::default()
+        };
+        let mut e = TrainEngine::new(cfg, &runner).unwrap();
+        e.step().unwrap(); // warm
+        let mut samples = Vec::new();
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            e.step().unwrap();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let s = summarize(&samples);
+        report(&format!("engine step, {} (8 ranks)", scheme.name()), &s, None);
+        // coordinator overhead = step - 8 * pjrt microbatch
+        let overhead = s.mean - 8.0 * pjrt.mean;
+        let pct = overhead / s.mean * 100.0;
+        println!(
+            "  -> coordinator overhead {:.2} ms = {:.1}% of step (target < 5%)",
+            overhead.max(0.0) * 1e3,
+            pct.max(0.0)
+        );
+    }
+}

@@ -1,0 +1,59 @@
+//! Perf bench: the L3 quantizer hot path (the engine applies it to every
+//! collective payload). Targets (DESIGN.md §7): ≥ 1 GB/s per core for the
+//! INT8 round trip. Tracked in EXPERIMENTS.md §Perf.
+
+use zero_topo::quant;
+use zero_topo::util::benchkit::{black_box, report, time_fn};
+use zero_topo::util::rng::Rng;
+
+fn main() {
+    let n = 16 * 1024 * 1024; // 16M f32 = 64 MiB payload
+    let mut rng = Rng::new(5);
+    let mut x = vec![0f32; n];
+    rng.fill_normal(&mut x, 1.0);
+    let bytes = n * 4;
+
+    for block in [64usize, 256, 2048] {
+        let s = time_fn(1, 5, || {
+            black_box(quant::quantize_int8(&x, block));
+        });
+        report(&format!("quantize_int8 block={block}"), &s, Some(bytes));
+    }
+    let q8 = quant::quantize_int8(&x, 256);
+    let mut out = vec![0f32; n];
+    let s = time_fn(1, 5, || {
+        quant::dequantize_int8_into(&q8, &mut out);
+        black_box(&out);
+    });
+    report("dequantize_int8_into block=256", &s, Some(bytes));
+
+    let s = time_fn(1, 3, || {
+        black_box(quant::roundtrip_int8(&x, 256));
+    });
+    report("roundtrip_int8 block=256", &s, Some(bytes));
+    let gbs_rt = bytes as f64 / s.mean / 1e9;
+
+    for block in [256usize] {
+        let s = time_fn(1, 5, || {
+            black_box(quant::quantize_int4(&x, block));
+        });
+        report(&format!("quantize_int4 block={block}"), &s, Some(bytes));
+    }
+    let q4 = quant::quantize_int4(&x, 256);
+    let s = time_fn(1, 5, || {
+        quant::dequantize_int4_into(&q4, &mut out);
+        black_box(&out);
+    });
+    report("dequantize_int4_into block=256", &s, Some(bytes));
+
+    // f16 wire rounding (the ZeRO-3 baseline path)
+    let s = time_fn(1, 5, || {
+        let mut y = x.clone();
+        zero_topo::dtype::round_f16_slice(&mut y);
+        black_box(&y);
+    });
+    report("round_f16_slice (incl. clone)", &s, Some(bytes));
+
+    println!("\ntarget: roundtrip_int8 >= 1.0 GB/s/core — measured {gbs_rt:.2} GB/s");
+    assert!(gbs_rt > 0.25, "quantizer catastrophically slow: {gbs_rt} GB/s");
+}

@@ -1,0 +1,43 @@
+//! Bench: regenerate **Table IV** — sharding factors per scheme, plus the
+//! dependency-rule validation the paper's §V derives from AMSP.
+
+use zero_topo::sharding::{Scheme, ShardingSpec};
+use zero_topo::topology::Cluster;
+use zero_topo::util::table::Table;
+
+fn main() {
+    for nodes in [2usize, 48] {
+        let cluster = Cluster::frontier(nodes);
+        let mut t = Table::new(&["scheme", "weights", "grads", "optim", "secondary"])
+            .title(format!(
+                "Table IV — sharding factors on {nodes} nodes ({} GCDs)",
+                cluster.world_size()
+            ))
+            .left_first();
+        for scheme in [
+            Scheme::Zero1,
+            Scheme::Zero2,
+            Scheme::Zero3,
+            Scheme::ZeroPP,
+            Scheme::ZeroTopo { sec_degree: 2 },
+            Scheme::ZeroTopo { sec_degree: 8 },
+        ] {
+            let s = ShardingSpec::resolve(scheme, &cluster).unwrap();
+            // the dependency rule must hold for every resolvable scheme
+            assert!(s.optim >= s.grads && s.grads >= s.weights, "{scheme:?}");
+            t.row(vec![
+                scheme.name(),
+                s.weights.to_string(),
+                s.grads.to_string(),
+                s.optim.to_string(),
+                if s.secondary > 0 { s.secondary.to_string() } else { "-".into() },
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    // the paper's Table IV row "Ours": weights=2, grads=P_g, optim=Nos*Pos
+    let c = Cluster::frontier(48);
+    let ours = ShardingSpec::resolve(Scheme::ZeroTopo { sec_degree: 2 }, &c).unwrap();
+    assert_eq!((ours.weights, ours.grads, ours.optim), (2, 8, 384));
+    println!("paper row check: Ours = (2, P_g=8, N_os*P_os=384)  OK");
+}

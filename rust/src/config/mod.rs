@@ -1,0 +1,149 @@
+//! Experiment configuration: JSON-loadable run descriptions plus the
+//! presets behind every figure/table reproduction (DESIGN.md §3).
+
+use std::path::Path;
+
+use crate::sharding::Scheme;
+use crate::util::json::Json;
+
+/// Configuration of a training / simulation run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Model preset name: an AOT manifest config (numerics path) or a
+    /// `TransformerSpec` name (simulator path).
+    pub model: String,
+    pub scheme: Scheme,
+    pub nodes: usize,
+    /// Micro-batch size per GCD.
+    pub micro_batch: usize,
+    /// Gradient-accumulation steps per optimizer step.
+    pub grad_accum: usize,
+    pub steps: usize,
+    pub seed: u64,
+    /// Quantization block size for wire formats + secondary partitions.
+    pub quant_block: usize,
+    /// Learning rate for the numerics path.
+    pub lr: f32,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "tiny".into(),
+            scheme: Scheme::ZeroTopo { sec_degree: 2 },
+            nodes: 1,
+            micro_batch: 1,
+            grad_accum: 1,
+            steps: 10,
+            seed: 42,
+            quant_block: crate::quant::DEFAULT_BLOCK,
+            lr: 1e-3,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("parse: {0}")]
+    Parse(#[from] crate::util::json::JsonError),
+    #[error("bad field {0}: {1}")]
+    Bad(&'static str, String),
+}
+
+impl RunConfig {
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        let mut c = RunConfig::default();
+        let get_usize = |j: &Json, k: &'static str, d: usize| -> Result<usize, ConfigError> {
+            match j.get(k) {
+                None => Ok(d),
+                Some(v) => v.as_usize().ok_or_else(|| ConfigError::Bad(k, v.to_string())),
+            }
+        };
+        if let Some(v) = j.get("model") {
+            c.model = v.as_str().ok_or_else(|| ConfigError::Bad("model", v.to_string()))?.into();
+        }
+        if let Some(v) = j.get("scheme") {
+            let s = v.as_str().ok_or_else(|| ConfigError::Bad("scheme", v.to_string()))?;
+            c.scheme =
+                Scheme::parse(s).ok_or_else(|| ConfigError::Bad("scheme", s.to_string()))?;
+        }
+        c.nodes = get_usize(j, "nodes", c.nodes)?;
+        c.micro_batch = get_usize(j, "micro_batch", c.micro_batch)?;
+        c.grad_accum = get_usize(j, "grad_accum", c.grad_accum)?;
+        c.steps = get_usize(j, "steps", c.steps)?;
+        c.quant_block = get_usize(j, "quant_block", c.quant_block)?;
+        if let Some(v) = j.get("seed") {
+            c.seed = v.as_i64().ok_or_else(|| ConfigError::Bad("seed", v.to_string()))? as u64;
+        }
+        if let Some(v) = j.get("lr") {
+            c.lr = v.as_f64().ok_or_else(|| ConfigError::Bad("lr", v.to_string()))? as f32;
+        }
+        Ok(c)
+    }
+
+    pub fn load(path: &Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::from_json(&Json::parse(&text)?)?)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("scheme", Json::str(self.scheme.name())),
+            ("nodes", Json::from(self.nodes)),
+            ("micro_batch", Json::from(self.micro_batch)),
+            ("grad_accum", Json::from(self.grad_accum)),
+            ("steps", Json::from(self.steps)),
+            ("seed", Json::num(self.seed as f64)),
+            ("quant_block", Json::from(self.quant_block)),
+            ("lr", Json::num(self.lr as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_through_json() {
+        let c = RunConfig {
+            model: "mini".into(),
+            scheme: Scheme::Zero3,
+            nodes: 4,
+            micro_batch: 2,
+            grad_accum: 8,
+            steps: 100,
+            seed: 7,
+            quant_block: 128,
+            lr: 3e-4,
+        };
+        let j = c.to_json();
+        let c2 = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c2.model, "mini");
+        assert_eq!(c2.scheme, Scheme::Zero3);
+        assert_eq!(c2.nodes, 4);
+        assert_eq!(c2.grad_accum, 8);
+        assert_eq!(c2.quant_block, 128);
+        assert!((c2.lr - 3e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn defaults_for_missing_fields() {
+        let j = Json::parse(r#"{"model":"e2e"}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.model, "e2e");
+        assert_eq!(c.nodes, 1);
+        assert_eq!(c.scheme, Scheme::ZeroTopo { sec_degree: 2 });
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let j = Json::parse(r#"{"scheme":"zero9"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"nodes":-1}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,203 @@
+//! Half-precision (IEEE f16 and bfloat16) conversions, bit-exact.
+//!
+//! The paper trains in fp16 mixed precision: primary weight partitions and
+//! un-quantized wire payloads are fp16. The engine emulates this regime by
+//! rounding f32 buffers through f16 at the same points the real stack
+//! would (`round_f16_slice` on comm payloads and primary partitions).
+
+/// f32 -> IEEE binary16 bits, round-to-nearest-even, with overflow to inf
+/// and subnormal handling.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // inf / nan
+        return sign | 0x7C00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    // unbiased exponent
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e <= 0 {
+        // subnormal or zero
+        if e < -10 {
+            return sign; // underflow to zero
+        }
+        // add implicit leading 1, shift right by (1 - e) + 13
+        let m = mant | 0x80_0000;
+        let shift = 14 - e; // bits to drop from 24-bit mantissa down to 10
+        let half = 1u32 << (shift - 1);
+        let rounded = m + half - 1 + ((m >> shift) & 1); // round-half-even
+        return sign | (rounded >> shift) as u16;
+    }
+    // normal: round 23-bit mantissa to 10 bits, half-to-even
+    let half = 0x0FFF + ((mant >> 13) & 1);
+    let mant_r = mant + half;
+    if mant_r & 0x80_0000 != 0 {
+        // mantissa overflow -> bump exponent
+        let e2 = e + 1;
+        if e2 >= 0x1F {
+            return sign | 0x7C00;
+        }
+        return sign | ((e2 as u16) << 10);
+    }
+    sign | ((e as u16) << 10) | (mant_r >> 13) as u16
+}
+
+/// IEEE binary16 bits -> f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1F;
+    let mant = (h & 0x3FF) as u32;
+    let bits = match (exp, mant) {
+        (0, 0) => sign,
+        (0, m) => {
+            // subnormal: value = m * 2^-24; normalize m to set bit 10
+            let mut e = 0i32; // shifts applied
+            let mut m = m;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e += 1;
+            }
+            m &= 0x3FF;
+            // exponent: 2^(-15) * (m_norm/2^10) * 2^(1-e) ... net E = 113 - e
+            sign | (((113 - e) as u32) << 23) | (m << 13)
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,
+        (0x1F, m) => sign | 0x7F80_0000 | (m << 13),
+        (e, m) => sign | (((e as u32) + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 through f16 precision (the mixed-precision emulation).
+#[inline]
+pub fn round_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// f32 -> bfloat16 bits (round-to-nearest-even).
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // quiet
+    }
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    ((bits + round) >> 16) as u16
+}
+
+/// bfloat16 bits -> f32 (exact).
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Round an f32 through bf16 precision.
+#[inline]
+pub fn round_bf16(x: f32) -> f32 {
+    bf16_bits_to_f32(f32_to_bf16_bits(x))
+}
+
+/// In-place f16 rounding of a slice (hot path: called on every fp16 wire
+/// payload — kept branch-light; see EXPERIMENTS.md §Perf).
+pub fn round_f16_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = round_f16(*x);
+    }
+}
+
+/// Wire sizes in bytes-per-element for the formats the engine ships.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireDtype {
+    F32,
+    F16,
+    Bf16,
+    Int8Block,
+    Int4Block,
+}
+
+impl WireDtype {
+    /// Payload bytes for `n` elements with quantization block `block`
+    /// (scales are f32-per-block for the block formats).
+    pub fn wire_bytes(&self, n: usize, block: usize) -> usize {
+        match self {
+            WireDtype::F32 => 4 * n,
+            WireDtype::F16 | WireDtype::Bf16 => 2 * n,
+            WireDtype::Int8Block => n + 4 * n.div_ceil(block),
+            WireDtype::Int4Block => n.div_ceil(2) + 4 * n.div_ceil(block),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers_roundtrip() {
+        for v in [-4.0f32, -1.0, -0.5, 0.0, 0.5, 1.0, 2.0, 1024.0] {
+            assert_eq!(round_f16(v), v, "{v}");
+            assert_eq!(round_bf16(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn f16_limits() {
+        assert_eq!(round_f16(65504.0), 65504.0); // max finite f16
+        assert!(round_f16(65520.0).is_infinite()); // rounds over
+        assert_eq!(round_f16(1e-8), 0.0); // underflow
+        assert!(round_f16(f32::NAN).is_nan());
+        assert_eq!(round_f16(f32::INFINITY), f32::INFINITY);
+        assert_eq!(round_f16(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let tiny = 5.96e-8f32; // smallest positive f16 subnormal ~5.96e-8
+        let r = round_f16(tiny);
+        assert!(r > 0.0 && r < 1e-7);
+        // known subnormal: 2^-24
+        assert_eq!(round_f16(2f32.powi(-24)), 2f32.powi(-24));
+    }
+
+    #[test]
+    fn f16_rounding_is_half_even() {
+        // 1 + 2^-11 is exactly between 1.0 and 1+2^-10 -> rounds to even (1.0)
+        let x = 1.0 + 2f32.powi(-11);
+        assert_eq!(round_f16(x), 1.0);
+        // 1 + 3*2^-11 is between 1+2^-10 and 1+2^-9 -> rounds to even (1+2^-9)
+        let y = 1.0 + 3.0 * 2f32.powi(-11);
+        assert_eq!(round_f16(y), 1.0 + 2.0 * 2f32.powi(-10));
+    }
+
+    #[test]
+    fn f16_error_bound_against_native_cast() {
+        // relative error of rounding must be <= 2^-11 for normal range
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..10_000 {
+            let v = rng.normal_f32(0.0, 10.0);
+            let r = round_f16(v);
+            assert!((r - v).abs() <= v.abs() * 2f32.powi(-11) + 1e-7, "{v} -> {r}");
+        }
+    }
+
+    #[test]
+    fn bf16_truncates_mantissa() {
+        let v = 1.0000001f32;
+        assert_eq!(round_bf16(v), 1.0);
+        assert!(round_bf16(f32::NAN).is_nan());
+        assert_eq!(round_bf16(3.399e38), f32::INFINITY); // > bf16 max finite
+        assert!((round_bf16(3.0e38) - 3.0e38).abs() < 3.0e38 * 0.01); // representable
+    }
+
+    #[test]
+    fn wire_bytes() {
+        assert_eq!(WireDtype::F32.wire_bytes(1024, 256), 4096);
+        assert_eq!(WireDtype::F16.wire_bytes(1024, 256), 2048);
+        assert_eq!(WireDtype::Int8Block.wire_bytes(1024, 256), 1024 + 16);
+        assert_eq!(WireDtype::Int4Block.wire_bytes(1024, 256), 512 + 16);
+    }
+}

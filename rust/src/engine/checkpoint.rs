@@ -1,0 +1,217 @@
+//! Training-state checkpointing: save/restore the engine's canonical
+//! weights, sharded optimizer state and step counter.
+//!
+//! Format: a small self-describing binary — magic, version, JSON header
+//! (lengths, scheme, step), then raw little-endian f32 sections, then a
+//! Fletcher-64 checksum of everything before it. No external crates
+//! (offline build — DESIGN.md §8).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"ZTCKPT01";
+
+/// A snapshot of engine training state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub scheme: String,
+    pub step: u64,
+    pub weights: Vec<f32>,
+    /// Per-rank optimizer shards, flattened per field.
+    pub master: Vec<Vec<f32>>,
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+}
+
+fn fletcher64(data: &[u8]) -> u64 {
+    let (mut a, mut b) = (0u64, 0u64);
+    for chunk in data.chunks(4) {
+        let mut word = [0u8; 4];
+        word[..chunk.len()].copy_from_slice(chunk);
+        a = (a + u32::from_le_bytes(word) as u64) % 0xFFFF_FFFF;
+        b = (b + a) % 0xFFFF_FFFF;
+    }
+    (b << 32) | a
+}
+
+fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    buf.reserve(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bits().to_le_bytes());
+    }
+}
+
+fn read_f32s(data: &[u8], n: usize, off: &mut usize) -> Result<Vec<f32>> {
+    let need = n * 4;
+    if *off + need > data.len() {
+        bail!("checkpoint truncated at offset {}", *off);
+    }
+    let out = data[*off..*off + need]
+        .chunks_exact(4)
+        .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+        .collect();
+    *off += need;
+    Ok(out)
+}
+
+trait F32Bits {
+    fn to_le_bits(&self) -> u32;
+}
+impl F32Bits for f32 {
+    fn to_le_bits(&self) -> u32 {
+        self.to_bits()
+    }
+}
+
+impl Checkpoint {
+    pub fn serialize(&self) -> Vec<u8> {
+        let header = Json::obj(vec![
+            ("scheme", Json::str(self.scheme.clone())),
+            ("step", Json::num(self.step as f64)),
+            ("n_weights", Json::from(self.weights.len())),
+            (
+                "shards",
+                Json::arr(self.master.iter().map(|s| Json::from(s.len()))),
+            ),
+        ])
+        .to_string();
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        buf.extend_from_slice(header.as_bytes());
+        push_f32s(&mut buf, &self.weights);
+        for group in [&self.master, &self.m, &self.v] {
+            for shard in group {
+                push_f32s(&mut buf, shard);
+            }
+        }
+        let ck = fletcher64(&buf);
+        buf.extend_from_slice(&ck.to_le_bytes());
+        buf
+    }
+
+    pub fn deserialize(data: &[u8]) -> Result<Checkpoint> {
+        if data.len() < 24 || &data[..8] != MAGIC {
+            bail!("not a zero-topo checkpoint");
+        }
+        let body = &data[..data.len() - 8];
+        let stored = u64::from_le_bytes(data[data.len() - 8..].try_into().unwrap());
+        if fletcher64(body) != stored {
+            bail!("checkpoint checksum mismatch (corrupt file)");
+        }
+        let hlen = u64::from_le_bytes(data[8..16].try_into().unwrap()) as usize;
+        let header_end = 16 + hlen;
+        if header_end > body.len() {
+            bail!("bad header length");
+        }
+        let header = std::str::from_utf8(&data[16..header_end]).context("header utf8")?;
+        let j = Json::parse(header).map_err(|e| anyhow::anyhow!("header: {e}"))?;
+        let scheme = j.get("scheme").and_then(|v| v.as_str()).context("scheme")?.to_string();
+        let step = j.get("step").and_then(|v| v.as_i64()).context("step")? as u64;
+        let n_weights = j.get("n_weights").and_then(|v| v.as_usize()).context("n_weights")?;
+        let shard_lens: Vec<usize> = j
+            .get("shards")
+            .and_then(|v| v.as_arr())
+            .context("shards")?
+            .iter()
+            .map(|s| s.as_usize().context("shard len"))
+            .collect::<Result<_>>()?;
+
+        let mut off = header_end;
+        let weights = read_f32s(body, n_weights, &mut off)?;
+        let mut read_group = |off: &mut usize| -> Result<Vec<Vec<f32>>> {
+            shard_lens.iter().map(|&n| read_f32s(body, n, off)).collect()
+        };
+        let master = read_group(&mut off)?;
+        let m = read_group(&mut off)?;
+        let v = read_group(&mut off)?;
+        if off != body.len() {
+            bail!("trailing bytes in checkpoint");
+        }
+        Ok(Checkpoint { scheme, step, weights, master, m, v })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let bytes = self.serialize();
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut data = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?
+            .read_to_end(&mut data)?;
+        Self::deserialize(&data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            scheme: "ZeRO-topo(sec=2)".into(),
+            step: 42,
+            weights: (0..100).map(|i| i as f32 * 0.5 - 3.0).collect(),
+            master: vec![vec![1.0, 2.0], vec![3.0, 4.0, 5.0]],
+            m: vec![vec![0.1, 0.2], vec![0.3, 0.4, 0.5]],
+            v: vec![vec![0.01, 0.02], vec![0.03, 0.04, 0.05]],
+        }
+    }
+
+    #[test]
+    fn roundtrips() {
+        let c = sample();
+        let bytes = c.serialize();
+        let d = Checkpoint::deserialize(&bytes).unwrap();
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let mut bytes = sample().serialize();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(Checkpoint::deserialize(&bytes).is_err());
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let bytes = sample().serialize();
+        assert!(Checkpoint::deserialize(&bytes[..bytes.len() - 9]).is_err());
+        assert!(Checkpoint::deserialize(&bytes[..4]).is_err());
+    }
+
+    #[test]
+    fn rejects_foreign_files() {
+        assert!(Checkpoint::deserialize(b"not a checkpoint at all...").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let c = sample();
+        let path = std::env::temp_dir().join("zt_ckpt_test.bin");
+        c.save(&path).unwrap();
+        let d = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, d);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn preserves_nonfinite_and_negative_zero_bits() {
+        let mut c = sample();
+        c.weights = vec![f32::NEG_INFINITY, -0.0, f32::MIN_POSITIVE];
+        let d = Checkpoint::deserialize(&c.serialize()).unwrap();
+        assert_eq!(d.weights[0], f32::NEG_INFINITY);
+        assert_eq!(d.weights[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(d.weights[2], f32::MIN_POSITIVE);
+    }
+}

@@ -1,0 +1,49 @@
+//! # ZeRO-Topo
+//!
+//! Reproduction of *"Scaling Large Language Model Training on Frontier with
+//! Low-Bandwidth Partitioning"* (CS.DC 2025): a 3-level topology-aware
+//! hierarchical partitioning strategy (ZeRO-topo) on top of ZeRO++/ZeRO-3,
+//! implemented as a Rust training coordinator over AOT-compiled JAX/Pallas
+//! compute (PJRT CPU).
+//!
+//! The three levels map training state onto Frontier's bandwidth hierarchy:
+//!
+//! | state            | sharding factor           | bandwidth level        |
+//! |------------------|---------------------------|------------------------|
+//! | model weights    | 2 (GCD pair in a MI250X)  | `B_GCD` = 200 GB/s     |
+//! | gradients        | 8 (GCDs of one node)      | `B_intra` 50–100 GB/s  |
+//! | optimizer states | all GCDs (like ZeRO-3)    | `B_inter` = 100 GB/s   |
+//!
+//! plus ZeRO++-style block quantization on every collective (INT8 weight
+//! all-gather, INT4 all-to-all gradient reduce-scatter) and INT8-quantized
+//! secondary weight partitions.
+//!
+//! Layer map (see `DESIGN.md`):
+//! * L3 (this crate): coordinator, simulated Frontier cluster, collective
+//!   engine with an α–β cost model, sharding planners, training engine,
+//!   analytical performance simulator.
+//! * L2 (`python/compile/model.py`): GPT-NeoX-style flat-parameter model,
+//!   AOT-lowered to HLO text under `artifacts/`.
+//! * L1 (`python/compile/kernels/`): Pallas block-quantization + fused
+//!   attention kernels (interpret mode), bit-exact with [`quant`].
+
+pub mod comm;
+pub mod config;
+pub mod data;
+pub mod dtype;
+pub mod engine;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod optimizer;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sharding;
+pub mod sim;
+pub mod testing;
+pub mod topology;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,300 @@
+//! `zero-topo` — CLI for the ZeRO-topo reproduction.
+//!
+//! Subcommands:
+//!   topo      --node frontier|dgx               print node topology (Fig 2/3, Tables I/II)
+//!   sharding  --nodes N                          print Table IV sharding factors
+//!   memory    --model 20b --nodes N              print Tables V/VI memory breakdown
+//!   capacity  --nodes N                          max-model-size claims (Section II / VII.B)
+//!   simulate  --model 20b|10b --nodes 8,16,...   Fig 7/8 scaling figures (analytical sim)
+//!   train     --model tiny|mini|... --scheme S   real-numerics training via PJRT artifacts
+//!   report                                       everything above, in order
+
+use zero_topo::config::RunConfig;
+use zero_topo::engine::TrainEngine;
+use zero_topo::memory::MemoryModel;
+use zero_topo::model::TransformerSpec;
+use zero_topo::report::{render_scaling_figure, ScalingSeries};
+use zero_topo::runtime::Runtime;
+use zero_topo::sharding::{Scheme, ShardingSpec};
+use zero_topo::sim::{scaling_series, SimConfig};
+use zero_topo::topology::{Cluster, LinkClass, NodeKind};
+use zero_topo::util::cli::Args;
+use zero_topo::util::table::{fnum, human_bytes, Table};
+
+const USAGE: &str = "\
+zero-topo — ZeRO-topo (3-level low-bandwidth partitioning) reproduction
+
+USAGE: zero-topo <subcommand> [options]
+
+  topo      [--node frontier|dgx]           node topology (paper Fig 2/3)
+  sharding  [--nodes N]                     Table IV sharding factors
+  memory    [--model 20b] [--nodes N]       Tables V/VI memory per device
+  capacity  [--nodes N]                     max model size per scheme (Sec II)
+  simulate  [--model 20b] [--nodes 8,16,32,48] [--schemes zero3,zeropp,zerotopo]
+                                            Fig 7/8 scaling (analytical)
+  train     [--model tiny] [--scheme zerotopo] [--nodes 1] [--steps 10]
+            [--artifacts DIR] [--csv FILE]  real training via PJRT
+  report                                    print all analytical tables
+";
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(raw, &["verbose", "json", "help"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") || args.subcommand.is_none() {
+        println!("{USAGE}");
+        return;
+    }
+    let sub = args.subcommand.clone().unwrap();
+    let result = match sub.as_str() {
+        "topo" => cmd_topo(&args),
+        "sharding" => cmd_sharding(&args),
+        "memory" => cmd_memory(&args),
+        "capacity" => cmd_capacity(&args),
+        "simulate" => cmd_simulate(&args),
+        "train" => cmd_train(&args),
+        "report" => cmd_report(&args),
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_schemes(args: &Args) -> anyhow::Result<Vec<Scheme>> {
+    let raw = args.get_or("schemes", "zero3,zeropp,zerotopo");
+    raw.split(',')
+        .map(|s| Scheme::parse(s.trim()).ok_or_else(|| anyhow::anyhow!("unknown scheme '{s}'")))
+        .collect()
+}
+
+fn cmd_topo(args: &Args) -> anyhow::Result<()> {
+    let kind = match args.get_or("node", "frontier") {
+        "dgx" => NodeKind::DgxA100,
+        _ => NodeKind::FrontierMI250X,
+    };
+    println!("node kind: {kind:?}");
+    println!(
+        "workers/node: {}   peak fp16 FLOP/s per worker: {:.1} TF   HBM/worker: {}",
+        kind.gcds_per_node(),
+        kind.peak_flops_per_worker() / 1e12,
+        human_bytes(kind.hbm_per_worker())
+    );
+    let mut t = Table::new(&["link class", "bandwidth (GB/s)", "latency (us)"]).left_first();
+    let classes: &[LinkClass] = match kind {
+        NodeKind::FrontierMI250X => &[
+            LinkClass::GcdPair,
+            LinkClass::IntraAdjacent,
+            LinkClass::IntraCross,
+            LinkClass::InterNode,
+        ],
+        NodeKind::DgxA100 => &[LinkClass::NvLink, LinkClass::InterNode],
+    };
+    for &c in classes {
+        let s = kind.link_spec(c);
+        t.row(vec![c.to_string(), fnum(s.bandwidth / 1e9, 0), fnum(s.latency * 1e6, 1)]);
+    }
+    println!("{}", t.render());
+    // rank-pair link matrix for one node
+    let cluster = Cluster { kind, nodes: 1 };
+    println!("intra-node link classes (rank x rank):");
+    for a in 0..8 {
+        let row: Vec<String> = (0..8)
+            .map(|b| match cluster.link_between(a, b) {
+                LinkClass::Local => ".".into(),
+                LinkClass::GcdPair => "G".into(),
+                LinkClass::IntraAdjacent => "a".into(),
+                LinkClass::IntraCross => "x".into(),
+                LinkClass::NvLink => "n".into(),
+                LinkClass::InterNode => "I".into(),
+            })
+            .collect();
+        println!("  {}", row.join(" "));
+    }
+    println!("  G=GCD pair (200 GB/s)  a=adjacent (100)  x=cross (50)  n=NVLink  I=inter-node");
+    Ok(())
+}
+
+fn cmd_sharding(args: &Args) -> anyhow::Result<()> {
+    let nodes = args.parse_opt("nodes", 2usize)?;
+    let cluster = Cluster::frontier(nodes);
+    let mut t = Table::new(&["scheme", "weights", "grads", "optim states", "secondary"])
+        .title(format!(
+            "Table IV — sharding factors ({} nodes, {} GCDs)",
+            nodes,
+            cluster.world_size()
+        ))
+        .left_first();
+    for scheme in [
+        Scheme::Zero1,
+        Scheme::Zero2,
+        Scheme::Zero3,
+        Scheme::ZeroPP,
+        Scheme::ZeroTopo { sec_degree: 2 },
+        Scheme::ZeroTopo { sec_degree: 8 },
+    ] {
+        let s = ShardingSpec::resolve(scheme, &cluster)?;
+        t.row(vec![
+            scheme.name(),
+            s.weights.to_string(),
+            s.grads.to_string(),
+            s.optim.to_string(),
+            if s.secondary > 0 { s.secondary.to_string() } else { "-".into() },
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> anyhow::Result<()> {
+    let model = TransformerSpec::by_name(args.get_or("model", "20b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model (use 10b/20b/125m)"))?;
+    let nodes = args.parse_opt("nodes", 2usize)?;
+    let cluster = Cluster::frontier(nodes);
+    let psi = model.n_params() as f64;
+    println!("{} (Ψ = {:.2}B params), {} nodes", model.name, psi / 1e9, nodes);
+    let mut t = Table::new(&["scheme", "weights", "secondary", "grads", "optim", "total"])
+        .title("Tables V & VI — per-GCD model-state memory".to_string())
+        .left_first();
+    for scheme in [
+        Scheme::Zero3,
+        Scheme::ZeroPP,
+        Scheme::ZeroTopo { sec_degree: 8 },
+        Scheme::ZeroTopo { sec_degree: 2 },
+    ] {
+        let mm = MemoryModel::new(scheme, ShardingSpec::resolve(scheme, &cluster)?);
+        let m = mm.per_device(psi);
+        t.row(vec![
+            scheme.name(),
+            human_bytes(m.weights),
+            human_bytes(m.secondary),
+            human_bytes(m.grads),
+            human_bytes(m.optim),
+            human_bytes(m.total()),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_capacity(args: &Args) -> anyhow::Result<()> {
+    let nodes = args.parse_opt("nodes", 2usize)?;
+    let cluster = Cluster::frontier(nodes);
+    let hbm = cluster.kind.hbm_per_worker();
+    let mut t = Table::new(&["scheme", "max model (params)", "weights+grads only"])
+        .title(format!(
+            "Max model size on {nodes} Frontier nodes ({} GCDs x {}) — paper Sec II: ZeRO-3≈68B, ZeRO++≈55B",
+            cluster.world_size(),
+            human_bytes(hbm)
+        ))
+        .left_first();
+    for scheme in [
+        Scheme::Zero3,
+        Scheme::ZeroPP,
+        Scheme::ZeroTopo { sec_degree: 8 },
+        Scheme::ZeroTopo { sec_degree: 2 },
+    ] {
+        let mm = MemoryModel::new(scheme, ShardingSpec::resolve(scheme, &cluster)?);
+        t.row(vec![
+            scheme.name(),
+            format!("{:.1}B", mm.max_model_size(hbm) / 1e9),
+            format!("{:.1}B", mm.max_model_size_weights_grads(hbm) / 1e9),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let model = TransformerSpec::by_name(args.get_or("model", "20b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model (use 10b/20b/125m)"))?;
+    let node_counts = args.parse_list("nodes", &[8usize, 16, 24, 32, 48])?;
+    let schemes = parse_schemes(args)?;
+    let mut cfg = SimConfig::default();
+    cfg.mfu = args.parse_opt("mfu", cfg.mfu)?;
+    cfg.overlap = args.parse_opt("overlap", cfg.overlap)?;
+    let series: Vec<ScalingSeries> = schemes
+        .iter()
+        .map(|&scheme| ScalingSeries {
+            scheme,
+            points: scaling_series(&model, scheme, &node_counts, &cfg),
+        })
+        .collect();
+    let title = format!(
+        "Fig 7/8 — TFLOPS per GPU, {} (Ψ={:.1}B), mfu={} overlap={}",
+        model.name,
+        model.n_params() as f64 / 1e9,
+        cfg.mfu,
+        cfg.overlap
+    );
+    println!("{}", render_scaling_figure(&title, &series));
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, zero_topo::report::scaling_csv(&series))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.model = args.get_or("model", "tiny").to_string();
+    cfg.scheme = Scheme::parse(args.get_or("scheme", "zerotopo"))
+        .ok_or_else(|| anyhow::anyhow!("bad --scheme"))?;
+    cfg.nodes = args.parse_opt("nodes", 1usize)?;
+    cfg.steps = args.parse_opt("steps", 10usize)?;
+    cfg.grad_accum = args.parse_opt("grad-accum", 1usize)?;
+    cfg.seed = args.parse_opt("seed", 42u64)?;
+    cfg.lr = args.parse_opt("lr", 1e-3f32)?;
+    let dir = args.get_or("artifacts", "artifacts");
+
+    eprintln!("loading artifacts from {dir} ...");
+    let rt = Runtime::load(dir)?;
+    let runner = rt.model(&cfg.model)?;
+    eprintln!(
+        "model {}: {} params, seq {}, mbs {}; scheme {}, {} nodes ({} GCDs)",
+        cfg.model,
+        runner.manifest.n_params,
+        runner.manifest.seq,
+        runner.manifest.mbs,
+        cfg.scheme.name(),
+        cfg.nodes,
+        cfg.nodes * 8
+    );
+    let steps = cfg.steps;
+    let csv = args.get("csv").map(|s| s.to_string());
+    let mut engine = TrainEngine::new(cfg, &runner)?;
+    let t0 = std::time::Instant::now();
+    for s in 0..steps {
+        let loss = engine.step()?;
+        println!(
+            "step {:>4}  loss {:.4}  comm(sim) {:.3}s  wall {:.1}s",
+            s + 1,
+            loss,
+            engine.comm_seconds(),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    if let Some(path) = csv {
+        std::fs::write(&path, engine.log.to_csv())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    cmd_topo(args)?;
+    cmd_sharding(args)?;
+    cmd_memory(args)?;
+    cmd_capacity(args)?;
+    cmd_simulate(args)?;
+    Ok(())
+}

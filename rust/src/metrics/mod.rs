@@ -1,0 +1,119 @@
+//! Training-run metrics: the quantities the paper reports (TFLOPS per GPU,
+//! samples/sec, scaling efficiency) computed from simulated step times and
+//! the comm ledger.
+
+/// Throughput metrics for one configuration point (one bar of Fig 7/8).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Throughput {
+    pub gcds: usize,
+    /// Simulated seconds per optimizer step.
+    pub step_seconds: f64,
+    /// Model FLOPs per optimizer step (whole cluster).
+    pub flops_per_step: f64,
+    /// Sequences per optimizer step (global batch).
+    pub sequences_per_step: f64,
+}
+
+impl Throughput {
+    /// TFLOPS per GPU — the paper's headline metric (GCD == GPU on Frontier).
+    pub fn tflops_per_gpu(&self) -> f64 {
+        self.flops_per_step / self.step_seconds / self.gcds as f64 / 1e12
+    }
+
+    pub fn samples_per_second(&self) -> f64 {
+        self.sequences_per_step / self.step_seconds
+    }
+}
+
+/// Scaling efficiency of a series of points relative to its first point:
+/// `eff_i = (tflops_i / tflops_0)` with per-GPU normalization (weak-scaling
+/// style, as the paper's Fig 7/8 efficiency curves).
+pub fn scaling_efficiency(points: &[Throughput]) -> Vec<f64> {
+    assert!(!points.is_empty());
+    let base = points[0].tflops_per_gpu();
+    points.iter().map(|p| p.tflops_per_gpu() / base).collect()
+}
+
+/// A recorded loss-curve sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LossPoint {
+    pub step: usize,
+    pub tokens: u64,
+    pub loss: f64,
+}
+
+/// Running training log for one scheme.
+#[derive(Debug, Clone, Default)]
+pub struct TrainLog {
+    pub scheme: String,
+    pub losses: Vec<LossPoint>,
+    pub sim_seconds: f64,
+    pub wall_seconds: f64,
+}
+
+impl TrainLog {
+    pub fn final_loss(&self) -> Option<f64> {
+        self.losses.last().map(|p| p.loss)
+    }
+
+    /// Mean loss over the last `k` samples (smoother comparison metric).
+    pub fn tail_mean(&self, k: usize) -> Option<f64> {
+        if self.losses.is_empty() {
+            return None;
+        }
+        let tail = &self.losses[self.losses.len().saturating_sub(k)..];
+        Some(tail.iter().map(|p| p.loss).sum::<f64>() / tail.len() as f64)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,tokens,loss\n");
+        for p in &self.losses {
+            s.push_str(&format!("{},{},{:.6}\n", p.step, p.tokens, p.loss));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tflops_math() {
+        let t = Throughput {
+            gcds: 8,
+            step_seconds: 2.0,
+            flops_per_step: 8.0 * 2.0 * 100e12,
+            sequences_per_step: 64.0,
+        };
+        assert!((t.tflops_per_gpu() - 100.0).abs() < 1e-9);
+        assert!((t.samples_per_second() - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_starts_at_one() {
+        let mk = |gcds, secs| Throughput {
+            gcds,
+            step_seconds: secs,
+            flops_per_step: gcds as f64 * 1e12,
+            sequences_per_step: 1.0,
+        };
+        let pts = vec![mk(8, 1.0), mk(16, 1.05), mk(32, 1.2)];
+        let eff = scaling_efficiency(&pts);
+        assert!((eff[0] - 1.0).abs() < 1e-12);
+        assert!(eff[1] < 1.0 && eff[2] < eff[1]);
+    }
+
+    #[test]
+    fn train_log_tail() {
+        let mut log = TrainLog { scheme: "x".into(), ..Default::default() };
+        for i in 0..10 {
+            log.losses.push(LossPoint { step: i, tokens: i as u64, loss: 10.0 - i as f64 });
+        }
+        assert_eq!(log.final_loss(), Some(1.0));
+        assert_eq!(log.tail_mean(2), Some(1.5));
+        let csv = log.to_csv();
+        assert!(csv.starts_with("step,tokens,loss\n"));
+        assert_eq!(csv.lines().count(), 11);
+    }
+}

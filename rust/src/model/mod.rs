@@ -1,0 +1,179 @@
+//! Transformer architecture descriptions: parameter counts, FLOPs, and the
+//! GPT-NeoX model family the paper evaluates (10B / 20B) plus the
+//! laptop-scale proxies the numerics path actually executes.
+//!
+//! The analytical simulator (Fig 7/8) only needs Ψ (parameter count), layer
+//! geometry and batch shape; the FLOPs model is the standard dense-decoder
+//! account (Narayanan et al., Megatron-LM) used by GPT-NeoX's own
+//! `flops_calculator`.
+
+/// Architecture + batch geometry of a dense decoder-only transformer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransformerSpec {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    /// Untied embedding/LM-head (GPT-NeoX-20B uses untied).
+    pub tied_head: bool,
+}
+
+impl TransformerSpec {
+    /// GPT-NeoX-20B (Black et al. 2022): 44 layers, d=6144, 64 heads,
+    /// vocab 50432 (padded), seq 2048.
+    pub fn neox20b() -> Self {
+        TransformerSpec {
+            name: "GPT-NeoX-20B".into(),
+            d_model: 6144,
+            n_layers: 44,
+            n_heads: 64,
+            vocab: 50432,
+            seq: 2048,
+            tied_head: false,
+        }
+    }
+
+    /// A 10B-class GPT-NeoX configuration (the paper's second model):
+    /// 32 layers, d=5120.
+    pub fn neox10b() -> Self {
+        TransformerSpec {
+            name: "GPT-NeoX-10B".into(),
+            d_model: 5120,
+            n_layers: 32,
+            n_heads: 40,
+            vocab: 50432,
+            seq: 2048,
+            tied_head: false,
+        }
+    }
+
+    /// GPT-style 125M (sanity-scale reference point).
+    pub fn gpt125m() -> Self {
+        TransformerSpec {
+            name: "GPT-125M".into(),
+            d_model: 768,
+            n_layers: 12,
+            n_heads: 12,
+            vocab: 50304,
+            seq: 2048,
+            tied_head: true,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "20b" | "neox20b" | "gpt-neox-20b" => Some(Self::neox20b()),
+            "10b" | "neox10b" | "gpt-neox-10b" => Some(Self::neox10b()),
+            "125m" | "gpt125m" => Some(Self::gpt125m()),
+            _ => None,
+        }
+    }
+
+    /// Parameter count Ψ.
+    ///
+    /// Per layer: 4 d² (attention qkv+out) + 8 d² (MLP 4×) + 4d (ln scales/
+    /// biases) + 13d/... biases are small; we follow the GPT-NeoX counter:
+    /// 12 d² + 13d per layer, embeddings vocab·d (+ pos seq·d), final ln 2d,
+    /// untied head adds vocab·d.
+    pub fn n_params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let per_layer = 12 * d * d + 13 * d;
+        let emb = (self.vocab as u64) * d + (self.seq as u64) * d;
+        let head = if self.tied_head { 0 } else { (self.vocab as u64) * d };
+        self.n_layers as u64 * per_layer + emb + head + 2 * d
+    }
+
+    /// Ψ in bytes for a given element size.
+    pub fn param_bytes(&self, elem: usize) -> u64 {
+        self.n_params() * elem as u64
+    }
+
+    /// Dense FLOPs for one token, forward pass (2·MAC convention):
+    /// 24·d² per layer for the matmuls + 4·d·seq attention score/update +
+    /// 2·d·vocab head.
+    pub fn flops_per_token_fwd(&self) -> f64 {
+        let d = self.d_model as f64;
+        let per_layer = 24.0 * d * d + 4.0 * d * self.seq as f64;
+        self.n_layers as f64 * per_layer + 2.0 * d * self.vocab as f64
+    }
+
+    /// fwd + bwd (bwd ≈ 2× fwd).
+    pub fn flops_per_token(&self) -> f64 {
+        3.0 * self.flops_per_token_fwd()
+    }
+
+    /// FLOPs for one *optimizer step* at a global batch of `tokens`.
+    pub fn flops_per_step(&self, tokens: f64) -> f64 {
+        self.flops_per_token() * tokens
+    }
+
+    /// The classic 6·Ψ approximation (cross-check for the detailed count).
+    pub fn flops_per_token_6n(&self) -> f64 {
+        6.0 * self.n_params() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neox20b_parameter_count() {
+        let s = TransformerSpec::neox20b();
+        let psi = s.n_params() as f64;
+        // 20B-class: within 10% of 20.6B (the published size)
+        assert!((psi - 20.6e9).abs() / 20.6e9 < 0.10, "{psi}");
+    }
+
+    #[test]
+    fn neox10b_parameter_count() {
+        let s = TransformerSpec::neox10b();
+        let psi = s.n_params() as f64;
+        assert!((8.5e9..12.5e9).contains(&psi), "{psi}");
+    }
+
+    #[test]
+    fn gpt125m_parameter_count() {
+        let s = TransformerSpec::gpt125m();
+        let psi = s.n_params() as f64;
+        assert!((100e6..170e6).contains(&psi), "{psi}");
+    }
+
+    #[test]
+    fn flops_close_to_6n_for_large_models() {
+        // For large d, detailed matmul count ≈ 6Ψ (attention adds a bit).
+        let s = TransformerSpec::neox20b();
+        let detailed = s.flops_per_token();
+        let approx = s.flops_per_token_6n();
+        let ratio = detailed / approx;
+        assert!((0.85..1.30).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn fwd_bwd_ratio() {
+        let s = TransformerSpec::neox10b();
+        assert_eq!(s.flops_per_token(), 3.0 * s.flops_per_token_fwd());
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(TransformerSpec::by_name("20b").unwrap().name, "GPT-NeoX-20B");
+        assert_eq!(TransformerSpec::by_name("10B").unwrap().name, "GPT-NeoX-10B");
+        assert!(TransformerSpec::by_name("7b").is_none());
+    }
+
+    #[test]
+    fn param_bytes_scaling() {
+        let s = TransformerSpec::gpt125m();
+        assert_eq!(s.param_bytes(2), 2 * s.n_params());
+        assert_eq!(s.param_bytes(4), 4 * s.n_params());
+    }
+
+    #[test]
+    fn step_flops_linear_in_tokens() {
+        let s = TransformerSpec::gpt125m();
+        assert_eq!(s.flops_per_step(2048.0), 2.0 * s.flops_per_step(1024.0));
+    }
+}

@@ -1,0 +1,181 @@
+//! Sharded AdamW — the optimizer-state partition of the 3-level design.
+//!
+//! Each rank owns `1/d_os` of the optimizer states (fp32 master weights,
+//! first and second moments — the paper's K = 12 bytes/param regime) and
+//! updates only the parameters its shard covers. The fp16 training weights
+//! are re-materialized from the fp32 master after each step (mixed
+//! precision à la Megatron/DeepSpeed).
+
+pub mod schedule;
+
+/// AdamW hyperparameters (paper stack defaults: GPT-NeoX / DeepSpeed).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdamWConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    /// Global gradient-norm clip (0 disables).
+    pub grad_clip: f32,
+}
+
+impl Default for AdamWConfig {
+    fn default() -> Self {
+        AdamWConfig { lr: 1e-3, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.0, grad_clip: 1.0 }
+    }
+}
+
+/// The optimizer-state shard owned by one rank.
+#[derive(Debug, Clone)]
+pub struct AdamWShard {
+    pub cfg: AdamWConfig,
+    /// fp32 master copy of this shard's parameters.
+    pub master: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: u64,
+}
+
+impl AdamWShard {
+    /// Initialize from the shard's initial parameter values.
+    pub fn new(cfg: AdamWConfig, init: &[f32]) -> Self {
+        AdamWShard {
+            cfg,
+            master: init.to_vec(),
+            m: vec![0.0; init.len()],
+            v: vec![0.0; init.len()],
+            step: 0,
+        }
+    }
+
+    /// Memory footprint in bytes (the K = 12 B/param account).
+    pub fn bytes(&self) -> usize {
+        12 * self.master.len()
+    }
+
+    /// One AdamW step on this shard given its gradient shard. `clip_scale`
+    /// is the global-norm clipping factor (must be computed over the FULL
+    /// gradient across shards — see [`global_clip_scale`]).
+    pub fn step(&mut self, grads: &[f32], clip_scale: f32) {
+        assert_eq!(grads.len(), self.master.len());
+        self.step += 1;
+        let c = self.cfg;
+        let t = self.step as f32;
+        let bc1 = 1.0 - c.beta1.powf(t);
+        let bc2 = 1.0 - c.beta2.powf(t);
+        for i in 0..grads.len() {
+            let g = grads[i] * clip_scale;
+            self.m[i] = c.beta1 * self.m[i] + (1.0 - c.beta1) * g;
+            self.v[i] = c.beta2 * self.v[i] + (1.0 - c.beta2) * g * g;
+            let mh = self.m[i] / bc1;
+            let vh = self.v[i] / bc2;
+            // decoupled weight decay (AdamW, Loshchilov & Hutter)
+            self.master[i] -= c.lr * (mh / (vh.sqrt() + c.eps) + c.weight_decay * self.master[i]);
+        }
+    }
+}
+
+/// Squared L2 norm of a gradient shard (summed across shards by the caller
+/// via an all-reduce to form the global norm).
+pub fn local_sq_norm(grads: &[f32]) -> f64 {
+    grads.iter().map(|&g| (g as f64) * (g as f64)).sum()
+}
+
+/// Clip scale from the global gradient norm: min(1, clip / ||g||).
+pub fn global_clip_scale(global_sq_norm: f64, clip: f32) -> f32 {
+    if clip <= 0.0 {
+        return 1.0;
+    }
+    let norm = global_sq_norm.sqrt() as f32;
+    if norm > clip {
+        clip / (norm + 1e-6)
+    } else {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_converges() {
+        // minimize f(x) = 0.5*(x - 3)^2; grad = x - 3
+        let mut opt = AdamWShard::new(
+            AdamWConfig { lr: 0.1, grad_clip: 0.0, ..Default::default() },
+            &[0.0],
+        );
+        for _ in 0..500 {
+            let g = opt.master[0] - 3.0;
+            opt.step(&[g], 1.0);
+        }
+        assert!((opt.master[0] - 3.0).abs() < 1e-2, "{}", opt.master[0]);
+    }
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        // With bias correction, |Δx| of step 1 ≈ lr regardless of grad scale.
+        for gscale in [1e-3f32, 1.0, 1e3] {
+            let mut opt = AdamWShard::new(
+                AdamWConfig { lr: 0.01, grad_clip: 0.0, ..Default::default() },
+                &[1.0],
+            );
+            opt.step(&[gscale], 1.0);
+            let delta = (1.0 - opt.master[0]).abs();
+            assert!((delta - 0.01).abs() < 1e-3, "g={gscale} delta={delta}");
+        }
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut opt = AdamWShard::new(
+            AdamWConfig { lr: 0.1, weight_decay: 0.1, grad_clip: 0.0, ..Default::default() },
+            &[5.0],
+        );
+        for _ in 0..100 {
+            opt.step(&[0.0], 1.0); // zero gradient: pure decay
+        }
+        assert!(opt.master[0] < 5.0 * 0.5, "{}", opt.master[0]);
+    }
+
+    #[test]
+    fn clip_scale_behaviour() {
+        assert_eq!(global_clip_scale(0.25, 1.0), 1.0); // norm 0.5 < clip
+        let s = global_clip_scale(100.0, 1.0); // norm 10 -> scale 0.1
+        assert!((s - 0.1).abs() < 1e-4);
+        assert_eq!(global_clip_scale(1e6, 0.0), 1.0); // disabled
+    }
+
+    #[test]
+    fn sharded_equals_monolithic() {
+        // Running AdamW on two half-shards must equal one full-shard run.
+        let init: Vec<f32> = (0..64).map(|i| (i as f32) * 0.1 - 3.0).collect();
+        let grads: Vec<f32> = (0..64).map(|i| ((i * 7 % 13) as f32) * 0.01 - 0.05).collect();
+        let cfg = AdamWConfig::default();
+        let mut full = AdamWShard::new(cfg, &init);
+        let mut lo = AdamWShard::new(cfg, &init[..32]);
+        let mut hi = AdamWShard::new(cfg, &init[32..]);
+        for _ in 0..10 {
+            full.step(&grads, 1.0);
+            lo.step(&grads[..32], 1.0);
+            hi.step(&grads[32..], 1.0);
+        }
+        assert_eq!(&full.master[..32], &lo.master[..]);
+        assert_eq!(&full.master[32..], &hi.master[..]);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let opt = AdamWShard::new(AdamWConfig::default(), &vec![0.0; 1000]);
+        assert_eq!(opt.bytes(), 12_000);
+    }
+
+    #[test]
+    fn local_norms_compose() {
+        let g: Vec<f32> = (0..100).map(|i| i as f32 * 0.01).collect();
+        let whole = local_sq_norm(&g);
+        let split = local_sq_norm(&g[..50]) + local_sq_norm(&g[50..]);
+        assert!((whole - split).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,83 @@
+//! Learning-rate schedules — GPT-NeoX's default regime (linear warmup +
+//! cosine decay to a floor), used by the training engine.
+
+/// Warmup + cosine decay (the GPT-NeoX / Megatron default).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WarmupCosine {
+    pub base_lr: f32,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    /// Final LR as a fraction of base (NeoX default 0.1).
+    pub min_ratio: f32,
+}
+
+impl WarmupCosine {
+    pub fn new(base_lr: f32, warmup_steps: usize, total_steps: usize) -> Self {
+        WarmupCosine { base_lr, warmup_steps, total_steps, min_ratio: 0.1 }
+    }
+
+    /// LR for optimizer step `step` (0-based).
+    pub fn lr(&self, step: usize) -> f32 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.base_lr * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        let total = self.total_steps.max(self.warmup_steps + 1);
+        let progress =
+            (step - self.warmup_steps) as f32 / (total - self.warmup_steps).max(1) as f32;
+        let progress = progress.min(1.0);
+        let cosine = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+        let min_lr = self.base_lr * self.min_ratio;
+        min_lr + (self.base_lr - min_lr) * cosine
+    }
+}
+
+/// Constant LR (the engine default when no schedule is configured).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Constant(pub f32);
+
+impl Constant {
+    pub fn lr(&self, _step: usize) -> f32 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = WarmupCosine::new(1.0, 10, 100);
+        assert!((s.lr(0) - 0.1).abs() < 1e-6);
+        assert!((s.lr(4) - 0.5).abs() < 1e-6);
+        assert!((s.lr(9) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let s = WarmupCosine::new(1.0, 10, 110);
+        assert!((s.lr(10) - 1.0).abs() < 1e-2);
+        let mid = s.lr(60);
+        assert!((0.4..0.7).contains(&mid), "{mid}");
+        assert!((s.lr(109) - 0.1).abs() < 0.02);
+        // past the end: clamp at the floor
+        assert!((s.lr(500) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn monotone_after_warmup() {
+        let s = WarmupCosine::new(3e-4, 5, 50);
+        let mut prev = f32::MAX;
+        for step in 5..50 {
+            let lr = s.lr(step);
+            assert!(lr <= prev + 1e-9);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn zero_warmup_starts_at_base() {
+        let s = WarmupCosine::new(1.0, 0, 10);
+        assert!((s.lr(0) - 1.0).abs() < 1e-6);
+    }
+}

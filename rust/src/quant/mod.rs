@@ -1,0 +1,395 @@
+//! Block-based symmetric quantization — the native (Rust) port of the L1
+//! Pallas kernels in `python/compile/kernels/quant.py`.
+//!
+//! ZeRO++ (and therefore ZeRO-topo) compresses every collective payload
+//! with blockwise quantization [Dettmers et al. 2022]: INT8 for the weight
+//! all-gather and the secondary weight partition, INT4 (two nibbles per
+//! byte) for the all-to-all gradient reduce-scatter.
+//!
+//! Contract (identical to the Pallas kernels; cross-checked through PJRT in
+//! `rust/tests/pjrt_quant.rs`):
+//!   - per-block scale `s = max|x| / Q` (Q = 127 or 7); all-zero block → s = 1
+//!   - `q = clip(round_half_to_even(x / s), -Q, Q)`
+//!   - dequant `x' = q * s`
+//!   - INT4 packing: nibble `n = q + 8 ∈ [1,15]`; byte = `n_even + 16*n_odd`
+
+pub const DEFAULT_BLOCK: usize = 256;
+
+/// An INT8-quantized buffer (1 byte/element + one f32 scale per block).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QInt8 {
+    pub q: Vec<i8>,
+    pub scales: Vec<f32>,
+    pub block: usize,
+}
+
+/// An INT4-quantized buffer (0.5 byte/element + one f32 scale per block).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QInt4 {
+    pub packed: Vec<u8>,
+    pub scales: Vec<f32>,
+    pub block: usize,
+    pub n: usize,
+}
+
+/// Round-half-to-even for |y| <= 2^22 via the magic-number trick: adding
+/// 1.5*2^23 pushes the value where the f32 ULP is exactly 1, so the
+/// IEEE round-to-nearest-even of the ADD performs the integer rounding;
+/// the subtraction is exact. ~3x faster than `f32::round_ties_even` on
+/// the scalar path and bit-identical on the quantizer's [-127, 127]
+/// domain (verified against the original in tests + the Pallas kernels
+/// via rust/tests/pjrt_quant.rs). See EXPERIMENTS.md §Perf.
+#[inline(always)]
+fn round_half_even_small(y: f32) -> f32 {
+    const MAGIC: f32 = 12_582_912.0; // 1.5 * 2^23
+    (y + MAGIC) - MAGIC
+}
+
+#[inline]
+fn block_scale(chunk: &[f32], qmax: f32) -> f32 {
+    // branchless max in 4 independent lanes so the reduction vectorizes
+    // (§Perf: the branchy scalar version stalled on compare-jumps)
+    let mut lanes = [0.0f32; 4];
+    let mut it = chunk.chunks_exact(4);
+    for c in it.by_ref() {
+        for (l, v) in lanes.iter_mut().zip(c) {
+            *l = l.max(v.abs());
+        }
+    }
+    let mut amax = lanes[0].max(lanes[1]).max(lanes[2]).max(lanes[3]);
+    for &v in it.remainder() {
+        amax = amax.max(v.abs());
+    }
+    if amax > 0.0 {
+        amax / qmax
+    } else {
+        1.0
+    }
+}
+
+impl QInt8 {
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Wire size in bytes (payload + scales), the quantity the cost model
+    /// charges to the interconnect.
+    pub fn wire_bytes(&self) -> usize {
+        self.q.len() + 4 * self.scales.len()
+    }
+}
+
+impl QInt4 {
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn wire_bytes(&self) -> usize {
+        self.packed.len() + 4 * self.scales.len()
+    }
+}
+
+/// Blockwise INT8 quantization. `x.len()` must be a multiple of `block`.
+pub fn quantize_int8(x: &[f32], block: usize) -> QInt8 {
+    assert!(block > 0 && x.len() % block == 0, "len {} % block {block} != 0", x.len());
+    let nblocks = x.len() / block;
+    let mut q = vec![0i8; x.len()];
+    let mut scales = vec![0f32; nblocks];
+    for b in 0..nblocks {
+        let chunk = &x[b * block..(b + 1) * block];
+        let s = block_scale(chunk, 127.0);
+        scales[b] = s;
+        let inv = 1.0 / s;
+        for (o, &v) in q[b * block..(b + 1) * block].iter_mut().zip(chunk) {
+            *o = round_half_even_small((v * inv).clamp(-127.0, 127.0)) as i8;
+        }
+    }
+    QInt8 { q, scales, block }
+}
+
+/// Dequantize INT8 into a fresh buffer.
+pub fn dequantize_int8(q: &QInt8) -> Vec<f32> {
+    let mut out = vec![0f32; q.q.len()];
+    dequantize_int8_into(q, &mut out);
+    out
+}
+
+/// Dequantize INT8 into caller storage (hot path — avoids allocation).
+pub fn dequantize_int8_into(q: &QInt8, out: &mut [f32]) {
+    assert_eq!(out.len(), q.q.len());
+    for (b, &s) in q.scales.iter().enumerate() {
+        let lo = b * q.block;
+        for (o, &v) in out[lo..lo + q.block].iter_mut().zip(&q.q[lo..lo + q.block]) {
+            *o = v as f32 * s;
+        }
+    }
+}
+
+/// Blockwise INT4 quantization with nibble packing. `block` must be even.
+pub fn quantize_int4(x: &[f32], block: usize) -> QInt4 {
+    assert!(block > 0 && block % 2 == 0, "int4 block must be even");
+    assert!(x.len() % block == 0, "len {} % block {block} != 0", x.len());
+    let nblocks = x.len() / block;
+    let mut packed = vec![0u8; x.len() / 2];
+    let mut scales = vec![0f32; nblocks];
+    for b in 0..nblocks {
+        let chunk = &x[b * block..(b + 1) * block];
+        let s = block_scale(chunk, 7.0);
+        scales[b] = s;
+        let inv = 1.0 / s;
+        let out = &mut packed[b * block / 2..(b + 1) * block / 2];
+        for (i, o) in out.iter_mut().enumerate() {
+            let q0 = round_half_even_small((chunk[2 * i] * inv).clamp(-7.0, 7.0)) as i32;
+            let q1 = round_half_even_small((chunk[2 * i + 1] * inv).clamp(-7.0, 7.0)) as i32;
+            *o = ((q0 + 8) + ((q1 + 8) << 4)) as u8;
+        }
+    }
+    QInt4 { packed, scales, block, n: x.len() }
+}
+
+/// Dequantize INT4 into a fresh buffer.
+pub fn dequantize_int4(q: &QInt4) -> Vec<f32> {
+    let mut out = vec![0f32; q.n];
+    dequantize_int4_into(q, &mut out);
+    out
+}
+
+/// Dequantize INT4 into caller storage.
+pub fn dequantize_int4_into(q: &QInt4, out: &mut [f32]) {
+    assert_eq!(out.len(), q.n);
+    let half = q.block / 2;
+    for (b, &s) in q.scales.iter().enumerate() {
+        let src = &q.packed[b * half..(b + 1) * half];
+        let dst = &mut out[b * q.block..(b + 1) * q.block];
+        for (i, &byte) in src.iter().enumerate() {
+            let lo = (byte & 0x0F) as i32 - 8;
+            let hi = (byte >> 4) as i32 - 8;
+            dst[2 * i] = lo as f32 * s;
+            dst[2 * i + 1] = hi as f32 * s;
+        }
+    }
+}
+
+/// One quant→dequant round trip (what a single wire hop does to a payload).
+pub fn roundtrip_int8(x: &[f32], block: usize) -> Vec<f32> {
+    dequantize_int8(&quantize_int8(x, block))
+}
+
+/// INT4 round trip.
+pub fn roundtrip_int4(x: &[f32], block: usize) -> Vec<f32> {
+    dequantize_int4(&quantize_int4(x, block))
+}
+
+/// Pad a length up so it is divisible by `block` (callers quantizing
+/// arbitrary shard sizes pad with zeros — exact under the contract since a
+/// zero tail quantizes to zero).
+pub fn padded_len(n: usize, block: usize) -> usize {
+    n.div_ceil(block) * block
+}
+
+/// Quantization error statistics for reporting (EXPERIMENTS.md).
+#[derive(Debug, Clone, Copy)]
+pub struct QuantError {
+    pub mae: f64,
+    pub max_abs: f64,
+    pub rel_rms: f64,
+}
+
+pub fn error_stats(x: &[f32], xq: &[f32]) -> QuantError {
+    assert_eq!(x.len(), xq.len());
+    let mut mae = 0.0;
+    let mut mx = 0.0f64;
+    let (mut se, mut sx) = (0.0f64, 0.0f64);
+    for (&a, &b) in x.iter().zip(xq) {
+        let e = (a - b) as f64;
+        mae += e.abs();
+        mx = mx.max(e.abs());
+        se += e * e;
+        sx += (a as f64) * (a as f64);
+    }
+    QuantError {
+        mae: mae / x.len() as f64,
+        max_abs: mx,
+        rel_rms: if sx > 0.0 { (se / sx).sqrt() } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+    use crate::util::rng::Rng;
+
+    fn randn(n: usize, seed: u64, std: f32) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        let mut v = vec![0.0; n];
+        r.fill_normal(&mut v, std);
+        v
+    }
+
+    #[test]
+    fn int8_error_within_half_step() {
+        let x = randn(4096, 1, 1.0);
+        let q = quantize_int8(&x, 256);
+        let xd = dequantize_int8(&q);
+        for (b, &s) in q.scales.iter().enumerate() {
+            for i in b * 256..(b + 1) * 256 {
+                assert!((x[i] - xd[i]).abs() <= s * 0.5 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn int4_error_within_half_step() {
+        let x = randn(2048, 2, 3.0);
+        let q = quantize_int4(&x, 128);
+        let xd = dequantize_int4(&q);
+        for (b, &s) in q.scales.iter().enumerate() {
+            for i in b * 128..(b + 1) * 128 {
+                assert!((x[i] - xd[i]).abs() <= s * 0.5 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_block_is_exact() {
+        let x = vec![0.0f32; 512];
+        let q = quantize_int8(&x, 256);
+        assert!(q.scales.iter().all(|&s| s == 1.0));
+        assert!(dequantize_int8(&q).iter().all(|&v| v == 0.0));
+        let q4 = quantize_int4(&x, 256);
+        assert!(dequantize_int4(&q4).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn extremes_hit_integer_limits() {
+        let mut x = vec![0.0f32; 256];
+        x[0] = 10.0;
+        x[1] = -10.0;
+        let q = quantize_int8(&x, 256);
+        assert_eq!(q.q[0], 127);
+        assert_eq!(q.q[1], -127);
+        let q4 = quantize_int4(&x, 256);
+        assert_eq!((q4.packed[0] & 0x0F) as i32 - 8, 7);
+        assert_eq!((q4.packed[0] >> 4) as i32 - 8, -7);
+    }
+
+    #[test]
+    fn int4_nibble_layout_matches_pallas() {
+        // q = [7, -7, 0, 1] with scale exactly 1.0
+        let x = vec![7.0f32, -7.0, 0.0, 1.0];
+        let q = quantize_int4(&x, 4);
+        assert_eq!(q.scales[0], 1.0);
+        assert_eq!(q.packed[0], ((7 + 8) + ((-7 + 8) << 4)) as u8);
+        assert_eq!(q.packed[1], ((0 + 8) + ((1 + 8) << 4)) as u8);
+    }
+
+    #[test]
+    fn quantization_is_projection() {
+        check("q(dq(q(x))) == q(x) int8", 40, |g| {
+            let nb = g.usize_in(1, 8);
+            let x = g.vec_f32_exact(nb * 64, 2.0);
+            let q1 = quantize_int8(&x, 64);
+            let q2 = quantize_int8(&dequantize_int8(&q1), 64);
+            assert_eq!(q1.q, q2.q);
+        });
+        check("q(dq(q(x))) == q(x) int4", 40, |g| {
+            let nb = g.usize_in(1, 8);
+            let x = g.vec_f32_exact(nb * 64, 2.0);
+            let q1 = quantize_int4(&x, 64);
+            let q2 = quantize_int4(&dequantize_int4(&q1), 64);
+            assert_eq!(q1.packed, q2.packed);
+        });
+    }
+
+    #[test]
+    fn prop_error_bound_random_blocks() {
+        check("int8 error bound", 60, |g| {
+            let nb = g.usize_in(1, 16);
+            let block = *g.pick(&[32usize, 64, 256]);
+            let std = *g.pick(&[1e-5f32, 1e-2, 1.0, 1e3]);
+            let x = g.vec_f32_exact(nb * block, std);
+            let q = quantize_int8(&x, block);
+            let xd = dequantize_int8(&q);
+            for b in 0..nb {
+                let s = q.scales[b];
+                for i in b * block..(b + 1) * block {
+                    assert!((x[i] - xd[i]).abs() <= s * 0.5 + 1e-12);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn int4_coarser_than_int8() {
+        let x = randn(8192, 5, 1.0);
+        let e8 = error_stats(&x, &roundtrip_int8(&x, 256));
+        let e4 = error_stats(&x, &roundtrip_int4(&x, 256));
+        assert!(e4.mae > e8.mae);
+        assert!(e8.rel_rms < 0.01, "{e8:?}");
+        assert!(e4.rel_rms < 0.15, "{e4:?}");
+    }
+
+    #[test]
+    fn wire_bytes_accounting() {
+        let x = randn(1024, 6, 1.0);
+        assert_eq!(quantize_int8(&x, 256).wire_bytes(), 1024 + 4 * 4);
+        assert_eq!(quantize_int4(&x, 256).wire_bytes(), 512 + 4 * 4);
+    }
+
+    #[test]
+    fn padded_len_math() {
+        assert_eq!(padded_len(1, 256), 256);
+        assert_eq!(padded_len(256, 256), 256);
+        assert_eq!(padded_len(257, 256), 512);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_misaligned() {
+        quantize_int8(&[0.0; 100], 256);
+    }
+
+    #[test]
+    fn magic_round_matches_round_ties_even() {
+        // exhaustive on the integer/half grid plus random draws — the
+        // §Perf optimization must be bit-identical on the clamped domain
+        for i in -254..=254 {
+            let y = i as f32 * 0.5; // all integers and halves in [-127,127]
+            assert_eq!(round_half_even_small(y), y.round_ties_even(), "{y}");
+        }
+        let mut r = Rng::new(42);
+        for _ in 0..100_000 {
+            let y = r.normal_f32(0.0, 40.0).clamp(-127.0, 127.0);
+            assert_eq!(round_half_even_small(y), y.round_ties_even(), "{y}");
+        }
+    }
+
+    #[test]
+    fn clamp_then_round_equals_round_then_clamp() {
+        for i in -2600..=2600 {
+            let y = i as f32 * 0.1;
+            let new = round_half_even_small(y.clamp(-127.0, 127.0));
+            let old = y.round_ties_even().clamp(-127.0, 127.0);
+            assert_eq!(new, old, "{y}");
+        }
+    }
+
+    #[test]
+    fn dequant_into_matches_alloc() {
+        let x = randn(512, 7, 1.0);
+        let q = quantize_int8(&x, 256);
+        let a = dequantize_int8(&q);
+        let mut b = vec![0.0; 512];
+        dequantize_int8_into(&q, &mut b);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,110 @@
+//! Report rendering: turns measured/simulated results into the paper's
+//! tables and figure-series, as aligned text and CSV.
+
+use crate::metrics::Throughput;
+use crate::sharding::Scheme;
+use crate::util::table::{fnum, Table};
+
+/// One scheme's scaling series (a line of Fig 7/8).
+#[derive(Debug, Clone)]
+pub struct ScalingSeries {
+    pub scheme: Scheme,
+    pub points: Vec<Throughput>,
+}
+
+/// Render a Fig 7/8-style comparison: TFLOPS/GPU per scale per scheme,
+/// plus scaling efficiency and the headline speedup ratios.
+pub fn render_scaling_figure(title: &str, series: &[ScalingSeries]) -> String {
+    assert!(!series.is_empty());
+    let mut header = vec!["GCDs".to_string()];
+    for s in series {
+        header.push(format!("{} TFLOPS/GPU", s.scheme.name()));
+        header.push(format!("{} eff", s.scheme.name()));
+    }
+    let hdr_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs).title(title.to_string());
+    let npts = series[0].points.len();
+    for s in series {
+        assert_eq!(s.points.len(), npts, "series lengths must match");
+    }
+    for i in 0..npts {
+        let mut row = vec![series[0].points[i].gcds.to_string()];
+        for s in series {
+            let base = s.points[0].tflops_per_gpu();
+            let tf = s.points[i].tflops_per_gpu();
+            row.push(fnum(tf, 2));
+            row.push(fnum(tf / base, 3));
+        }
+        t.row(row);
+    }
+    let mut out = t.render();
+    // headline ratios at the largest scale (the paper's §VI claims)
+    if series.len() >= 2 {
+        let last = npts - 1;
+        out.push_str("speedups at largest scale:\n");
+        for i in 1..series.len() {
+            for j in 0..i {
+                let a = series[i].points[last].tflops_per_gpu();
+                let b = series[j].points[last].tflops_per_gpu();
+                out.push_str(&format!(
+                    "  {} vs {}: {:.2}x ({:+.1}%)\n",
+                    series[i].scheme.name(),
+                    series[j].scheme.name(),
+                    a / b,
+                    (a / b - 1.0) * 100.0
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// CSV with one row per (scheme, scale) for plotting.
+pub fn scaling_csv(series: &[ScalingSeries]) -> String {
+    let mut out = String::from("scheme,gcds,tflops_per_gpu,samples_per_sec,efficiency\n");
+    for s in series {
+        let base = s.points[0].tflops_per_gpu();
+        for p in &s.points {
+            out.push_str(&format!(
+                "{},{},{:.4},{:.4},{:.4}\n",
+                s.scheme.name(),
+                p.gcds,
+                p.tflops_per_gpu(),
+                p.samples_per_second(),
+                p.tflops_per_gpu() / base
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(gcds: usize, tf: f64) -> Throughput {
+        Throughput {
+            gcds,
+            step_seconds: 1.0,
+            flops_per_step: tf * 1e12 * gcds as f64,
+            sequences_per_step: 1.0,
+        }
+    }
+
+    #[test]
+    fn renders_figure_with_speedups() {
+        let series = vec![
+            ScalingSeries { scheme: Scheme::Zero3, points: vec![pt(64, 30.0), pt(384, 12.0)] },
+            ScalingSeries {
+                scheme: Scheme::ZeroTopo { sec_degree: 2 },
+                points: vec![pt(64, 32.0), pt(384, 29.0)],
+            },
+        ];
+        let out = render_scaling_figure("Fig 7", &series);
+        assert!(out.contains("Fig 7"));
+        assert!(out.contains("2.42x"), "{out}");
+        let csv = scaling_csv(&series);
+        assert_eq!(csv.lines().count(), 5);
+        assert!(csv.contains("ZeRO-3,384,12.0000"));
+    }
+}

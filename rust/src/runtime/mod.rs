@@ -1,0 +1,328 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) produced by `python/compile/aot.py` and executes them
+//! on the CPU PJRT client.
+//!
+//! This is the ONLY place the coordinator touches compiled compute.
+//! Python never runs at training time: the artifacts are a build product
+//! (`make artifacts`), and HLO *text* is the interchange format (see
+//! aot.py's docstring for why not serialized protos).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One parameter tensor's slot in the flat parameter vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Manifest entry for one lowered model configuration.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub mbs: usize,
+    pub n_params: usize,
+    pub flops_per_token: f64,
+    pub params: Vec<ParamEntry>,
+    pub artifacts: BTreeMap<String, String>,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelManifest>,
+    pub quant_n: usize,
+    pub quant_block: usize,
+    pub quant_artifacts: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut models = BTreeMap::new();
+        let jmodels = j.get("models").and_then(|m| m.as_obj()).context("manifest.models")?;
+        for (name, jm) in jmodels {
+            let geti = |k: &str| -> Result<usize> {
+                jm.get(k).and_then(|v| v.as_usize()).with_context(|| format!("models.{name}.{k}"))
+            };
+            let mut params = Vec::new();
+            for p in jm.get("params").and_then(|v| v.as_arr()).context("params")? {
+                params.push(ParamEntry {
+                    name: p.get("name").and_then(|v| v.as_str()).context("param name")?.into(),
+                    shape: p
+                        .get("shape")
+                        .and_then(|v| v.as_arr())
+                        .context("param shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("dim"))
+                        .collect::<Result<_>>()?,
+                    offset: p.get("offset").and_then(|v| v.as_usize()).context("offset")?,
+                    size: p.get("size").and_then(|v| v.as_usize()).context("size")?,
+                });
+            }
+            let mut artifacts = BTreeMap::new();
+            for (k, v) in jm.get("artifacts").and_then(|v| v.as_obj()).context("artifacts")? {
+                artifacts.insert(k.clone(), v.as_str().context("artifact path")?.to_string());
+            }
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    name: name.clone(),
+                    d_model: geti("d_model")?,
+                    n_layers: geti("n_layers")?,
+                    n_heads: geti("n_heads")?,
+                    vocab: geti("vocab")?,
+                    seq: geti("seq")?,
+                    mbs: geti("mbs")?,
+                    n_params: geti("n_params")?,
+                    flops_per_token: jm
+                        .get("flops_per_token")
+                        .and_then(|v| v.as_f64())
+                        .context("flops_per_token")?,
+                    params,
+                    artifacts,
+                },
+            );
+        }
+        let quant = j.get("quant").context("manifest.quant")?;
+        let mut quant_artifacts = BTreeMap::new();
+        for (k, v) in quant.get("artifacts").and_then(|v| v.as_obj()).context("quant artifacts")? {
+            quant_artifacts.insert(k.clone(), v.as_str().context("path")?.to_string());
+        }
+        Ok(Manifest {
+            models,
+            quant_n: quant.get("n").and_then(|v| v.as_usize()).context("quant.n")?,
+            quant_block: quant.get("block").and_then(|v| v.as_usize()).context("quant.block")?,
+            quant_artifacts,
+        })
+    }
+
+    /// Validate internal consistency: param table must tile [0, n_params).
+    pub fn validate(&self) -> Result<()> {
+        for (name, m) in &self.models {
+            let mut off = 0;
+            for p in &m.params {
+                if p.offset != off {
+                    bail!("{name}: param {} offset {} != {}", p.name, p.offset, off);
+                }
+                let numel: usize = p.shape.iter().product();
+                if numel != p.size {
+                    bail!("{name}: param {} size {} != shape prod {}", p.name, p.size, numel);
+                }
+                off += p.size;
+            }
+            if off != m.n_params {
+                bail!("{name}: params cover {off} != n_params {}", m.n_params);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The PJRT runtime: one CPU client + the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Load `manifest.json` from `dir` and start a CPU PJRT client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+            format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        manifest.validate()?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest })
+    }
+
+    /// Default artifact directory: `$ZERO_TOPO_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("ZERO_TOPO_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    fn compile_file(&self, fname: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(fname);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    }
+
+    /// Compile the three entry points of a model config.
+    pub fn model(&self, name: &str) -> Result<ModelRunner> {
+        let m = self
+            .manifest
+            .models
+            .get(name)
+            .with_context(|| {
+                format!(
+                    "model '{name}' not in manifest (have: {:?})",
+                    self.manifest.models.keys().collect::<Vec<_>>()
+                )
+            })?
+            .clone();
+        let art = |k: &str| -> Result<&str> {
+            m.artifacts.get(k).map(|s| s.as_str()).with_context(|| format!("artifact {k}"))
+        };
+        Ok(ModelRunner {
+            init: self.compile_file(art("init")?)?,
+            train: self.compile_file(art("train_step")?)?,
+            eval: self.compile_file(art("eval_loss")?)?,
+            manifest: m,
+        })
+    }
+
+    /// Compile a standalone quant artifact by manifest key
+    /// (e.g. "roundtrip_int8") — used by the L1↔L3 cross-check tests.
+    pub fn quant_executable(&self, key: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let f = self
+            .manifest
+            .quant_artifacts
+            .get(key)
+            .with_context(|| format!("quant artifact {key}"))?
+            .clone();
+        self.compile_file(&f)
+    }
+}
+
+/// Compiled executables for one model config.
+pub struct ModelRunner {
+    init: xla::PjRtLoadedExecutable,
+    train: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    pub manifest: ModelManifest,
+}
+
+fn run1(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
+    let out = exe.execute::<xla::Literal>(args).map_err(|e| anyhow!("execute: {e:?}"))?;
+    out[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))
+}
+
+impl ModelRunner {
+    fn tokens_literal(&self, tokens: &[i32]) -> Result<xla::Literal> {
+        let m = &self.manifest;
+        if tokens.len() != m.mbs * m.seq {
+            bail!("tokens len {} != mbs*seq {}", tokens.len(), m.mbs * m.seq);
+        }
+        xla::Literal::vec1(tokens)
+            .reshape(&[m.mbs as i64, m.seq as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    /// Run the init artifact: standard GPT-NeoX init for `seed`.
+    pub fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        let out = run1(&self.init, &[xla::Literal::scalar(seed)])?;
+        let flat = out.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        let v = flat.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        if v.len() != self.manifest.n_params {
+            bail!("init returned {} params, manifest says {}", v.len(), self.manifest.n_params);
+        }
+        Ok(v)
+    }
+
+    /// One microbatch fwd+bwd: returns (loss, flat gradient).
+    pub fn train_step(
+        &self,
+        flat: &[f32],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(f32, Vec<f32>)> {
+        if flat.len() != self.manifest.n_params {
+            bail!("flat len {} != n_params {}", flat.len(), self.manifest.n_params);
+        }
+        let args = [
+            xla::Literal::vec1(flat),
+            self.tokens_literal(tokens)?,
+            self.tokens_literal(targets)?,
+        ];
+        let out = run1(&self.train, &args)?;
+        let (loss, grads) = out.to_tuple2().map_err(|e| anyhow!("tuple2: {e:?}"))?;
+        let loss = loss.to_vec::<f32>().map_err(|e| anyhow!("loss: {e:?}"))?[0];
+        let grads = grads.to_vec::<f32>().map_err(|e| anyhow!("grads: {e:?}"))?;
+        Ok((loss, grads))
+    }
+
+    /// Forward-only loss.
+    pub fn eval_loss(&self, flat: &[f32], tokens: &[i32], targets: &[i32]) -> Result<f32> {
+        let args = [
+            xla::Literal::vec1(flat),
+            self.tokens_literal(tokens)?,
+            self.tokens_literal(targets)?,
+        ];
+        let out = run1(&self.eval, &args)?;
+        let loss = out.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        Ok(loss.to_vec::<f32>().map_err(|e| anyhow!("loss: {e:?}"))?[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+      "quant": {"n": 1024, "block": 256, "artifacts": {"quant_int8": "q8.hlo.txt"}},
+      "attention": {"heads": 4, "seq": 128, "head_dim": 32, "artifacts": {}},
+      "models": {
+        "t": {
+          "name": "t", "d_model": 8, "n_layers": 1, "n_heads": 2, "vocab": 16,
+          "seq": 4, "mbs": 1, "n_params": 20, "tied_lm_head": true,
+          "flops_per_token": 100.0, "flops_per_token_fwd": 33.3,
+          "params": [
+            {"name": "a", "shape": [2, 5], "offset": 0, "size": 10},
+            {"name": "b", "shape": [10], "offset": 10, "size": 10}
+          ],
+          "artifacts": {"init": "i.hlo.txt", "train_step": "t.hlo.txt", "eval_loss": "e.hlo.txt"}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(m.quant_n, 1024);
+        assert_eq!(m.quant_block, 256);
+        let t = &m.models["t"];
+        assert_eq!(t.n_params, 20);
+        assert_eq!(t.params.len(), 2);
+        assert_eq!(t.params[1].offset, 10);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_gaps() {
+        let bad = MANIFEST.replace("\"offset\": 10", "\"offset\": 11");
+        let m = Manifest::parse(&bad).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_shape_mismatch() {
+        let bad = MANIFEST.replace("[2, 5]", "[2, 6]");
+        let m = Manifest::parse(&bad).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn missing_model_is_reported() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert!(m.models.get("nope").is_none());
+    }
+}

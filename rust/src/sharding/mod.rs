@@ -1,0 +1,347 @@
+//! Sharding schemes and partition planning — paper Section V (Table IV).
+//!
+//! A scheme fixes the *sharding factor* of each training-state component:
+//! how many workers a full replica of that state is spread across. The
+//! paper's dependency rule (from AMSP):
+//!
+//! ```text
+//! N >= N_dp >= N_os >= N_g >= N_w   and   P >= P_dp >= P_os >= P_g >= P_w
+//! ```
+//!
+//! i.e. optimizer states are sharded at least as widely as gradients, which
+//! are sharded at least as widely as weights — otherwise a worker holds
+//! gradients/optimizer states for parameters it does not own and every step
+//! pays redundant traffic.
+
+use crate::topology::Cluster;
+
+/// Which scheme to run. `sec_degree` for ZeroTopo is the secondary-partition
+/// sharding degree (paper Table V considers 2 and 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// ZeRO-1: shard optimizer states only.
+    Zero1,
+    /// ZeRO-2: shard optimizer states + gradients.
+    Zero2,
+    /// ZeRO-3: shard everything across all workers.
+    Zero3,
+    /// ZeRO++: ZeRO-3 + quantized collectives + intra-node secondary
+    /// weight partitions.
+    ZeroPP,
+    /// The paper's contribution: weights on a GCD pair, gradients within a
+    /// node, optimizer states global; all collectives quantized; secondary
+    /// partitions quantized INT8.
+    ZeroTopo { sec_degree: usize },
+    /// MiCS (Zhang et al., related work Table X): ALL model states sharded
+    /// uniformly within a group of `group` workers, replicated across
+    /// groups; gradients all-reduced across replicas. No quantization,
+    /// no Frontier awareness, no independent per-state factors.
+    Mics { group: usize },
+    /// PyTorch FSDP hybrid sharding (related work Table X): weights,
+    /// gradients and optimizer states sharded within `shard` workers,
+    /// replicated beyond; fp16 wire, no quantization.
+    FsdpHybrid { shard: usize },
+}
+
+impl Scheme {
+    pub fn name(&self) -> String {
+        match self {
+            Scheme::Zero1 => "ZeRO-1".into(),
+            Scheme::Zero2 => "ZeRO-2".into(),
+            Scheme::Zero3 => "ZeRO-3".into(),
+            Scheme::ZeroPP => "ZeRO++".into(),
+            Scheme::ZeroTopo { sec_degree } => format!("ZeRO-topo(sec={sec_degree})"),
+            Scheme::Mics { group } => format!("MiCS(g={group})"),
+            Scheme::FsdpHybrid { shard } => format!("FSDP-hybrid(s={shard})"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s.to_ascii_lowercase().as_str() {
+            "zero1" | "zero-1" => Some(Scheme::Zero1),
+            "zero2" | "zero-2" => Some(Scheme::Zero2),
+            "zero3" | "zero-3" => Some(Scheme::Zero3),
+            "zeropp" | "zero++" | "zero-pp" => Some(Scheme::ZeroPP),
+            "zerotopo" | "zero-topo" | "topo" => Some(Scheme::ZeroTopo { sec_degree: 2 }),
+            "zerotopo8" | "zero-topo8" => Some(Scheme::ZeroTopo { sec_degree: 8 }),
+            "mics" => Some(Scheme::Mics { group: 8 }),
+            "fsdp" | "fsdp-hybrid" => Some(Scheme::FsdpHybrid { shard: 8 }),
+            _ => None,
+        }
+    }
+
+    /// Does this scheme quantize collective payloads (ZeRO++ lineage)?
+    pub fn quantized(&self) -> bool {
+        matches!(self, Scheme::ZeroPP | Scheme::ZeroTopo { .. })
+    }
+
+    /// Does this scheme keep a secondary weight partition?
+    pub fn has_secondary(&self) -> bool {
+        matches!(self, Scheme::ZeroPP | Scheme::ZeroTopo { .. })
+    }
+}
+
+/// The resolved sharding factors for a (scheme, cluster) pair — the row of
+/// the paper's Table IV.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardingSpec {
+    /// d_w: workers a full weight replica is split across (primary).
+    pub weights: usize,
+    /// d_g: workers a full gradient replica is split across.
+    pub grads: usize,
+    /// d_os: workers the optimizer states are split across.
+    pub optim: usize,
+    /// Secondary weight partition degree (0 = none).
+    pub secondary: usize,
+    /// Total workers.
+    pub world: usize,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ShardingError {
+    #[error("dependency rule violated: requires os({optim}) >= grads({grads}) >= weights({weights})")]
+    DependencyRule { weights: usize, grads: usize, optim: usize },
+    #[error("sharding factor {factor} does not divide world size {world}")]
+    NotDivisible { factor: usize, world: usize },
+    #[error("ZeRO-topo secondary degree {0} must be 2 or 8 (GCD pair or node)")]
+    BadSecondary(usize),
+}
+
+impl ShardingSpec {
+    /// Resolve a scheme on a cluster — paper Table IV.
+    pub fn resolve(scheme: Scheme, cluster: &Cluster) -> Result<ShardingSpec, ShardingError> {
+        let world = cluster.world_size();
+        let p = cluster.kind.gcds_per_node();
+        let spec = match scheme {
+            Scheme::Zero1 => ShardingSpec { weights: 1, grads: 1, optim: world, secondary: 0, world },
+            Scheme::Zero2 => ShardingSpec { weights: 1, grads: world, optim: world, secondary: 0, world },
+            Scheme::Zero3 => {
+                ShardingSpec { weights: world, grads: world, optim: world, secondary: 0, world }
+            }
+            // ZeRO++: primary = global (like ZeRO-3); secondary replica
+            // inside each node (degree P) serves the backward all-gather.
+            Scheme::ZeroPP => {
+                ShardingSpec { weights: world, grads: world, optim: world, secondary: p, world }
+            }
+            // Paper: weights over the 2 GCDs of one MI250X, gradients over
+            // the node's P GCDs, optimizer states global.
+            Scheme::ZeroTopo { sec_degree } => {
+                if sec_degree != 2 && sec_degree != 8 {
+                    return Err(ShardingError::BadSecondary(sec_degree));
+                }
+                ShardingSpec { weights: 2, grads: p, optim: world, secondary: sec_degree, world }
+            }
+            // MiCS: one uniform factor for every state (scale-aware groups)
+            Scheme::Mics { group } => {
+                let g = group.min(world);
+                ShardingSpec { weights: g, grads: g, optim: g, secondary: 0, world }
+            }
+            // FSDP hybrid: uniform factor, fp16 wire (like MiCS but the
+            // FSDP runtime; identical factors at this modeling level)
+            Scheme::FsdpHybrid { shard } => {
+                let s = shard.min(world);
+                ShardingSpec { weights: s, grads: s, optim: s, secondary: 0, world }
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Enforce the dependency rule and divisibility.
+    pub fn validate(&self) -> Result<(), ShardingError> {
+        if !(self.optim >= self.grads && self.grads >= self.weights) {
+            return Err(ShardingError::DependencyRule {
+                weights: self.weights,
+                grads: self.grads,
+                optim: self.optim,
+            });
+        }
+        for f in [self.weights, self.grads, self.optim] {
+            if f == 0 || self.world % f != 0 {
+                return Err(ShardingError::NotDivisible { factor: f, world: self.world });
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of independent weight-replica groups (data-parallel replicas
+    /// at the weight level).
+    pub fn weight_groups(&self) -> usize {
+        self.world / self.weights
+    }
+
+    pub fn grad_groups(&self) -> usize {
+        self.world / self.grads
+    }
+}
+
+/// Maps a rank to its shard (contiguous range) of a flat buffer of `n`
+/// elements split across `degree` workers. The flat buffer is padded so
+/// every shard has equal length (`shard_len`), mirroring DeepSpeed's
+/// flat-partition padding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PartitionMap {
+    pub n: usize,
+    pub degree: usize,
+    pub shard_len: usize,
+}
+
+impl PartitionMap {
+    pub fn new(n: usize, degree: usize) -> PartitionMap {
+        assert!(degree > 0);
+        PartitionMap { n, degree, shard_len: n.div_ceil(degree) }
+    }
+
+    /// Padded total length (degree * shard_len).
+    pub fn padded_len(&self) -> usize {
+        self.shard_len * self.degree
+    }
+
+    /// The range of the flat PADDED buffer owned by shard index `i`.
+    pub fn range(&self, i: usize) -> std::ops::Range<usize> {
+        assert!(i < self.degree);
+        i * self.shard_len..(i + 1) * self.shard_len
+    }
+
+    /// The unpadded (valid) sub-range of shard `i` within the original
+    /// buffer, empty if the shard is pure padding.
+    pub fn valid_range(&self, i: usize) -> std::ops::Range<usize> {
+        let r = self.range(i);
+        r.start.min(self.n)..r.end.min(self.n)
+    }
+
+    /// Which shard owns element `e`.
+    pub fn owner(&self, e: usize) -> usize {
+        assert!(e < self.n);
+        e / self.shard_len
+    }
+}
+
+/// Rank groups for a sharding degree on a cluster: ranks are grouped into
+/// consecutive blocks of `degree` (matching how Frontier ranks enumerate
+/// GCDs: pairs, then nodes, then the world).
+pub fn shard_groups(world: usize, degree: usize) -> Vec<Vec<usize>> {
+    assert!(degree > 0 && world % degree == 0);
+    (0..world / degree)
+        .map(|g| (g * degree..(g + 1) * degree).collect())
+        .collect()
+}
+
+/// Index of `rank` within its shard group of `degree`.
+pub fn index_in_group(rank: usize, degree: usize) -> usize {
+    rank % degree
+}
+
+/// The group (list of ranks) that `rank` belongs to for `degree`.
+pub fn group_of(rank: usize, degree: usize) -> Vec<usize> {
+    let g = rank / degree;
+    (g * degree..(g + 1) * degree).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    fn frontier(n: usize) -> Cluster {
+        Cluster::frontier(n)
+    }
+
+    #[test]
+    fn table4_sharding_factors() {
+        let c = frontier(4); // 32 GCDs
+        let z1 = ShardingSpec::resolve(Scheme::Zero1, &c).unwrap();
+        assert_eq!((z1.weights, z1.grads, z1.optim), (1, 1, 32));
+        let z2 = ShardingSpec::resolve(Scheme::Zero2, &c).unwrap();
+        assert_eq!((z2.weights, z2.grads, z2.optim), (1, 32, 32));
+        let z3 = ShardingSpec::resolve(Scheme::Zero3, &c).unwrap();
+        assert_eq!((z3.weights, z3.grads, z3.optim), (32, 32, 32));
+        let zpp = ShardingSpec::resolve(Scheme::ZeroPP, &c).unwrap();
+        assert_eq!((zpp.weights, zpp.secondary), (32, 8));
+        let zt = ShardingSpec::resolve(Scheme::ZeroTopo { sec_degree: 2 }, &c).unwrap();
+        assert_eq!((zt.weights, zt.grads, zt.optim, zt.secondary), (2, 8, 32, 2));
+    }
+
+    #[test]
+    fn dependency_rule_enforced() {
+        let bad = ShardingSpec { weights: 8, grads: 2, optim: 16, secondary: 0, world: 16 };
+        assert!(matches!(bad.validate(), Err(ShardingError::DependencyRule { .. })));
+        let bad2 = ShardingSpec { weights: 2, grads: 16, optim: 8, secondary: 0, world: 16 };
+        assert!(bad2.validate().is_err());
+    }
+
+    #[test]
+    fn divisibility_enforced() {
+        let bad = ShardingSpec { weights: 3, grads: 8, optim: 16, secondary: 0, world: 16 };
+        assert!(matches!(bad.validate(), Err(ShardingError::NotDivisible { .. })));
+    }
+
+    #[test]
+    fn zero_topo_rejects_bad_secondary() {
+        let c = frontier(1);
+        assert!(ShardingSpec::resolve(Scheme::ZeroTopo { sec_degree: 4 }, &c).is_err());
+    }
+
+    #[test]
+    fn scheme_parsing() {
+        assert_eq!(Scheme::parse("zero3"), Some(Scheme::Zero3));
+        assert_eq!(Scheme::parse("ZeRO++"), Some(Scheme::ZeroPP));
+        assert_eq!(Scheme::parse("zero-topo"), Some(Scheme::ZeroTopo { sec_degree: 2 }));
+        assert_eq!(Scheme::parse("nope"), None);
+    }
+
+    #[test]
+    fn partition_map_covers_everything() {
+        check("partition map covers", 80, |g| {
+            let n = g.usize_in(1, 10_000);
+            let d = g.usize_in(1, 64);
+            let pm = PartitionMap::new(n, d);
+            // union of valid ranges is exactly [0, n), disjoint
+            let mut covered = 0;
+            for i in 0..d {
+                let r = pm.valid_range(i);
+                assert_eq!(r.start, covered.min(n));
+                covered = r.end.max(covered);
+            }
+            assert_eq!(covered, n);
+            assert!(pm.padded_len() >= n);
+            assert!(pm.padded_len() - n < d.max(1) * pm.shard_len.max(1));
+        });
+    }
+
+    #[test]
+    fn partition_owner_consistent_with_range() {
+        check("owner in range", 60, |g| {
+            let n = g.usize_in(1, 5_000);
+            let d = g.usize_in(1, 16);
+            let pm = PartitionMap::new(n, d);
+            for _ in 0..20 {
+                let e = g.usize_in(0, n - 1);
+                let o = pm.owner(e);
+                assert!(pm.range(o).contains(&e));
+            }
+        });
+    }
+
+    #[test]
+    fn groups_partition_the_world() {
+        let groups = shard_groups(16, 4);
+        assert_eq!(groups.len(), 4);
+        assert_eq!(groups.concat(), (0..16).collect::<Vec<_>>());
+        assert_eq!(group_of(5, 4), vec![4, 5, 6, 7]);
+        assert_eq!(index_in_group(5, 4), 1);
+    }
+
+    #[test]
+    fn topo_groups_respect_topology() {
+        // weight groups of degree 2 must be GCD pairs; grad groups of 8 a node
+        let c = frontier(2);
+        let spec = ShardingSpec::resolve(Scheme::ZeroTopo { sec_degree: 2 }, &c).unwrap();
+        for g in shard_groups(spec.world, spec.weights) {
+            assert_eq!(c.bottleneck_class(&g), crate::topology::LinkClass::GcdPair);
+        }
+        for g in shard_groups(spec.world, spec.grads) {
+            assert!(c.bottleneck_class(&g) < crate::topology::LinkClass::InterNode);
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Mini property-based testing framework (proptest is unavailable offline
+//! — DESIGN.md §8).
+//!
+//! Deterministic: every case derives from a fixed master seed, so failures
+//! reproduce exactly. On failure the framework retries with "shrunk"
+//! parameters (halved sizes) to report a smaller counterexample when one
+//! exists.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the libxla rpath in this offline env)
+//! use zero_topo::testing::{Gen, check};
+//! check("addition commutes", 100, |g| {
+//!     let (a, b) = (g.i64_in(-1000, 1000), g.i64_in(-1000, 1000));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Random-input generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Size budget in [0,1]: cases early in a run are small, later larger.
+    pub size: f64,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        if lo == hi {
+            return lo;
+        }
+        // scale the upper bound with the size budget so early cases are small
+        let span = ((hi - lo) as f64 * self.size).ceil().max(1.0) as usize;
+        self.rng.range_usize(lo, lo + span.min(hi - lo) + 1)
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as i64
+    }
+
+    pub fn f32_normal(&mut self, std: f32) -> f32 {
+        self.rng.normal_f32(0.0, std)
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.range_usize(0, xs.len())]
+    }
+
+    /// Vector of N(0, std) floats whose length scales with the size budget.
+    pub fn vec_f32(&mut self, max_len: usize, std: f32) -> Vec<f32> {
+        let len = self.usize_in(1, max_len);
+        let mut v = vec![0.0; len];
+        self.rng.fill_normal(&mut v, std);
+        v
+    }
+
+    /// Vector with an exact length.
+    pub fn vec_f32_exact(&mut self, len: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        self.rng.fill_normal(&mut v, std);
+        v
+    }
+
+    /// Occasionally returns edge-case floats instead of normal draws.
+    pub fn f32_edgy(&mut self) -> f32 {
+        match self.rng.below(8) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f32::MIN_POSITIVE,
+            3 => 65504.0,  // f16 max
+            4 => 1e-8,     // f16 underflow
+            5 => -3.4e38,  // near f32 min
+            _ => self.rng.normal_f32(0.0, 100.0),
+        }
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics (failing the enclosing test)
+/// with the case seed on the first failure.
+pub fn check<F: Fn(&mut Gen)>(name: &str, cases: usize, prop: F) {
+    let master = 0xC0FFEE_u64 ^ name.bytes().fold(0u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64));
+    for case in 0..cases {
+        let seed = master.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = ((case + 1) as f64 / cases as f64).min(1.0);
+        let run = |sz: f64| {
+            let mut g = Gen { rng: Rng::new(seed), size: sz, case };
+            prop(&mut g);
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run(size)));
+        if let Err(panic) = result {
+            // try a "shrunk" (smaller-size) rerun for a friendlier report
+            let small = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run(size * 0.25)));
+            let note = if small.is_err() { " (also fails at 1/4 size)" } else { "" };
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}){note}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("reverse twice is identity", 50, |g| {
+            let v = g.vec_f32(64, 1.0);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    fn detects_failures() {
+        let r = std::panic::catch_unwind(|| {
+            check("always fails", 5, |_g| {
+                panic!("boom");
+            })
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        use std::cell::RefCell;
+        let mut first: Vec<i64> = Vec::new();
+        // same name => same seeds => same draws
+        for _ in 0..2 {
+            let vals = RefCell::new(Vec::new());
+            check("collect2", 10, |g| {
+                vals.borrow_mut().push(g.i64_in(0, 1_000_000));
+            });
+            let vals = vals.into_inner();
+            if first.is_empty() {
+                first = vals;
+            } else {
+                assert_eq!(first, vals);
+            }
+        }
+    }
+
+    #[test]
+    fn size_budget_grows() {
+        use std::cell::RefCell;
+        let lens = RefCell::new(Vec::new());
+        check("sizes", 40, |g| {
+            lens.borrow_mut().push(g.usize_in(1, 1000));
+        });
+        let lens = lens.into_inner();
+        let early: f64 = lens[..10].iter().sum::<usize>() as f64 / 10.0;
+        let late: f64 = lens[30..].iter().sum::<usize>() as f64 / 10.0;
+        assert!(late > early, "{early} vs {late}");
+    }
+}

@@ -1,0 +1,318 @@
+//! Hardware topology models — paper Section IV (Tables I & II, Figs 2 & 3).
+//!
+//! Frontier compute node: 4× AMD MI250X, each with 2 GCDs (8 GCDs/node).
+//!   - GCD↔GCD inside one MI250X: 4 Infinity Fabric links, 200 GB/s
+//!   - adjacent MI250X pair:      2 IF links, 100 GB/s
+//!   - cross-pair MI250X:         1 IF link,   50 GB/s
+//!   - inter-node:                4× HPE Slingshot 11, 100 GB/s total
+//!
+//! DGX-A100 node: 8× A100, NVLink3 600 GB/s all-to-all (NVSwitch), 8× IB
+//! HDR = 200 GB/s inter-node.
+//!
+//! The resolver maps a pair of global ranks to the *link class* their
+//! traffic crosses; collectives charge the α–β cost model at the slowest
+//! class their device group spans (`comm::cost`).
+
+use std::fmt;
+
+/// Classes of links with distinct bandwidth/latency, ordered fastest→slowest
+/// per node kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LinkClass {
+    /// Same device (no wire) — zero cost.
+    Local,
+    /// Frontier: two GCDs inside one MI250X (B_GCD).
+    GcdPair,
+    /// Frontier: adjacent MI250X pair (2×IF).
+    IntraAdjacent,
+    /// Frontier: non-adjacent MI250X pair (1×IF).
+    IntraCross,
+    /// DGX: NVLink/NVSwitch between any two A100s.
+    NvLink,
+    /// Inter-node fabric (Slingshot-11 or InfiniBand).
+    InterNode,
+}
+
+impl fmt::Display for LinkClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            LinkClass::Local => "local",
+            LinkClass::GcdPair => "B_GCD (GCD-GCD)",
+            LinkClass::IntraAdjacent => "B_intra (adjacent MI250X)",
+            LinkClass::IntraCross => "B_intra (cross MI250X)",
+            LinkClass::NvLink => "NVLink",
+            LinkClass::InterNode => "B_inter (node-node)",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Link parameters for the α–β model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    /// Bandwidth in bytes/second.
+    pub bandwidth: f64,
+    /// Latency (α) in seconds per message.
+    pub latency: f64,
+}
+
+const GB: f64 = 1e9;
+
+/// Node flavors from the paper's Section IV.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    /// ORNL Frontier: 4× MI250X = 8 GCDs (Table II).
+    FrontierMI250X,
+    /// NVIDIA DGX-A100: 8× A100 (Table I).
+    DgxA100,
+}
+
+impl NodeKind {
+    pub fn gcds_per_node(&self) -> usize {
+        8
+    }
+
+    /// Peak dense fp16 FLOP/s per worker (GCD or GPU).
+    /// MI250X: 383 TF per GPU → 191.5 TF per GCD. A100: 312 TF.
+    pub fn peak_flops_per_worker(&self) -> f64 {
+        match self {
+            NodeKind::FrontierMI250X => 191.5e12,
+            NodeKind::DgxA100 => 312e12,
+        }
+    }
+
+    /// HBM per worker in bytes (GCD: 64 GB; A100: 80 GB).
+    pub fn hbm_per_worker(&self) -> f64 {
+        match self {
+            NodeKind::FrontierMI250X => 64e9,
+            NodeKind::DgxA100 => 80e9,
+        }
+    }
+
+    /// The paper's bandwidth table (Section IV + Slingshot/NVLink specs).
+    pub fn link_spec(&self, class: LinkClass) -> LinkSpec {
+        match (self, class) {
+            (_, LinkClass::Local) => LinkSpec { bandwidth: f64::INFINITY, latency: 0.0 },
+            (NodeKind::FrontierMI250X, LinkClass::GcdPair) => {
+                LinkSpec { bandwidth: 200.0 * GB, latency: 2e-6 }
+            }
+            (NodeKind::FrontierMI250X, LinkClass::IntraAdjacent) => {
+                LinkSpec { bandwidth: 100.0 * GB, latency: 3e-6 }
+            }
+            (NodeKind::FrontierMI250X, LinkClass::IntraCross) => {
+                LinkSpec { bandwidth: 50.0 * GB, latency: 3e-6 }
+            }
+            (NodeKind::FrontierMI250X, LinkClass::InterNode) => {
+                // 4× Slingshot-11 ports = 100 GB/s per node.
+                LinkSpec { bandwidth: 100.0 * GB, latency: 10e-6 }
+            }
+            (NodeKind::DgxA100, LinkClass::NvLink) => {
+                LinkSpec { bandwidth: 600.0 * GB, latency: 2e-6 }
+            }
+            (NodeKind::DgxA100, LinkClass::InterNode) => {
+                // 8× IB HDR = 200 GB/s per node.
+                LinkSpec { bandwidth: 200.0 * GB, latency: 8e-6 }
+            }
+            // DGX has a flat intra-node fabric: every intra-node class is NVLink.
+            (NodeKind::DgxA100, _) => LinkSpec { bandwidth: 600.0 * GB, latency: 2e-6 },
+            // Frontier never resolves NvLink; treat as the GCD-pair link.
+            (NodeKind::FrontierMI250X, LinkClass::NvLink) => {
+                LinkSpec { bandwidth: 200.0 * GB, latency: 2e-6 }
+            }
+        }
+    }
+}
+
+/// A cluster of identical nodes; ranks are GCDs (Frontier counts GCDs as
+/// GPUs — paper §VI).
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub kind: NodeKind,
+    pub nodes: usize,
+}
+
+impl Cluster {
+    pub fn frontier(nodes: usize) -> Self {
+        Cluster { kind: NodeKind::FrontierMI250X, nodes }
+    }
+
+    pub fn dgx(nodes: usize) -> Self {
+        Cluster { kind: NodeKind::DgxA100, nodes }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.nodes * self.kind.gcds_per_node()
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.kind.gcds_per_node()
+    }
+
+    /// MI250X index within the node (Frontier: GCD pairs 0-1, 2-3, 4-5, 6-7).
+    pub fn gpu_of(&self, rank: usize) -> usize {
+        (rank % self.kind.gcds_per_node()) / 2
+    }
+
+    /// Resolve the link class a pair of ranks communicates over.
+    pub fn link_between(&self, a: usize, b: usize) -> LinkClass {
+        assert!(a < self.world_size() && b < self.world_size());
+        if a == b {
+            return LinkClass::Local;
+        }
+        if self.node_of(a) != self.node_of(b) {
+            return LinkClass::InterNode;
+        }
+        match self.kind {
+            NodeKind::DgxA100 => LinkClass::NvLink,
+            NodeKind::FrontierMI250X => {
+                let (ga, gb) = (self.gpu_of(a), self.gpu_of(b));
+                if ga == gb {
+                    LinkClass::GcdPair
+                } else if ga / 2 == gb / 2 {
+                    // MI250X 0-1 and 2-3 form adjacent pairs (2×IF);
+                    // anything else crosses pairs (1×IF).
+                    LinkClass::IntraAdjacent
+                } else {
+                    LinkClass::IntraCross
+                }
+            }
+        }
+    }
+
+    /// Slowest link class spanned by a group of ranks — the bandwidth the
+    /// paper's Tables VII/VIII attribute to each collective.
+    pub fn bottleneck_class(&self, ranks: &[usize]) -> LinkClass {
+        let mut worst = LinkClass::Local;
+        for (i, &a) in ranks.iter().enumerate() {
+            for &b in &ranks[i + 1..] {
+                let c = self.link_between(a, b);
+                if self.rank_class(c) > self.rank_class(worst) {
+                    worst = c;
+                }
+            }
+        }
+        worst
+    }
+
+    /// Severity ordering of link classes for this node kind (higher = slower).
+    fn rank_class(&self, c: LinkClass) -> u8 {
+        match c {
+            LinkClass::Local => 0,
+            LinkClass::GcdPair => 1,
+            LinkClass::NvLink => 1,
+            LinkClass::IntraAdjacent => 2,
+            LinkClass::IntraCross => 3,
+            LinkClass::InterNode => 4,
+        }
+    }
+
+    /// Spec of the bottleneck link for a group.
+    pub fn bottleneck_spec(&self, ranks: &[usize]) -> LinkSpec {
+        self.kind.link_spec(self.bottleneck_class(ranks))
+    }
+
+    /// All ranks grouped by node.
+    pub fn ranks_by_node(&self) -> Vec<Vec<usize>> {
+        let p = self.kind.gcds_per_node();
+        (0..self.nodes).map(|n| (n * p..(n + 1) * p).collect()).collect()
+    }
+
+    /// The GCD-pair partner of a rank (Frontier primary-partition peer).
+    pub fn gcd_pair_peer(&self, rank: usize) -> usize {
+        rank ^ 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frontier_link_resolution() {
+        let c = Cluster::frontier(2);
+        assert_eq!(c.world_size(), 16);
+        assert_eq!(c.link_between(0, 0), LinkClass::Local);
+        assert_eq!(c.link_between(0, 1), LinkClass::GcdPair);
+        assert_eq!(c.link_between(0, 2), LinkClass::IntraAdjacent);
+        assert_eq!(c.link_between(0, 3), LinkClass::IntraAdjacent);
+        assert_eq!(c.link_between(0, 4), LinkClass::IntraCross);
+        assert_eq!(c.link_between(1, 7), LinkClass::IntraCross);
+        assert_eq!(c.link_between(0, 8), LinkClass::InterNode);
+        assert_eq!(c.link_between(7, 15), LinkClass::InterNode);
+    }
+
+    #[test]
+    fn link_is_symmetric() {
+        let c = Cluster::frontier(3);
+        for a in 0..c.world_size() {
+            for b in 0..c.world_size() {
+                assert_eq!(c.link_between(a, b), c.link_between(b, a));
+            }
+        }
+    }
+
+    #[test]
+    fn dgx_flat_intra_node() {
+        let c = Cluster::dgx(2);
+        assert_eq!(c.link_between(0, 1), LinkClass::NvLink);
+        assert_eq!(c.link_between(0, 7), LinkClass::NvLink);
+        assert_eq!(c.link_between(0, 8), LinkClass::InterNode);
+    }
+
+    #[test]
+    fn paper_bandwidth_numbers() {
+        let f = NodeKind::FrontierMI250X;
+        assert_eq!(f.link_spec(LinkClass::GcdPair).bandwidth, 200.0 * GB);
+        assert_eq!(f.link_spec(LinkClass::IntraAdjacent).bandwidth, 100.0 * GB);
+        assert_eq!(f.link_spec(LinkClass::IntraCross).bandwidth, 50.0 * GB);
+        assert_eq!(f.link_spec(LinkClass::InterNode).bandwidth, 100.0 * GB);
+        let d = NodeKind::DgxA100;
+        assert_eq!(d.link_spec(LinkClass::NvLink).bandwidth, 600.0 * GB);
+        assert_eq!(d.link_spec(LinkClass::InterNode).bandwidth, 200.0 * GB);
+        // paper: NVLink ~3x Infinity Fabric; DGX inter-node 2x Frontier
+        assert_eq!(
+            d.link_spec(LinkClass::NvLink).bandwidth / f.link_spec(LinkClass::GcdPair).bandwidth,
+            3.0
+        );
+        assert_eq!(
+            d.link_spec(LinkClass::InterNode).bandwidth
+                / f.link_spec(LinkClass::InterNode).bandwidth,
+            2.0
+        );
+    }
+
+    #[test]
+    fn bottleneck_of_groups() {
+        let c = Cluster::frontier(2);
+        assert_eq!(c.bottleneck_class(&[0, 1]), LinkClass::GcdPair);
+        assert_eq!(c.bottleneck_class(&[0, 1, 2, 3]), LinkClass::IntraAdjacent);
+        assert_eq!(c.bottleneck_class(&[0, 1, 2, 3, 4, 5, 6, 7]), LinkClass::IntraCross);
+        assert_eq!(c.bottleneck_class(&(0..16).collect::<Vec<_>>()), LinkClass::InterNode);
+    }
+
+    #[test]
+    fn ranks_by_node_partition() {
+        let c = Cluster::frontier(3);
+        let groups = c.ranks_by_node();
+        assert_eq!(groups.len(), 3);
+        let all: Vec<usize> = groups.concat();
+        assert_eq!(all, (0..24).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn gcd_pair_peers() {
+        let c = Cluster::frontier(1);
+        assert_eq!(c.gcd_pair_peer(0), 1);
+        assert_eq!(c.gcd_pair_peer(1), 0);
+        assert_eq!(c.gcd_pair_peer(6), 7);
+        for r in 0..8 {
+            assert_eq!(c.link_between(r, c.gcd_pair_peer(r)), LinkClass::GcdPair);
+        }
+    }
+
+    #[test]
+    fn worker_specs() {
+        assert_eq!(NodeKind::FrontierMI250X.hbm_per_worker(), 64e9);
+        assert!(NodeKind::DgxA100.peak_flops_per_worker() > NodeKind::FrontierMI250X.peak_flops_per_worker());
+    }
+}

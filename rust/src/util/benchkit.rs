@@ -1,0 +1,66 @@
+//! Tiny benchmarking harness (criterion is unavailable offline —
+//! DESIGN.md §8). Used by every target in `rust/benches/`.
+//!
+//! Measures wall time over warmup + timed iterations and prints a
+//! one-line summary compatible with `cargo bench` output conventions.
+
+use std::time::Instant;
+
+use crate::util::stats::{summarize, Summary};
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn time_fn<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(&samples)
+}
+
+/// Print a bench line: name, mean time, throughput if bytes given.
+pub fn report(name: &str, s: &Summary, bytes_per_iter: Option<usize>) {
+    let mean = s.mean;
+    let time_str = if mean < 1e-6 {
+        format!("{:.1} ns", mean * 1e9)
+    } else if mean < 1e-3 {
+        format!("{:.2} us", mean * 1e6)
+    } else if mean < 1.0 {
+        format!("{:.3} ms", mean * 1e3)
+    } else {
+        format!("{:.3} s", mean)
+    };
+    match bytes_per_iter {
+        Some(b) => {
+            let gbs = b as f64 / mean / 1e9;
+            println!("{name:<48} {time_str:>12}  ({gbs:.2} GB/s)  [n={} p95={:.3}ms]", s.n, s.p95 * 1e3);
+        }
+        None => println!("{name:<48} {time_str:>12}  [n={} p95={:.3}ms]", s.n, s.p95 * 1e3),
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_produces_samples() {
+        let s = time_fn(1, 5, || {
+            black_box((0..1000).sum::<usize>());
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+        report("test", &s, Some(8000));
+        report("test2", &s, None);
+    }
+}

@@ -1,0 +1,139 @@
+//! Tiny CLI argument parser (clap is unavailable offline — DESIGN.md §8).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key value] [--key=value] [pos...]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing value for option --{0}")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value} ({why})")]
+    BadValue { key: String, value: String, why: String },
+    #[error("missing required option --{0}")]
+    MissingRequired(String),
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (no program name).
+    /// `known_flags` lists options that take NO value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_flags: &[&str]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    match it.next() {
+                        Some(v) => {
+                            out.options.insert(body.to_string(), v);
+                        }
+                        None => return Err(CliError::MissingValue(body.to_string())),
+                    }
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str, CliError> {
+        self.get(key).ok_or_else(|| CliError::MissingRequired(key.to_string()))
+    }
+
+    pub fn parse_opt<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e: T::Err| CliError::BadValue {
+                key: key.to_string(),
+                value: v.to_string(),
+                why: e.to_string(),
+            }),
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--gcds 64,128,256`.
+    pub fn parse_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Result<Vec<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+        T: Clone,
+    {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|e: T::Err| CliError::BadValue {
+                        key: key.to_string(),
+                        value: p.to_string(),
+                        why: e.to_string(),
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["verbose", "json"]).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = args("simulate --model 20b --gcds=384 --verbose out.csv");
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.get("model"), Some("20b"));
+        assert_eq!(a.get("gcds"), Some("384"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn typed_and_list_options() {
+        let a = args("x --steps 50 --scales 8,16,32");
+        assert_eq!(a.parse_opt("steps", 0usize).unwrap(), 50);
+        assert_eq!(a.parse_opt("missing", 7usize).unwrap(), 7);
+        assert_eq!(a.parse_list::<usize>("scales", &[]).unwrap(), vec![8, 16, 32]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(["--k".to_string()], &[]).is_err());
+        let a = args("x --steps abc");
+        assert!(a.parse_opt("steps", 0usize).is_err());
+        assert!(a.require("nope").is_err());
+    }
+}

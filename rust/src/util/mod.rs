@@ -1,0 +1,11 @@
+//! From-scratch substrates: JSON, CLI parsing, PRNGs, tables, stats.
+//!
+//! The build environment is fully offline with a restricted crate set (no
+//! serde / clap / rand), so these are implemented here (DESIGN.md §8).
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,98 @@
+//! Small statistics helpers for the bench harness (criterion is
+//! unavailable offline; rust/benches/harness.rs builds on these).
+
+/// Summary statistics over a sample of measurements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+pub fn summarize(samples: &[f64]) -> Summary {
+    assert!(!samples.is_empty());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        p50: percentile_sorted(&sorted, 0.50),
+        p95: percentile_sorted(&sorted, 0.95),
+    }
+}
+
+/// Linear-interpolated percentile over a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty() && (0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Geometric mean (used for aggregate speedup reporting).
+pub fn geomean(samples: &[f64]) -> f64 {
+    assert!(!samples.is_empty());
+    let s: f64 = samples.iter().map(|x| x.ln()).sum();
+    (s / samples.len() as f64).exp()
+}
+
+/// Mean absolute error between two equal-length slices.
+pub fn mae(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).sum::<f64>() / a.len() as f64
+}
+
+/// Max absolute error.
+pub fn max_abs_err(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&v, 0.5), 5.0);
+        assert_eq!(percentile_sorted(&v, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&v, 1.0), 10.0);
+    }
+
+    #[test]
+    fn geomean_of_powers() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn errors_zero_for_identical() {
+        let a = [1.0f32, -2.0, 3.0];
+        assert_eq!(mae(&a, &a), 0.0);
+        assert_eq!(max_abs_err(&a, &a), 0.0);
+    }
+}

@@ -1,0 +1,179 @@
+//! ASCII table formatter — renders the paper's tables/figures as aligned
+//! text in bench output and `zero-topo report`.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    align: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            align: header.iter().map(|_| Align::Right).collect(),
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn title(mut self, t: impl Into<String>) -> Self {
+        self.title = Some(t.into());
+        self
+    }
+
+    pub fn align(mut self, a: &[Align]) -> Self {
+        assert_eq!(a.len(), self.header.len());
+        self.align = a.to_vec();
+        self
+    }
+
+    pub fn left_first(mut self) -> Self {
+        if !self.align.is_empty() {
+            self.align[0] = Align::Left;
+        }
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        let sep = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String], widths: &[usize], align: &[Align]| {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                match align[i] {
+                    Align::Left => s.push_str(&format!(" {:<w$} |", cells[i], w = widths[i])),
+                    Align::Right => s.push_str(&format!(" {:>w$} |", cells[i], w = widths[i])),
+                }
+            }
+            s
+        };
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header, &widths, &vec![Align::Left; ncol]));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths, &self.align));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    /// CSV rendering for plotting.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Helper: format a float with fixed decimals, trimming noise.
+pub fn fnum(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+/// Helper: human-readable byte count.
+pub fn human_bytes(b: f64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{v:.0} {}", UNITS[u])
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["scheme", "TFLOPS"]).left_first();
+        t.row(vec!["ZeRO-3".into(), "12.3".into()]);
+        t.row(vec!["ZeRO-topo".into(), "29.5".into()]);
+        let s = t.render();
+        assert!(s.contains("| ZeRO-3    |"), "{s}");
+        assert!(s.contains("|   12.3 |"), "{s}");
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"z".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn human_bytes_scales() {
+        assert_eq!(human_bytes(512.0), "512 B");
+        assert_eq!(human_bytes(2048.0), "2.00 KiB");
+        assert_eq!(human_bytes(1.5 * 1024.0 * 1024.0 * 1024.0), "1.50 GiB");
+    }
+}

@@ -1,0 +1,178 @@
+//! Integration: collectives + sharding + quantization composed the way
+//! the engine composes them, on multi-node simulated clusters. No PJRT
+//! needed — pure L3.
+
+use zero_topo::comm::{CommWorld, Wire};
+use zero_topo::quant;
+use zero_topo::sharding::{shard_groups, PartitionMap, Scheme, ShardingSpec};
+use zero_topo::testing::check;
+use zero_topo::topology::Cluster;
+use zero_topo::util::rng::Rng;
+use zero_topo::util::stats::{mae, max_abs_err};
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    let mut v = vec![0.0; n];
+    r.fill_normal(&mut v, 1.0);
+    v
+}
+
+/// The paper's full gradient path for ZeRO-topo on a 2-node cluster,
+/// assembled by hand: INT4 a2a within each node, fp16 all-reduce across
+/// nodes — final result must equal the exact mean within quantization
+/// error bounds.
+#[test]
+fn topo_gradient_path_approximates_exact_mean() {
+    let cluster = Cluster::frontier(2);
+    let world = cluster.world_size();
+    let n = 4096;
+    let grads: Vec<Vec<f32>> = (0..world).map(|r| randv(n, 100 + r as u64)).collect();
+    let mut exact = vec![0f32; n];
+    for g in &grads {
+        for (e, &v) in exact.iter_mut().zip(g) {
+            *e += v;
+        }
+    }
+
+    let mut w = CommWorld::new(cluster.clone());
+    let p = 8;
+    // phase 1: per node
+    let mut node_sums = Vec::new();
+    for node in 0..2 {
+        let group: Vec<usize> = (node * p..(node + 1) * p).collect();
+        let contrib: Vec<&[f32]> = group.iter().map(|&r| grads[r].as_slice()).collect();
+        node_sums.push(w.reduce_scatter_a2a(&group, &contrib, Wire::Int4 { block: 64 }));
+    }
+    // phase 2: cross-node all-reduce per local shard
+    let mut result = vec![0f32; n];
+    let shard = n / p;
+    for local in 0..p {
+        let group = [local, p + local];
+        let contrib = [node_sums[0][local].as_slice(), node_sums[1][local].as_slice()];
+        let summed = w.all_reduce(&group, &contrib, Wire::F16);
+        result[local * shard..(local + 1) * shard].copy_from_slice(&summed);
+    }
+
+    // INT4 error per element is bounded by (ranks-per-node) * scale/2;
+    // statistically the MAE stays well below the signal (|sum of 16
+    // unit-normal grads| ~ sqrt(2/pi)*4 ≈ 3.2)
+    let err = mae(&exact, &result);
+    assert!(err < 0.5, "topo grad path MAE {err}");
+    let signal = exact.iter().map(|v| v.abs() as f64).sum::<f64>() / n as f64;
+    assert!(err / signal < 0.15, "rel err {}", err / signal);
+}
+
+#[test]
+fn zero3_fp16_path_is_much_more_precise_than_int4() {
+    let cluster = Cluster::frontier(1);
+    let n = 2048;
+    let world = 8;
+    let grads: Vec<Vec<f32>> = (0..world).map(|r| randv(n, 7 + r as u64)).collect();
+    let views: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+    let group: Vec<usize> = (0..world).collect();
+    let mut exact = vec![0f32; n];
+    for g in &grads {
+        for (e, &v) in exact.iter_mut().zip(g) {
+            *e += v;
+        }
+    }
+    let fp16 = CommWorld::new(cluster.clone())
+        .reduce_scatter_ring(&group, &views, Wire::F16)
+        .concat();
+    let int4 = CommWorld::new(cluster)
+        .reduce_scatter_a2a(&group, &views, Wire::Int4 { block: 256 })
+        .concat();
+    assert!(mae(&exact, &fp16) < mae(&exact, &int4) / 5.0);
+}
+
+#[test]
+fn weight_gather_roundtrip_across_primary_partitions() {
+    // shard weights across a GCD pair, gather with INT8 wire, compare
+    check("primary partition gather", 25, |g| {
+        let n = g.usize_in(1, 20) * 512;
+        let w = g.vec_f32_exact(n, 0.05); // weight-scale values
+        let pm = PartitionMap::new(n, 2);
+        let mut padded = w.clone();
+        padded.resize(pm.padded_len(), 0.0);
+        let shards: Vec<&[f32]> = (0..2).map(|i| &padded[pm.range(i)]).collect();
+        let mut world = CommWorld::new(Cluster::frontier(1));
+        let mut gathered = world.all_gather(&[0, 1], &shards, Wire::Int8 { block: 256 });
+        gathered.truncate(n);
+        let err = max_abs_err(&w, &gathered);
+        // int8 contract: error ≤ amax/254 per block (amax of the worst block)
+        let amax = w.iter().fold(0f32, |m, v| m.max(v.abs())) as f64;
+        assert!(err <= amax / 254.0 * 1.01 + 1e-9, "err {err} amax {amax}");
+    });
+}
+
+#[test]
+fn secondary_partition_quantization_is_stable_across_steps() {
+    // re-quantizing an already-quantized secondary partition must be a
+    // fixed point (no error drift over repeated steps)
+    let w = randv(4096, 42);
+    let q1 = quant::roundtrip_int8(&w, 256);
+    let q2 = quant::roundtrip_int8(&q1, 256);
+    let q3 = quant::roundtrip_int8(&q2, 256);
+    assert_eq!(q1, q2);
+    assert_eq!(q2, q3);
+}
+
+#[test]
+fn sharding_specs_compose_with_collectives_on_any_cluster() {
+    check("spec/collective composition", 20, |g| {
+        let nodes = *g.pick(&[1usize, 2, 3, 6]);
+        let cluster = Cluster::frontier(nodes);
+        for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 8 }] {
+            let spec = ShardingSpec::resolve(scheme, &cluster).unwrap();
+            // every group list tiles the world
+            for degree in [spec.weights, spec.grads, spec.optim] {
+                let groups = shard_groups(spec.world, degree);
+                let mut all: Vec<usize> = groups.concat();
+                all.sort();
+                assert_eq!(all, (0..spec.world).collect::<Vec<_>>());
+            }
+        }
+    });
+}
+
+#[test]
+fn cost_model_monotone_in_scale_for_world_collectives() {
+    // inter-node all-gather of the same payload gets slower as the world
+    // grows (group-size penalty + NIC sharing) — the degradation that
+    // motivates the paper
+    let bytes = 1_000_000_000u64;
+    let mut last = 0.0;
+    for nodes in [2usize, 8, 24, 48] {
+        let cluster = Cluster::frontier(nodes);
+        let mut cm = zero_topo::comm::CostModel::with_efficiency(
+            cluster.clone(),
+            zero_topo::comm::cost::CommEfficiency::rccl_frontier(),
+        );
+        let group: Vec<usize> = (0..cluster.world_size()).collect();
+        let t = cm.all_gather(&group, bytes);
+        assert!(t > last, "nodes={nodes}: {t} vs {last}");
+        last = t;
+    }
+}
+
+#[test]
+fn all_reduce_wire_dtype_error_ordering() {
+    // f32 < f16 < int8 wire error, all bounded
+    let world = 4;
+    let n = 1024;
+    let grads: Vec<Vec<f32>> = (0..world).map(|r| randv(n, 300 + r as u64)).collect();
+    let views: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+    let group: Vec<usize> = (0..world).collect();
+    let mut exact = vec![0f32; n];
+    for g in &grads {
+        for (e, &v) in exact.iter_mut().zip(g) {
+            *e += v;
+        }
+    }
+    let run = |wire| CommWorld::new(Cluster::frontier(1)).all_reduce(&group, &views, wire);
+    let e32 = mae(&exact, &run(Wire::F32));
+    let e16 = mae(&exact, &run(Wire::F16));
+    let e8 = mae(&exact, &run(Wire::Int8 { block: 256 }));
+    assert!(e32 <= e16 && e16 < e8, "{e32} {e16} {e8}");
+    assert!(e8 < 0.3);
+}

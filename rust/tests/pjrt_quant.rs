@@ -1,0 +1,122 @@
+//! L1 ↔ L3 cross-check through the real artifact path: the Pallas
+//! block-quantization kernels (lowered to HLO, compiled by PJRT) must be
+//! bit-exact with the native Rust port in `zero_topo::quant` — the
+//! contract that lets the engine's comm path use the fast native code
+//! while staying faithful to the paper's GPU kernels.
+//!
+//! Requires `make artifacts`.
+
+use zero_topo::quant;
+use zero_topo::runtime::Runtime;
+use zero_topo::util::rng::Rng;
+
+// PjRtClient is Rc-based (not Send), so cache it per test thread.
+thread_local! {
+    static RT: Runtime = Runtime::load("artifacts").expect("run `make artifacts` first");
+}
+
+fn rand_input(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v, 1.5);
+    v
+}
+
+#[test]
+fn pallas_roundtrip_int8_matches_native() {
+    RT.with(|rt| {
+    let n = rt.manifest.quant_n;
+    let block = rt.manifest.quant_block;
+    let exe = rt.quant_executable("roundtrip_int8").unwrap();
+    let x = rand_input(n, 11);
+    let out = exe.execute::<xla::Literal>(&[xla::Literal::vec1(&x)]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let pallas: Vec<f32> = out.to_tuple1().unwrap().to_vec::<f32>().unwrap();
+    let native = quant::roundtrip_int8(&x, block);
+    let err = zero_topo::util::stats::max_abs_err(&pallas, &native);
+    assert!(err <= 1e-6, "pallas vs native int8 roundtrip max err {err}");
+    });
+}
+
+#[test]
+fn pallas_roundtrip_int4_matches_native() {
+    RT.with(|rt| {
+    let n = rt.manifest.quant_n;
+    let block = rt.manifest.quant_block;
+    let exe = rt.quant_executable("roundtrip_int4").unwrap();
+    let x = rand_input(n, 13);
+    let out = exe.execute::<xla::Literal>(&[xla::Literal::vec1(&x)]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let pallas: Vec<f32> = out.to_tuple1().unwrap().to_vec::<f32>().unwrap();
+    let native = quant::roundtrip_int4(&x, block);
+    let err = zero_topo::util::stats::max_abs_err(&pallas, &native);
+    assert!(err <= 1e-6, "pallas vs native int4 roundtrip max err {err}");
+    });
+}
+
+#[test]
+fn pallas_quantize_int8_bits_match_native() {
+    RT.with(|rt| {
+    let n = rt.manifest.quant_n;
+    let block = rt.manifest.quant_block;
+    let exe = rt.quant_executable("quant_int8").unwrap();
+    let x = rand_input(n, 17);
+    let out = exe.execute::<xla::Literal>(&[xla::Literal::vec1(&x)]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let parts = out.to_tuple().unwrap();
+    let q_pallas: Vec<i8> = parts[0].to_vec::<i8>().unwrap();
+    let s_pallas: Vec<f32> = parts[1].to_vec::<f32>().unwrap();
+    let native = quant::quantize_int8(&x, block);
+    assert_eq!(q_pallas, native.q, "int8 integer outputs must be IDENTICAL");
+    for (a, b) in s_pallas.iter().zip(&native.scales) {
+        assert!((a - b).abs() <= a.abs() * 1e-6, "{a} vs {b}");
+    }
+    });
+}
+
+#[test]
+fn pallas_quantize_int4_bits_match_native() {
+    RT.with(|rt| {
+    let n = rt.manifest.quant_n;
+    let block = rt.manifest.quant_block;
+    let exe = rt.quant_executable("quant_int4").unwrap();
+    let x = rand_input(n, 19);
+    let out = exe.execute::<xla::Literal>(&[xla::Literal::vec1(&x)]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let parts = out.to_tuple().unwrap();
+    let p_pallas: Vec<u8> = parts[0].to_vec::<u8>().unwrap();
+    let native = quant::quantize_int4(&x, block);
+    assert_eq!(p_pallas, native.packed, "int4 packed bytes must be IDENTICAL");
+    });
+}
+
+#[test]
+fn adversarial_inputs_still_match() {
+    // zeros, constants, huge dynamic range, f16-boundary values
+    RT.with(|rt| {
+    let n = rt.manifest.quant_n;
+    let block = rt.manifest.quant_block;
+    let exe = rt.quant_executable("roundtrip_int8").unwrap();
+    let mut x = vec![0.0f32; n];
+    for (i, v) in x.iter_mut().enumerate() {
+        *v = match i % 5 {
+            0 => 0.0,
+            1 => 65504.0,
+            2 => -1e-7,
+            3 => (i as f32) * 1e-3,
+            _ => -3.14159,
+        };
+    }
+    let out = exe.execute::<xla::Literal>(&[xla::Literal::vec1(&x)]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let pallas: Vec<f32> = out.to_tuple1().unwrap().to_vec::<f32>().unwrap();
+    let native = quant::roundtrip_int8(&x, block);
+    let err = zero_topo::util::stats::max_abs_err(&pallas, &native);
+    assert!(err <= 1e-3, "adversarial max err {err}");
+    });
+}

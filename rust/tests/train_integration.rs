@@ -1,0 +1,257 @@
+//! Integration: the full training engine over the PJRT runtime, on the
+//! `tiny` artifact. Exercises every layer at once: manifest → HLO compile
+//! → init → sharded training with quantized collectives → AdamW.
+//!
+//! Requires `make artifacts`.
+
+use zero_topo::config::RunConfig;
+use zero_topo::engine::TrainEngine;
+use zero_topo::runtime::{ModelRunner, Runtime};
+use zero_topo::sharding::Scheme;
+
+struct Ctx {
+    _rt: Runtime,
+    tiny: ModelRunner,
+}
+
+// PjRtClient is Rc-based (not Send): per-thread context.
+thread_local! {
+    static CTX: Ctx = {
+        let rt = Runtime::load("artifacts").expect("run `make artifacts` first");
+        let tiny = rt.model("tiny").expect("tiny artifact");
+        Ctx { _rt: rt, tiny }
+    };
+}
+
+fn cfg(scheme: Scheme, steps: usize, seed: u64) -> RunConfig {
+    RunConfig { model: "tiny".into(), scheme, nodes: 1, steps, seed, ..Default::default() }
+}
+
+#[test]
+fn init_params_deterministic_and_sized() {
+    CTX.with(|ctx| {
+    let a = ctx.tiny.init_params(5).unwrap();
+    let b = ctx.tiny.init_params(5).unwrap();
+    let c = ctx.tiny.init_params(6).unwrap();
+    assert_eq!(a.len(), ctx.tiny.manifest.n_params);
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+    assert!(a.iter().all(|v| v.is_finite()));
+    });
+}
+
+#[test]
+fn train_step_shapes_and_finiteness() {
+    CTX.with(|ctx| {
+    let m = &ctx.tiny.manifest;
+    let flat = ctx.tiny.init_params(1).unwrap();
+    let tokens = vec![3i32; m.mbs * m.seq];
+    let (loss, grads) = ctx.tiny.train_step(&flat, &tokens, &tokens).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert_eq!(grads.len(), m.n_params);
+    assert!(grads.iter().all(|g| g.is_finite()));
+    // eval on the same batch gives the same loss as fwd of train_step
+    let eval = ctx.tiny.eval_loss(&flat, &tokens, &tokens).unwrap();
+    assert!((eval - loss).abs() < 1e-4, "{eval} vs {loss}");
+    });
+}
+
+#[test]
+fn loss_decreases_under_all_schemes() {
+    CTX.with(|ctx| {
+    for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }] {
+        let mut e = TrainEngine::new(cfg(scheme, 8, 42), &ctx.tiny).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..8 {
+            losses.push(e.step().unwrap());
+        }
+        assert!(
+            losses.last().unwrap() < losses.first().unwrap(),
+            "{}: {losses:?}",
+            scheme.name()
+        );
+    }
+    });
+}
+
+#[test]
+fn schemes_agree_at_step_one_and_stay_close() {
+    // identical data + init: the only difference is the wire format, so
+    // step-1 losses must be nearly identical and curves must stay close —
+    // the paper's Fig 9/10 claim in miniature.
+    CTX.with(|ctx| {
+    let mut z3 = TrainEngine::new(cfg(Scheme::Zero3, 6, 7), &ctx.tiny).unwrap();
+    let mut topo =
+        TrainEngine::new(cfg(Scheme::ZeroTopo { sec_degree: 2 }, 6, 7), &ctx.tiny).unwrap();
+    let mut l3 = Vec::new();
+    let mut lt = Vec::new();
+    for _ in 0..6 {
+        l3.push(z3.step().unwrap());
+        lt.push(topo.step().unwrap());
+    }
+    assert!((l3[0] - lt[0]).abs() / l3[0] < 0.01, "step1: {} vs {}", l3[0], lt[0]);
+    let rel = (l3.last().unwrap() - lt.last().unwrap()).abs() / l3.last().unwrap();
+    assert!(rel < 0.05, "curves diverged: {l3:?} vs {lt:?}");
+    });
+}
+
+#[test]
+fn training_is_deterministic() {
+    CTX.with(|ctx| {
+    let run = || {
+        let mut e =
+            TrainEngine::new(cfg(Scheme::ZeroTopo { sec_degree: 2 }, 3, 99), &ctx.tiny).unwrap();
+        let mut l = Vec::new();
+        for _ in 0..3 {
+            l.push(e.step().unwrap());
+        }
+        l
+    };
+    assert_eq!(run(), run());
+    });
+}
+
+#[test]
+fn ledger_matches_scheme_topology() {
+    use zero_topo::comm::Coll;
+    use zero_topo::topology::LinkClass;
+    CTX.with(|ctx| {
+    // ZeRO-topo on one node: weight gathers on the GCD pair, NO inter-node
+    let mut topo =
+        TrainEngine::new(cfg(Scheme::ZeroTopo { sec_degree: 2 }, 2, 1), &ctx.tiny).unwrap();
+    topo.step().unwrap();
+    assert_eq!(topo.comm.cost.inter_node_bytes(), 0);
+    let pair = topo.comm.cost.entry(Coll::AllGather, LinkClass::GcdPair);
+    assert!(pair.calls > 0 && pair.wire_bytes > 0);
+    let a2a = topo.comm.cost.entry(Coll::AllToAll, LinkClass::IntraCross);
+    assert!(a2a.calls > 0, "grad sync must run intra-node a2a");
+    // ZeRO-3's gathers span the whole node (IntraCross bottleneck)
+    let mut z3 = TrainEngine::new(cfg(Scheme::Zero3, 2, 1), &ctx.tiny).unwrap();
+    z3.step().unwrap();
+    let z3g = z3.comm.cost.entry(Coll::AllGather, LinkClass::IntraCross);
+    assert!(z3g.calls > 0);
+    // The paper's claim is about LATENCY, not aggregate bytes: topo's
+    // per-gather time (2 GCDs @ 200 GB/s, INT8) must beat ZeRO-3's
+    // (8 GCDs @ 50 GB/s bottleneck, fp16).
+    let topo_per_call = pair.seconds / pair.calls as f64;
+    let z3_per_call = z3g.seconds / z3g.calls as f64;
+    assert!(
+        topo_per_call < z3_per_call / 4.0,
+        "topo {topo_per_call:.3e}s vs z3 {z3_per_call:.3e}s per gather"
+    );
+    });
+}
+
+#[test]
+fn multi_node_topo_keeps_weight_traffic_on_node() {
+    use zero_topo::comm::Coll;
+    use zero_topo::topology::LinkClass;
+    CTX.with(|ctx| {
+    // grad_accum=4 exposes the paper's advantage: ZeRO-3 pays inter-node
+    // weight gathers per MICROBATCH while topo's inter-node traffic
+    // (update gather + cross-node grad all-reduce) is per-STEP.
+    let mut c = cfg(Scheme::ZeroTopo { sec_degree: 2 }, 1, 3);
+    c.nodes = 2; // 16 simulated GCDs
+    c.grad_accum = 4;
+    let mut e = TrainEngine::new(c, &ctx.tiny).unwrap();
+    e.step().unwrap();
+    // the quantized gradient all-to-all never crosses nodes
+    let inter_a2a = e.comm.cost.entry(Coll::AllToAll, LinkClass::InterNode);
+    assert_eq!(inter_a2a.calls, 0);
+    // per-microbatch weight gathers stay on GCD pairs
+    let pair_ag = e.comm.cost.entry(Coll::AllGather, LinkClass::GcdPair);
+    assert!(pair_ag.calls >= 4 * 8, "fwd gathers per micro per pair group: {pair_ag:?}");
+
+    let mut c3 = cfg(Scheme::Zero3, 1, 3);
+    c3.nodes = 2;
+    c3.grad_accum = 4;
+    let mut z3 = TrainEngine::new(c3, &ctx.tiny).unwrap();
+    z3.step().unwrap();
+    assert!(
+        e.comm.cost.inter_node_bytes() < z3.comm.cost.inter_node_bytes(),
+        "topo inter {} vs z3 inter {}",
+        e.comm.cost.inter_node_bytes(),
+        z3.comm.cost.inter_node_bytes()
+    );
+    });
+}
+
+#[test]
+fn related_work_baselines_train() {
+    // Table X rows we implement: MiCS and FSDP-hybrid must also learn
+    CTX.with(|ctx| {
+        for scheme in [Scheme::Mics { group: 8 }, Scheme::FsdpHybrid { shard: 8 }] {
+            let mut e = TrainEngine::new(cfg(scheme, 4, 11), &ctx.tiny).unwrap();
+            let mut losses = Vec::new();
+            for _ in 0..4 {
+                losses.push(e.step().unwrap());
+            }
+            assert!(
+                losses.last().unwrap() < losses.first().unwrap(),
+                "{}: {losses:?}",
+                scheme.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn mics_matches_zero3_numerics() {
+    // MiCS with a full-world group is ZeRO-3 with a different transport —
+    // same data, same init, fp16 wire both: curves must be very close.
+    CTX.with(|ctx| {
+        let mut a = TrainEngine::new(cfg(Scheme::Zero3, 3, 31), &ctx.tiny).unwrap();
+        let mut b = TrainEngine::new(cfg(Scheme::Mics { group: 8 }, 3, 31), &ctx.tiny).unwrap();
+        for _ in 0..3 {
+            let la = a.step().unwrap();
+            let lb = b.step().unwrap();
+            assert!((la - lb).abs() / la < 0.01, "{la} vs {lb}");
+        }
+    });
+}
+
+#[test]
+fn checkpoint_roundtrip_resumes_identically() {
+    CTX.with(|ctx| {
+        let scheme = Scheme::ZeroTopo { sec_degree: 2 };
+        // run 4 steps straight
+        let mut full = TrainEngine::new(cfg(scheme, 4, 77), &ctx.tiny).unwrap();
+        let mut straight = Vec::new();
+        for _ in 0..4 {
+            straight.push(full.step().unwrap());
+        }
+        // run 2 steps, checkpoint, restore into a FRESH engine, run 2 more
+        let mut first = TrainEngine::new(cfg(scheme, 4, 77), &ctx.tiny).unwrap();
+        first.step().unwrap();
+        first.step().unwrap();
+        let ck = first.checkpoint();
+        let bytes = ck.serialize();
+        let ck2 = zero_topo::engine::checkpoint::Checkpoint::deserialize(&bytes).unwrap();
+        let mut resumed = TrainEngine::new(cfg(scheme, 4, 77), &ctx.tiny).unwrap();
+        resumed.restore(&ck2).unwrap();
+        let l3 = resumed.step().unwrap();
+        let l4 = resumed.step().unwrap();
+        assert_eq!(l3, straight[2], "step 3 after resume must be bit-identical");
+        assert_eq!(l4, straight[3], "step 4 after resume must be bit-identical");
+        // scheme mismatch is rejected
+        let mut other = TrainEngine::new(cfg(Scheme::Zero3, 1, 77), &ctx.tiny).unwrap();
+        assert!(other.restore(&ck2).is_err());
+    });
+}
+
+#[test]
+fn grad_accumulation_equals_bigger_batch_direction() {
+    // 2 accumulation steps halve per-micro noise; loss after N optimizer
+    // steps should still decrease and stay finite
+    CTX.with(|ctx| {
+    let mut c = cfg(Scheme::ZeroTopo { sec_degree: 2 }, 3, 21);
+    c.grad_accum = 2;
+    let mut e = TrainEngine::new(c, &ctx.tiny).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..3 {
+        losses.push(e.step().unwrap());
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(losses[2] < losses[0]);
+    });
+}
