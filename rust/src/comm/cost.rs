@@ -82,9 +82,14 @@ impl Default for CommEfficiency {
 impl CommEfficiency {
     /// Calibrated against the paper's measured 20B/384-GCD ratios
     /// (+40.5% ZeRO++ vs ZeRO-3, +70.7% topo vs ZeRO++, 0.94 scaling
-    /// efficiency) — see EXPERIMENTS.md §Calibration.
+    /// efficiency) under the event-driven step scheduler
+    /// ([`crate::sched`]) — see EXPERIMENTS.md §Calibration for the fit.
     pub fn rccl_frontier() -> Self {
-        CommEfficiency { inter_efficiency: 1.0, group_penalty_beta: 0.05, a2a_inter_efficiency: 0.1 }
+        CommEfficiency {
+            inter_efficiency: 1.0,
+            group_penalty_beta: 0.04,
+            a2a_inter_efficiency: 0.13,
+        }
     }
 }
 
@@ -141,68 +146,132 @@ impl CostModel {
         seconds
     }
 
-    /// Ring all-gather: `V` is the full (post-gather) wire-payload size.
-    pub fn all_gather(&mut self, group: &[usize], wire_bytes: u64) -> f64 {
+    // -- pure time queries (no ledger mutation) --------------------------
+    //
+    // The step scheduler (`sched::plan::StepPlan`) derives task durations
+    // from these, so simulator and engine price a collective identically
+    // whether or not it is charged to the ledger. Each `priced_*` helper
+    // resolves the group's bottleneck class exactly once (the O(d²)
+    // pairwise scan) and returns it alongside the time.
+
+    /// Ring all-gather time + the link class it occupies (one scan).
+    pub fn priced_all_gather(&self, group: &[usize], wire_bytes: u64) -> (f64, LinkClass) {
         let d = group.len() as f64;
         if d <= 1.0 {
-            return 0.0;
+            return (0.0, LinkClass::Local);
         }
         let (class, b) = self.effective_bandwidth(group);
         let alpha = self.cluster.kind.link_spec(class).latency;
-        let t = (d - 1.0) * alpha + ((d - 1.0) / d) * wire_bytes as f64 / b;
-        self.charge(Coll::AllGather, class, wire_bytes, t)
+        ((d - 1.0) * alpha + ((d - 1.0) / d) * wire_bytes as f64 / b, class)
     }
 
-    /// Ring reduce-scatter: `V` = full contribution size per rank (wire).
-    pub fn reduce_scatter(&mut self, group: &[usize], wire_bytes: u64) -> f64 {
+    /// 1-hop all-to-all time + link class (one scan).
+    pub fn priced_all_to_all(&self, group: &[usize], wire_bytes: u64) -> (f64, LinkClass) {
         let d = group.len() as f64;
         if d <= 1.0 {
-            return 0.0;
-        }
-        let (class, b) = self.effective_bandwidth(group);
-        let alpha = self.cluster.kind.link_spec(class).latency;
-        let t = (d - 1.0) * alpha + ((d - 1.0) / d) * wire_bytes as f64 / b;
-        self.charge(Coll::ReduceScatter, class, wire_bytes, t)
-    }
-
-    /// 1-hop all-to-all (the ZeRO++ quantized reduce-scatter transport).
-    /// Inter-node all-to-all additionally pays `a2a_inter_efficiency`
-    /// (bisection-heavy pattern — see [`CommEfficiency`]).
-    pub fn all_to_all(&mut self, group: &[usize], wire_bytes: u64) -> f64 {
-        let d = group.len() as f64;
-        if d <= 1.0 {
-            return 0.0;
+            return (0.0, LinkClass::Local);
         }
         let (class, mut b) = self.effective_bandwidth(group);
         if class == LinkClass::InterNode {
             b *= self.efficiency.a2a_inter_efficiency;
         }
         let alpha = self.cluster.kind.link_spec(class).latency;
-        let t = alpha + ((d - 1.0) / d) * wire_bytes as f64 / b;
+        (alpha + ((d - 1.0) / d) * wire_bytes as f64 / b, class)
+    }
+
+    /// Ring all-reduce time + link class (one scan).
+    pub fn priced_all_reduce(&self, group: &[usize], wire_bytes: u64) -> (f64, LinkClass) {
+        let d = group.len() as f64;
+        if d <= 1.0 {
+            return (0.0, LinkClass::Local);
+        }
+        let (class, b) = self.effective_bandwidth(group);
+        let alpha = self.cluster.kind.link_spec(class).latency;
+        (2.0 * (d - 1.0) * alpha + 2.0 * ((d - 1.0) / d) * wire_bytes as f64 / b, class)
+    }
+
+    /// Tree-broadcast time + link class (one scan).
+    pub fn priced_broadcast(&self, group: &[usize], wire_bytes: u64) -> (f64, LinkClass) {
+        let d = group.len() as f64;
+        if d <= 1.0 {
+            return (0.0, LinkClass::Local);
+        }
+        let (class, b) = self.effective_bandwidth(group);
+        let alpha = self.cluster.kind.link_spec(class).latency;
+        ((d.log2().ceil()) * alpha + wire_bytes as f64 / b, class)
+    }
+
+    /// Ring all-gather time: `V` is the full (post-gather) wire-payload size.
+    pub fn all_gather_time(&self, group: &[usize], wire_bytes: u64) -> f64 {
+        self.priced_all_gather(group, wire_bytes).0
+    }
+
+    /// Ring reduce-scatter time: `V` = full contribution size per rank
+    /// (same ring pattern as the all-gather, reversed).
+    pub fn reduce_scatter_time(&self, group: &[usize], wire_bytes: u64) -> f64 {
+        self.priced_all_gather(group, wire_bytes).0
+    }
+
+    /// 1-hop all-to-all time. Inter-node all-to-all additionally pays
+    /// `a2a_inter_efficiency` (bisection-heavy — see [`CommEfficiency`]).
+    pub fn all_to_all_time(&self, group: &[usize], wire_bytes: u64) -> f64 {
+        self.priced_all_to_all(group, wire_bytes).0
+    }
+
+    /// Ring all-reduce time.
+    pub fn all_reduce_time(&self, group: &[usize], wire_bytes: u64) -> f64 {
+        self.priced_all_reduce(group, wire_bytes).0
+    }
+
+    /// Tree broadcast time.
+    pub fn broadcast_time(&self, group: &[usize], wire_bytes: u64) -> f64 {
+        self.priced_broadcast(group, wire_bytes).0
+    }
+
+    // -- charging variants (time query + ledger entry) -------------------
+
+    /// Ring all-gather: `V` is the full (post-gather) wire-payload size.
+    pub fn all_gather(&mut self, group: &[usize], wire_bytes: u64) -> f64 {
+        if group.len() <= 1 {
+            return 0.0;
+        }
+        let (t, class) = self.priced_all_gather(group, wire_bytes);
+        self.charge(Coll::AllGather, class, wire_bytes, t)
+    }
+
+    /// Ring reduce-scatter: `V` = full contribution size per rank (wire).
+    pub fn reduce_scatter(&mut self, group: &[usize], wire_bytes: u64) -> f64 {
+        if group.len() <= 1 {
+            return 0.0;
+        }
+        let (t, class) = self.priced_all_gather(group, wire_bytes);
+        self.charge(Coll::ReduceScatter, class, wire_bytes, t)
+    }
+
+    /// 1-hop all-to-all (the ZeRO++ quantized reduce-scatter transport).
+    pub fn all_to_all(&mut self, group: &[usize], wire_bytes: u64) -> f64 {
+        if group.len() <= 1 {
+            return 0.0;
+        }
+        let (t, class) = self.priced_all_to_all(group, wire_bytes);
         self.charge(Coll::AllToAll, class, wire_bytes, t)
     }
 
     /// Ring all-reduce.
     pub fn all_reduce(&mut self, group: &[usize], wire_bytes: u64) -> f64 {
-        let d = group.len() as f64;
-        if d <= 1.0 {
+        if group.len() <= 1 {
             return 0.0;
         }
-        let (class, b) = self.effective_bandwidth(group);
-        let alpha = self.cluster.kind.link_spec(class).latency;
-        let t = 2.0 * (d - 1.0) * alpha + 2.0 * ((d - 1.0) / d) * wire_bytes as f64 / b;
+        let (t, class) = self.priced_all_reduce(group, wire_bytes);
         self.charge(Coll::AllReduce, class, wire_bytes, t)
     }
 
     /// Tree broadcast.
     pub fn broadcast(&mut self, group: &[usize], wire_bytes: u64) -> f64 {
-        let d = group.len() as f64;
-        if d <= 1.0 {
+        if group.len() <= 1 {
             return 0.0;
         }
-        let (class, b) = self.effective_bandwidth(group);
-        let alpha = self.cluster.kind.link_spec(class).latency;
-        let t = (d.log2().ceil()) * alpha + wire_bytes as f64 / b;
+        let (t, class) = self.priced_broadcast(group, wire_bytes);
         self.charge(Coll::Broadcast, class, wire_bytes, t)
     }
 
@@ -316,6 +385,22 @@ mod tests {
         m.reset();
         assert_eq!(m.total_seconds(), 0.0);
         assert_eq!(m.inter_node_bytes(), 0);
+    }
+
+    #[test]
+    fn pure_time_queries_match_charged_times() {
+        let mut m = CostModel::with_efficiency(Cluster::frontier(2), CommEfficiency::rccl_frontier());
+        let g: Vec<usize> = (0..16).collect();
+        let v = 123_456_789u64;
+        assert_eq!(m.all_gather_time(&g, v), m.all_gather(&g, v));
+        assert_eq!(m.reduce_scatter_time(&g, v), m.reduce_scatter(&g, v));
+        assert_eq!(m.all_to_all_time(&g, v), m.all_to_all(&g, v));
+        assert_eq!(m.all_reduce_time(&g, v), m.all_reduce(&g, v));
+        assert_eq!(m.broadcast_time(&g, v), m.broadcast(&g, v));
+        // queries never touch the ledger
+        let before = m.total_seconds();
+        let _ = m.all_gather_time(&g, v);
+        assert_eq!(m.total_seconds(), before);
     }
 
     #[test]

@@ -381,6 +381,59 @@ mod tests {
     }
 
     #[test]
+    fn prop_wire_bytes_agrees_with_apply() {
+        // `wire_bytes(n)` must equal the byte count `apply` reports for
+        // every wire format, including odd / block-unaligned lengths
+        check("wire_bytes == apply bytes", 60, |g| {
+            let n = g.usize_in(1, 3000);
+            // blocks stay even (INT4 packs nibble pairs); lengths don't
+            let block = *g.pick(&[8usize, 64, 100, 256]);
+            for wire in [Wire::F32, Wire::F16, Wire::Int8 { block }, Wire::Int4 { block }] {
+                let mut v = g.vec_f32_exact(n, 1.0);
+                let applied = wire.apply(&mut v);
+                assert_eq!(applied, wire.wire_bytes(n), "{wire:?} n={n}");
+                assert_eq!(v.len(), n, "{wire:?} must preserve length");
+                assert!(v.iter().all(|x| x.is_finite()));
+            }
+        });
+    }
+
+    #[test]
+    fn prop_quantized_wire_is_idempotent() {
+        // quantize -> dequantize -> quantize is a fixed point: the max-abs
+        // element of each block maps to exactly ±Q, so the second pass
+        // recovers the same scales and codes (and a second `apply` is a
+        // bit-exact no-op)
+        check("int8/int4 wire idempotent", 40, |g| {
+            let n = g.usize_in(1, 2048);
+            let block = *g.pick(&[32usize, 100, 256]);
+            let v = g.vec_f32_exact(n, 2.0);
+            let padded = crate::quant::padded_len(n, block);
+            let mut x = v.clone();
+            x.resize(padded, 0.0);
+
+            let q1 = crate::quant::quantize_int8(&x, block);
+            let d1 = crate::quant::dequantize_int8(&q1);
+            let q2 = crate::quant::quantize_int8(&d1, block);
+            assert_eq!(q1, q2, "INT8 requantization must be a fixed point");
+
+            let p1 = crate::quant::quantize_int4(&x, block);
+            let e1 = crate::quant::dequantize_int4(&p1);
+            let p2 = crate::quant::quantize_int4(&e1, block);
+            assert_eq!(p1, p2, "INT4 requantization must be a fixed point");
+
+            // the same property through the Wire interface
+            for wire in [Wire::Int8 { block }, Wire::Int4 { block }] {
+                let mut once = v.clone();
+                wire.apply(&mut once);
+                let mut twice = once.clone();
+                wire.apply(&mut twice);
+                assert_eq!(once, twice, "{wire:?} second apply must be a no-op");
+            }
+        });
+    }
+
+    #[test]
     fn prop_all_gather_preserves_order_and_length() {
         check("all-gather layout", 40, |g| {
             let d = *g.pick(&[2usize, 4, 8]);

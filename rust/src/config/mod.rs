@@ -3,6 +3,7 @@
 
 use std::path::Path;
 
+use crate::sched::Depth;
 use crate::sharding::Scheme;
 use crate::util::json::Json;
 
@@ -24,6 +25,10 @@ pub struct RunConfig {
     pub quant_block: usize,
     /// Learning rate for the numerics path.
     pub lr: f32,
+    /// MFU anchor for the simulated compute term of the step clock.
+    pub mfu: f64,
+    /// Prefetch depth for the step scheduler's gather stream.
+    pub prefetch_depth: Depth,
 }
 
 impl Default for RunConfig {
@@ -38,6 +43,8 @@ impl Default for RunConfig {
             seed: 42,
             quant_block: crate::quant::DEFAULT_BLOCK,
             lr: 1e-3,
+            mfu: 0.35,
+            prefetch_depth: Depth::Infinite,
         }
     }
 }
@@ -80,6 +87,19 @@ impl RunConfig {
         if let Some(v) = j.get("lr") {
             c.lr = v.as_f64().ok_or_else(|| ConfigError::Bad("lr", v.to_string()))? as f32;
         }
+        if let Some(v) = j.get("mfu") {
+            c.mfu = v.as_f64().ok_or_else(|| ConfigError::Bad("mfu", v.to_string()))?;
+        }
+        if let Some(v) = j.get("prefetch_depth") {
+            // accept both a number (like every other numeric field) and
+            // the string forms "2" / "inf"
+            c.prefetch_depth = match (v.as_usize(), v.as_str()) {
+                (Some(d), _) => Depth::Bounded(d),
+                (None, Some(s)) => Depth::parse(s)
+                    .ok_or_else(|| ConfigError::Bad("prefetch_depth", s.to_string()))?,
+                _ => return Err(ConfigError::Bad("prefetch_depth", v.to_string())),
+            };
+        }
         Ok(c)
     }
 
@@ -99,6 +119,8 @@ impl RunConfig {
             ("seed", Json::num(self.seed as f64)),
             ("quant_block", Json::from(self.quant_block)),
             ("lr", Json::num(self.lr as f64)),
+            ("mfu", Json::num(self.mfu)),
+            ("prefetch_depth", Json::str(self.prefetch_depth.to_string())),
         ])
     }
 }
@@ -119,6 +141,8 @@ mod tests {
             seed: 7,
             quant_block: 128,
             lr: 3e-4,
+            mfu: 0.4,
+            prefetch_depth: Depth::Bounded(2),
         };
         let j = c.to_json();
         let c2 = RunConfig::from_json(&j).unwrap();
@@ -128,6 +152,8 @@ mod tests {
         assert_eq!(c2.grad_accum, 8);
         assert_eq!(c2.quant_block, 128);
         assert!((c2.lr - 3e-4).abs() < 1e-9);
+        assert!((c2.mfu - 0.4).abs() < 1e-12);
+        assert_eq!(c2.prefetch_depth, Depth::Bounded(2));
     }
 
     #[test]
@@ -137,6 +163,17 @@ mod tests {
         assert_eq!(c.model, "e2e");
         assert_eq!(c.nodes, 1);
         assert_eq!(c.scheme, Scheme::ZeroTopo { sec_degree: 2 });
+        assert_eq!(c.prefetch_depth, Depth::Infinite);
+    }
+
+    #[test]
+    fn prefetch_depth_accepts_number_and_string() {
+        let j = Json::parse(r#"{"prefetch_depth":2}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().prefetch_depth, Depth::Bounded(2));
+        let j = Json::parse(r#"{"prefetch_depth":"inf"}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().prefetch_depth, Depth::Infinite);
+        let j = Json::parse(r#"{"prefetch_depth":"nope"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
     }
 
     #[test]

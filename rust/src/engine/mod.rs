@@ -33,6 +33,7 @@ pub mod checkpoint;
 
 use anyhow::{bail, Result};
 
+use crate::comm::cost::CommEfficiency;
 use crate::comm::{CommWorld, Wire};
 use crate::config::RunConfig;
 use crate::data::{BatchStream, SyntheticCorpus};
@@ -40,6 +41,7 @@ use crate::dtype::round_f16_slice;
 use crate::metrics::{LossPoint, TrainLog};
 use crate::optimizer::{global_clip_scale, local_sq_norm, AdamWConfig, AdamWShard};
 use crate::runtime::ModelRunner;
+use crate::sched::plan::StepPlan;
 use crate::sharding::{shard_groups, PartitionMap, Scheme, ShardingSpec};
 use crate::topology::Cluster;
 
@@ -59,6 +61,8 @@ pub struct TrainEngine<'a> {
     step_idx: usize,
     /// Per-rank fp32 gradient accumulators (only alive inside a step).
     grad_accum_bufs: Vec<Vec<f32>>,
+    /// Event-clock makespan of one step (constant per run; priced once).
+    step_sim_s: f64,
     pub log: TrainLog,
 }
 
@@ -88,8 +92,13 @@ impl<'a> TrainEngine<'a> {
             .collect();
         let corpus = SyntheticCorpus::new(m.vocab, cfg.seed ^ 0xDA7A);
         let stream = BatchStream::new(corpus, m.mbs, m.seq, cfg.seed);
-        Ok(TrainEngine {
-            comm: CommWorld::new(cluster.clone()),
+        // the engine prices collectives with the SAME calibrated RCCL
+        // efficiency the simulator defaults to — without it the two clocks
+        // disagree on exactly the inter-node collectives the paper studies
+        let mut comm = CommWorld::new(cluster.clone());
+        comm.cost.efficiency = CommEfficiency::rccl_frontier();
+        let mut engine = TrainEngine {
+            comm,
             log: TrainLog { scheme: cfg.scheme.name(), ..Default::default() },
             cluster,
             spec,
@@ -100,8 +109,15 @@ impl<'a> TrainEngine<'a> {
             stream,
             step_idx: 0,
             grad_accum_bufs: Vec::new(),
+            step_sim_s: 0.0,
             cfg,
-        })
+        };
+        // the plan is a pure function of (cfg, spec, cluster, manifest),
+        // all fixed for the run: price + schedule it once, accumulate the
+        // makespan per step (recompute via `plan_step` if you mutate the
+        // engine's cost-model efficiency afterwards)
+        engine.step_sim_s = engine.plan_step().simulate().makespan();
+        Ok(engine)
     }
 
     fn world(&self) -> usize {
@@ -318,6 +334,12 @@ impl<'a> TrainEngine<'a> {
         let full_group: Vec<usize> = (0..world).collect();
         self.comm.cost.all_gather(&full_group, Wire::F16.wire_bytes(n) as u64);
 
+        // ---- simulated step clock: the SAME event scheduler + collective
+        // pricing the analytic simulator runs (the comm side of a step can
+        // never drift between engine and sim; the compute term here uses
+        // the 6Ψ rule on the proxy manifest — see `plan_step`) ----
+        self.log.sim_seconds += self.step_sim_s;
+
         self.step_idx += 1;
         let denom = (world * self.cfg.grad_accum) as f64;
         let mean_loss = loss_sum / denom;
@@ -371,6 +393,38 @@ impl<'a> TrainEngine<'a> {
     /// Simulated communication seconds accumulated so far.
     pub fn comm_seconds(&self) -> f64 {
         self.comm.cost.total_seconds()
+    }
+
+    /// Simulated wall-clock seconds of training so far: the sum of the
+    /// per-step event-clock makespans ([`crate::sched`]).
+    pub fn sim_seconds(&self) -> f64 {
+        self.log.sim_seconds
+    }
+
+    /// The step plan priced for this engine's protocol: per-microbatch
+    /// gather durations and sync phases from the cost model (identical to
+    /// the simulator's pricing by construction). The compute term uses the
+    /// 6Ψ FLOPs rule — the proxy manifests carry only a parameter count,
+    /// not the layer geometry the simulator's detailed account needs — so
+    /// engine and sim step clocks agree on communication and scheduling,
+    /// and differ on compute only by 6Ψ-vs-detailed (under ~15% for large
+    /// models, more for tiny proxies).
+    fn plan_step(&self) -> StepPlan {
+        let m = &self.runner.manifest;
+        let tokens_per_micro = (m.mbs * m.seq) as f64;
+        let peak = self.cluster.kind.peak_flops_per_worker();
+        let compute_s = 6.0 * m.n_params as f64 * tokens_per_micro * self.cfg.grad_accum as f64
+            / (peak * self.cfg.mfu);
+        StepPlan::from_protocol(
+            &self.comm.cost,
+            self.cfg.scheme,
+            &self.spec,
+            m.n_params,
+            self.quant_block(),
+            self.cfg.grad_accum,
+            compute_s,
+            self.cfg.prefetch_depth,
+        )
     }
 
     /// Snapshot the full training state (weights + sharded AdamW + step).

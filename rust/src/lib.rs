@@ -21,7 +21,8 @@
 //! Layer map (see `DESIGN.md`):
 //! * L3 (this crate): coordinator, simulated Frontier cluster, collective
 //!   engine with an α–β cost model, sharding planners, training engine,
-//!   analytical performance simulator.
+//!   analytical performance simulator, and the discrete-event multi-stream
+//!   step scheduler ([`sched`]) both clocks run on.
 //! * L2 (`python/compile/model.py`): GPT-NeoX-style flat-parameter model,
 //!   AOT-lowered to HLO text under `artifacts/`.
 //! * L1 (`python/compile/kernels/`): Pallas block-quantization + fused
@@ -39,6 +40,7 @@ pub mod optimizer;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod sched;
 pub mod sharding;
 pub mod sim;
 pub mod testing;

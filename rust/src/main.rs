@@ -13,10 +13,11 @@ use zero_topo::config::RunConfig;
 use zero_topo::engine::TrainEngine;
 use zero_topo::memory::MemoryModel;
 use zero_topo::model::TransformerSpec;
-use zero_topo::report::{render_scaling_figure, ScalingSeries};
+use zero_topo::report::{render_scaling_figure, render_stall_table, ScalingSeries};
 use zero_topo::runtime::Runtime;
+use zero_topo::sched::{trace, Schedule};
 use zero_topo::sharding::{Scheme, ShardingSpec};
-use zero_topo::sim::{scaling_series, SimConfig};
+use zero_topo::sim::{scaling_series, simulate_step_schedule, SimConfig};
 use zero_topo::topology::{Cluster, LinkClass, NodeKind};
 use zero_topo::util::cli::Args;
 use zero_topo::util::table::{fnum, human_bytes, Table};
@@ -31,15 +32,17 @@ USAGE: zero-topo <subcommand> [options]
   memory    [--model 20b] [--nodes N]       Tables V/VI memory per device
   capacity  [--nodes N]                     max model size per scheme (Sec II)
   simulate  [--model 20b] [--nodes 8,16,32,48] [--schemes zero3,zeropp,zerotopo]
-                                            Fig 7/8 scaling (analytical)
+            [--depth N|inf] [--stalls] [--trace out.json]
+                                            Fig 7/8 scaling (event-driven sim)
   train     [--model tiny] [--scheme zerotopo] [--nodes 1] [--steps 10]
-            [--artifacts DIR] [--csv FILE]  real training via PJRT
+            [--depth N|inf] [--artifacts DIR] [--csv FILE]
+                                            real training via PJRT
   report                                    print all analytical tables
 ";
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(raw, &["verbose", "json", "help"]) {
+    let args = match Args::parse(raw, &["verbose", "json", "help", "stalls"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
@@ -221,7 +224,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let schemes = parse_schemes(args)?;
     let mut cfg = SimConfig::default();
     cfg.mfu = args.parse_opt("mfu", cfg.mfu)?;
-    cfg.overlap = args.parse_opt("overlap", cfg.overlap)?;
+    cfg.prefetch_depth = args.parse_opt("depth", cfg.prefetch_depth)?;
     let series: Vec<ScalingSeries> = schemes
         .iter()
         .map(|&scheme| ScalingSeries {
@@ -230,13 +233,49 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         })
         .collect();
     let title = format!(
-        "Fig 7/8 — TFLOPS per GPU, {} (Ψ={:.1}B), mfu={} overlap={}",
+        "Fig 7/8 — TFLOPS per GPU, {} (Ψ={:.1}B), mfu={} prefetch-depth={}",
         model.name,
         model.n_params() as f64 / 1e9,
         cfg.mfu,
-        cfg.overlap
+        cfg.prefetch_depth
     );
     println!("{}", render_scaling_figure(&title, &series));
+
+    // schedule the largest scale once per scheme for the stall breakdown
+    // and the optional Chrome-trace export of the stream timelines
+    let largest =
+        *node_counts.iter().max().ok_or_else(|| anyhow::anyhow!("empty --nodes"))?;
+    let want_stalls = args.flag("stalls");
+    let trace_path = args.get("trace");
+    if want_stalls || trace_path.is_some() {
+        let cluster = Cluster::frontier(largest);
+        let scheds: Vec<(String, Schedule)> = schemes
+            .iter()
+            .map(|&scheme| {
+                let (_, sched) = simulate_step_schedule(&model, scheme, &cluster, &cfg);
+                (scheme.name(), sched)
+            })
+            .collect();
+        if want_stalls {
+            for (name, sched) in &scheds {
+                let title = format!(
+                    "{} @ {} GCDs — compute stalls per bandwidth level",
+                    name,
+                    cluster.world_size()
+                );
+                println!(
+                    "{}",
+                    render_stall_table(&title, &sched.stall_by_class(0), &sched.utilization(0))
+                );
+            }
+        }
+        if let Some(path) = trace_path {
+            let named: Vec<(String, &Schedule)> =
+                scheds.iter().map(|(n, s)| (n.clone(), s)).collect();
+            std::fs::write(path, trace::chrome_trace(&named))?;
+            println!("wrote {path} (open in chrome://tracing or ui.perfetto.dev)");
+        }
+    }
     if let Some(path) = args.get("csv") {
         std::fs::write(path, zero_topo::report::scaling_csv(&series))?;
         println!("wrote {path}");
@@ -254,6 +293,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.grad_accum = args.parse_opt("grad-accum", 1usize)?;
     cfg.seed = args.parse_opt("seed", 42u64)?;
     cfg.lr = args.parse_opt("lr", 1e-3f32)?;
+    cfg.mfu = args.parse_opt("mfu", cfg.mfu)?;
+    cfg.prefetch_depth = args.parse_opt("depth", cfg.prefetch_depth)?;
     let dir = args.get_or("artifacts", "artifacts");
 
     eprintln!("loading artifacts from {dir} ...");
@@ -276,9 +317,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     for s in 0..steps {
         let loss = engine.step()?;
         println!(
-            "step {:>4}  loss {:.4}  comm(sim) {:.3}s  wall {:.1}s",
+            "step {:>4}  loss {:.4}  step(sim) {:.3}s  comm(sim) {:.3}s  wall {:.1}s",
             s + 1,
             loss,
+            engine.sim_seconds(),
             engine.comm_seconds(),
             t0.elapsed().as_secs_f64()
         );

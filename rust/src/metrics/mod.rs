@@ -34,6 +34,35 @@ pub fn scaling_efficiency(points: &[Throughput]) -> Vec<f64> {
     points.iter().map(|p| p.tflops_per_gpu() / base).collect()
 }
 
+/// Busy-time accounting of one scheduled step's streams for a single rank
+/// (produced by `sched::Schedule::utilization`): how much of the event-clock
+/// makespan each resource stream actually worked.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepUtilization {
+    /// Event-clock step time.
+    pub makespan: f64,
+    pub compute_busy: f64,
+    pub prefetch_busy: f64,
+    pub grad_sync_busy: f64,
+}
+
+impl StepUtilization {
+    /// Fraction of the step the compute stream was busy — the scheduler's
+    /// analogue of MFU-loss to communication stalls.
+    pub fn compute_utilization(&self) -> f64 {
+        if self.makespan > 0.0 {
+            self.compute_busy / self.makespan
+        } else {
+            0.0
+        }
+    }
+
+    /// Compute-stream idle seconds (stall time across all causes).
+    pub fn compute_stall(&self) -> f64 {
+        (self.makespan - self.compute_busy).max(0.0)
+    }
+}
+
 /// A recorded loss-curve sample.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LossPoint {
@@ -102,6 +131,25 @@ mod tests {
         let eff = scaling_efficiency(&pts);
         assert!((eff[0] - 1.0).abs() < 1e-12);
         assert!(eff[1] < 1.0 && eff[2] < eff[1]);
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let u = StepUtilization {
+            makespan: 10.0,
+            compute_busy: 7.5,
+            prefetch_busy: 4.0,
+            grad_sync_busy: 1.5,
+        };
+        assert!((u.compute_utilization() - 0.75).abs() < 1e-12);
+        assert!((u.compute_stall() - 2.5).abs() < 1e-12);
+        let z = StepUtilization {
+            makespan: 0.0,
+            compute_busy: 0.0,
+            prefetch_busy: 0.0,
+            grad_sync_busy: 0.0,
+        };
+        assert_eq!(z.compute_utilization(), 0.0);
     }
 
     #[test]

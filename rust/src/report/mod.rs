@@ -1,8 +1,11 @@
 //! Report rendering: turns measured/simulated results into the paper's
 //! tables and figure-series, as aligned text and CSV.
 
-use crate::metrics::Throughput;
+use std::collections::BTreeMap;
+
+use crate::metrics::{StepUtilization, Throughput};
 use crate::sharding::Scheme;
+use crate::topology::LinkClass;
 use crate::util::table::{fnum, Table};
 
 /// One scheme's scaling series (a line of Fig 7/8).
@@ -59,6 +62,37 @@ pub fn render_scaling_figure(title: &str, series: &[ScalingSeries]) -> String {
     out
 }
 
+/// Render the scheduler's stall attribution for one scheme's step: where
+/// the compute stream waited, per bandwidth level, plus stream busy times
+/// — the "which link class stalls the step" table behind the paper's
+/// Discussion of expensive inter-node collectives.
+pub fn render_stall_table(
+    title: &str,
+    stalls: &BTreeMap<LinkClass, f64>,
+    util: &StepUtilization,
+) -> String {
+    let mut t = Table::new(&["bandwidth level", "compute stall (s)", "% of step"])
+        .title(title.to_string())
+        .left_first();
+    for (class, secs) in stalls {
+        t.row(vec![
+            class.to_string(),
+            fnum(*secs, 3),
+            fnum(100.0 * secs / util.makespan.max(f64::MIN_POSITIVE), 1),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "step {:.3}s: compute busy {:.3}s ({:.1}% util), prefetch busy {:.3}s, grad-sync busy {:.3}s\n",
+        util.makespan,
+        util.compute_busy,
+        100.0 * util.compute_utilization(),
+        util.prefetch_busy,
+        util.grad_sync_busy,
+    ));
+    out
+}
+
 /// CSV with one row per (scheme, scale) for plotting.
 pub fn scaling_csv(series: &[ScalingSeries]) -> String {
     let mut out = String::from("scheme,gcds,tflops_per_gpu,samples_per_sec,efficiency\n");
@@ -89,6 +123,23 @@ mod tests {
             flops_per_step: tf * 1e12 * gcds as f64,
             sequences_per_step: 1.0,
         }
+    }
+
+    #[test]
+    fn renders_stall_table() {
+        let mut stalls = BTreeMap::new();
+        stalls.insert(LinkClass::InterNode, 2.0);
+        stalls.insert(LinkClass::GcdPair, 0.5);
+        let util = StepUtilization {
+            makespan: 10.0,
+            compute_busy: 7.0,
+            prefetch_busy: 2.5,
+            grad_sync_busy: 2.0,
+        };
+        let out = render_stall_table("stalls", &stalls, &util);
+        assert!(out.contains("B_inter"), "{out}");
+        assert!(out.contains("20.0"), "{out}");
+        assert!(out.contains("70.0% util"), "{out}");
     }
 
     #[test]

@@ -1,0 +1,514 @@
+//! Discrete-event multi-stream step scheduler (DESIGN.md §5).
+//!
+//! Models one optimizer step as a DAG of tasks executed by per-rank
+//! *resource streams* — the three streams a DeepSpeed/FSDP-style runtime
+//! actually runs:
+//!
+//! * **Compute**: forward/backward kernels, one serial queue per rank.
+//! * **Prefetch**: the parameter all-gather side stream. Per-microbatch
+//!   weight gathers issue here in consumption order, bounded by the
+//!   prefetch [`Depth`] (how many gathers may run ahead of the compute
+//!   that consumes them).
+//! * **GradSync**: the gradient/optimizer path — blocking reduce-scatter /
+//!   all-to-all / all-reduce phases at the grad-accumulation boundary,
+//!   plus the §V.D updated-weight all-gather (charged at the step head:
+//!   in steady state the refresh issued after step `s` overlaps the
+//!   compute of step `s+1`).
+//!
+//! The event loop is a fluid-flow simulation: each stream executes its
+//! FIFO queue in order, a task starts when its dependencies are done and
+//! its stream is free, and concurrent communication tasks that share a
+//! [`LinkClass`] split that class's bandwidth evenly (processor sharing —
+//! two inter-node collectives in flight each proceed at half rate). Time
+//! advances to the earliest completion under the current rates.
+//!
+//! [`Schedule`] retains every task's `[start, end)` span, from which the
+//! makespan (the simulated step time), per-stream busy time, and the
+//! *stall breakdown* — compute-idle time attributed to the link class
+//! that was busy while compute waited — are derived. `sim::simulate_step`
+//! and `engine::TrainEngine` both obtain their step clock from this event
+//! loop via [`plan::StepPlan`], so their communication pricing and
+//! schedule semantics can never drift.
+
+pub mod plan;
+pub mod trace;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::str::FromStr;
+
+use crate::metrics::StepUtilization;
+use crate::topology::LinkClass;
+
+/// The three per-rank resource streams of a training step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum StreamKind {
+    Compute,
+    Prefetch,
+    GradSync,
+}
+
+impl StreamKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StreamKind::Compute => "compute",
+            StreamKind::Prefetch => "prefetch",
+            StreamKind::GradSync => "grad-sync",
+        }
+    }
+}
+
+/// Prefetch depth: how many weight gathers the prefetch stream may run
+/// ahead of the compute that consumes them. `Bounded(0)` fetches only
+/// when needed (fully serialized); `Infinite` lets the gather pipeline
+/// run freely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Depth {
+    Bounded(usize),
+    Infinite,
+}
+
+impl Depth {
+    pub fn parse(s: &str) -> Option<Depth> {
+        match s.to_ascii_lowercase().as_str() {
+            "inf" | "infinite" | "unbounded" => Some(Depth::Infinite),
+            other => other.parse::<usize>().ok().map(Depth::Bounded),
+        }
+    }
+}
+
+impl FromStr for Depth {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Depth, String> {
+        Depth::parse(s).ok_or_else(|| format!("bad depth '{s}' (use a number or 'inf')"))
+    }
+}
+
+impl fmt::Display for Depth {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Depth::Bounded(d) => write!(f, "{d}"),
+            Depth::Infinite => f.write_str("inf"),
+        }
+    }
+}
+
+/// Handle into a [`TaskGraph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct TaskId(pub usize);
+
+/// One node of the step DAG.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub label: String,
+    pub rank: usize,
+    pub stream: StreamKind,
+    /// Seconds of work at unit rate (a comm task sharing its link class
+    /// with n-1 concurrent peers proceeds at rate 1/n).
+    pub work: f64,
+    /// Contention domain for communication tasks; `None` for compute.
+    pub class: Option<LinkClass>,
+    pub deps: Vec<TaskId>,
+}
+
+/// The step DAG. Acyclic by construction: a task may only depend on
+/// tasks added before it, and per-stream FIFO order is insertion order.
+#[derive(Debug, Clone, Default)]
+pub struct TaskGraph {
+    tasks: Vec<Task>,
+}
+
+impl TaskGraph {
+    pub fn new() -> TaskGraph {
+        TaskGraph::default()
+    }
+
+    /// Add a task; its dependencies must already be in the graph.
+    pub fn add(&mut self, task: Task) -> TaskId {
+        let id = TaskId(self.tasks.len());
+        for d in &task.deps {
+            assert!(d.0 < id.0, "dependency {:?} added after dependent {:?}", d, id);
+        }
+        assert!(task.work >= 0.0 && task.work.is_finite(), "bad work {}", task.work);
+        self.tasks.push(task);
+        id
+    }
+
+    pub fn task(&self, id: TaskId) -> &Task {
+        &self.tasks[id.0]
+    }
+
+    pub fn tasks(&self) -> &[Task] {
+        &self.tasks
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+}
+
+/// Executed `[start, end)` interval of one task.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub task: TaskId,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// The executed timeline of a [`TaskGraph`].
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    graph: TaskGraph,
+    spans: Vec<Span>,
+    makespan: f64,
+}
+
+/// Run the discrete-event loop over `graph` and return the timeline.
+pub fn simulate(graph: TaskGraph) -> Schedule {
+    let n = graph.len();
+    let mut remaining: Vec<f64> = graph.tasks.iter().map(|t| t.work).collect();
+    let mut start = vec![f64::NAN; n];
+    let mut end = vec![f64::NAN; n];
+    let mut done = vec![false; n];
+
+    // per-stream FIFO queues in insertion order
+    let mut queues: BTreeMap<(usize, StreamKind), Vec<usize>> = BTreeMap::new();
+    for (i, t) in graph.tasks.iter().enumerate() {
+        queues.entry((t.rank, t.stream)).or_default().push(i);
+    }
+    let mut head: BTreeMap<(usize, StreamKind), usize> = BTreeMap::new();
+    let mut running: BTreeMap<(usize, StreamKind), usize> = BTreeMap::new();
+
+    let mut now = 0.0f64;
+    let mut n_done = 0usize;
+    while n_done < n {
+        // issue every stream head whose dependencies are satisfied; repeat
+        // until a fixed point (a zero-work start may unblock another head)
+        loop {
+            let mut issued = false;
+            for (key, q) in queues.iter() {
+                if running.contains_key(key) {
+                    continue;
+                }
+                let h = head.entry(*key).or_insert(0);
+                if *h >= q.len() {
+                    continue;
+                }
+                let i = q[*h];
+                if graph.tasks[i].deps.iter().all(|d| done[d.0]) {
+                    start[i] = now;
+                    running.insert(*key, i);
+                    *h += 1;
+                    issued = true;
+                }
+            }
+            if !issued {
+                break;
+            }
+        }
+        if running.is_empty() {
+            // every remaining task waits on a dependency that can never
+            // finish — impossible for graphs built through `add`
+            panic!("scheduler deadlock: {} of {} tasks unreachable", n - n_done, n);
+        }
+
+        // processor-sharing rates per link class
+        let mut active: BTreeMap<LinkClass, usize> = BTreeMap::new();
+        for &i in running.values() {
+            if let Some(c) = graph.tasks[i].class {
+                *active.entry(c).or_default() += 1;
+            }
+        }
+        let rate = |i: usize| -> f64 {
+            match graph.tasks[i].class {
+                Some(c) => 1.0 / active[&c] as f64,
+                None => 1.0,
+            }
+        };
+
+        // advance to the earliest completion under current rates
+        let dt = running
+            .values()
+            .map(|&i| remaining[i] / rate(i))
+            .fold(f64::INFINITY, f64::min)
+            .max(0.0);
+        now += dt;
+        let keys: Vec<(usize, StreamKind)> = running.keys().copied().collect();
+        for key in keys {
+            let i = running[&key];
+            remaining[i] -= rate(i) * dt;
+            if remaining[i] <= 1e-12 * graph.tasks[i].work.max(1.0) {
+                running.remove(&key);
+                remaining[i] = 0.0;
+                end[i] = now;
+                done[i] = true;
+                n_done += 1;
+            }
+        }
+    }
+
+    let spans: Vec<Span> = (0..n)
+        .map(|i| Span { task: TaskId(i), start: start[i], end: end[i] })
+        .collect();
+    Schedule { graph, makespan: now, spans }
+}
+
+impl Schedule {
+    pub fn graph(&self) -> &TaskGraph {
+        &self.graph
+    }
+
+    pub fn makespan(&self) -> f64 {
+        self.makespan
+    }
+
+    pub fn span(&self, id: TaskId) -> Span {
+        self.spans[id.0]
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// Ranks that own at least one task.
+    pub fn ranks(&self) -> Vec<usize> {
+        let mut r: Vec<usize> = self.graph.tasks.iter().map(|t| t.rank).collect();
+        r.sort_unstable();
+        r.dedup();
+        r
+    }
+
+    /// Total busy seconds of one stream (streams are serial, so spans on a
+    /// stream never overlap).
+    pub fn stream_busy(&self, rank: usize, stream: StreamKind) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| {
+                let t = self.graph.task(s.task);
+                t.rank == rank && t.stream == stream
+            })
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    /// Stall breakdown for one rank: wall time its compute stream sat idle
+    /// while at least one communication task of each link class was in
+    /// flight — the "where does the step wait" attribution the paper's
+    /// bandwidth-level analysis asks for. Overlapping classes are each
+    /// charged (the map is attribution, not a partition of idle time).
+    pub fn stall_by_class(&self, rank: usize) -> BTreeMap<LinkClass, f64> {
+        let mut bounds: Vec<f64> = Vec::with_capacity(2 * self.spans.len());
+        for s in &self.spans {
+            bounds.push(s.start);
+            bounds.push(s.end);
+        }
+        bounds.sort_by(|a, b| a.partial_cmp(b).expect("finite span bounds"));
+        bounds.dedup();
+
+        let mut out: BTreeMap<LinkClass, f64> = BTreeMap::new();
+        for w in bounds.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            if b <= a {
+                continue;
+            }
+            let mid = 0.5 * (a + b);
+            let covering = |pred: &dyn Fn(&Task) -> bool| {
+                self.spans.iter().any(|s| {
+                    s.start < mid && mid < s.end && pred(self.graph.task(s.task))
+                })
+            };
+            let compute_busy =
+                covering(&|t: &Task| t.rank == rank && t.stream == StreamKind::Compute);
+            if compute_busy {
+                continue;
+            }
+            for s in &self.spans {
+                if s.start < mid && mid < s.end {
+                    if let Some(c) = self.graph.task(s.task).class {
+                        *out.entry(c).or_default() += b - a;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Busy/idle accounting of one rank's streams.
+    pub fn utilization(&self, rank: usize) -> StepUtilization {
+        StepUtilization {
+            makespan: self.makespan,
+            compute_busy: self.stream_busy(rank, StreamKind::Compute),
+            prefetch_busy: self.stream_busy(rank, StreamKind::Prefetch),
+            grad_sync_busy: self.stream_busy(rank, StreamKind::GradSync),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(stream: StreamKind, work: f64, deps: Vec<TaskId>) -> Task {
+        Task { label: String::new(), rank: 0, stream, work, class: None, deps }
+    }
+
+    fn comm(stream: StreamKind, work: f64, class: LinkClass, deps: Vec<TaskId>) -> Task {
+        Task { label: String::new(), rank: 0, stream, work, class: Some(class), deps }
+    }
+
+    #[test]
+    fn single_task_makespan() {
+        let mut g = TaskGraph::new();
+        g.add(task(StreamKind::Compute, 2.5, vec![]));
+        let s = simulate(g);
+        assert!((s.makespan() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chain_serializes() {
+        let mut g = TaskGraph::new();
+        let a = g.add(task(StreamKind::Prefetch, 1.0, vec![]));
+        let b = g.add(task(StreamKind::Compute, 2.0, vec![a]));
+        g.add(task(StreamKind::GradSync, 3.0, vec![b]));
+        let s = simulate(g);
+        assert!((s.makespan() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independent_streams_overlap() {
+        let mut g = TaskGraph::new();
+        g.add(task(StreamKind::Prefetch, 4.0, vec![]));
+        g.add(task(StreamKind::Compute, 3.0, vec![]));
+        let s = simulate(g);
+        assert!((s.makespan() - 4.0).abs() < 1e-12);
+        assert!((s.stream_busy(0, StreamKind::Compute) - 3.0).abs() < 1e-12);
+        assert!((s.stream_busy(0, StreamKind::Prefetch) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn same_stream_is_serial_fifo() {
+        let mut g = TaskGraph::new();
+        let a = g.add(task(StreamKind::Prefetch, 1.0, vec![]));
+        let b = g.add(task(StreamKind::Prefetch, 1.0, vec![]));
+        let s = simulate(g);
+        // FIFO: insertion order, back to back
+        assert!((s.span(a).end - 1.0).abs() < 1e-12);
+        assert!((s.span(b).start - 1.0).abs() < 1e-12);
+        assert!((s.makespan() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn blocked_head_stalls_the_stream() {
+        // in-order issue: a blocked queue head holds back a ready successor
+        let mut g = TaskGraph::new();
+        let c = g.add(task(StreamKind::Compute, 2.0, vec![]));
+        let blocked = g.add(task(StreamKind::Prefetch, 1.0, vec![c]));
+        let free = g.add(task(StreamKind::Prefetch, 1.0, vec![]));
+        let s = simulate(g);
+        assert!((s.span(blocked).start - 2.0).abs() < 1e-12);
+        assert!((s.span(free).start - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn same_class_contention_halves_rate() {
+        let mut g = TaskGraph::new();
+        g.add(comm(StreamKind::Prefetch, 1.0, LinkClass::InterNode, vec![]));
+        g.add(comm(StreamKind::GradSync, 1.0, LinkClass::InterNode, vec![]));
+        let s = simulate(g);
+        // both share the inter-node fabric: 2 units of work at half rate
+        assert!((s.makespan() - 2.0).abs() < 1e-12, "{}", s.makespan());
+    }
+
+    #[test]
+    fn different_classes_do_not_contend() {
+        let mut g = TaskGraph::new();
+        g.add(comm(StreamKind::Prefetch, 1.0, LinkClass::GcdPair, vec![]));
+        g.add(comm(StreamKind::GradSync, 1.0, LinkClass::InterNode, vec![]));
+        let s = simulate(g);
+        assert!((s.makespan() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn asymmetric_contention_release() {
+        // a short and a long transfer share a class: the short one finishes
+        // (at 2x its solo time), then the long one speeds back up
+        let mut g = TaskGraph::new();
+        let short = g.add(comm(StreamKind::Prefetch, 1.0, LinkClass::InterNode, vec![]));
+        let long = g.add(comm(StreamKind::GradSync, 3.0, LinkClass::InterNode, vec![]));
+        let s = simulate(g);
+        assert!((s.span(short).end - 2.0).abs() < 1e-12);
+        // long: 2s at 1/2 rate (1 unit done) + 2s at full rate = ends at 4
+        assert!((s.span(long).end - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_work_tasks_complete() {
+        let mut g = TaskGraph::new();
+        let a = g.add(task(StreamKind::Compute, 0.0, vec![]));
+        let b = g.add(task(StreamKind::Compute, 1.0, vec![a]));
+        let s = simulate(g);
+        assert!((s.span(b).start).abs() < 1e-12);
+        assert!((s.makespan() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_rank_streams_are_independent() {
+        let mut g = TaskGraph::new();
+        g.add(Task {
+            label: "r0".into(),
+            rank: 0,
+            stream: StreamKind::Compute,
+            work: 2.0,
+            class: None,
+            deps: vec![],
+        });
+        g.add(Task {
+            label: "r1".into(),
+            rank: 1,
+            stream: StreamKind::Compute,
+            work: 3.0,
+            class: None,
+            deps: vec![],
+        });
+        let s = simulate(g);
+        assert!((s.makespan() - 3.0).abs() < 1e-12);
+        assert_eq!(s.ranks(), vec![0, 1]);
+    }
+
+    #[test]
+    fn stall_attribution_blames_the_blocking_class() {
+        // compute waits 2s on an inter-node gather, then runs 1s
+        let mut g = TaskGraph::new();
+        let gather = g.add(comm(StreamKind::Prefetch, 2.0, LinkClass::InterNode, vec![]));
+        g.add(task(StreamKind::Compute, 1.0, vec![gather]));
+        let s = simulate(g);
+        let stalls = s.stall_by_class(0);
+        assert!((stalls[&LinkClass::InterNode] - 2.0).abs() < 1e-12, "{stalls:?}");
+        let u = s.utilization(0);
+        assert!((u.makespan - 3.0).abs() < 1e-12);
+        assert!((u.compute_busy - 1.0).abs() < 1e-12);
+        assert!((u.compute_utilization() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn depth_parsing_roundtrip() {
+        assert_eq!(Depth::parse("inf"), Some(Depth::Infinite));
+        assert_eq!(Depth::parse("2"), Some(Depth::Bounded(2)));
+        assert_eq!(Depth::parse("x"), None);
+        assert_eq!("inf".parse::<Depth>().unwrap(), Depth::Infinite);
+        assert_eq!(Depth::Bounded(3).to_string(), "3");
+        assert_eq!(Depth::Infinite.to_string(), "inf");
+    }
+
+    #[test]
+    #[should_panic(expected = "dependency")]
+    fn forward_dependencies_rejected() {
+        let mut g = TaskGraph::new();
+        g.add(task(StreamKind::Compute, 1.0, vec![TaskId(5)]));
+    }
+}

@@ -1,0 +1,374 @@
+//! The per-step task graph of the paper's Section V protocol, expressed
+//! for the [`crate::sched`] event loop.
+//!
+//! [`StepPlan::from_protocol`] derives every communication duration from
+//! the same α–β [`CostModel`] the collective engine charges (pure
+//! `*_time` queries, no ledger mutation), so `sim::simulate_step` and
+//! `engine::TrainEngine` price and schedule the comm side of a step
+//! identically by construction (their compute anchors differ: the sim
+//! uses the detailed FLOPs account, the engine the 6Ψ rule on its proxy
+//! manifest). The graph per optimizer step (paper Figs 4–6):
+//!
+//! * per microbatch: a forward weight gather feeding the forward compute
+//!   and a backward (secondary-partition) gather feeding the backward
+//!   compute, both on the prefetch stream and bounded by [`Depth`];
+//! * ZeRO-topo only: the §V.D updated-weight all-gather on the grad-sync
+//!   stream at the step head (the refresh issued after the previous
+//!   step's optimizer update, overlapping this step's compute in steady
+//!   state);
+//! * at the grad-accumulation boundary: the scheme's gradient-sync
+//!   phases, sequential on the grad-sync stream, blocking the step end.
+
+use crate::comm::cost::CostModel;
+use crate::comm::Wire;
+use crate::sched::{self, Depth, Schedule, StreamKind, Task, TaskGraph, TaskId};
+use crate::sharding::{shard_groups, Scheme, ShardingSpec};
+use crate::topology::LinkClass;
+
+/// One gradient-sync phase: duration + the link class it occupies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SyncPhase {
+    pub seconds: f64,
+    pub class: LinkClass,
+}
+
+/// Durations + structure of one optimizer step, ready to schedule.
+#[derive(Debug, Clone)]
+pub struct StepPlan {
+    pub scheme: Scheme,
+    pub grad_accum: usize,
+    pub depth: Depth,
+    /// Per-microbatch forward weight gather.
+    pub t_gather_fwd: f64,
+    pub class_fwd: LinkClass,
+    /// Per-microbatch backward (secondary) gather.
+    pub t_gather_bwd: f64,
+    pub class_bwd: LinkClass,
+    /// §V.D updated-weight all-gather (0 for schemes without one).
+    pub t_update: f64,
+    pub class_update: LinkClass,
+    /// Per-microbatch forward / backward compute.
+    pub t_compute_fwd: f64,
+    pub t_compute_bwd: f64,
+    /// Sequential gradient-sync phases at the accumulation boundary.
+    pub sync: Vec<SyncPhase>,
+}
+
+impl StepPlan {
+    /// Derive the plan for `(scheme, cluster)` from the cost model:
+    /// `n_elems` = ψ (flat parameter count), `compute_s` = total compute
+    /// seconds for the whole step (all `grad_accum` microbatches).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_protocol(
+        cost: &CostModel,
+        scheme: Scheme,
+        spec: &ShardingSpec,
+        n_elems: usize,
+        quant_block: usize,
+        grad_accum: usize,
+        compute_s: f64,
+        depth: Depth,
+    ) -> StepPlan {
+        let cluster = &cost.cluster;
+        let world = cluster.world_size();
+        let block = quant_block;
+        let (fwd_wire, bwd_wire) = if scheme.quantized() {
+            (Wire::Int8 { block }, Wire::Int8 { block })
+        } else {
+            (Wire::F16, Wire::F16)
+        };
+
+        // rank 0's groups; all groups of a degree are congruent, so rank
+        // 0's time IS the per-rank step contribution
+        let group_time = |degree: usize, wire: Wire| -> (f64, LinkClass) {
+            if degree <= 1 {
+                return (0.0, LinkClass::Local);
+            }
+            let g: Vec<usize> = (0..degree).collect();
+            cost.priced_all_gather(&g, wire.wire_bytes(n_elems) as u64)
+        };
+        let (t_gather_fwd, class_fwd) = group_time(spec.weights, fwd_wire);
+        let bwd_degree = if spec.secondary > 0 { spec.secondary } else { spec.weights };
+        let (t_gather_bwd, class_bwd) = group_time(bwd_degree, bwd_wire);
+
+        // ZeRO-topo's §V.D updated-weight gather spans the optimizer group
+        let (t_update, class_update) = if matches!(scheme, Scheme::ZeroTopo { .. }) {
+            group_time(world, fwd_wire)
+        } else {
+            (0.0, LinkClass::Local)
+        };
+
+        let full: Vec<usize> = (0..world).collect();
+        let mut sync = Vec::new();
+        match scheme {
+            Scheme::Zero1 | Scheme::Zero2 => {
+                let (t, class) =
+                    cost.priced_all_reduce(&full, Wire::F16.wire_bytes(n_elems) as u64);
+                sync.push(SyncPhase { seconds: t, class });
+            }
+            Scheme::Zero3 => {
+                // ring reduce-scatter: same pattern/pricing as the gather
+                let (t, class) =
+                    cost.priced_all_gather(&full, Wire::F16.wire_bytes(n_elems) as u64);
+                sync.push(SyncPhase { seconds: t, class });
+            }
+            Scheme::ZeroPP => {
+                let (t, class) = cost
+                    .priced_all_to_all(&full, Wire::Int4 { block }.wire_bytes(n_elems) as u64);
+                sync.push(SyncPhase { seconds: t, class });
+            }
+            Scheme::ZeroTopo { .. } => {
+                let p = cluster.kind.gcds_per_node();
+                let node0: Vec<usize> = (0..p).collect();
+                let (t1, class1) = cost
+                    .priced_all_to_all(&node0, Wire::Int4 { block }.wire_bytes(n_elems) as u64);
+                sync.push(SyncPhase { seconds: t1, class: class1 });
+                if cluster.nodes > 1 {
+                    // the P cross-node groups are congruent (one rank per
+                    // node each) and funnel through each node's NIC: their
+                    // bandwidth terms serialize — one phase, P × one group
+                    let shard_bytes = Wire::F16.wire_bytes(n_elems / p) as u64;
+                    let group: Vec<usize> = (0..cluster.nodes).map(|m| m * p).collect();
+                    let (t, class) = cost.priced_all_reduce(&group, shard_bytes);
+                    sync.push(SyncPhase { seconds: p as f64 * t, class });
+                }
+            }
+            Scheme::Mics { .. } | Scheme::FsdpHybrid { .. } => {
+                let g = spec.grads;
+                let groups = shard_groups(world, g);
+                let (t1, class1) =
+                    cost.priced_all_gather(&groups[0], Wire::F16.wire_bytes(n_elems) as u64);
+                sync.push(SyncPhase { seconds: t1, class: class1 });
+                let n_groups = world / g;
+                if n_groups > 1 {
+                    // g congruent replica groups, serialized like above
+                    let shard_bytes = Wire::F16.wire_bytes(n_elems / g) as u64;
+                    let group: Vec<usize> = (0..n_groups).map(|m| m * g).collect();
+                    let (t, class) = cost.priced_all_reduce(&group, shard_bytes);
+                    sync.push(SyncPhase { seconds: g as f64 * t, class });
+                }
+            }
+        }
+
+        let ga = grad_accum.max(1);
+        StepPlan {
+            scheme,
+            grad_accum: ga,
+            depth,
+            t_gather_fwd,
+            class_fwd,
+            t_gather_bwd,
+            class_bwd,
+            t_update,
+            class_update,
+            t_compute_fwd: compute_s / (3.0 * ga as f64),
+            t_compute_bwd: 2.0 * compute_s / (3.0 * ga as f64),
+            sync,
+        }
+    }
+
+    /// Total prefetchable gather seconds (microbatch gathers + update).
+    pub fn prefetchable_s(&self) -> f64 {
+        self.grad_accum as f64 * (self.t_gather_fwd + self.t_gather_bwd) + self.t_update
+    }
+
+    /// Total blocking gradient-sync seconds.
+    pub fn grad_sync_s(&self) -> f64 {
+        self.sync.iter().map(|p| p.seconds).sum()
+    }
+
+    /// Total compute seconds across all microbatches.
+    pub fn compute_s(&self) -> f64 {
+        self.grad_accum as f64 * (self.t_compute_fwd + self.t_compute_bwd)
+    }
+
+    /// The no-overlap reference: compute + per-microbatch gathers + sync,
+    /// all strictly serialized. Depth 0 degenerates to exactly this (the
+    /// update gather rides the grad-sync stream and stays overlapped).
+    pub fn serialized_s(&self) -> f64 {
+        self.compute_s()
+            + self.grad_accum as f64 * (self.t_gather_fwd + self.t_gather_bwd)
+            + self.grad_sync_s()
+    }
+
+    /// Build the step DAG for one rank.
+    pub fn build(&self, rank: usize) -> TaskGraph {
+        let mut g = TaskGraph::new();
+        // previous step's §V.D refresh occupies the grad stream head
+        if self.t_update > 0.0 {
+            g.add(Task {
+                label: "update-gather".into(),
+                rank,
+                stream: StreamKind::GradSync,
+                work: self.t_update,
+                class: Some(self.class_update),
+                deps: vec![],
+            });
+        }
+        // consumer order: cf_0, cb_0, cf_1, ... — gather j (feeding
+        // consumer j) may start once consumer j-1-depth has finished
+        let mut consumers: Vec<TaskId> = Vec::with_capacity(2 * self.grad_accum);
+        let gate = |consumers: &[TaskId], j: usize| -> Vec<TaskId> {
+            match self.depth {
+                // a depth >= the number of consumers never gates anything
+                Depth::Bounded(d) if d < 2 * self.grad_accum => {
+                    let k = j as i64 - 1 - d as i64;
+                    if k >= 0 {
+                        vec![consumers[k as usize]]
+                    } else {
+                        vec![]
+                    }
+                }
+                _ => vec![],
+            }
+        };
+        for m in 0..self.grad_accum {
+            let f = g.add(Task {
+                label: format!("gather.fwd[{m}]"),
+                rank,
+                stream: StreamKind::Prefetch,
+                work: self.t_gather_fwd,
+                class: Some(self.class_fwd),
+                deps: gate(&consumers, 2 * m),
+            });
+            let cf = g.add(Task {
+                label: format!("compute.fwd[{m}]"),
+                rank,
+                stream: StreamKind::Compute,
+                work: self.t_compute_fwd,
+                class: None,
+                deps: vec![f],
+            });
+            consumers.push(cf);
+            let b = g.add(Task {
+                label: format!("gather.bwd[{m}]"),
+                rank,
+                stream: StreamKind::Prefetch,
+                work: self.t_gather_bwd,
+                class: Some(self.class_bwd),
+                deps: gate(&consumers, 2 * m + 1),
+            });
+            let cb = g.add(Task {
+                label: format!("compute.bwd[{m}]"),
+                rank,
+                stream: StreamKind::Compute,
+                work: self.t_compute_bwd,
+                class: None,
+                deps: vec![b],
+            });
+            consumers.push(cb);
+        }
+        let mut prev = *consumers.last().expect("grad_accum >= 1");
+        for (k, phase) in self.sync.iter().enumerate() {
+            prev = g.add(Task {
+                label: format!("grad-sync[{k}]"),
+                rank,
+                stream: StreamKind::GradSync,
+                work: phase.seconds,
+                class: Some(phase.class),
+                deps: vec![prev],
+            });
+        }
+        g
+    }
+
+    /// Build for the representative rank and run the event loop. All
+    /// ranks' streams are congruent under the symmetric protocol, so rank
+    /// 0's makespan is the simulated step time.
+    pub fn simulate(&self) -> Schedule {
+        sched::simulate(self.build(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::cost::CommEfficiency;
+    use crate::topology::Cluster;
+
+    fn plan(scheme: Scheme, nodes: usize, depth: Depth) -> StepPlan {
+        let cluster = Cluster::frontier(nodes);
+        let cost = CostModel::with_efficiency(cluster.clone(), CommEfficiency::rccl_frontier());
+        let spec = ShardingSpec::resolve(scheme, &cluster).unwrap();
+        let psi = 1_000_000_000usize;
+        StepPlan::from_protocol(&cost, scheme, &spec, psi, 256, 4, 2.0, depth)
+    }
+
+    #[test]
+    fn depth_zero_serializes_exactly() {
+        // no update gather for ZeRO-3: depth 0 == the serialized reference
+        let p = plan(Scheme::Zero3, 4, Depth::Bounded(0));
+        let mk = p.simulate().makespan();
+        assert!((mk - p.serialized_s()).abs() < 1e-9 * p.serialized_s(), "{mk}");
+    }
+
+    #[test]
+    fn infinite_depth_hides_gathers_under_compute() {
+        // ZeRO-topo gathers are tiny GCD-pair transfers: with unbounded
+        // prefetch the step collapses to ~ first gather + compute + sync
+        let p = plan(Scheme::ZeroTopo { sec_degree: 2 }, 4, Depth::Infinite);
+        let mk = p.simulate().makespan();
+        let floor = p.compute_s() + p.grad_sync_s();
+        assert!(mk >= floor - 1e-12, "{mk} < {floor}");
+        assert!(mk <= floor + 2.0 * (p.t_gather_fwd + p.t_gather_bwd), "{mk} vs {floor}");
+    }
+
+    #[test]
+    fn depth_monotone() {
+        for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }] {
+            let t: Vec<f64> = [
+                Depth::Bounded(0),
+                Depth::Bounded(1),
+                Depth::Bounded(2),
+                Depth::Infinite,
+            ]
+            .iter()
+            .map(|&d| plan(scheme, 4, d).simulate().makespan())
+            .collect();
+            for w in t.windows(2) {
+                assert!(w[1] <= w[0] + 1e-9, "{scheme:?}: {t:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn huge_bounded_depth_equals_infinite() {
+        let a = plan(Scheme::ZeroPP, 4, Depth::Bounded(1_000_000)).simulate().makespan();
+        let b = plan(Scheme::ZeroPP, 4, Depth::Infinite).simulate().makespan();
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn makespan_bounded_by_serialized_plus_update() {
+        for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }] {
+            for depth in [Depth::Bounded(0), Depth::Bounded(1), Depth::Infinite] {
+                let p = plan(scheme, 2, depth);
+                let mk = p.simulate().makespan();
+                assert!(mk <= p.serialized_s() + p.t_update + 1e-9, "{scheme:?} {depth:?}");
+                assert!(mk >= p.compute_s() + p.grad_sync_s() - 1e-9, "{scheme:?} {depth:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn topo_sync_has_two_phases_multi_node() {
+        let p = plan(Scheme::ZeroTopo { sec_degree: 2 }, 2, Depth::Infinite);
+        assert_eq!(p.sync.len(), 2);
+        assert!(p.sync[0].class < LinkClass::InterNode);
+        assert_eq!(p.sync[1].class, LinkClass::InterNode);
+        let single = plan(Scheme::ZeroTopo { sec_degree: 2 }, 1, Depth::Infinite);
+        assert_eq!(single.sync.len(), 1);
+    }
+
+    #[test]
+    fn graph_shape() {
+        let p = plan(Scheme::ZeroTopo { sec_degree: 2 }, 2, Depth::Bounded(1));
+        let g = p.build(0);
+        // update + 4 * (gather.fwd, compute.fwd, gather.bwd, compute.bwd) + 2 sync
+        assert_eq!(g.len(), 1 + 4 * 4 + 2);
+        let sched = sched::simulate(g);
+        // compute busy == compute_s
+        let busy = sched.stream_busy(0, StreamKind::Compute);
+        assert!((busy - p.compute_s()).abs() < 1e-9, "{busy}");
+    }
+}

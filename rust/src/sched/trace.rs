@@ -1,0 +1,115 @@
+//! Chrome-trace (about://tracing / Perfetto) export of a [`Schedule`]:
+//! one process per named schedule, one thread per (rank, stream), one
+//! complete ("X") event per task span. Load the emitted JSON in
+//! `chrome://tracing` or https://ui.perfetto.dev to see the stream
+//! timelines the step scheduler produced.
+
+use crate::sched::{Schedule, StreamKind};
+use crate::util::json::Json;
+
+fn tid_of(rank: usize, stream: StreamKind) -> usize {
+    let s = match stream {
+        StreamKind::Compute => 0,
+        StreamKind::Prefetch => 1,
+        StreamKind::GradSync => 2,
+    };
+    rank * 3 + s
+}
+
+/// Render one or more named schedules (e.g. one per scheme) as a Chrome
+/// trace JSON document. Timestamps are microseconds of simulated time.
+pub fn chrome_trace(named: &[(String, &Schedule)]) -> String {
+    let mut events: Vec<Json> = Vec::new();
+    for (pid, (name, sched)) in named.iter().enumerate() {
+        events.push(Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::from(pid)),
+            ("args", Json::obj(vec![("name", Json::str(name.clone()))])),
+        ]));
+        for rank in sched.ranks() {
+            for stream in [StreamKind::Compute, StreamKind::Prefetch, StreamKind::GradSync] {
+                events.push(Json::obj(vec![
+                    ("name", Json::str("thread_name")),
+                    ("ph", Json::str("M")),
+                    ("pid", Json::from(pid)),
+                    ("tid", Json::from(tid_of(rank, stream))),
+                    (
+                        "args",
+                        Json::obj(vec![(
+                            "name",
+                            Json::str(format!("rank{rank}/{}", stream.name())),
+                        )]),
+                    ),
+                ]));
+            }
+        }
+        for span in sched.spans() {
+            let task = sched.graph().task(span.task);
+            let mut args = vec![("stream", Json::str(task.stream.name()))];
+            if let Some(c) = task.class {
+                args.push(("link_class", Json::str(c.to_string())));
+            }
+            events.push(Json::obj(vec![
+                ("name", Json::str(task.label.clone())),
+                ("cat", Json::str(task.stream.name())),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(span.start * 1e6)),
+                ("dur", Json::num((span.end - span.start) * 1e6)),
+                ("pid", Json::from(pid)),
+                ("tid", Json::from(tid_of(task.rank, task.stream))),
+                ("args", Json::obj(args)),
+            ]));
+        }
+    }
+    let doc = Json::obj(vec![
+        ("traceEvents", Json::arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ]);
+    doc.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{simulate, Task, TaskGraph};
+
+    #[test]
+    fn trace_roundtrips_through_json() {
+        let mut g = TaskGraph::new();
+        let a = g.add(Task {
+            label: "gather".into(),
+            rank: 0,
+            stream: StreamKind::Prefetch,
+            work: 1.0,
+            class: Some(crate::topology::LinkClass::InterNode),
+            deps: vec![],
+        });
+        g.add(Task {
+            label: "fwd".into(),
+            rank: 0,
+            stream: StreamKind::Compute,
+            work: 2.0,
+            class: None,
+            deps: vec![a],
+        });
+        let sched = simulate(g);
+        let out = chrome_trace(&[("demo".to_string(), &sched)]);
+        let parsed = Json::parse(&out).expect("valid JSON");
+        let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        // 1 process_name + 3 thread_name + 2 task events
+        assert_eq!(events.len(), 6);
+        let xs: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 2);
+        // the compute span starts after the 1s gather: ts == 1e6 us
+        let fwd = xs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("fwd"))
+            .unwrap();
+        assert_eq!(fwd.get("ts").and_then(|t| t.as_f64()), Some(1e6));
+        assert_eq!(fwd.get("dur").and_then(|t| t.as_f64()), Some(2e6));
+    }
+}

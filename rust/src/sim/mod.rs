@@ -15,15 +15,21 @@
 //!   ZeRO-topo runs the INT4 all-to-all inside each node then fp16
 //!   all-reduces across nodes                                (blocking)
 //!
-//! Overlap: DeepSpeed/FSDP prefetch weight gathers on a side stream, so a
-//! fraction `overlap` of the prefetchable time hides under compute; the
-//! gradient path sits on the critical path at the grad-accumulation
-//! boundary.
+//! Overlap is *simulated, not averaged*: the step is a task DAG executed
+//! by the [`crate::sched`] discrete-event scheduler — per-microbatch
+//! gathers pipeline on the prefetch stream up to
+//! [`SimConfig::prefetch_depth`] gathers ahead of the compute that
+//! consumes them, the §V.D refresh rides the gradient stream, and the
+//! gradient sync blocks the step end. `step_s` is the event-clock
+//! makespan; stall time per bandwidth level falls out of the schedule
+//! ([`simulate_step_schedule`]).
 
 use crate::comm::cost::CommEfficiency;
 use crate::comm::{CommWorld, Wire};
 use crate::metrics::Throughput;
 use crate::model::TransformerSpec;
+use crate::sched::plan::StepPlan;
+use crate::sched::{Depth, Schedule};
 use crate::sharding::{shard_groups, Scheme, ShardingSpec};
 use crate::topology::Cluster;
 
@@ -37,8 +43,11 @@ pub struct SimConfig {
     pub global_batch_tokens: f64,
     /// Model-FLOPs utilization anchor for the compute term.
     pub mfu: f64,
-    /// Fraction of prefetchable gather time hidden under compute.
-    pub overlap: f64,
+    /// Prefetch depth for the weight-gather stream (how many gathers may
+    /// run ahead of the compute consuming them). `Infinite` models
+    /// DeepSpeed's free-running side stream; `Bounded(0)` fetches only on
+    /// demand (fully serialized).
+    pub prefetch_depth: Depth,
     /// Quantization block for wire sizing.
     pub quant_block: usize,
     /// Collective-library efficiency (RCCL-on-Slingshot calibration).
@@ -51,7 +60,7 @@ impl Default for SimConfig {
             micro_batch: 1,
             global_batch_tokens: (1u64 << 21) as f64, // ~2.1M tokens
             mfu: 0.35,
-            overlap: 0.97,
+            prefetch_depth: Depth::Infinite,
             quant_block: crate::quant::DEFAULT_BLOCK,
             efficiency: CommEfficiency::rccl_frontier(),
         }
@@ -66,18 +75,20 @@ pub struct StepBreakdown {
     pub prefetchable_s: f64,
     /// Blocking gradient-sync time.
     pub grad_sync_s: f64,
+    /// Event-clock makespan of the scheduled step.
     pub step_s: f64,
     pub grad_accum: usize,
     pub inter_node_bytes: u64,
 }
 
-/// Simulate one (model, scheme, cluster) point.
-pub fn simulate_step(
+/// Simulate one (model, scheme, cluster) point and keep the schedule —
+/// the full stream timeline — for trace export / stall attribution.
+pub fn simulate_step_schedule(
     model: &TransformerSpec,
     scheme: Scheme,
     cluster: &Cluster,
     cfg: &SimConfig,
-) -> StepBreakdown {
+) -> (StepBreakdown, Schedule) {
     let spec = ShardingSpec::resolve(scheme, cluster).expect("valid scheme");
     let world = cluster.world_size();
     let psi = model.n_params() as usize;
@@ -92,7 +103,7 @@ pub fn simulate_step(
     let peak = cluster.kind.peak_flops_per_worker();
     let compute_s = flops_per_rank_step / (peak * cfg.mfu);
 
-    // ---- communication: charge the engine's protocol ----
+    // ---- byte ledger: charge the engine's protocol, every group ----
     let mut world_comm = CommWorld::new(cluster.clone());
     world_comm.cost.efficiency = cfg.efficiency;
     let cost = &mut world_comm.cost;
@@ -102,23 +113,17 @@ pub fn simulate_step(
         _ => (Wire::F16, Wire::F16),
     };
 
-    // weight gathers, per microbatch (parallel groups → the max, but all
-    // groups are congruent so any one's time is the step contribution; we
-    // still charge every group so the byte ledger is complete)
-    let mut prefetchable_s = 0.0;
+    // weight gathers, per microbatch — every group is charged so the byte
+    // ledger is complete (congruent groups run in parallel; the step
+    // clock below prices rank 0's group only)
     for _ in 0..ga as usize {
-        let mut t_fwd = 0.0;
         for g in shard_groups(world, spec.weights) {
-            let t = cost.all_gather(&g, fwd_wire.wire_bytes(psi) as u64);
-            t_fwd = f64::max(t_fwd, t);
+            cost.all_gather(&g, fwd_wire.wire_bytes(psi) as u64);
         }
         let bwd_degree = if spec.secondary > 0 { spec.secondary } else { spec.weights };
-        let mut t_bwd = 0.0;
         for g in shard_groups(world, bwd_degree) {
-            let t = cost.all_gather(&g, bwd_wire.wire_bytes(psi) as u64);
-            t_bwd = f64::max(t_bwd, t);
+            cost.all_gather(&g, bwd_wire.wire_bytes(psi) as u64);
         }
-        prefetchable_s += t_fwd + t_bwd;
     }
 
     let full_group: Vec<usize> = (0..world).collect();
@@ -127,76 +132,82 @@ pub fn simulate_step(
     // (stock ZeRO-3/ZeRO++ keep weights sharded; their next fwd gather IS
     // the refresh, so no extra collective for them)
     if matches!(scheme, Scheme::ZeroTopo { .. }) {
-        prefetchable_s += cost.all_gather(&full_group, fwd_wire.wire_bytes(psi) as u64);
+        cost.all_gather(&full_group, fwd_wire.wire_bytes(psi) as u64);
     }
 
     // gradient sync, once per step (blocking at the accumulation boundary)
-    let grad_sync_s = match scheme {
+    match scheme {
         Scheme::Zero1 | Scheme::Zero2 => {
-            cost.all_reduce(&full_group, Wire::F16.wire_bytes(psi) as u64)
+            cost.all_reduce(&full_group, Wire::F16.wire_bytes(psi) as u64);
         }
-        Scheme::Zero3 => cost.reduce_scatter(&full_group, Wire::F16.wire_bytes(psi) as u64),
+        Scheme::Zero3 => {
+            cost.reduce_scatter(&full_group, Wire::F16.wire_bytes(psi) as u64);
+        }
         Scheme::Mics { .. } | Scheme::FsdpHybrid { .. } => {
-            // fp16 ring reduce-scatter within each shard group (parallel),
-            // then fp16 all-reduce across replica groups per shard
             let g = spec.grads;
-            let mut t1 = 0.0;
             for grp in shard_groups(world, g) {
-                let t = cost.reduce_scatter(&grp, Wire::F16.wire_bytes(psi) as u64);
-                t1 = f64::max(t1, t);
+                cost.reduce_scatter(&grp, Wire::F16.wire_bytes(psi) as u64);
             }
             let n_groups = world / g;
-            let mut t2 = 0.0;
             if n_groups > 1 {
                 let shard_bytes = Wire::F16.wire_bytes(psi / g);
                 for local in 0..g {
                     let group: Vec<usize> = (0..n_groups).map(|m| m * g + local).collect();
-                    t2 += cost.all_reduce(&group, shard_bytes as u64);
+                    cost.all_reduce(&group, shard_bytes as u64);
                 }
             }
-            t1 + t2
         }
         Scheme::ZeroPP => {
-            cost.all_to_all(&full_group, Wire::Int4 { block }.wire_bytes(psi) as u64)
+            cost.all_to_all(&full_group, Wire::Int4 { block }.wire_bytes(psi) as u64);
         }
         Scheme::ZeroTopo { .. } => {
             let p = cluster.kind.gcds_per_node();
-            // phase 1: INT4 a2a inside every node (parallel across nodes)
-            let mut t1 = 0.0;
             for g in cluster.ranks_by_node() {
-                let t = cost.all_to_all(&g, Wire::Int4 { block }.wire_bytes(psi) as u64);
-                t1 = f64::max(t1, t);
+                cost.all_to_all(&g, Wire::Int4 { block }.wire_bytes(psi) as u64);
             }
-            // phase 2: fp16 all-reduce across nodes, one group per local
-            // shard. The P concurrent groups funnel through each node's
-            // NIC, so their bandwidth terms serialize: charge the sum.
-            let mut t2 = 0.0;
             if cluster.nodes > 1 {
                 let shard_bytes = Wire::F16.wire_bytes(psi / p);
                 for local in 0..p {
-                    let group: Vec<usize> = (0..cluster.nodes).map(|m| m * p + local).collect();
-                    t2 += cost.all_reduce(&group, shard_bytes as u64);
+                    let group: Vec<usize> =
+                        (0..cluster.nodes).map(|m| m * p + local).collect();
+                    cost.all_reduce(&group, shard_bytes as u64);
                 }
             }
-            t1 + t2
         }
-    };
+    }
 
-    // pipelined overlap: at full overlap the gather pipeline runs under
-    // (or over) compute, so the phase takes max(compute, prefetch); the
-    // un-overlapped residue serializes.
-    let overlapped_phase = cfg.overlap * compute_s.max(prefetchable_s)
-        + (1.0 - cfg.overlap) * (compute_s + prefetchable_s);
-    let step_s = overlapped_phase + grad_sync_s;
-
-    StepBreakdown {
+    // ---- step clock: schedule the task DAG ----
+    let plan = StepPlan::from_protocol(
+        cost,
+        scheme,
+        &spec,
+        psi,
+        block,
+        ga as usize,
         compute_s,
-        prefetchable_s,
-        grad_sync_s,
-        step_s,
+        cfg.prefetch_depth,
+    );
+    let schedule = plan.simulate();
+
+    let breakdown = StepBreakdown {
+        compute_s,
+        prefetchable_s: plan.prefetchable_s(),
+        grad_sync_s: plan.grad_sync_s(),
+        step_s: schedule.makespan(),
         grad_accum: ga as usize,
         inter_node_bytes: cost.inter_node_bytes(),
-    }
+    };
+    (breakdown, schedule)
+}
+
+/// Simulate one (model, scheme, cluster) point.
+pub fn simulate_step(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+) -> StepBreakdown {
+    simulate_step_schedule(model, scheme, cluster, cfg).0
 }
 
 /// Produce the paper's per-scale Throughput series for one scheme.
@@ -347,5 +358,51 @@ mod tests {
         let gap_real =
             paper_point(Scheme::ZeroTopo { sec_degree: 2 }, 48) / paper_point(Scheme::Zero3, 48);
         assert!(gap_ideal < gap_real, "ideal {gap_ideal:.2} vs real {gap_real:.2}");
+    }
+
+    #[test]
+    fn depth_zero_degenerates_to_serialized_time() {
+        // with no prefetch ahead, the step is exactly compute +
+        // per-microbatch gathers + grad sync (ZeRO-3: no update gather)
+        let model = TransformerSpec::neox20b();
+        let mut cfg = SimConfig::default();
+        cfg.prefetch_depth = Depth::Bounded(0);
+        let c = Cluster::frontier(48);
+        let b = simulate_step(&model, Scheme::Zero3, &c, &cfg);
+        let serial = b.compute_s + b.prefetchable_s + b.grad_sync_s;
+        assert!((b.step_s - serial).abs() < 1e-9 * serial, "{} vs {serial}", b.step_s);
+    }
+
+    #[test]
+    fn deeper_prefetch_is_never_slower() {
+        let model = TransformerSpec::neox20b();
+        let c = Cluster::frontier(48);
+        for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }] {
+            let mut last = f64::INFINITY;
+            for depth in [Depth::Bounded(0), Depth::Bounded(1), Depth::Bounded(2), Depth::Infinite]
+            {
+                let mut cfg = SimConfig::default();
+                cfg.prefetch_depth = depth;
+                let b = simulate_step(&model, scheme, &c, &cfg);
+                assert!(b.step_s <= last + 1e-9, "{scheme:?} {depth:?}: {} > {last}", b.step_s);
+                last = b.step_s;
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_attributes_stalls_to_link_classes() {
+        // ZeRO-3 at depth 0 exposes its inter-node gathers: the compute
+        // stream's stall time is attributed to the inter-node class
+        let model = TransformerSpec::neox20b();
+        let mut cfg = SimConfig::default();
+        cfg.prefetch_depth = Depth::Bounded(0);
+        let c = Cluster::frontier(48);
+        let (b, sched) = simulate_step_schedule(&model, Scheme::Zero3, &c, &cfg);
+        let stalls = sched.stall_by_class(0);
+        let inter = stalls.get(&crate::topology::LinkClass::InterNode).copied().unwrap_or(0.0);
+        // all gathers + the grad sync are inter-node and fully exposed
+        let expect = b.prefetchable_s + b.grad_sync_s;
+        assert!((inter - expect).abs() < 1e-6 * expect, "{inter} vs {expect}");
     }
 }
