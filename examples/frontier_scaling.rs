@@ -10,6 +10,7 @@ use zero_topo::model::TransformerSpec;
 use zero_topo::report::{render_scaling_figure, scaling_csv, ScalingSeries};
 use zero_topo::sharding::Scheme;
 use zero_topo::sim::{scaling_series, SimConfig};
+use zero_topo::topology::MachineSpec;
 
 fn figure(model: &TransformerSpec, out_csv: &str, fig: &str) -> anyhow::Result<()> {
     let nodes = [8usize, 16, 24, 32, 48];
@@ -20,7 +21,10 @@ fn figure(model: &TransformerSpec, out_csv: &str, fig: &str) -> anyhow::Result<(
         Scheme::ZeroTopo { sec_degree: 2 },
     ]
     .iter()
-    .map(|&scheme| ScalingSeries { scheme, points: scaling_series(model, scheme, &nodes, &cfg) })
+    .map(|&scheme| ScalingSeries {
+        scheme,
+        points: scaling_series(model, scheme, &MachineSpec::frontier_mi250x(), &nodes, &cfg),
+    })
     .collect();
     let title = format!(
         "{fig} — {} (Ψ={:.1}B), calibrated RCCL model",

@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     println!("{}", t.render());
 
     // Section II + VII.B capacity claims
-    let hbm = cluster.kind.hbm_per_worker();
+    let hbm = cluster.hbm_per_worker();
     let mut t = Table::new(&["scheme", "max Ψ (all states)", "max Ψ (weights+grads)"])
         .title("Capacity on 2 Frontier nodes — paper: ZeRO-3≈68B, ZeRO++≈55B, topo two-GCD ceiling≈36B".to_string())
         .left_first();

@@ -9,7 +9,7 @@ use zero_topo::util::table::Table;
 
 fn main() {
     let cluster = Cluster::frontier(2);
-    let hbm = cluster.kind.hbm_per_worker();
+    let hbm = cluster.hbm_per_worker();
     let mut t = Table::new(&["scheme", "max Ψ (all states)", "max Ψ (w+g only)"])
         .title("Section II — max model size on 2 Frontier nodes (paper: ZeRO-3≈68B, ZeRO++≈55B)".to_string())
         .left_first();

@@ -6,6 +6,7 @@ use zero_topo::model::TransformerSpec;
 use zero_topo::report::{render_scaling_figure, ScalingSeries};
 use zero_topo::sharding::Scheme;
 use zero_topo::sim::{scaling_series, SimConfig};
+use zero_topo::topology::MachineSpec;
 
 fn main() {
     let model = TransformerSpec::neox20b();
@@ -16,7 +17,7 @@ fn main() {
         .iter()
         .map(|&scheme| ScalingSeries {
             scheme,
-            points: scaling_series(&model, scheme, &nodes, &cfg),
+            points: scaling_series(&model, scheme, &MachineSpec::frontier_mi250x(), &nodes, &cfg),
         })
         .collect();
     println!("{}", render_scaling_figure("Fig 7 — GPT-NeoX-20B (paper: +40.5% / +70.7% / +139.8%, eff 0.94)", &series));

@@ -5,6 +5,7 @@ use zero_topo::model::TransformerSpec;
 use zero_topo::report::{render_scaling_figure, ScalingSeries};
 use zero_topo::sharding::Scheme;
 use zero_topo::sim::{scaling_series, SimConfig};
+use zero_topo::topology::MachineSpec;
 
 fn main() {
     let model = TransformerSpec::neox10b();
@@ -15,7 +16,7 @@ fn main() {
         .iter()
         .map(|&scheme| ScalingSeries {
             scheme,
-            points: scaling_series(&model, scheme, &nodes, &cfg),
+            points: scaling_series(&model, scheme, &MachineSpec::frontier_mi250x(), &nodes, &cfg),
         })
         .collect();
     println!("{}", render_scaling_figure("Fig 8 — GPT-NeoX-10B", &series));

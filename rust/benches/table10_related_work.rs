@@ -7,7 +7,7 @@
 use zero_topo::model::TransformerSpec;
 use zero_topo::sharding::Scheme;
 use zero_topo::sim::{scaling_series, SimConfig};
-use zero_topo::topology::Cluster;
+use zero_topo::topology::{Cluster, MachineSpec};
 use zero_topo::util::table::Table;
 
 fn main() {
@@ -38,7 +38,7 @@ fn main() {
     // implement, 20B @ 16 and 48 nodes ----
     let model = TransformerSpec::neox20b();
     let cfg = SimConfig::default();
-    let p = Cluster::frontier(1).kind.gcds_per_node();
+    let p = Cluster::frontier(1).workers_per_node();
     let schemes = [
         Scheme::Zero3,
         Scheme::ZeroPP,
@@ -52,7 +52,7 @@ fn main() {
         .left_first();
     let mut at384 = Vec::new();
     for scheme in schemes {
-        let pts = scaling_series(&model, scheme, &nodes, &cfg);
+        let pts = scaling_series(&model, scheme, &MachineSpec::frontier_mi250x(), &nodes, &cfg);
         q.row(vec![
             scheme.name(),
             format!("{:.2}", pts[0].tflops_per_gpu()),

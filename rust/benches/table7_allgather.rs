@@ -64,8 +64,8 @@ fn main() {
             format!("{:.3}Ψ·B", bwd_bytes as f64 / psi as f64 / 2.0),
             spec.weights.to_string(),
             bwd_degree.to_string(),
-            fwd_class.to_string(),
-            bwd_class.to_string(),
+            cluster.spec.class_label(fwd_class),
+            cluster.spec.class_label(bwd_class),
         ]);
     }
     println!("{}", t.render());
@@ -77,7 +77,7 @@ fn main() {
         let s = ShardingSpec::resolve(Scheme::ZeroTopo { sec_degree: 2 }, &c).unwrap();
         assert_eq!(s.weights, 2);
         let groups = shard_groups(c.world_size(), 2);
-        assert!(groups.iter().all(|g| c.bottleneck_class(g) == LinkClass::GcdPair));
+        assert!(groups.iter().all(|g| c.bottleneck_class(g) == LinkClass::Intra(0)));
     }
     println!("Ours: gather group stays 2 GCDs @ B_GCD at every scale  OK");
 }

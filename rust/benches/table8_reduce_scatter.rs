@@ -62,7 +62,7 @@ fn main() {
         let group: Vec<usize> = (0..8).collect();
         let node_views: Vec<&[f32]> = views[..8].to_vec();
         let _ = w.reduce_scatter_a2a(&group, &node_views, Wire::Int4 { block });
-        let e = w.cost.entry(Coll::AllToAll, LinkClass::IntraCross);
+        let e = w.cost.entry(Coll::AllToAll, LinkClass::Intra(2));
         assert_eq!(w.cost.inter_node_bytes(), 0, "Ours must not cross nodes");
         t.row(vec![
             "Ours".into(),

@@ -1,62 +1,53 @@
 //! Bench: regenerate **Tables I & II / Figs 2 & 3** — DGX-A100 vs Frontier
 //! node specifications and the link-class matrix, and verify the paper's
-//! §IV bandwidth comparisons.
+//! §IV bandwidth comparisons — all read from the data-driven machine
+//! specs (`topology::spec`), no hardcoded link-class lists.
 
-use zero_topo::topology::{Cluster, LinkClass, NodeKind};
+use zero_topo::topology::{Cluster, LinkClass, MachineSpec};
 use zero_topo::util::table::{fnum, human_bytes, Table};
 
 fn main() {
-    for kind in [NodeKind::DgxA100, NodeKind::FrontierMI250X] {
-        let name = match kind {
-            NodeKind::DgxA100 => "Table I — DGX-A100 node",
-            NodeKind::FrontierMI250X => "Table II — Frontier node",
-        };
-        let mut t = Table::new(&["property", "value"]).title(name.to_string()).left_first();
-        t.row(vec!["workers".into(), kind.gcds_per_node().to_string()]);
+    for (title, spec) in [
+        ("Table I — DGX-A100 node", MachineSpec::dgx_a100()),
+        ("Table II — Frontier node", MachineSpec::frontier_mi250x()),
+    ] {
+        let mut t = Table::new(&["property", "value"]).title(title.to_string()).left_first();
+        t.row(vec!["workers".into(), spec.workers_per_node.to_string()]);
         t.row(vec![
             "peak fp16 / worker".into(),
-            format!("{:.1} TF", kind.peak_flops_per_worker() / 1e12),
+            format!("{:.1} TF", spec.peak_flops_per_worker / 1e12),
         ]);
-        t.row(vec!["HBM / worker".into(), human_bytes(kind.hbm_per_worker())]);
-        let classes: &[LinkClass] = match kind {
-            NodeKind::FrontierMI250X => &[
-                LinkClass::GcdPair,
-                LinkClass::IntraAdjacent,
-                LinkClass::IntraCross,
-                LinkClass::InterNode,
-            ],
-            NodeKind::DgxA100 => &[LinkClass::NvLink, LinkClass::InterNode],
-        };
-        for &c in classes {
-            let s = kind.link_spec(c);
-            t.row(vec![c.to_string(), format!("{} GB/s", fnum(s.bandwidth / 1e9, 0))]);
+        t.row(vec!["HBM / worker".into(), human_bytes(spec.hbm_per_worker)]);
+        for class in spec.classes() {
+            let s = spec.link_spec(class);
+            t.row(vec![
+                spec.class_label(class),
+                format!("{} GB/s", fnum(s.bandwidth / 1e9, 0)),
+            ]);
         }
         println!("{}", t.render());
     }
 
-    // paper §IV claims
-    let f = NodeKind::FrontierMI250X;
-    let d = NodeKind::DgxA100;
-    let nvlink_vs_if =
-        d.link_spec(LinkClass::NvLink).bandwidth / f.link_spec(LinkClass::GcdPair).bandwidth;
-    let inter_ratio =
-        d.link_spec(LinkClass::InterNode).bandwidth / f.link_spec(LinkClass::InterNode).bandwidth;
+    // paper §IV claims: NVLink ~3x Infinity Fabric, DGX inter-node 2x
+    // Frontier — innermost level vs innermost level, fabric vs fabric
+    let f = MachineSpec::frontier_mi250x();
+    let d = MachineSpec::dgx_a100();
+    let nvlink_vs_if = d.levels[0].link.bandwidth / f.levels[0].link.bandwidth;
+    let inter_ratio = d.inter_node.bandwidth / f.inter_node.bandwidth;
     println!("NVLink / Infinity-Fabric bandwidth: {nvlink_vs_if:.1}x (paper: ~3x)");
     println!("DGX / Frontier inter-node bandwidth: {inter_ratio:.1}x (paper: 2x)");
     assert_eq!(nvlink_vs_if, 3.0);
     assert_eq!(inter_ratio, 2.0);
 
-    // Fig 3: the full intra-node link matrix
+    // Fig 3: the full intra-node link matrix, bandwidth read per level
     let c = Cluster::frontier(1);
-    println!("\nFig 3 — Frontier intra-node link matrix (GCD x GCD):");
-    for a in 0..8 {
-        let row: Vec<&str> = (0..8)
+    println!("\nFig 3 — Frontier intra-node link matrix (GCD x GCD, GB/s):");
+    let w = c.workers_per_node();
+    for a in 0..w {
+        let row: Vec<String> = (0..w)
             .map(|b| match c.link_between(a, b) {
-                LinkClass::Local => ".",
-                LinkClass::GcdPair => "200",
-                LinkClass::IntraAdjacent => "100",
-                LinkClass::IntraCross => "50",
-                _ => "?",
+                LinkClass::Local => ".".into(),
+                class => fnum(c.link_spec(class).bandwidth / 1e9, 0),
             })
             .collect();
         println!("  {}", row.join("\t"));

@@ -120,7 +120,7 @@ impl CostModel {
     /// Effective per-rank bandwidth for a group at its bottleneck class.
     pub fn effective_bandwidth(&self, group: &[usize]) -> (LinkClass, f64) {
         let class = self.cluster.bottleneck_class(group);
-        let spec = self.cluster.kind.link_spec(class);
+        let spec = self.cluster.link_spec(class);
         let b = if class == LinkClass::InterNode {
             // NIC sharing: B_node split across this group's ranks per node.
             let mut per_node: BTreeMap<usize, usize> = BTreeMap::new();
@@ -161,7 +161,7 @@ impl CostModel {
             return (0.0, LinkClass::Local);
         }
         let (class, b) = self.effective_bandwidth(group);
-        let alpha = self.cluster.kind.link_spec(class).latency;
+        let alpha = self.cluster.link_spec(class).latency;
         ((d - 1.0) * alpha + ((d - 1.0) / d) * wire_bytes as f64 / b, class)
     }
 
@@ -175,7 +175,7 @@ impl CostModel {
         if class == LinkClass::InterNode {
             b *= self.efficiency.a2a_inter_efficiency;
         }
-        let alpha = self.cluster.kind.link_spec(class).latency;
+        let alpha = self.cluster.link_spec(class).latency;
         (alpha + ((d - 1.0) / d) * wire_bytes as f64 / b, class)
     }
 
@@ -186,7 +186,7 @@ impl CostModel {
             return (0.0, LinkClass::Local);
         }
         let (class, b) = self.effective_bandwidth(group);
-        let alpha = self.cluster.kind.link_spec(class).latency;
+        let alpha = self.cluster.link_spec(class).latency;
         (2.0 * (d - 1.0) * alpha + 2.0 * ((d - 1.0) / d) * wire_bytes as f64 / b, class)
     }
 
@@ -197,7 +197,7 @@ impl CostModel {
             return (0.0, LinkClass::Local);
         }
         let (class, b) = self.effective_bandwidth(group);
-        let alpha = self.cluster.kind.link_spec(class).latency;
+        let alpha = self.cluster.link_spec(class).latency;
         ((d.log2().ceil()) * alpha + wire_bytes as f64 / b, class)
     }
 
@@ -377,7 +377,7 @@ mod tests {
         m.all_gather(&[0, 1], 100);
         m.all_gather(&[0, 1], 200);
         m.all_reduce(&(0..16).collect::<Vec<_>>(), 500);
-        let e = m.entry(Coll::AllGather, LinkClass::GcdPair);
+        let e = m.entry(Coll::AllGather, LinkClass::Intra(0));
         assert_eq!(e.calls, 2);
         assert_eq!(e.wire_bytes, 300);
         assert_eq!(m.inter_node_bytes(), 500);

@@ -14,6 +14,9 @@ pub struct RunConfig {
     /// `TransformerSpec` name (simulator path).
     pub model: String,
     pub scheme: Scheme,
+    /// Machine spec: a builtin name (`frontier`, `dgx`, `aurora`, ...) or
+    /// a path to a topology JSON (`topology::MachineSpec::resolve`).
+    pub machine: String,
     pub nodes: usize,
     /// Micro-batch size per GCD.
     pub micro_batch: usize,
@@ -35,7 +38,10 @@ impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
             model: "tiny".into(),
-            scheme: Scheme::ZeroTopo { sec_degree: 2 },
+            // auto secondary (machine's innermost span) — valid on every
+            // machine; on Frontier it resolves to the paper's sec=2
+            scheme: Scheme::ZeroTopo { sec_degree: 0 },
+            machine: "frontier".into(),
             nodes: 1,
             micro_batch: 1,
             grad_accum: 1,
@@ -76,6 +82,10 @@ impl RunConfig {
             c.scheme =
                 Scheme::parse(s).ok_or_else(|| ConfigError::Bad("scheme", s.to_string()))?;
         }
+        if let Some(v) = j.get("machine") {
+            c.machine =
+                v.as_str().ok_or_else(|| ConfigError::Bad("machine", v.to_string()))?.into();
+        }
         c.nodes = get_usize(j, "nodes", c.nodes)?;
         c.micro_batch = get_usize(j, "micro_batch", c.micro_batch)?;
         c.grad_accum = get_usize(j, "grad_accum", c.grad_accum)?;
@@ -112,6 +122,7 @@ impl RunConfig {
         Json::obj(vec![
             ("model", Json::str(self.model.clone())),
             ("scheme", Json::str(self.scheme.name())),
+            ("machine", Json::str(self.machine.clone())),
             ("nodes", Json::from(self.nodes)),
             ("micro_batch", Json::from(self.micro_batch)),
             ("grad_accum", Json::from(self.grad_accum)),
@@ -134,6 +145,7 @@ mod tests {
         let c = RunConfig {
             model: "mini".into(),
             scheme: Scheme::Zero3,
+            machine: "dgx".into(),
             nodes: 4,
             micro_batch: 2,
             grad_accum: 8,
@@ -148,6 +160,7 @@ mod tests {
         let c2 = RunConfig::from_json(&j).unwrap();
         assert_eq!(c2.model, "mini");
         assert_eq!(c2.scheme, Scheme::Zero3);
+        assert_eq!(c2.machine, "dgx");
         assert_eq!(c2.nodes, 4);
         assert_eq!(c2.grad_accum, 8);
         assert_eq!(c2.quant_block, 128);
@@ -157,12 +170,24 @@ mod tests {
     }
 
     #[test]
+    fn default_config_roundtrips_including_scheme_name() {
+        // `scheme` is serialized as `name()` — parse must read every
+        // name() form back (sharding::scheme_names_roundtrip test)
+        let c = RunConfig::default();
+        let c2 = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.scheme, c.scheme);
+        assert_eq!(c2.machine, c.machine);
+        assert_eq!(c2.prefetch_depth, c.prefetch_depth);
+    }
+
+    #[test]
     fn defaults_for_missing_fields() {
         let j = Json::parse(r#"{"model":"e2e"}"#).unwrap();
         let c = RunConfig::from_json(&j).unwrap();
         assert_eq!(c.model, "e2e");
+        assert_eq!(c.machine, "frontier");
         assert_eq!(c.nodes, 1);
-        assert_eq!(c.scheme, Scheme::ZeroTopo { sec_degree: 2 });
+        assert_eq!(c.scheme, Scheme::ZeroTopo { sec_degree: 0 });
         assert_eq!(c.prefetch_depth, Depth::Infinite);
     }
 

@@ -43,7 +43,7 @@ use crate::optimizer::{global_clip_scale, local_sq_norm, AdamWConfig, AdamWShard
 use crate::runtime::ModelRunner;
 use crate::sched::plan::StepPlan;
 use crate::sharding::{shard_groups, PartitionMap, Scheme, ShardingSpec};
-use crate::topology::Cluster;
+use crate::topology::{Cluster, MachineSpec};
 
 /// The engine over a PJRT-compiled model.
 pub struct TrainEngine<'a> {
@@ -68,7 +68,7 @@ pub struct TrainEngine<'a> {
 
 impl<'a> TrainEngine<'a> {
     pub fn new(cfg: RunConfig, runner: &'a ModelRunner) -> Result<TrainEngine<'a>> {
-        let cluster = Cluster::frontier(cfg.nodes);
+        let cluster = Cluster::new(MachineSpec::resolve(&cfg.machine)?, cfg.nodes);
         let spec = ShardingSpec::resolve(cfg.scheme, &cluster)?;
         let world = cluster.world_size();
         let m = &runner.manifest;
@@ -202,7 +202,7 @@ impl<'a> TrainEngine<'a> {
             Scheme::ZeroTopo { .. } => {
                 // Phase 1: INT4 all-to-all inside each node; phase 2: fp16
                 // all-reduce across nodes (paper Fig 5).
-                let p = self.cluster.kind.gcds_per_node();
+                let p = self.cluster.workers_per_node();
                 per_rank_os = self.hierarchical_sync(&views, p, Wire::Int4 { block }, true);
                 for s in per_rank_os.iter_mut() {
                     for v in s.iter_mut() {
@@ -360,7 +360,7 @@ impl<'a> TrainEngine<'a> {
         let group_size = match self.cfg.scheme {
             // flat already: rank r's RS shard == os_pm.range(r)
             Scheme::Zero1 | Scheme::Zero2 | Scheme::Zero3 | Scheme::ZeroPP => return per_rank,
-            Scheme::ZeroTopo { .. } => self.cluster.kind.gcds_per_node(),
+            Scheme::ZeroTopo { .. } => self.cluster.workers_per_node(),
             Scheme::Mics { .. } | Scheme::FsdpHybrid { .. } => self.spec.grads,
         };
         // rank r holds [group-slice of local shard]: local = r % G,
@@ -412,7 +412,7 @@ impl<'a> TrainEngine<'a> {
     fn plan_step(&self) -> StepPlan {
         let m = &self.runner.manifest;
         let tokens_per_micro = (m.mbs * m.seq) as f64;
-        let peak = self.cluster.kind.peak_flops_per_worker();
+        let peak = self.cluster.peak_flops_per_worker();
         let compute_s = 6.0 * m.n_params as f64 * tokens_per_micro * self.cfg.grad_accum as f64
             / (peak * self.cfg.mfu);
         StepPlan::from_protocol(
@@ -465,7 +465,7 @@ impl<'a> TrainEngine<'a> {
 }
 
 /// Requirements for the ZeRO-topo layout: padded length divisible by
-/// (gcds_per_node * nodes) so the hierarchical shards tile evenly.
+/// (workers_per_node * nodes) so the hierarchical shards tile evenly.
 pub fn check_layout(n_params: usize, cluster: &Cluster) -> PartitionMap {
     PartitionMap::new(n_params, cluster.world_size())
 }

@@ -1,13 +1,18 @@
 //! `zero-topo` — CLI for the ZeRO-topo reproduction.
 //!
 //! Subcommands:
-//!   topo      --node frontier|dgx               print node topology (Fig 2/3, Tables I/II)
+//!   topo      --machine frontier|dgx|...         print node topology (Fig 2/3, Tables I/II)
 //!   sharding  --nodes N                          print Table IV sharding factors
 //!   memory    --model 20b --nodes N              print Tables V/VI memory breakdown
 //!   capacity  --nodes N                          max-model-size claims (Section II / VII.B)
 //!   simulate  --model 20b|10b --nodes 8,16,...   Fig 7/8 scaling figures (analytical sim)
+//!   scale                                        alias of simulate (scaling sweeps)
 //!   train     --model tiny|mini|... --scheme S   real-numerics training via PJRT artifacts
 //!   report                                       everything above, in order
+//!
+//! Every subcommand takes `--machine <name|spec.json>`: a builtin machine
+//! (frontier, dgx, aurora, elcapitan, tpu-pod) or a path to a topology
+//! spec JSON — machines are data, not code (`topology::spec`).
 
 use zero_topo::config::RunConfig;
 use zero_topo::engine::TrainEngine;
@@ -18,7 +23,7 @@ use zero_topo::runtime::Runtime;
 use zero_topo::sched::{trace, Schedule};
 use zero_topo::sharding::{Scheme, ShardingSpec};
 use zero_topo::sim::{scaling_series, simulate_step_schedule, SimConfig};
-use zero_topo::topology::{Cluster, LinkClass, NodeKind};
+use zero_topo::topology::{Cluster, LinkClass, MachineSpec};
 use zero_topo::util::cli::Args;
 use zero_topo::util::table::{fnum, human_bytes, Table};
 
@@ -27,17 +32,22 @@ zero-topo — ZeRO-topo (3-level low-bandwidth partitioning) reproduction
 
 USAGE: zero-topo <subcommand> [options]
 
-  topo      [--node frontier|dgx]           node topology (paper Fig 2/3)
-  sharding  [--nodes N]                     Table IV sharding factors
+Every subcommand accepts --machine <M> where <M> is a builtin machine
+(frontier, dgx, aurora, elcapitan, tpu-pod) or a path to a topology spec
+JSON (see examples/machines/). Default: frontier.
+
+  topo      [--machine M]                   node topology (paper Fig 2/3)
+  sharding  [--machine M] [--nodes N]       Table IV sharding factors
   memory    [--model 20b] [--nodes N]       Tables V/VI memory per device
-  capacity  [--nodes N]                     max model size per scheme (Sec II)
-  simulate  [--model 20b] [--nodes 8,16,32,48] [--schemes zero3,zeropp,zerotopo]
-            [--depth N|inf] [--stalls] [--trace out.json]
-                                            Fig 7/8 scaling (event-driven sim)
-  train     [--model tiny] [--scheme zerotopo] [--nodes 1] [--steps 10]
-            [--depth N|inf] [--artifacts DIR] [--csv FILE]
+  capacity  [--machine M] [--nodes N]       max model size per scheme (Sec II)
+  simulate  [--machine M] [--model 20b] [--nodes 8,16,32,48]
+            [--schemes zero3,zeropp,zerotopo] [--depth N|inf]
+            [--stalls] [--trace out.json]   Fig 7/8 scaling (event-driven sim)
+  scale     alias of simulate               cross-scale / cross-machine sweeps
+  train     [--machine M] [--model tiny] [--scheme zerotopo] [--nodes 1]
+            [--steps 10] [--depth N|inf] [--artifacts DIR] [--csv FILE]
                                             real training via PJRT
-  report                                    print all analytical tables
+  report    [--machine M]                   print all analytical tables
 ";
 
 fn main() {
@@ -59,7 +69,7 @@ fn main() {
         "sharding" => cmd_sharding(&args),
         "memory" => cmd_memory(&args),
         "capacity" => cmd_capacity(&args),
-        "simulate" => cmd_simulate(&args),
+        "simulate" | "scale" => cmd_simulate(&args),
         "train" => cmd_train(&args),
         "report" => cmd_report(&args),
         other => {
@@ -80,71 +90,84 @@ fn parse_schemes(args: &Args) -> anyhow::Result<Vec<Scheme>> {
         .collect()
 }
 
+/// Resolve `--machine` (builtin name or spec-JSON path); `--node` is kept
+/// as a legacy alias for `topo`.
+fn resolve_machine(args: &Args) -> anyhow::Result<MachineSpec> {
+    let raw = args.get("machine").or_else(|| args.get("node")).unwrap_or("frontier");
+    Ok(MachineSpec::resolve(raw)?)
+}
+
 fn cmd_topo(args: &Args) -> anyhow::Result<()> {
-    let kind = match args.get_or("node", "frontier") {
-        "dgx" => NodeKind::DgxA100,
-        _ => NodeKind::FrontierMI250X,
-    };
-    println!("node kind: {kind:?}");
+    let spec = resolve_machine(args)?;
+    println!("machine: {}", spec.name);
     println!(
         "workers/node: {}   peak fp16 FLOP/s per worker: {:.1} TF   HBM/worker: {}",
-        kind.gcds_per_node(),
-        kind.peak_flops_per_worker() / 1e12,
-        human_bytes(kind.hbm_per_worker())
+        spec.workers_per_node,
+        spec.peak_flops_per_worker / 1e12,
+        human_bytes(spec.hbm_per_worker)
     );
-    let mut t = Table::new(&["link class", "bandwidth (GB/s)", "latency (us)"]).left_first();
-    let classes: &[LinkClass] = match kind {
-        NodeKind::FrontierMI250X => &[
-            LinkClass::GcdPair,
-            LinkClass::IntraAdjacent,
-            LinkClass::IntraCross,
-            LinkClass::InterNode,
-        ],
-        NodeKind::DgxA100 => &[LinkClass::NvLink, LinkClass::InterNode],
-    };
-    for &c in classes {
-        let s = kind.link_spec(c);
-        t.row(vec![c.to_string(), fnum(s.bandwidth / 1e9, 0), fnum(s.latency * 1e6, 1)]);
+    // link-class table straight from the spec's levels — nothing hardcoded
+    let mut t = Table::new(&["link class", "span", "bandwidth (GB/s)", "latency (us)"])
+        .left_first();
+    for class in spec.classes() {
+        let s = spec.link_spec(class);
+        let span = match class {
+            LinkClass::Intra(k) => spec.levels[k as usize].span.to_string(),
+            _ => "-".into(),
+        };
+        t.row(vec![
+            spec.class_label(class),
+            span,
+            fnum(s.bandwidth / 1e9, 0),
+            fnum(s.latency * 1e6, 1),
+        ]);
     }
     println!("{}", t.render());
-    // rank-pair link matrix for one node
-    let cluster = Cluster { kind, nodes: 1 };
-    println!("intra-node link classes (rank x rank):");
-    for a in 0..8 {
-        let row: Vec<String> = (0..8)
+    // rank-pair link matrix for one node (digit = intra hierarchy level)
+    let cluster = Cluster::new(spec.clone(), 1);
+    let w = cluster.workers_per_node();
+    println!("intra-node link classes (rank x rank, digit = hierarchy level):");
+    for a in 0..w {
+        let row: Vec<String> = (0..w)
             .map(|b| match cluster.link_between(a, b) {
                 LinkClass::Local => ".".into(),
-                LinkClass::GcdPair => "G".into(),
-                LinkClass::IntraAdjacent => "a".into(),
-                LinkClass::IntraCross => "x".into(),
-                LinkClass::NvLink => "n".into(),
+                LinkClass::Intra(k) => k.to_string(),
                 LinkClass::InterNode => "I".into(),
             })
             .collect();
         println!("  {}", row.join(" "));
     }
-    println!("  G=GCD pair (200 GB/s)  a=adjacent (100)  x=cross (50)  n=NVLink  I=inter-node");
+    for (k, level) in spec.levels.iter().enumerate() {
+        println!("  {k}={} ({} GB/s)", level.name, fnum(level.link.bandwidth / 1e9, 0));
+    }
     Ok(())
+}
+
+/// One ZeRO-topo row per intra-node level span — on Frontier that is
+/// sec = 2, 4, 8; on a flat-fabric machine a single row.
+fn topo_schemes(cluster: &Cluster) -> Vec<Scheme> {
+    cluster
+        .spec
+        .levels
+        .iter()
+        .map(|l| Scheme::ZeroTopo { sec_degree: l.span })
+        .collect()
 }
 
 fn cmd_sharding(args: &Args) -> anyhow::Result<()> {
     let nodes = args.parse_opt("nodes", 2usize)?;
-    let cluster = Cluster::frontier(nodes);
+    let cluster = Cluster::new(resolve_machine(args)?, nodes);
     let mut t = Table::new(&["scheme", "weights", "grads", "optim states", "secondary"])
         .title(format!(
-            "Table IV — sharding factors ({} nodes, {} GCDs)",
+            "Table IV — sharding factors ({}, {} nodes, {} workers)",
+            cluster.spec.name,
             nodes,
             cluster.world_size()
         ))
         .left_first();
-    for scheme in [
-        Scheme::Zero1,
-        Scheme::Zero2,
-        Scheme::Zero3,
-        Scheme::ZeroPP,
-        Scheme::ZeroTopo { sec_degree: 2 },
-        Scheme::ZeroTopo { sec_degree: 8 },
-    ] {
+    let mut schemes = vec![Scheme::Zero1, Scheme::Zero2, Scheme::Zero3, Scheme::ZeroPP];
+    schemes.extend(topo_schemes(&cluster));
+    for scheme in schemes {
         let s = ShardingSpec::resolve(scheme, &cluster)?;
         t.row(vec![
             scheme.name(),
@@ -162,18 +185,21 @@ fn cmd_memory(args: &Args) -> anyhow::Result<()> {
     let model = TransformerSpec::by_name(args.get_or("model", "20b"))
         .ok_or_else(|| anyhow::anyhow!("unknown model (use 10b/20b/125m)"))?;
     let nodes = args.parse_opt("nodes", 2usize)?;
-    let cluster = Cluster::frontier(nodes);
+    let cluster = Cluster::new(resolve_machine(args)?, nodes);
     let psi = model.n_params() as f64;
-    println!("{} (Ψ = {:.2}B params), {} nodes", model.name, psi / 1e9, nodes);
+    println!(
+        "{} (Ψ = {:.2}B params), {} nodes of {}",
+        model.name,
+        psi / 1e9,
+        nodes,
+        cluster.spec.name
+    );
     let mut t = Table::new(&["scheme", "weights", "secondary", "grads", "optim", "total"])
-        .title("Tables V & VI — per-GCD model-state memory".to_string())
+        .title("Tables V & VI — per-worker model-state memory".to_string())
         .left_first();
-    for scheme in [
-        Scheme::Zero3,
-        Scheme::ZeroPP,
-        Scheme::ZeroTopo { sec_degree: 8 },
-        Scheme::ZeroTopo { sec_degree: 2 },
-    ] {
+    let mut schemes = vec![Scheme::Zero3, Scheme::ZeroPP];
+    schemes.extend(topo_schemes(&cluster).into_iter().rev());
+    for scheme in schemes {
         let mm = MemoryModel::new(scheme, ShardingSpec::resolve(scheme, &cluster)?);
         let m = mm.per_device(psi);
         t.row(vec![
@@ -191,21 +217,19 @@ fn cmd_memory(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_capacity(args: &Args) -> anyhow::Result<()> {
     let nodes = args.parse_opt("nodes", 2usize)?;
-    let cluster = Cluster::frontier(nodes);
-    let hbm = cluster.kind.hbm_per_worker();
+    let cluster = Cluster::new(resolve_machine(args)?, nodes);
+    let hbm = cluster.hbm_per_worker();
     let mut t = Table::new(&["scheme", "max model (params)", "weights+grads only"])
         .title(format!(
-            "Max model size on {nodes} Frontier nodes ({} GCDs x {}) — paper Sec II: ZeRO-3≈68B, ZeRO++≈55B",
+            "Max model size on {nodes} {} nodes ({} workers x {}) — paper Sec II (Frontier): ZeRO-3≈68B, ZeRO++≈55B",
+            cluster.spec.name,
             cluster.world_size(),
             human_bytes(hbm)
         ))
         .left_first();
-    for scheme in [
-        Scheme::Zero3,
-        Scheme::ZeroPP,
-        Scheme::ZeroTopo { sec_degree: 8 },
-        Scheme::ZeroTopo { sec_degree: 2 },
-    ] {
+    let mut schemes = vec![Scheme::Zero3, Scheme::ZeroPP];
+    schemes.extend(topo_schemes(&cluster).into_iter().rev());
+    for scheme in schemes {
         let mm = MemoryModel::new(scheme, ShardingSpec::resolve(scheme, &cluster)?);
         t.row(vec![
             scheme.name(),
@@ -220,6 +244,7 @@ fn cmd_capacity(args: &Args) -> anyhow::Result<()> {
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let model = TransformerSpec::by_name(args.get_or("model", "20b"))
         .ok_or_else(|| anyhow::anyhow!("unknown model (use 10b/20b/125m)"))?;
+    let machine = resolve_machine(args)?;
     let node_counts = args.parse_list("nodes", &[8usize, 16, 24, 32, 48])?;
     let schemes = parse_schemes(args)?;
     let mut cfg = SimConfig::default();
@@ -229,13 +254,14 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         .iter()
         .map(|&scheme| ScalingSeries {
             scheme,
-            points: scaling_series(&model, scheme, &node_counts, &cfg),
+            points: scaling_series(&model, scheme, &machine, &node_counts, &cfg),
         })
         .collect();
     let title = format!(
-        "Fig 7/8 — TFLOPS per GPU, {} (Ψ={:.1}B), mfu={} prefetch-depth={}",
+        "Fig 7/8 — TFLOPS per GPU, {} (Ψ={:.1}B) on {}, mfu={} prefetch-depth={}",
         model.name,
         model.n_params() as f64 / 1e9,
+        machine.name,
         cfg.mfu,
         cfg.prefetch_depth
     );
@@ -248,7 +274,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let want_stalls = args.flag("stalls");
     let trace_path = args.get("trace");
     if want_stalls || trace_path.is_some() {
-        let cluster = Cluster::frontier(largest);
+        let cluster = Cluster::new(machine.clone(), largest);
         let scheds: Vec<(String, Schedule)> = schemes
             .iter()
             .map(|&scheme| {
@@ -259,13 +285,19 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         if want_stalls {
             for (name, sched) in &scheds {
                 let title = format!(
-                    "{} @ {} GCDs — compute stalls per bandwidth level",
+                    "{} @ {} {} workers — compute stalls per bandwidth level",
                     name,
-                    cluster.world_size()
+                    cluster.world_size(),
+                    cluster.spec.name
                 );
                 println!(
                     "{}",
-                    render_stall_table(&title, &sched.stall_by_class(0), &sched.utilization(0))
+                    render_stall_table(
+                        &title,
+                        &sched.stall_by_class(0),
+                        &sched.utilization(0),
+                        &cluster.spec
+                    )
                 );
             }
         }
@@ -288,6 +320,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.model = args.get_or("model", "tiny").to_string();
     cfg.scheme = Scheme::parse(args.get_or("scheme", "zerotopo"))
         .ok_or_else(|| anyhow::anyhow!("bad --scheme"))?;
+    cfg.machine = args.get_or("machine", "frontier").to_string();
     cfg.nodes = args.parse_opt("nodes", 1usize)?;
     cfg.steps = args.parse_opt("steps", 10usize)?;
     cfg.grad_accum = args.parse_opt("grad-accum", 1usize)?;
@@ -296,19 +329,22 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.mfu = args.parse_opt("mfu", cfg.mfu)?;
     cfg.prefetch_depth = args.parse_opt("depth", cfg.prefetch_depth)?;
     let dir = args.get_or("artifacts", "artifacts");
+    // fail fast on a bad --machine before the (expensive) artifact load
+    let machine = MachineSpec::resolve(&cfg.machine)?;
 
     eprintln!("loading artifacts from {dir} ...");
     let rt = Runtime::load(dir)?;
     let runner = rt.model(&cfg.model)?;
     eprintln!(
-        "model {}: {} params, seq {}, mbs {}; scheme {}, {} nodes ({} GCDs)",
+        "model {}: {} params, seq {}, mbs {}; scheme {}, {} {} nodes ({} workers)",
         cfg.model,
         runner.manifest.n_params,
         runner.manifest.seq,
         runner.manifest.mbs,
         cfg.scheme.name(),
         cfg.nodes,
-        cfg.nodes * 8
+        machine.name,
+        cfg.nodes * machine.workers_per_node
     );
     let steps = cfg.steps;
     let csv = args.get("csv").map(|s| s.to_string());

@@ -56,8 +56,9 @@ impl MemoryModel {
         let primary = WEIGHT_BYTES * psi / self.spec.weights as f64;
         let secondary = match self.scheme {
             Scheme::ZeroPP => WEIGHT_BYTES * psi / self.spec.secondary as f64,
-            Scheme::ZeroTopo { sec_degree } => {
-                int8_bytes(self.quant_block) * psi / sec_degree as f64
+            // resolved degree from the spec (handles `sec_degree: 0` auto)
+            Scheme::ZeroTopo { .. } => {
+                int8_bytes(self.quant_block) * psi / self.spec.secondary as f64
             }
             _ => 0.0,
         };

@@ -5,7 +5,7 @@ use std::collections::BTreeMap;
 
 use crate::metrics::{StepUtilization, Throughput};
 use crate::sharding::Scheme;
-use crate::topology::LinkClass;
+use crate::topology::{LinkClass, MachineSpec};
 use crate::util::table::{fnum, Table};
 
 /// One scheme's scaling series (a line of Fig 7/8).
@@ -65,18 +65,20 @@ pub fn render_scaling_figure(title: &str, series: &[ScalingSeries]) -> String {
 /// Render the scheduler's stall attribution for one scheme's step: where
 /// the compute stream waited, per bandwidth level, plus stream busy times
 /// — the "which link class stalls the step" table behind the paper's
-/// Discussion of expensive inter-node collectives.
+/// Discussion of expensive inter-node collectives. Level labels come from
+/// the machine spec ("B_GCD (GCD-GCD)" on Frontier, "Xe-Link" on Aurora).
 pub fn render_stall_table(
     title: &str,
     stalls: &BTreeMap<LinkClass, f64>,
     util: &StepUtilization,
+    machine: &MachineSpec,
 ) -> String {
     let mut t = Table::new(&["bandwidth level", "compute stall (s)", "% of step"])
         .title(title.to_string())
         .left_first();
     for (class, secs) in stalls {
         t.row(vec![
-            class.to_string(),
+            machine.class_label(*class),
             fnum(*secs, 3),
             fnum(100.0 * secs / util.makespan.max(f64::MIN_POSITIVE), 1),
         ]);
@@ -129,15 +131,17 @@ mod tests {
     fn renders_stall_table() {
         let mut stalls = BTreeMap::new();
         stalls.insert(LinkClass::InterNode, 2.0);
-        stalls.insert(LinkClass::GcdPair, 0.5);
+        stalls.insert(LinkClass::Intra(0), 0.5);
         let util = StepUtilization {
             makespan: 10.0,
             compute_busy: 7.0,
             prefetch_busy: 2.5,
             grad_sync_busy: 2.0,
         };
-        let out = render_stall_table("stalls", &stalls, &util);
+        let out =
+            render_stall_table("stalls", &stalls, &util, &MachineSpec::frontier_mi250x());
         assert!(out.contains("B_inter"), "{out}");
+        assert!(out.contains("B_GCD"), "{out}");
         assert!(out.contains("20.0"), "{out}");
         assert!(out.contains("70.0% util"), "{out}");
     }

@@ -427,7 +427,7 @@ mod tests {
     #[test]
     fn different_classes_do_not_contend() {
         let mut g = TaskGraph::new();
-        g.add(comm(StreamKind::Prefetch, 1.0, LinkClass::GcdPair, vec![]));
+        g.add(comm(StreamKind::Prefetch, 1.0, LinkClass::Intra(0), vec![]));
         g.add(comm(StreamKind::GradSync, 1.0, LinkClass::InterNode, vec![]));
         let s = simulate(g);
         assert!((s.makespan() - 1.0).abs() < 1e-12);

@@ -118,7 +118,7 @@ impl StepPlan {
                 sync.push(SyncPhase { seconds: t, class });
             }
             Scheme::ZeroTopo { .. } => {
-                let p = cluster.kind.gcds_per_node();
+                let p = cluster.workers_per_node();
                 let node0: Vec<usize> = (0..p).collect();
                 let (t1, class1) = cost
                     .priced_all_to_all(&node0, Wire::Int4 { block }.wire_bytes(n_elems) as u64);

@@ -16,7 +16,9 @@
 use crate::topology::Cluster;
 
 /// Which scheme to run. `sec_degree` for ZeroTopo is the secondary-partition
-/// sharding degree (paper Table V considers 2 and 8).
+/// sharding degree; it must match one of the machine's intra-node level
+/// spans (paper Table V considers Frontier's 2 and 8), and `0` means
+/// "auto": the machine's innermost span (Frontier: the GCD pair).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scheme {
     /// ZeRO-1: shard optimizer states only.
@@ -50,6 +52,7 @@ impl Scheme {
             Scheme::Zero2 => "ZeRO-2".into(),
             Scheme::Zero3 => "ZeRO-3".into(),
             Scheme::ZeroPP => "ZeRO++".into(),
+            Scheme::ZeroTopo { sec_degree: 0 } => "ZeRO-topo".into(),
             Scheme::ZeroTopo { sec_degree } => format!("ZeRO-topo(sec={sec_degree})"),
             Scheme::Mics { group } => format!("MiCS(g={group})"),
             Scheme::FsdpHybrid { shard } => format!("FSDP-hybrid(s={shard})"),
@@ -62,11 +65,44 @@ impl Scheme {
             "zero2" | "zero-2" => Some(Scheme::Zero2),
             "zero3" | "zero-3" => Some(Scheme::Zero3),
             "zeropp" | "zero++" | "zero-pp" => Some(Scheme::ZeroPP),
-            "zerotopo" | "zero-topo" | "topo" => Some(Scheme::ZeroTopo { sec_degree: 2 }),
-            "zerotopo8" | "zero-topo8" => Some(Scheme::ZeroTopo { sec_degree: 8 }),
+            // auto: secondary rides the machine's innermost level
+            "zerotopo" | "zero-topo" | "topo" => Some(Scheme::ZeroTopo { sec_degree: 0 }),
             "mics" => Some(Scheme::Mics { group: 8 }),
             "fsdp" | "fsdp-hybrid" => Some(Scheme::FsdpHybrid { shard: 8 }),
-            _ => None,
+            // generic parameterized forms — any degree a machine's level
+            // spans make legal (zerotopo4, zerotopo12, ...), plus the
+            // `name()` renderings so configs round-trip through JSON
+            other => {
+                if let Some(rest) = other
+                    .strip_prefix("zero-topo")
+                    .or_else(|| other.strip_prefix("zerotopo"))
+                {
+                    let digits = rest
+                        .strip_prefix("(sec=")
+                        .and_then(|r| r.strip_suffix(')'))
+                        .unwrap_or(rest);
+                    return digits
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&d| d > 0)
+                        .map(|d| Scheme::ZeroTopo { sec_degree: d });
+                }
+                if let Some(rest) =
+                    other.strip_prefix("mics(g=").and_then(|r| r.strip_suffix(')'))
+                {
+                    return rest.parse().ok().filter(|&g| g > 0).map(|g| Scheme::Mics { group: g });
+                }
+                if let Some(rest) =
+                    other.strip_prefix("fsdp-hybrid(s=").and_then(|r| r.strip_suffix(')'))
+                {
+                    return rest
+                        .parse()
+                        .ok()
+                        .filter(|&s| s > 0)
+                        .map(|s| Scheme::FsdpHybrid { shard: s });
+                }
+                None
+            }
         }
     }
 
@@ -103,15 +139,17 @@ pub enum ShardingError {
     DependencyRule { weights: usize, grads: usize, optim: usize },
     #[error("sharding factor {factor} does not divide world size {world}")]
     NotDivisible { factor: usize, world: usize },
-    #[error("ZeRO-topo secondary degree {0} must be 2 or 8 (GCD pair or node)")]
-    BadSecondary(usize),
+    #[error("ZeRO-topo secondary degree {degree} is not an intra-node level span of '{machine}' (valid: {spans:?})")]
+    BadSecondary { degree: usize, machine: String, spans: Vec<usize> },
 }
 
 impl ShardingSpec {
-    /// Resolve a scheme on a cluster — paper Table IV.
+    /// Resolve a scheme on a cluster — paper Table IV, generalized to any
+    /// machine spec: ZeRO-topo places weights on the machine's innermost
+    /// level, gradients on the node, optimizer states on the world.
     pub fn resolve(scheme: Scheme, cluster: &Cluster) -> Result<ShardingSpec, ShardingError> {
         let world = cluster.world_size();
-        let p = cluster.kind.gcds_per_node();
+        let p = cluster.workers_per_node();
         let spec = match scheme {
             Scheme::Zero1 => ShardingSpec { weights: 1, grads: 1, optim: world, secondary: 0, world },
             Scheme::Zero2 => ShardingSpec { weights: 1, grads: world, optim: world, secondary: 0, world },
@@ -123,13 +161,21 @@ impl ShardingSpec {
             Scheme::ZeroPP => {
                 ShardingSpec { weights: world, grads: world, optim: world, secondary: p, world }
             }
-            // Paper: weights over the 2 GCDs of one MI250X, gradients over
-            // the node's P GCDs, optimizer states global.
+            // Paper: weights over the innermost level (Frontier: the 2
+            // GCDs of one MI250X), gradients over the node's P workers,
+            // optimizer states global. The secondary degree must map onto
+            // a bandwidth tier — i.e. be one of the machine's level spans.
             Scheme::ZeroTopo { sec_degree } => {
-                if sec_degree != 2 && sec_degree != 8 {
-                    return Err(ShardingError::BadSecondary(sec_degree));
+                let inner = cluster.spec.innermost_span();
+                let sec = if sec_degree == 0 { inner } else { sec_degree };
+                if !cluster.spec.levels.iter().any(|l| l.span == sec) {
+                    return Err(ShardingError::BadSecondary {
+                        degree: sec,
+                        machine: cluster.spec.name.clone(),
+                        spans: cluster.spec.level_spans(),
+                    });
                 }
-                ShardingSpec { weights: 2, grads: p, optim: world, secondary: sec_degree, world }
+                ShardingSpec { weights: inner, grads: p, optim: world, secondary: sec, world }
             }
             // MiCS: one uniform factor for every state (scale-aware groups)
             Scheme::Mics { group } => {
@@ -160,6 +206,9 @@ impl ShardingSpec {
             if f == 0 || self.world % f != 0 {
                 return Err(ShardingError::NotDivisible { factor: f, world: self.world });
             }
+        }
+        if self.secondary > 0 && self.world % self.secondary != 0 {
+            return Err(ShardingError::NotDivisible { factor: self.secondary, world: self.world });
         }
         Ok(())
     }
@@ -277,17 +326,57 @@ mod tests {
     }
 
     #[test]
-    fn zero_topo_rejects_bad_secondary() {
+    fn secondary_degree_legality_follows_level_spans() {
         let c = frontier(1);
-        assert!(ShardingSpec::resolve(Scheme::ZeroTopo { sec_degree: 4 }, &c).is_err());
+        // Frontier's spans are {2, 4, 8}: 3 is illegal, 4 is a real tier
+        assert!(matches!(
+            ShardingSpec::resolve(Scheme::ZeroTopo { sec_degree: 3 }, &c),
+            Err(ShardingError::BadSecondary { degree: 3, .. })
+        ));
+        let s4 = ShardingSpec::resolve(Scheme::ZeroTopo { sec_degree: 4 }, &c).unwrap();
+        assert_eq!(s4.secondary, 4);
+        // auto (0) resolves to the innermost span
+        let auto = ShardingSpec::resolve(Scheme::ZeroTopo { sec_degree: 0 }, &c).unwrap();
+        assert_eq!((auto.weights, auto.secondary), (2, 2));
+        // DGX has one flat level of 8: sec 2 is illegal, auto gives 8
+        let d = Cluster::dgx(1);
+        assert!(ShardingSpec::resolve(Scheme::ZeroTopo { sec_degree: 2 }, &d).is_err());
+        let auto_d = ShardingSpec::resolve(Scheme::ZeroTopo { sec_degree: 0 }, &d).unwrap();
+        assert_eq!((auto_d.weights, auto_d.grads, auto_d.secondary), (8, 8, 8));
     }
 
     #[test]
     fn scheme_parsing() {
         assert_eq!(Scheme::parse("zero3"), Some(Scheme::Zero3));
         assert_eq!(Scheme::parse("ZeRO++"), Some(Scheme::ZeroPP));
-        assert_eq!(Scheme::parse("zero-topo"), Some(Scheme::ZeroTopo { sec_degree: 2 }));
+        // bare "zerotopo" is machine-adaptive (sec = innermost span)
+        assert_eq!(Scheme::parse("zero-topo"), Some(Scheme::ZeroTopo { sec_degree: 0 }));
+        assert_eq!(Scheme::parse("zerotopo2"), Some(Scheme::ZeroTopo { sec_degree: 2 }));
+        assert_eq!(Scheme::parse("zerotopo8"), Some(Scheme::ZeroTopo { sec_degree: 8 }));
+        // generic zerotopoN: any span a machine makes legal is expressible
+        assert_eq!(Scheme::parse("zerotopo4"), Some(Scheme::ZeroTopo { sec_degree: 4 }));
+        assert_eq!(Scheme::parse("zero-topo12"), Some(Scheme::ZeroTopo { sec_degree: 12 }));
+        assert_eq!(Scheme::parse("zerotopo16"), Some(Scheme::ZeroTopo { sec_degree: 16 }));
+        assert_eq!(Scheme::parse("zerotopo0"), None);
+        assert_eq!(Scheme::parse("zerotopox"), None);
         assert_eq!(Scheme::parse("nope"), None);
+    }
+
+    #[test]
+    fn scheme_names_roundtrip_through_parse() {
+        for scheme in [
+            Scheme::Zero1,
+            Scheme::Zero2,
+            Scheme::Zero3,
+            Scheme::ZeroPP,
+            Scheme::ZeroTopo { sec_degree: 0 },
+            Scheme::ZeroTopo { sec_degree: 2 },
+            Scheme::ZeroTopo { sec_degree: 12 },
+            Scheme::Mics { group: 8 },
+            Scheme::FsdpHybrid { shard: 16 },
+        ] {
+            assert_eq!(Scheme::parse(&scheme.name()), Some(scheme), "{}", scheme.name());
+        }
     }
 
     #[test]
@@ -338,7 +427,7 @@ mod tests {
         let c = frontier(2);
         let spec = ShardingSpec::resolve(Scheme::ZeroTopo { sec_degree: 2 }, &c).unwrap();
         for g in shard_groups(spec.world, spec.weights) {
-            assert_eq!(c.bottleneck_class(&g), crate::topology::LinkClass::GcdPair);
+            assert_eq!(c.bottleneck_class(&g), crate::topology::LinkClass::Intra(0));
         }
         for g in shard_groups(spec.world, spec.grads) {
             assert!(c.bottleneck_class(&g) < crate::topology::LinkClass::InterNode);

@@ -31,7 +31,7 @@ use crate::model::TransformerSpec;
 use crate::sched::plan::StepPlan;
 use crate::sched::{Depth, Schedule};
 use crate::sharding::{shard_groups, Scheme, ShardingSpec};
-use crate::topology::Cluster;
+use crate::topology::{Cluster, MachineSpec};
 
 /// Simulation parameters. Defaults carry the calibration against the
 /// paper's measured 20B @ 384-GCD ratios.
@@ -100,7 +100,7 @@ pub fn simulate_step_schedule(
 
     // ---- compute term (per rank; ranks run in parallel) ----
     let flops_per_rank_step = model.flops_per_token() * tokens_per_micro * ga;
-    let peak = cluster.kind.peak_flops_per_worker();
+    let peak = cluster.peak_flops_per_worker();
     let compute_s = flops_per_rank_step / (peak * cfg.mfu);
 
     // ---- byte ledger: charge the engine's protocol, every group ----
@@ -161,7 +161,7 @@ pub fn simulate_step_schedule(
             cost.all_to_all(&full_group, Wire::Int4 { block }.wire_bytes(psi) as u64);
         }
         Scheme::ZeroTopo { .. } => {
-            let p = cluster.kind.gcds_per_node();
+            let p = cluster.workers_per_node();
             for g in cluster.ranks_by_node() {
                 cost.all_to_all(&g, Wire::Int4 { block }.wire_bytes(psi) as u64);
             }
@@ -210,17 +210,20 @@ pub fn simulate_step(
     simulate_step_schedule(model, scheme, cluster, cfg).0
 }
 
-/// Produce the paper's per-scale Throughput series for one scheme.
+/// Produce the paper's per-scale Throughput series for one scheme on one
+/// machine spec (Frontier for the paper's figures; any builtin or
+/// JSON-loaded [`MachineSpec`] otherwise).
 pub fn scaling_series(
     model: &TransformerSpec,
     scheme: Scheme,
+    machine: &MachineSpec,
     node_counts: &[usize],
     cfg: &SimConfig,
 ) -> Vec<Throughput> {
     node_counts
         .iter()
         .map(|&nodes| {
-            let cluster = Cluster::frontier(nodes);
+            let cluster = Cluster::new(machine.clone(), nodes);
             let world = cluster.world_size();
             let b = simulate_step(model, scheme, &cluster, cfg);
             let tokens = (b.grad_accum * cfg.micro_batch * model.seq * world) as f64;
@@ -277,15 +280,21 @@ mod tests {
         // paper: 0.94 efficiency for up to 384 GCDs
         let model = TransformerSpec::neox20b();
         let cfg = SimConfig::default();
-        let pts =
-            scaling_series(&model, Scheme::ZeroTopo { sec_degree: 2 }, &[8, 16, 32, 48], &cfg);
+        let frontier = MachineSpec::frontier_mi250x();
+        let pts = scaling_series(
+            &model,
+            Scheme::ZeroTopo { sec_degree: 2 },
+            &frontier,
+            &[8, 16, 32, 48],
+            &cfg,
+        );
         let eff = crate::metrics::scaling_efficiency(&pts);
         assert!(
             (0.88..1.0).contains(eff.last().unwrap()),
             "topo eff {eff:?} (paper 0.94)"
         );
         // while ZeRO-3 degrades markedly
-        let pts3 = scaling_series(&model, Scheme::Zero3, &[8, 16, 32, 48], &cfg);
+        let pts3 = scaling_series(&model, Scheme::Zero3, &frontier, &[8, 16, 32, 48], &cfg);
         let eff3 = crate::metrics::scaling_efficiency(&pts3);
         assert!(eff3.last().unwrap() < &0.88, "z3 eff {eff3:?}");
     }
@@ -321,6 +330,26 @@ mod tests {
             bt.inter_node_bytes,
             b3.inter_node_bytes
         );
+    }
+
+    #[test]
+    fn scaling_series_runs_on_non_frontier_machines() {
+        // the old code hardcoded `Cluster::frontier` here — DGX and
+        // data-only machines must sweep end-to-end now
+        let model = TransformerSpec::neox10b();
+        let cfg = SimConfig::default();
+        for m in [MachineSpec::dgx_a100(), MachineSpec::aurora_pvc(), MachineSpec::tpu_pod()] {
+            for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 0 }] {
+                let pts = scaling_series(&model, scheme, &m, &[1, 2, 4], &cfg);
+                assert_eq!(pts.len(), 3);
+                assert!(
+                    pts.iter().all(|p| p.step_seconds.is_finite() && p.step_seconds > 0.0),
+                    "{} {:?}",
+                    m.name,
+                    scheme
+                );
+            }
+        }
     }
 
     #[test]

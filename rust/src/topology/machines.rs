@@ -1,0 +1,175 @@
+//! Built-in machine specs — pure data constructors, no behavior.
+//!
+//! Frontier-MI250X and DGX-A100 carry the paper's Table I/II numbers
+//! bit-for-bit (they replaced the old `NodeKind` enum arms). The rest are
+//! data-only machines demonstrating that new topologies need no code:
+//! Aurora (Intel PVC tiles), El Capitan (MI300A APUs), and a flat-fabric
+//! TPU-pod-like spec. JSON twins of the non-paper machines live in
+//! `examples/machines/` and are load-tested by `tests/machine_json.rs`.
+
+use super::spec::{LinkSpec, MachineLevel, MachineSpec};
+
+const GB: f64 = 1e9;
+
+/// Canonical names accepted by [`MachineSpec::builtin`] (aliases exist).
+pub const BUILTIN_NAMES: [&str; 5] = ["frontier", "dgx", "aurora", "elcapitan", "tpu-pod"];
+
+fn level(name: &str, span: usize, bandwidth: f64, latency: f64) -> MachineLevel {
+    MachineLevel { name: name.into(), span, link: LinkSpec { bandwidth, latency } }
+}
+
+impl MachineSpec {
+    /// ORNL Frontier: 4× MI250X = 8 GCDs per node (paper Table II, Fig 3).
+    /// GCD pair 200 GB/s (4×IF), adjacent MI250X 100 GB/s (2×IF),
+    /// cross-pair 50 GB/s (1×IF), 4× Slingshot-11 = 100 GB/s inter-node.
+    pub fn frontier_mi250x() -> MachineSpec {
+        MachineSpec {
+            name: "frontier-mi250x".into(),
+            workers_per_node: 8,
+            // MI250X: 383 TF per GPU -> 191.5 TF per GCD.
+            peak_flops_per_worker: 191.5e12,
+            hbm_per_worker: 64e9,
+            levels: vec![
+                level("B_GCD (GCD-GCD)", 2, 200.0 * GB, 2e-6),
+                level("B_intra (adjacent MI250X)", 4, 100.0 * GB, 3e-6),
+                level("B_intra (cross MI250X)", 8, 50.0 * GB, 3e-6),
+            ],
+            inter_node: LinkSpec { bandwidth: 100.0 * GB, latency: 10e-6 },
+        }
+    }
+
+    /// NVIDIA DGX-A100: 8× A100, NVSwitch all-to-all (one flat intra
+    /// level), 8× IB HDR = 200 GB/s inter-node (paper Table I).
+    pub fn dgx_a100() -> MachineSpec {
+        MachineSpec {
+            name: "dgx-a100".into(),
+            workers_per_node: 8,
+            peak_flops_per_worker: 312e12,
+            hbm_per_worker: 80e9,
+            levels: vec![level("NVLink", 8, 600.0 * GB, 2e-6)],
+            inter_node: LinkSpec { bandwidth: 200.0 * GB, latency: 8e-6 },
+        }
+    }
+
+    /// ANL Aurora: 6× Intel Data Center GPU Max (PVC) per node, 2 tiles
+    /// each = 12 workers. Tile pairs ride the on-package fabric; GPUs are
+    /// Xe-Link connected; 8× Slingshot-11 NICs = 200 GB/s inter-node.
+    pub fn aurora_pvc() -> MachineSpec {
+        MachineSpec {
+            name: "aurora-pvc".into(),
+            workers_per_node: 12,
+            // ~418 TF fp16 per PVC -> 209 TF per tile.
+            peak_flops_per_worker: 209e12,
+            hbm_per_worker: 64e9,
+            levels: vec![
+                level("tile-pair (on-package)", 2, 400.0 * GB, 2e-6),
+                level("Xe-Link (node)", 12, 100.0 * GB, 3e-6),
+            ],
+            inter_node: LinkSpec { bandwidth: 200.0 * GB, latency: 10e-6 },
+        }
+    }
+
+    /// LLNL El Capitan: 4× AMD MI300A APUs per node, Infinity Fabric
+    /// all-to-all (one flat intra level), 4× Slingshot = 200 GB/s.
+    pub fn el_capitan_mi300a() -> MachineSpec {
+        MachineSpec {
+            name: "elcapitan-mi300a".into(),
+            workers_per_node: 4,
+            peak_flops_per_worker: 490e12,
+            hbm_per_worker: 128e9,
+            levels: vec![level("IF (APU-APU)", 4, 256.0 * GB, 2e-6)],
+            inter_node: LinkSpec { bandwidth: 200.0 * GB, latency: 10e-6 },
+        }
+    }
+
+    /// A flat-fabric TPU-pod-like machine: 4 accelerators per "node"
+    /// (tray) on fast ICI, modest per-tray external bandwidth. Stresses
+    /// the opposite regime from Frontier: one intra level, slow fabric.
+    pub fn tpu_pod() -> MachineSpec {
+        MachineSpec {
+            name: "tpu-pod".into(),
+            workers_per_node: 4,
+            peak_flops_per_worker: 275e12,
+            hbm_per_worker: 32e9,
+            levels: vec![level("ICI (tray)", 4, 600.0 * GB, 1e-6)],
+            inter_node: LinkSpec { bandwidth: 50.0 * GB, latency: 5e-6 },
+        }
+    }
+
+    /// Look up a builtin by (case-insensitive) name or alias.
+    pub fn builtin(name: &str) -> Option<MachineSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "frontier" | "frontier-mi250x" | "mi250x" => Some(Self::frontier_mi250x()),
+            "dgx" | "dgx-a100" | "a100" => Some(Self::dgx_a100()),
+            "aurora" | "aurora-pvc" | "pvc" => Some(Self::aurora_pvc()),
+            "elcapitan" | "el-capitan" | "elcapitan-mi300a" | "mi300a" => {
+                Some(Self::el_capitan_mi300a())
+            }
+            "tpu-pod" | "tpu" | "tpupod" => Some(Self::tpu_pod()),
+            _ => None,
+        }
+    }
+
+    /// Every builtin spec, in a stable order.
+    pub fn builtins() -> Vec<MachineSpec> {
+        BUILTIN_NAMES.iter().map(|n| Self::builtin(n).expect("builtin")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn all_builtins_validate() {
+        for m in MachineSpec::builtins() {
+            m.validate().unwrap_or_else(|e| panic!("{}: {e}", m.name));
+        }
+    }
+
+    #[test]
+    fn frontier_matches_paper_table2() {
+        let f = MachineSpec::frontier_mi250x();
+        assert_eq!(f.workers_per_node, 8);
+        assert_eq!(f.peak_flops_per_worker, 191.5e12);
+        assert_eq!(f.hbm_per_worker, 64e9);
+        assert_eq!(f.level_spans(), vec![2, 4, 8]);
+        assert_eq!(f.levels[0].link.bandwidth, 200.0 * GB);
+        assert_eq!(f.levels[1].link.bandwidth, 100.0 * GB);
+        assert_eq!(f.levels[2].link.bandwidth, 50.0 * GB);
+        assert_eq!(f.inter_node.bandwidth, 100.0 * GB);
+    }
+
+    #[test]
+    fn dgx_matches_paper_table1() {
+        let d = MachineSpec::dgx_a100();
+        assert_eq!(d.workers_per_node, 8);
+        assert_eq!(d.peak_flops_per_worker, 312e12);
+        assert_eq!(d.hbm_per_worker, 80e9);
+        assert_eq!(d.level_spans(), vec![8]);
+        assert_eq!(d.levels[0].link.bandwidth, 600.0 * GB);
+        assert_eq!(d.inter_node.bandwidth, 200.0 * GB);
+        // paper §IV: NVLink ~3x Infinity Fabric; DGX inter-node 2x Frontier
+        let f = MachineSpec::frontier_mi250x();
+        assert_eq!(d.levels[0].link.bandwidth / f.levels[0].link.bandwidth, 3.0);
+        assert_eq!(d.inter_node.bandwidth / f.inter_node.bandwidth, 2.0);
+    }
+
+    #[test]
+    fn aliases_resolve() {
+        assert_eq!(MachineSpec::builtin("FRONTIER").unwrap().name, "frontier-mi250x");
+        assert_eq!(MachineSpec::builtin("mi300a").unwrap().name, "elcapitan-mi300a");
+        assert_eq!(MachineSpec::builtin("tpu").unwrap().name, "tpu-pod");
+        assert!(MachineSpec::builtin("summit").is_none());
+    }
+
+    #[test]
+    fn builtins_roundtrip_through_json() {
+        for m in MachineSpec::builtins() {
+            let j = m.to_json().to_string();
+            let re = MachineSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+            assert_eq!(m, re, "{}", m.name);
+        }
+    }
+}

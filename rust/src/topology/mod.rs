@@ -1,159 +1,117 @@
-//! Hardware topology models — paper Section IV (Tables I & II, Figs 2 & 3).
+//! Hardware topology models — paper Section IV (Tables I & II, Figs 2 & 3),
+//! now *data-driven*: a machine is a [`MachineSpec`] (an ordered hierarchy
+//! of nested intra-node levels plus an inter-node fabric), JSON-loadable
+//! via `util::json`. The old two-variant `NodeKind` enum is gone; Frontier
+//! and DGX-A100 are just the first two entries of [`machines`].
 //!
-//! Frontier compute node: 4× AMD MI250X, each with 2 GCDs (8 GCDs/node).
+//! Frontier compute node (builtin `frontier`): 4× AMD MI250X, each with 2
+//! GCDs (8 GCDs/node).
 //!   - GCD↔GCD inside one MI250X: 4 Infinity Fabric links, 200 GB/s
 //!   - adjacent MI250X pair:      2 IF links, 100 GB/s
 //!   - cross-pair MI250X:         1 IF link,   50 GB/s
 //!   - inter-node:                4× HPE Slingshot 11, 100 GB/s total
 //!
-//! DGX-A100 node: 8× A100, NVLink3 600 GB/s all-to-all (NVSwitch), 8× IB
-//! HDR = 200 GB/s inter-node.
+//! DGX-A100 node (builtin `dgx`): 8× A100, NVLink3 600 GB/s all-to-all
+//! (NVSwitch), 8× IB HDR = 200 GB/s inter-node.
 //!
 //! The resolver maps a pair of global ranks to the *link class* their
 //! traffic crosses; collectives charge the α–β cost model at the slowest
-//! class their device group spans (`comm::cost`).
+//! class their device group spans (`comm::cost`). Link classes are level
+//! *indices* into the machine's hierarchy, so a never-seen machine JSON
+//! resolves with the same generic code paths.
 
 use std::fmt;
 
-/// Classes of links with distinct bandwidth/latency, ordered fastest→slowest
-/// per node kind.
+pub mod machines;
+pub mod spec;
+
+pub use spec::{LinkSpec, MachineLevel, MachineSpec, SpecError};
+
+/// The link class a pair (or group) of ranks communicates over. Generic
+/// over machines: `Intra(k)` is level `k` of the machine's intra-node
+/// hierarchy, innermost (fastest) first. The derived `Ord` IS the severity
+/// ordering: `Local < Intra(0) < Intra(1) < ... < InterNode`, i.e. outer
+/// levels are slower — enforced by [`MachineSpec::validate`].
+///
+/// On the Frontier builtin: `Intra(0)` = B_GCD (GCD pair), `Intra(1)` =
+/// adjacent MI250X, `Intra(2)` = cross MI250X. On DGX: `Intra(0)` = NVLink.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum LinkClass {
     /// Same device (no wire) — zero cost.
     Local,
-    /// Frontier: two GCDs inside one MI250X (B_GCD).
-    GcdPair,
-    /// Frontier: adjacent MI250X pair (2×IF).
-    IntraAdjacent,
-    /// Frontier: non-adjacent MI250X pair (1×IF).
-    IntraCross,
-    /// DGX: NVLink/NVSwitch between any two A100s.
-    NvLink,
-    /// Inter-node fabric (Slingshot-11 or InfiniBand).
+    /// Intra-node hierarchy level `k` (0 = innermost/fastest).
+    Intra(u8),
+    /// Inter-node fabric (Slingshot-11, InfiniBand, ...).
     InterNode,
 }
 
 impl fmt::Display for LinkClass {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let s = match self {
-            LinkClass::Local => "local",
-            LinkClass::GcdPair => "B_GCD (GCD-GCD)",
-            LinkClass::IntraAdjacent => "B_intra (adjacent MI250X)",
-            LinkClass::IntraCross => "B_intra (cross MI250X)",
-            LinkClass::NvLink => "NVLink",
-            LinkClass::InterNode => "B_inter (node-node)",
-        };
-        f.write_str(s)
-    }
-}
-
-/// Link parameters for the α–β model.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct LinkSpec {
-    /// Bandwidth in bytes/second.
-    pub bandwidth: f64,
-    /// Latency (α) in seconds per message.
-    pub latency: f64,
-}
-
-const GB: f64 = 1e9;
-
-/// Node flavors from the paper's Section IV.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum NodeKind {
-    /// ORNL Frontier: 4× MI250X = 8 GCDs (Table II).
-    FrontierMI250X,
-    /// NVIDIA DGX-A100: 8× A100 (Table I).
-    DgxA100,
-}
-
-impl NodeKind {
-    pub fn gcds_per_node(&self) -> usize {
-        8
-    }
-
-    /// Peak dense fp16 FLOP/s per worker (GCD or GPU).
-    /// MI250X: 383 TF per GPU → 191.5 TF per GCD. A100: 312 TF.
-    pub fn peak_flops_per_worker(&self) -> f64 {
+        // machine-specific names come from `MachineSpec::class_label`; this
+        // is the spec-free fallback used by ledgers and traces
         match self {
-            NodeKind::FrontierMI250X => 191.5e12,
-            NodeKind::DgxA100 => 312e12,
-        }
-    }
-
-    /// HBM per worker in bytes (GCD: 64 GB; A100: 80 GB).
-    pub fn hbm_per_worker(&self) -> f64 {
-        match self {
-            NodeKind::FrontierMI250X => 64e9,
-            NodeKind::DgxA100 => 80e9,
-        }
-    }
-
-    /// The paper's bandwidth table (Section IV + Slingshot/NVLink specs).
-    pub fn link_spec(&self, class: LinkClass) -> LinkSpec {
-        match (self, class) {
-            (_, LinkClass::Local) => LinkSpec { bandwidth: f64::INFINITY, latency: 0.0 },
-            (NodeKind::FrontierMI250X, LinkClass::GcdPair) => {
-                LinkSpec { bandwidth: 200.0 * GB, latency: 2e-6 }
-            }
-            (NodeKind::FrontierMI250X, LinkClass::IntraAdjacent) => {
-                LinkSpec { bandwidth: 100.0 * GB, latency: 3e-6 }
-            }
-            (NodeKind::FrontierMI250X, LinkClass::IntraCross) => {
-                LinkSpec { bandwidth: 50.0 * GB, latency: 3e-6 }
-            }
-            (NodeKind::FrontierMI250X, LinkClass::InterNode) => {
-                // 4× Slingshot-11 ports = 100 GB/s per node.
-                LinkSpec { bandwidth: 100.0 * GB, latency: 10e-6 }
-            }
-            (NodeKind::DgxA100, LinkClass::NvLink) => {
-                LinkSpec { bandwidth: 600.0 * GB, latency: 2e-6 }
-            }
-            (NodeKind::DgxA100, LinkClass::InterNode) => {
-                // 8× IB HDR = 200 GB/s per node.
-                LinkSpec { bandwidth: 200.0 * GB, latency: 8e-6 }
-            }
-            // DGX has a flat intra-node fabric: every intra-node class is NVLink.
-            (NodeKind::DgxA100, _) => LinkSpec { bandwidth: 600.0 * GB, latency: 2e-6 },
-            // Frontier never resolves NvLink; treat as the GCD-pair link.
-            (NodeKind::FrontierMI250X, LinkClass::NvLink) => {
-                LinkSpec { bandwidth: 200.0 * GB, latency: 2e-6 }
-            }
+            LinkClass::Local => f.write_str("local"),
+            LinkClass::Intra(k) => write!(f, "B_intra[{k}]"),
+            LinkClass::InterNode => f.write_str("B_inter (node-node)"),
         }
     }
 }
 
-/// A cluster of identical nodes; ranks are GCDs (Frontier counts GCDs as
-/// GPUs — paper §VI).
+/// A cluster of identical nodes; ranks are workers (Frontier counts GCDs
+/// as GPUs — paper §VI), numbered consecutively within each node.
 #[derive(Debug, Clone)]
 pub struct Cluster {
-    pub kind: NodeKind,
+    pub spec: MachineSpec,
     pub nodes: usize,
 }
 
 impl Cluster {
+    pub fn new(spec: MachineSpec, nodes: usize) -> Self {
+        // JSON loads always validate; catch hand-built invalid specs early
+        debug_assert!(
+            spec.validate().is_ok(),
+            "invalid machine spec '{}': {:?}",
+            spec.name,
+            spec.validate().err()
+        );
+        Cluster { spec, nodes }
+    }
+
     pub fn frontier(nodes: usize) -> Self {
-        Cluster { kind: NodeKind::FrontierMI250X, nodes }
+        Cluster::new(MachineSpec::frontier_mi250x(), nodes)
     }
 
     pub fn dgx(nodes: usize) -> Self {
-        Cluster { kind: NodeKind::DgxA100, nodes }
+        Cluster::new(MachineSpec::dgx_a100(), nodes)
+    }
+
+    pub fn workers_per_node(&self) -> usize {
+        self.spec.workers_per_node
+    }
+
+    pub fn peak_flops_per_worker(&self) -> f64 {
+        self.spec.peak_flops_per_worker
+    }
+
+    pub fn hbm_per_worker(&self) -> f64 {
+        self.spec.hbm_per_worker
+    }
+
+    /// α–β parameters of a link class on this cluster's machine.
+    pub fn link_spec(&self, class: LinkClass) -> LinkSpec {
+        self.spec.link_spec(class)
     }
 
     pub fn world_size(&self) -> usize {
-        self.nodes * self.kind.gcds_per_node()
+        self.nodes * self.spec.workers_per_node
     }
 
     pub fn node_of(&self, rank: usize) -> usize {
-        rank / self.kind.gcds_per_node()
+        rank / self.spec.workers_per_node
     }
 
-    /// MI250X index within the node (Frontier: GCD pairs 0-1, 2-3, 4-5, 6-7).
-    pub fn gpu_of(&self, rank: usize) -> usize {
-        (rank % self.kind.gcds_per_node()) / 2
-    }
-
-    /// Resolve the link class a pair of ranks communicates over.
+    /// Resolve the link class a pair of ranks communicates over: the
+    /// innermost level whose (aligned, nested) block contains both.
     pub fn link_between(&self, a: usize, b: usize) -> LinkClass {
         assert!(a < self.world_size() && b < self.world_size());
         if a == b {
@@ -162,91 +120,139 @@ impl Cluster {
         if self.node_of(a) != self.node_of(b) {
             return LinkClass::InterNode;
         }
-        match self.kind {
-            NodeKind::DgxA100 => LinkClass::NvLink,
-            NodeKind::FrontierMI250X => {
-                let (ga, gb) = (self.gpu_of(a), self.gpu_of(b));
-                if ga == gb {
-                    LinkClass::GcdPair
-                } else if ga / 2 == gb / 2 {
-                    // MI250X 0-1 and 2-3 form adjacent pairs (2×IF);
-                    // anything else crosses pairs (1×IF).
-                    LinkClass::IntraAdjacent
-                } else {
-                    LinkClass::IntraCross
-                }
+        let w = self.spec.workers_per_node;
+        let (la, lb) = (a % w, b % w);
+        for (k, level) in self.spec.levels.iter().enumerate() {
+            if la / level.span == lb / level.span {
+                return LinkClass::Intra(k as u8);
             }
         }
+        // validated specs never get here (outermost span == workers/node);
+        // for an unvalidated one, clamp to the slowest intra level
+        LinkClass::Intra((self.spec.levels.len() - 1) as u8)
     }
 
     /// Slowest link class spanned by a group of ranks — the bandwidth the
     /// paper's Tables VII/VIII attribute to each collective.
+    ///
+    /// O(n): because levels are nested *aligned* blocks of consecutive
+    /// ranks, the worst pair is always (min rank, max rank) — the smallest
+    /// block containing both contains every rank in between, and any other
+    /// pair shares that block or a smaller one. Equality with the O(n²)
+    /// pairwise definition is property-tested below.
     pub fn bottleneck_class(&self, ranks: &[usize]) -> LinkClass {
-        let mut worst = LinkClass::Local;
-        for (i, &a) in ranks.iter().enumerate() {
-            for &b in &ranks[i + 1..] {
-                let c = self.link_between(a, b);
-                if self.rank_class(c) > self.rank_class(worst) {
-                    worst = c;
-                }
-            }
+        let Some(&first) = ranks.first() else { return LinkClass::Local };
+        let (mut lo, mut hi) = (first, first);
+        for &r in &ranks[1..] {
+            lo = lo.min(r);
+            hi = hi.max(r);
         }
-        worst
-    }
-
-    /// Severity ordering of link classes for this node kind (higher = slower).
-    fn rank_class(&self, c: LinkClass) -> u8 {
-        match c {
-            LinkClass::Local => 0,
-            LinkClass::GcdPair => 1,
-            LinkClass::NvLink => 1,
-            LinkClass::IntraAdjacent => 2,
-            LinkClass::IntraCross => 3,
-            LinkClass::InterNode => 4,
-        }
+        self.link_between(lo, hi)
     }
 
     /// Spec of the bottleneck link for a group.
     pub fn bottleneck_spec(&self, ranks: &[usize]) -> LinkSpec {
-        self.kind.link_spec(self.bottleneck_class(ranks))
+        self.spec.link_spec(self.bottleneck_class(ranks))
     }
 
     /// All ranks grouped by node.
     pub fn ranks_by_node(&self) -> Vec<Vec<usize>> {
-        let p = self.kind.gcds_per_node();
+        let p = self.spec.workers_per_node;
         (0..self.nodes).map(|n| (n * p..(n + 1) * p).collect()).collect()
     }
 
-    /// The GCD-pair partner of a rank (Frontier primary-partition peer).
-    pub fn gcd_pair_peer(&self, rank: usize) -> usize {
-        rank ^ 1
+    /// The whole group of ranks sharing `rank`'s block at intra level `k`
+    /// (includes `rank` itself). Level 0 on Frontier is the GCD pair; on a
+    /// machine with a wider innermost level the group is accordingly
+    /// larger — no `rank ^ 1` assumption anywhere.
+    pub fn level_group(&self, rank: usize, level: usize) -> Vec<usize> {
+        assert!(rank < self.world_size());
+        let span = self.spec.levels[level].span;
+        let base = rank - rank % span;
+        (base..base + span).collect()
+    }
+
+    /// The innermost-level peer group of a rank (Frontier: its GCD pair) —
+    /// the primary weight-partition group of a ZeRO-topo placement.
+    pub fn innermost_group(&self, rank: usize) -> Vec<usize> {
+        self.level_group(rank, 0)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testing::check;
+
+    const GB: f64 = 1e9;
+
+    /// The O(n²) pairwise definition `bottleneck_class` must agree with.
+    fn bottleneck_pairwise(c: &Cluster, ranks: &[usize]) -> LinkClass {
+        let mut worst = LinkClass::Local;
+        for (i, &a) in ranks.iter().enumerate() {
+            for &b in &ranks[i + 1..] {
+                worst = worst.max(c.link_between(a, b));
+            }
+        }
+        worst
+    }
+
+    /// A machine that exists in no builtin: 3 intra tiers over 16 workers.
+    fn deep_machine() -> MachineSpec {
+        MachineSpec {
+            name: "deep-16".into(),
+            workers_per_node: 16,
+            peak_flops_per_worker: 100e12,
+            hbm_per_worker: 16e9,
+            levels: vec![
+                MachineLevel {
+                    name: "l0".into(),
+                    span: 2,
+                    link: LinkSpec { bandwidth: 500.0 * GB, latency: 1e-6 },
+                },
+                MachineLevel {
+                    name: "l1".into(),
+                    span: 4,
+                    link: LinkSpec { bandwidth: 200.0 * GB, latency: 2e-6 },
+                },
+                MachineLevel {
+                    name: "l2".into(),
+                    span: 16,
+                    link: LinkSpec { bandwidth: 80.0 * GB, latency: 3e-6 },
+                },
+            ],
+            inter_node: LinkSpec { bandwidth: 40.0 * GB, latency: 8e-6 },
+        }
+    }
+
+    fn all_test_machines() -> Vec<MachineSpec> {
+        let mut ms = MachineSpec::builtins();
+        ms.push(deep_machine());
+        ms
+    }
 
     #[test]
     fn frontier_link_resolution() {
         let c = Cluster::frontier(2);
         assert_eq!(c.world_size(), 16);
         assert_eq!(c.link_between(0, 0), LinkClass::Local);
-        assert_eq!(c.link_between(0, 1), LinkClass::GcdPair);
-        assert_eq!(c.link_between(0, 2), LinkClass::IntraAdjacent);
-        assert_eq!(c.link_between(0, 3), LinkClass::IntraAdjacent);
-        assert_eq!(c.link_between(0, 4), LinkClass::IntraCross);
-        assert_eq!(c.link_between(1, 7), LinkClass::IntraCross);
+        assert_eq!(c.link_between(0, 1), LinkClass::Intra(0)); // GCD pair
+        assert_eq!(c.link_between(0, 2), LinkClass::Intra(1)); // adjacent MI250X
+        assert_eq!(c.link_between(0, 3), LinkClass::Intra(1));
+        assert_eq!(c.link_between(0, 4), LinkClass::Intra(2)); // cross MI250X
+        assert_eq!(c.link_between(1, 7), LinkClass::Intra(2));
         assert_eq!(c.link_between(0, 8), LinkClass::InterNode);
         assert_eq!(c.link_between(7, 15), LinkClass::InterNode);
     }
 
     #[test]
-    fn link_is_symmetric() {
-        let c = Cluster::frontier(3);
-        for a in 0..c.world_size() {
-            for b in 0..c.world_size() {
-                assert_eq!(c.link_between(a, b), c.link_between(b, a));
+    fn link_is_symmetric_on_every_machine() {
+        for m in all_test_machines() {
+            let c = Cluster::new(m, 3);
+            for a in 0..c.world_size() {
+                for b in 0..c.world_size() {
+                    assert_eq!(c.link_between(a, b), c.link_between(b, a), "{}", c.spec.name);
+                }
             }
         }
     }
@@ -254,40 +260,72 @@ mod tests {
     #[test]
     fn dgx_flat_intra_node() {
         let c = Cluster::dgx(2);
-        assert_eq!(c.link_between(0, 1), LinkClass::NvLink);
-        assert_eq!(c.link_between(0, 7), LinkClass::NvLink);
+        assert_eq!(c.link_between(0, 1), LinkClass::Intra(0)); // NVLink
+        assert_eq!(c.link_between(0, 7), LinkClass::Intra(0));
         assert_eq!(c.link_between(0, 8), LinkClass::InterNode);
     }
 
     #[test]
     fn paper_bandwidth_numbers() {
-        let f = NodeKind::FrontierMI250X;
-        assert_eq!(f.link_spec(LinkClass::GcdPair).bandwidth, 200.0 * GB);
-        assert_eq!(f.link_spec(LinkClass::IntraAdjacent).bandwidth, 100.0 * GB);
-        assert_eq!(f.link_spec(LinkClass::IntraCross).bandwidth, 50.0 * GB);
+        let f = MachineSpec::frontier_mi250x();
+        assert_eq!(f.link_spec(LinkClass::Intra(0)).bandwidth, 200.0 * GB);
+        assert_eq!(f.link_spec(LinkClass::Intra(1)).bandwidth, 100.0 * GB);
+        assert_eq!(f.link_spec(LinkClass::Intra(2)).bandwidth, 50.0 * GB);
         assert_eq!(f.link_spec(LinkClass::InterNode).bandwidth, 100.0 * GB);
-        let d = NodeKind::DgxA100;
-        assert_eq!(d.link_spec(LinkClass::NvLink).bandwidth, 600.0 * GB);
+        let d = MachineSpec::dgx_a100();
+        assert_eq!(d.link_spec(LinkClass::Intra(0)).bandwidth, 600.0 * GB);
         assert_eq!(d.link_spec(LinkClass::InterNode).bandwidth, 200.0 * GB);
-        // paper: NVLink ~3x Infinity Fabric; DGX inter-node 2x Frontier
-        assert_eq!(
-            d.link_spec(LinkClass::NvLink).bandwidth / f.link_spec(LinkClass::GcdPair).bandwidth,
-            3.0
-        );
-        assert_eq!(
-            d.link_spec(LinkClass::InterNode).bandwidth
-                / f.link_spec(LinkClass::InterNode).bandwidth,
-            2.0
-        );
     }
 
     #[test]
     fn bottleneck_of_groups() {
         let c = Cluster::frontier(2);
-        assert_eq!(c.bottleneck_class(&[0, 1]), LinkClass::GcdPair);
-        assert_eq!(c.bottleneck_class(&[0, 1, 2, 3]), LinkClass::IntraAdjacent);
-        assert_eq!(c.bottleneck_class(&[0, 1, 2, 3, 4, 5, 6, 7]), LinkClass::IntraCross);
+        assert_eq!(c.bottleneck_class(&[0, 1]), LinkClass::Intra(0));
+        assert_eq!(c.bottleneck_class(&[0, 1, 2, 3]), LinkClass::Intra(1));
+        assert_eq!(c.bottleneck_class(&[0, 1, 2, 3, 4, 5, 6, 7]), LinkClass::Intra(2));
         assert_eq!(c.bottleneck_class(&(0..16).collect::<Vec<_>>()), LinkClass::InterNode);
+        assert_eq!(c.bottleneck_class(&[]), LinkClass::Local);
+        assert_eq!(c.bottleneck_class(&[3, 3, 3]), LinkClass::Local);
+    }
+
+    #[test]
+    fn bottleneck_equals_pairwise_definition() {
+        // the O(n) min/max computation == the O(n²) definition, on every
+        // builtin + a deep hypothetical machine, over random rank subsets
+        let machines = all_test_machines();
+        check("bottleneck O(n) == pairwise", 120, |g| {
+            let m = g.pick(&machines).clone();
+            let nodes = g.usize_in(1, 4);
+            let c = Cluster::new(m, nodes);
+            let world = c.world_size();
+            let len = g.usize_in(1, 12);
+            let ranks: Vec<usize> =
+                (0..len).map(|_| g.usize_in(0, world - 1)).collect();
+            assert_eq!(
+                c.bottleneck_class(&ranks),
+                bottleneck_pairwise(&c, &ranks),
+                "{} nodes={nodes} ranks={ranks:?}",
+                c.spec.name
+            );
+        });
+    }
+
+    #[test]
+    fn severity_monotone_with_level_distance() {
+        // for a <= b <= c, the (a,c) link is at least as severe as (a,b)
+        // and (b,c): nested aligned blocks make severity monotone in span
+        let machines = all_test_machines();
+        check("severity monotone", 120, |g| {
+            let m = g.pick(&machines).clone();
+            let c = Cluster::new(m, 3);
+            let world = c.world_size();
+            let mut xs =
+                [g.usize_in(0, world - 1), g.usize_in(0, world - 1), g.usize_in(0, world - 1)];
+            xs.sort_unstable();
+            let [a, b, cc] = xs;
+            assert!(c.link_between(a, cc) >= c.link_between(a, b), "{}", c.spec.name);
+            assert!(c.link_between(a, cc) >= c.link_between(b, cc), "{}", c.spec.name);
+        });
     }
 
     #[test]
@@ -297,22 +335,69 @@ mod tests {
         assert_eq!(groups.len(), 3);
         let all: Vec<usize> = groups.concat();
         assert_eq!(all, (0..24).collect::<Vec<_>>());
+        // and on a non-8-worker machine
+        let c = Cluster::new(MachineSpec::aurora_pvc(), 2);
+        let groups = c.ranks_by_node();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups.concat(), (0..24).collect::<Vec<_>>());
     }
 
     #[test]
-    fn gcd_pair_peers() {
+    fn innermost_groups() {
+        // Frontier: GCD pairs, derived from the span (not rank ^ 1)
         let c = Cluster::frontier(1);
-        assert_eq!(c.gcd_pair_peer(0), 1);
-        assert_eq!(c.gcd_pair_peer(1), 0);
-        assert_eq!(c.gcd_pair_peer(6), 7);
+        assert_eq!(c.innermost_group(0), vec![0, 1]);
+        assert_eq!(c.innermost_group(1), vec![0, 1]);
+        assert_eq!(c.innermost_group(6), vec![6, 7]);
         for r in 0..8 {
-            assert_eq!(c.link_between(r, c.gcd_pair_peer(r)), LinkClass::GcdPair);
+            for &p in &c.innermost_group(r) {
+                assert!(c.link_between(r, p) <= LinkClass::Intra(0));
+            }
+        }
+        // DGX: the innermost level IS the whole node (group of 8)
+        let d = Cluster::dgx(1);
+        assert_eq!(d.innermost_group(3), (0..8).collect::<Vec<_>>());
+        // level groups at outer tiers
+        assert_eq!(c.level_group(5, 1), vec![4, 5, 6, 7]);
+        assert_eq!(c.level_group(5, 2), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn innermost_groups_partition_every_machine() {
+        for m in all_test_machines() {
+            let c = Cluster::new(m, 2);
+            let mut seen = vec![false; c.world_size()];
+            for r in 0..c.world_size() {
+                let grp = c.innermost_group(r);
+                assert!(grp.contains(&r), "{}", c.spec.name);
+                assert_eq!(grp.len(), c.spec.innermost_span());
+                for &p in &grp {
+                    assert_eq!(c.innermost_group(p), grp, "{}", c.spec.name);
+                }
+                seen[r] = true;
+            }
+            assert!(seen.into_iter().all(|s| s));
         }
     }
 
     #[test]
     fn worker_specs() {
-        assert_eq!(NodeKind::FrontierMI250X.hbm_per_worker(), 64e9);
-        assert!(NodeKind::DgxA100.peak_flops_per_worker() > NodeKind::FrontierMI250X.peak_flops_per_worker());
+        assert_eq!(MachineSpec::frontier_mi250x().hbm_per_worker, 64e9);
+        assert!(
+            MachineSpec::dgx_a100().peak_flops_per_worker
+                > MachineSpec::frontier_mi250x().peak_flops_per_worker
+        );
+        let c = Cluster::frontier(1);
+        assert_eq!(c.peak_flops_per_worker(), 191.5e12);
+        assert_eq!(c.hbm_per_worker(), 64e9);
+        assert_eq!(c.workers_per_node(), 8);
+    }
+
+    #[test]
+    fn severity_ordering_is_derived_ord() {
+        assert!(LinkClass::Local < LinkClass::Intra(0));
+        assert!(LinkClass::Intra(0) < LinkClass::Intra(1));
+        assert!(LinkClass::Intra(1) < LinkClass::Intra(2));
+        assert!(LinkClass::Intra(200) < LinkClass::InterNode);
     }
 }

@@ -1,0 +1,457 @@
+//! Data-driven machine topology specs — the paper's Tables I & II as
+//! *data* instead of enum variants.
+//!
+//! A [`MachineSpec`] describes one node flavor as an ordered hierarchy of
+//! nested intra-node levels (innermost first). Level `k` partitions the
+//! node's workers into consecutive blocks of `span` ranks that share one
+//! link class; two ranks on the same node communicate over the innermost
+//! level whose block contains both, and ranks on different nodes cross the
+//! `inter_node` fabric. Because the levels are nested and aligned, every
+//! rank→link question (`Cluster::link_between`, `bottleneck_class`,
+//! secondary-partition peer groups) is computed from the spans — no
+//! per-machine match arms anywhere.
+//!
+//! Specs round-trip through JSON (`util::json`), so new machines — Aurora,
+//! El Capitan, TPU pods, hypothetical fabrics — are config files, not code
+//! (ROADMAP "Generalized non-Frontier topologies"). Schema (see
+//! DESIGN.md §9):
+//!
+//! ```json
+//! {
+//!   "name": "frontier-mi250x",
+//!   "workers_per_node": 8,
+//!   "peak_flops_per_worker": 191.5e12,
+//!   "hbm_per_worker": 64e9,
+//!   "levels": [
+//!     {"name": "B_GCD (GCD-GCD)", "span": 2, "bandwidth": 200e9, "latency": 2e-6},
+//!     {"name": "B_intra (adjacent MI250X)", "span": 4, "bandwidth": 100e9, "latency": 3e-6},
+//!     {"name": "B_intra (cross MI250X)", "span": 8, "bandwidth": 50e9, "latency": 3e-6}
+//!   ],
+//!   "inter_node": {"bandwidth": 100e9, "latency": 10e-6}
+//! }
+//! ```
+
+use std::path::Path;
+
+use crate::util::json::{Json, JsonError};
+
+use super::LinkClass;
+
+/// Link parameters for the α–β model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    /// Bandwidth in bytes/second.
+    pub bandwidth: f64,
+    /// Latency (α) in seconds per message.
+    pub latency: f64,
+}
+
+/// One intra-node hierarchy level: `span` consecutive workers share this
+/// link class. Levels are nested — each level's span divides the next —
+/// and ordered fastest (innermost) to slowest (outermost).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineLevel {
+    /// Display name ("B_GCD (GCD-GCD)", "NVLink", "Xe-Link", ...).
+    pub name: String,
+    /// Workers per group at this level.
+    pub span: usize,
+    pub link: LinkSpec,
+}
+
+/// A machine (node flavor) as data: worker compute/memory plus the ordered
+/// intra-node bandwidth hierarchy and the inter-node fabric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineSpec {
+    pub name: String,
+    /// Workers (GCDs / GPUs / tiles) per node; equals the outermost span.
+    pub workers_per_node: usize,
+    /// Peak dense fp16 FLOP/s per worker.
+    pub peak_flops_per_worker: f64,
+    /// HBM per worker in bytes.
+    pub hbm_per_worker: f64,
+    /// Intra-node levels, innermost (fastest, smallest span) first.
+    pub levels: Vec<MachineLevel>,
+    /// Inter-node fabric (the node's aggregate NIC bandwidth).
+    pub inter_node: LinkSpec,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum SpecError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json: {0}")]
+    Json(#[from] JsonError),
+    #[error("machine spec '{name}': {why}")]
+    Invalid { name: String, why: String },
+    #[error("unknown machine '{name}': not a builtin (try {builtins}) and no such file")]
+    Unknown { name: String, builtins: String },
+}
+
+impl MachineSpec {
+    /// Innermost-level group size — the primary weight-partition degree of
+    /// a ZeRO-topo placement on this machine (2 on Frontier's GCD pairs).
+    pub fn innermost_span(&self) -> usize {
+        self.levels[0].span
+    }
+
+    /// The spans of every intra-node level, innermost first.
+    pub fn level_spans(&self) -> Vec<usize> {
+        self.levels.iter().map(|l| l.span).collect()
+    }
+
+    /// Every link class this machine can resolve, fastest→slowest.
+    pub fn classes(&self) -> Vec<LinkClass> {
+        (0..self.levels.len() as u8)
+            .map(LinkClass::Intra)
+            .chain(std::iter::once(LinkClass::InterNode))
+            .collect()
+    }
+
+    /// α–β parameters of a link class on this machine. `Intra` indices
+    /// beyond the hierarchy clamp to the outermost level (a class minted
+    /// by a deeper machine resolves to this machine's slowest intra link).
+    pub fn link_spec(&self, class: LinkClass) -> LinkSpec {
+        match class {
+            LinkClass::Local => LinkSpec { bandwidth: f64::INFINITY, latency: 0.0 },
+            LinkClass::Intra(k) => self
+                .levels
+                .get(k as usize)
+                .unwrap_or_else(|| self.levels.last().expect("validated: levels non-empty"))
+                .link,
+            LinkClass::InterNode => self.inter_node,
+        }
+    }
+
+    /// Human label for a link class, using this machine's level names.
+    pub fn class_label(&self, class: LinkClass) -> String {
+        match class {
+            LinkClass::Local => "local".into(),
+            LinkClass::Intra(k) => self
+                .levels
+                .get(k as usize)
+                .map(|l| l.name.clone())
+                .unwrap_or_else(|| format!("B_intra[{k}]")),
+            LinkClass::InterNode => "B_inter (node-node)".into(),
+        }
+    }
+
+    /// Structural validation: nested spans, sane numbers.
+    pub fn validate(&self) -> Result<(), SpecError> {
+        let fail = |why: String| {
+            Err(SpecError::Invalid { name: self.name.clone(), why })
+        };
+        if self.name.is_empty() {
+            return fail("empty name".into());
+        }
+        if self.levels.is_empty() {
+            return fail("at least one intra-node level required".into());
+        }
+        if self.levels.len() > u8::MAX as usize {
+            return fail(format!("{} levels exceed the 255-level cap", self.levels.len()));
+        }
+        let mut prev_span = 1usize;
+        let mut prev_bw = f64::INFINITY;
+        for (k, l) in self.levels.iter().enumerate() {
+            if l.span < 2 || l.span <= prev_span {
+                return fail(format!(
+                    "level {k} ('{}') span {} must be >= 2 and exceed the previous span {prev_span}",
+                    l.name, l.span
+                ));
+            }
+            if l.span % prev_span != 0 {
+                return fail(format!(
+                    "level {k} ('{}') span {} is not a multiple of the previous span {prev_span}",
+                    l.name, l.span
+                ));
+            }
+            if !(l.link.bandwidth > 0.0 && l.link.bandwidth.is_finite()) {
+                return fail(format!("level {k} ('{}') bandwidth must be finite and > 0", l.name));
+            }
+            if l.link.bandwidth > prev_bw {
+                return fail(format!(
+                    "level {k} ('{}') bandwidth {} exceeds the inner level's {prev_bw} \
+                     (levels must be ordered fastest to slowest)",
+                    l.name, l.link.bandwidth
+                ));
+            }
+            if !(l.link.latency >= 0.0 && l.link.latency.is_finite()) {
+                return fail(format!("level {k} ('{}') latency must be finite and >= 0", l.name));
+            }
+            prev_span = l.span;
+            prev_bw = l.link.bandwidth;
+        }
+        if prev_span != self.workers_per_node {
+            return fail(format!(
+                "outermost span {prev_span} must equal workers_per_node {}",
+                self.workers_per_node
+            ));
+        }
+        if !(self.inter_node.bandwidth > 0.0 && self.inter_node.bandwidth.is_finite()) {
+            return fail("inter_node bandwidth must be finite and > 0".into());
+        }
+        if !(self.inter_node.latency >= 0.0 && self.inter_node.latency.is_finite()) {
+            return fail("inter_node latency must be finite and >= 0".into());
+        }
+        if !(self.peak_flops_per_worker > 0.0 && self.peak_flops_per_worker.is_finite()) {
+            return fail("peak_flops_per_worker must be finite and > 0".into());
+        }
+        if !(self.hbm_per_worker > 0.0 && self.hbm_per_worker.is_finite()) {
+            return fail("hbm_per_worker must be finite and > 0".into());
+        }
+        Ok(())
+    }
+
+    // -- JSON ------------------------------------------------------------
+
+    pub fn from_json(j: &Json) -> Result<MachineSpec, SpecError> {
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .unwrap_or("<unnamed>")
+            .to_string();
+        // owns its copy of the name so the original can move into the spec
+        let err_name = name.clone();
+        let invalid =
+            move |why: String| SpecError::Invalid { name: err_name.clone(), why };
+        let num = |j: &Json, key: &str| -> Result<f64, String> {
+            j.get(key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("missing numeric field '{key}'"))
+        };
+        let link = |j: &Json, ctx: &str| -> Result<LinkSpec, String> {
+            Ok(LinkSpec {
+                bandwidth: j
+                    .get("bandwidth")
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| format!("{ctx}: missing numeric 'bandwidth'"))?,
+                latency: j
+                    .get("latency")
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| format!("{ctx}: missing numeric 'latency'"))?,
+            })
+        };
+
+        if j.get("name").and_then(|v| v.as_str()).is_none() {
+            return Err(invalid("missing string field 'name'".into()));
+        }
+        let workers_per_node = j
+            .get("workers_per_node")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| invalid("missing positive integer 'workers_per_node'".into()))?;
+        let raw_levels = j
+            .get("levels")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| invalid("missing array 'levels'".into()))?;
+        let mut levels = Vec::with_capacity(raw_levels.len());
+        for (k, lj) in raw_levels.iter().enumerate() {
+            levels.push(MachineLevel {
+                name: lj
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| invalid(format!("levels[{k}]: missing string 'name'")))?
+                    .to_string(),
+                span: lj
+                    .get("span")
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| invalid(format!("levels[{k}]: missing integer 'span'")))?,
+                link: link(lj, &format!("levels[{k}]")).map_err(&invalid)?,
+            });
+        }
+        let inter = j
+            .get("inter_node")
+            .ok_or_else(|| invalid("missing object 'inter_node'".into()))?;
+        let peak_flops_per_worker = num(j, "peak_flops_per_worker").map_err(&invalid)?;
+        let hbm_per_worker = num(j, "hbm_per_worker").map_err(&invalid)?;
+        let inter_node = link(inter, "inter_node").map_err(&invalid)?;
+        let spec = MachineSpec {
+            name,
+            workers_per_node,
+            peak_flops_per_worker,
+            hbm_per_worker,
+            levels,
+            inter_node,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("workers_per_node", Json::from(self.workers_per_node)),
+            ("peak_flops_per_worker", Json::num(self.peak_flops_per_worker)),
+            ("hbm_per_worker", Json::num(self.hbm_per_worker)),
+            (
+                "levels",
+                Json::arr(self.levels.iter().map(|l| {
+                    Json::obj(vec![
+                        ("name", Json::str(l.name.clone())),
+                        ("span", Json::from(l.span)),
+                        ("bandwidth", Json::num(l.link.bandwidth)),
+                        ("latency", Json::num(l.link.latency)),
+                    ])
+                })),
+            ),
+            (
+                "inter_node",
+                Json::obj(vec![
+                    ("bandwidth", Json::num(self.inter_node.bandwidth)),
+                    ("latency", Json::num(self.inter_node.latency)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<MachineSpec, SpecError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), SpecError> {
+        std::fs::write(path, format!("{}\n", self.to_json()))?;
+        Ok(())
+    }
+
+    /// Resolve a CLI/config machine string: a builtin name
+    /// ([`super::machines`]) or a path to a spec JSON.
+    pub fn resolve(s: &str) -> Result<MachineSpec, SpecError> {
+        if let Some(m) = Self::builtin(s) {
+            return Ok(m);
+        }
+        if Path::new(s).exists() {
+            return Self::load(s);
+        }
+        Err(SpecError::Unknown {
+            name: s.to_string(),
+            builtins: super::machines::BUILTIN_NAMES.join(", "),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> MachineSpec {
+        MachineSpec {
+            name: "sample".into(),
+            workers_per_node: 8,
+            peak_flops_per_worker: 100e12,
+            hbm_per_worker: 32e9,
+            levels: vec![
+                MachineLevel {
+                    name: "inner".into(),
+                    span: 2,
+                    link: LinkSpec { bandwidth: 300e9, latency: 1e-6 },
+                },
+                MachineLevel {
+                    name: "outer".into(),
+                    span: 8,
+                    link: LinkSpec { bandwidth: 100e9, latency: 2e-6 },
+                },
+            ],
+            inter_node: LinkSpec { bandwidth: 50e9, latency: 9e-6 },
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity() {
+        let s = sample();
+        let j = s.to_json().to_string();
+        let re = MachineSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(s, re);
+    }
+
+    #[test]
+    fn link_spec_and_labels() {
+        let s = sample();
+        assert_eq!(s.link_spec(LinkClass::Intra(0)).bandwidth, 300e9);
+        assert_eq!(s.link_spec(LinkClass::Intra(1)).bandwidth, 100e9);
+        // out-of-range intra levels clamp to the outermost intra link
+        assert_eq!(s.link_spec(LinkClass::Intra(7)).bandwidth, 100e9);
+        assert_eq!(s.link_spec(LinkClass::InterNode).bandwidth, 50e9);
+        assert_eq!(s.link_spec(LinkClass::Local).latency, 0.0);
+        assert_eq!(s.class_label(LinkClass::Intra(0)), "inner");
+        assert_eq!(s.class_label(LinkClass::InterNode), "B_inter (node-node)");
+        assert_eq!(
+            s.classes(),
+            vec![LinkClass::Intra(0), LinkClass::Intra(1), LinkClass::InterNode]
+        );
+        assert_eq!(s.innermost_span(), 2);
+        assert_eq!(s.level_spans(), vec![2, 8]);
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let mut s = sample();
+        s.levels[1].span = 6; // not a multiple of 2... and != workers_per_node
+        assert!(s.validate().is_err());
+
+        let mut s = sample();
+        s.levels[0].span = 1; // spans must be >= 2
+        assert!(s.validate().is_err());
+
+        let mut s = sample();
+        s.workers_per_node = 16; // outermost span must equal workers/node
+        assert!(s.validate().is_err());
+
+        let mut s = sample();
+        s.levels[1].link.bandwidth = 400e9; // outer faster than inner
+        assert!(s.validate().is_err());
+
+        let mut s = sample();
+        s.levels.clear();
+        assert!(s.validate().is_err());
+
+        let mut s = sample();
+        s.inter_node.bandwidth = 0.0;
+        assert!(s.validate().is_err());
+
+        let mut s = sample();
+        s.hbm_per_worker = f64::NAN;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_reports_missing_fields() {
+        for bad in [
+            r#"{"workers_per_node": 8}"#,
+            r#"{"name": "x"}"#,
+            r#"{"name": "x", "workers_per_node": 8, "peak_flops_per_worker": 1e12,
+                "hbm_per_worker": 1e9, "levels": []}"#,
+            r#"{"name": "x", "workers_per_node": 8, "peak_flops_per_worker": 1e12,
+                "hbm_per_worker": 1e9,
+                "levels": [{"name": "l", "span": 8, "bandwidth": 1e9}],
+                "inter_node": {"bandwidth": 1e9, "latency": 1e-6}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(MachineSpec::from_json(&j).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("zero_topo_spec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sample.json");
+        let s = sample();
+        s.save(&path).unwrap();
+        let re = MachineSpec::load(&path).unwrap();
+        assert_eq!(s, re);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn resolve_prefers_builtin_then_path() {
+        assert_eq!(MachineSpec::resolve("frontier").unwrap().workers_per_node, 8);
+        match MachineSpec::resolve("no-such-machine.json") {
+            Err(SpecError::Unknown { builtins, .. }) => {
+                // the message lists every builtin, sourced from machines.rs
+                for n in crate::topology::machines::BUILTIN_NAMES {
+                    assert!(builtins.contains(n), "{builtins}");
+                }
+            }
+            other => panic!("expected Unknown, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Every committed machine spec JSON (`examples/machines/*.json`) must
+//! load, validate, round-trip, and drive a simulation end-to-end — the CI
+//! gate guaranteeing machines stay *data*, not code. Also pins the
+//! builtin specs to their JSON twins so the two never drift.
+
+use std::path::PathBuf;
+
+use zero_topo::model::TransformerSpec;
+use zero_topo::sched::Depth;
+use zero_topo::sharding::Scheme;
+use zero_topo::sim::{scaling_series, simulate_step, simulate_step_schedule, SimConfig};
+use zero_topo::topology::{Cluster, LinkClass, MachineSpec};
+use zero_topo::util::json::Json;
+
+fn machine_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/machines")
+}
+
+fn committed_specs() -> Vec<(PathBuf, MachineSpec)> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(machine_dir()).expect("examples/machines/ exists") {
+        let p = entry.unwrap().path();
+        if p.extension().map(|e| e == "json").unwrap_or(false) {
+            let spec = MachineSpec::load(&p)
+                .unwrap_or_else(|e| panic!("{}: {e}", p.display()));
+            out.push((p, spec));
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    assert!(out.len() >= 4, "expected the committed sample machine specs");
+    out
+}
+
+#[test]
+fn committed_machines_validate_and_roundtrip() {
+    for (p, spec) in committed_specs() {
+        spec.validate().unwrap_or_else(|e| panic!("{}: {e}", p.display()));
+        let re = MachineSpec::from_json(&Json::parse(&spec.to_json().to_string()).unwrap())
+            .unwrap_or_else(|e| panic!("{}: {e}", p.display()));
+        assert_eq!(spec, re, "{}", p.display());
+    }
+}
+
+#[test]
+fn committed_machines_match_builtin_twins() {
+    // JSON files that share a name with a builtin must be byte-equivalent
+    // specs — the JSONs are the builtins' source of truth for users
+    let mut matched = 0;
+    for (p, spec) in committed_specs() {
+        if let Some(builtin) = MachineSpec::builtin(&spec.name) {
+            assert_eq!(spec, builtin, "{} drifted from the builtin", p.display());
+            matched += 1;
+        }
+    }
+    assert!(matched >= 3, "expected JSON twins for the data-only builtins");
+}
+
+#[test]
+fn committed_machines_simulate_one_node() {
+    // the `--machine file.json` CI sanity: every committed spec runs a
+    // 1-node simulate under each default scheme
+    let model = TransformerSpec::gpt125m();
+    let cfg = SimConfig::default();
+    for (p, spec) in committed_specs() {
+        for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 0 }] {
+            let b = simulate_step(&model, scheme, &Cluster::new(spec.clone(), 1), &cfg);
+            assert!(
+                b.step_s.is_finite() && b.step_s > 0.0,
+                "{} {scheme:?}: step_s = {}",
+                p.display(),
+                b.step_s
+            );
+        }
+    }
+}
+
+#[test]
+fn json_only_machine_runs_simulate_scale_and_stalls() {
+    // the acceptance path: a machine that exists ONLY as JSON (no Rust
+    // changes) flows CLI-shaped end-to-end — scaling sweep + stall table
+    let spec = MachineSpec::load(machine_dir().join("hypothetical_quadlevel.json")).unwrap();
+    assert!(MachineSpec::builtin(&spec.name).is_none(), "must not be a builtin");
+    let model = TransformerSpec::neox10b();
+    let mut cfg = SimConfig::default();
+
+    // `scale`: multi-node sweep
+    let pts = scaling_series(
+        &model,
+        Scheme::ZeroTopo { sec_degree: 0 },
+        &spec,
+        &[1, 2, 4],
+        &cfg,
+    );
+    assert_eq!(pts.len(), 3);
+    assert!(pts.iter().all(|p| p.step_seconds > 0.0 && p.step_seconds.is_finite()));
+
+    // `--stalls`: schedule + per-class stall attribution at depth 0
+    cfg.prefetch_depth = Depth::Bounded(0);
+    let cluster = Cluster::new(spec.clone(), 4);
+    let (b, sched) = simulate_step_schedule(&model, Scheme::Zero3, &cluster, &cfg);
+    let stalls = sched.stall_by_class(0);
+    let total: f64 = stalls.values().sum();
+    assert!(total > 0.0 && total.is_finite());
+    // ZeRO-3 gathers span the world -> stalls land on the inter-node class
+    assert!(stalls.contains_key(&LinkClass::InterNode), "{stalls:?}");
+    assert!(b.step_s >= b.compute_s);
+
+    // machine-named labels resolve for every stalled class
+    for class in stalls.keys() {
+        let label = spec.class_label(*class);
+        assert!(!label.is_empty());
+    }
+}
+
+#[test]
+fn builtins_roundtrip_and_save_load() {
+    let dir = std::env::temp_dir().join("zero_topo_machine_json_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    for m in MachineSpec::builtins() {
+        let path = dir.join(format!("{}.json", m.name));
+        m.save(&path).unwrap();
+        let re = MachineSpec::load(&path).unwrap();
+        assert_eq!(m, re, "{}", m.name);
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn frontier_json_reproduces_calibrated_step_time() {
+    // acceptance criterion: the Frontier spec reproduces the calibrated
+    // 20B/384-GCD ZeRO-topo step time within 0.1%. The pinned value is
+    // the pre-refactor (NodeKind-enum) simulator output — the machine
+    // spec must not perturb the calibration.
+    const CALIBRATED_20B_384_TOPO_STEP_S: f64 = 12.972582660171392;
+    let frontier = MachineSpec::frontier_mi250x();
+    let rejson =
+        MachineSpec::from_json(&Json::parse(&frontier.to_json().to_string()).unwrap()).unwrap();
+    let model = TransformerSpec::neox20b();
+    let cfg = SimConfig::default();
+    let scheme = Scheme::ZeroTopo { sec_degree: 2 };
+    let a = simulate_step(&model, scheme, &Cluster::new(frontier, 48), &cfg);
+    assert!(
+        (a.step_s - CALIBRATED_20B_384_TOPO_STEP_S).abs()
+            <= 1e-3 * CALIBRATED_20B_384_TOPO_STEP_S,
+        "step_s {} drifted from the calibrated {CALIBRATED_20B_384_TOPO_STEP_S}",
+        a.step_s
+    );
+    // and the JSON round-trip of the spec prices identically, bit-for-bit
+    let b = simulate_step(&model, scheme, &Cluster::new(rejson, 48), &cfg);
+    assert_eq!(a.step_s, b.step_s);
+    assert_eq!(a.inter_node_bytes, b.inter_node_bytes);
+}
