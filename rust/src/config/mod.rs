@@ -3,6 +3,7 @@
 
 use std::path::Path;
 
+use crate::sched::scenario::{RankCount, Scenario};
 use crate::sched::Depth;
 use crate::sharding::Scheme;
 use crate::util::json::Json;
@@ -32,6 +33,15 @@ pub struct RunConfig {
     pub mfu: f64,
     /// Prefetch depth for the step scheduler's gather stream.
     pub prefetch_depth: Depth,
+    /// How many ranks the step clock models explicitly (`auto` collapses
+    /// congruent groups — with no asymmetry below, a single rank).
+    pub ranks: RankCount,
+    /// Per-node lognormal compute-jitter sigma for the step clock (0 off).
+    pub jitter_sigma: f64,
+    /// `(rank, compute multiplier)` stragglers for the step clock.
+    pub stragglers: Vec<(usize, f64)>,
+    /// `(rank, grad_accum)` imbalance overrides for the step clock.
+    pub imbalance: Vec<(usize, usize)>,
 }
 
 impl Default for RunConfig {
@@ -51,6 +61,10 @@ impl Default for RunConfig {
             lr: 1e-3,
             mfu: 0.35,
             prefetch_depth: Depth::Infinite,
+            ranks: RankCount::Auto,
+            jitter_sigma: 0.0,
+            stragglers: Vec::new(),
+            imbalance: Vec::new(),
         }
     }
 }
@@ -110,7 +124,41 @@ impl RunConfig {
                 _ => return Err(ConfigError::Bad("prefetch_depth", v.to_string())),
             };
         }
+        if let Some(v) = j.get("ranks") {
+            // like prefetch_depth: a number or the string "auto"
+            c.ranks = match (v.as_usize(), v.as_str()) {
+                (Some(n), _) if n > 0 => RankCount::Count(n),
+                (None, Some(s)) => RankCount::parse(s)
+                    .ok_or_else(|| ConfigError::Bad("ranks", s.to_string()))?,
+                _ => return Err(ConfigError::Bad("ranks", v.to_string())),
+            };
+        }
+        if let Some(v) = j.get("jitter_sigma") {
+            c.jitter_sigma =
+                v.as_f64().ok_or_else(|| ConfigError::Bad("jitter_sigma", v.to_string()))?;
+        }
+        if let Some(v) = j.get("stragglers") {
+            c.stragglers = parse_rank_pairs(v, "stragglers", |e| {
+                e.as_f64().filter(|&m| m > 0.0 && m.is_finite())
+            })?;
+        }
+        if let Some(v) = j.get("imbalance") {
+            c.imbalance =
+                parse_rank_pairs(v, "imbalance", |e| e.as_usize().filter(|&g| g >= 1))?;
+        }
         Ok(c)
+    }
+
+    /// The step-clock scenario this config describes (seeded by the run
+    /// seed, so two runs of the same config see identical jitter).
+    pub fn scenario(&self) -> Scenario {
+        Scenario {
+            ranks: self.ranks,
+            stragglers: self.stragglers.clone(),
+            jitter_sigma: self.jitter_sigma,
+            seed: self.seed,
+            imbalance: self.imbalance.clone(),
+        }
     }
 
     pub fn load(path: &Path) -> Result<Self, ConfigError> {
@@ -132,8 +180,41 @@ impl RunConfig {
             ("lr", Json::num(self.lr as f64)),
             ("mfu", Json::num(self.mfu)),
             ("prefetch_depth", Json::str(self.prefetch_depth.to_string())),
+            ("ranks", Json::str(self.ranks.to_string())),
+            ("jitter_sigma", Json::num(self.jitter_sigma)),
+            (
+                "stragglers",
+                Json::arr(self.stragglers.iter().map(|&(r, m)| {
+                    Json::arr([Json::from(r), Json::num(m)])
+                })),
+            ),
+            (
+                "imbalance",
+                Json::arr(self.imbalance.iter().map(|&(r, g)| {
+                    Json::arr([Json::from(r), Json::from(g)])
+                })),
+            ),
         ])
     }
+}
+
+/// Parse a `[[rank, value], ...]` JSON list.
+fn parse_rank_pairs<T>(
+    v: &Json,
+    what: &'static str,
+    elem: impl Fn(&Json) -> Option<T>,
+) -> Result<Vec<(usize, T)>, ConfigError> {
+    let arr = v.as_arr().ok_or_else(|| ConfigError::Bad(what, v.to_string()))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for pair in arr {
+        let p = pair.as_arr().filter(|p| p.len() == 2);
+        let parsed = p.and_then(|p| Some((p[0].as_usize()?, elem(&p[1])?)));
+        match parsed {
+            Some(rv) => out.push(rv),
+            None => return Err(ConfigError::Bad(what, pair.to_string())),
+        }
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -155,6 +236,10 @@ mod tests {
             lr: 3e-4,
             mfu: 0.4,
             prefetch_depth: Depth::Bounded(2),
+            ranks: RankCount::Count(4),
+            jitter_sigma: 0.05,
+            stragglers: vec![(3, 1.25)],
+            imbalance: vec![(1, 6)],
         };
         let j = c.to_json();
         let c2 = RunConfig::from_json(&j).unwrap();
@@ -167,6 +252,35 @@ mod tests {
         assert!((c2.lr - 3e-4).abs() < 1e-9);
         assert!((c2.mfu - 0.4).abs() < 1e-12);
         assert_eq!(c2.prefetch_depth, Depth::Bounded(2));
+        assert_eq!(c2.ranks, RankCount::Count(4));
+        assert!((c2.jitter_sigma - 0.05).abs() < 1e-12);
+        assert_eq!(c2.stragglers, vec![(3, 1.25)]);
+        assert_eq!(c2.imbalance, vec![(1, 6)]);
+        let sc = c2.scenario();
+        assert_eq!(sc.seed, 7);
+        assert!(!sc.is_trivial());
+    }
+
+    #[test]
+    fn scenario_fields_parse_and_validate() {
+        let j = Json::parse(r#"{"ranks":"auto","stragglers":[[5,1.2]],"imbalance":[[2,4]]}"#)
+            .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.ranks, RankCount::Auto);
+        assert_eq!(c.stragglers, vec![(5, 1.2)]);
+        assert_eq!(c.imbalance, vec![(2, 4)]);
+        let j = Json::parse(r#"{"ranks":8}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().ranks, RankCount::Count(8));
+        for bad in [
+            r#"{"ranks":0}"#,
+            r#"{"ranks":"sometimes"}"#,
+            r#"{"stragglers":[[5,-1.0]]}"#,
+            r#"{"stragglers":[[5]]}"#,
+            r#"{"imbalance":[[2,0]]}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(RunConfig::from_json(&j).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -41,6 +41,7 @@ use crate::dtype::round_f16_slice;
 use crate::metrics::{LossPoint, TrainLog};
 use crate::optimizer::{global_clip_scale, local_sq_norm, AdamWConfig, AdamWShard};
 use crate::runtime::ModelRunner;
+use crate::sched::multi::MultiRankPlan;
 use crate::sched::plan::StepPlan;
 use crate::sharding::{shard_groups, PartitionMap, Scheme, ShardingSpec};
 use crate::topology::{Cluster, MachineSpec};
@@ -115,8 +116,15 @@ impl<'a> TrainEngine<'a> {
         // the plan is a pure function of (cfg, spec, cluster, manifest),
         // all fixed for the run: price + schedule it once, accumulate the
         // makespan per step (recompute via `plan_step` if you mutate the
-        // engine's cost-model efficiency afterwards)
-        engine.step_sim_s = engine.plan_step().simulate().makespan();
+        // engine's cost-model efficiency afterwards). The step clock runs
+        // the multi-rank builder: with the default trivial scenario the
+        // congruence collapse makes it bit-identical to the single-rank
+        // plan; straggler/jitter configs price the slowest-rank makespan.
+        engine.step_sim_s = {
+            let plan = engine.plan_step();
+            let scenario = engine.cfg.scenario();
+            MultiRankPlan::new(&plan, &engine.cluster, &scenario).simulate().makespan()
+        };
         Ok(engine)
     }
 

@@ -18,13 +18,21 @@ use zero_topo::config::RunConfig;
 use zero_topo::engine::TrainEngine;
 use zero_topo::memory::MemoryModel;
 use zero_topo::model::TransformerSpec;
-use zero_topo::report::{render_scaling_figure, render_stall_table, ScalingSeries};
+use zero_topo::report::{
+    render_critical_path, render_rank_table, render_scaling_figure, render_stall_table,
+    ScalingSeries,
+};
 use zero_topo::runtime::Runtime;
+use zero_topo::sched::scenario::{RankCount, Scenario};
 use zero_topo::sched::{trace, Schedule};
 use zero_topo::sharding::{Scheme, ShardingSpec};
-use zero_topo::sim::{scaling_series, simulate_step_schedule, SimConfig};
+use zero_topo::sim::{
+    scaling_series, scaling_series_scenario, simulate_step, simulate_step_scenario,
+    simulate_step_schedule, SimConfig,
+};
 use zero_topo::topology::{Cluster, LinkClass, MachineSpec};
 use zero_topo::util::cli::Args;
+use zero_topo::util::json::Json;
 use zero_topo::util::table::{fnum, human_bytes, Table};
 
 const USAGE: &str = "\
@@ -41,18 +49,25 @@ JSON (see examples/machines/). Default: frontier.
   memory    [--model 20b] [--nodes N]       Tables V/VI memory per device
   capacity  [--machine M] [--nodes N]       max model size per scheme (Sec II)
   simulate  [--machine M] [--model 20b] [--nodes 8,16,32,48]
-            [--schemes zero3,zeropp,zerotopo] [--depth N|inf]
+            [--schemes zero3,zeropp,zerotopo] [--depth N|inf] [--ranks N|auto]
             [--stalls] [--trace out.json]   Fig 7/8 scaling (event-driven sim)
   scale     alias of simulate               cross-scale / cross-machine sweeps
+  scenario  [--machine M] [--model 20b] [--nodes 48] [--schemes S,...]
+            [--ranks N|auto] [--straggler R:MULT,...] [--jitter SIGMA]
+            [--seed S] [--imbalance R:GA,...] [--depth N|inf] [--rank-rows K]
+            [--trace out.json]              multi-rank stragglers/jitter study
+  calibrate [--check] [--write] [--baseline FILE] [--tolerance 0.01]
+                                            perf guardrail vs BENCH_baseline.json
   train     [--machine M] [--model tiny] [--scheme zerotopo] [--nodes 1]
-            [--steps 10] [--depth N|inf] [--artifacts DIR] [--csv FILE]
+            [--steps 10] [--depth N|inf] [--ranks N|auto] [--jitter SIGMA]
+            [--straggler R:MULT,...] [--artifacts DIR] [--csv FILE]
                                             real training via PJRT
   report    [--machine M]                   print all analytical tables
 ";
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(raw, &["verbose", "json", "help", "stalls"]) {
+    let args = match Args::parse(raw, &["verbose", "json", "help", "stalls", "check", "write"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
@@ -70,6 +85,8 @@ fn main() {
         "memory" => cmd_memory(&args),
         "capacity" => cmd_capacity(&args),
         "simulate" | "scale" => cmd_simulate(&args),
+        "scenario" => cmd_scenario(&args),
+        "calibrate" => cmd_calibrate(&args),
         "train" => cmd_train(&args),
         "report" => cmd_report(&args),
         other => {
@@ -250,11 +267,24 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let mut cfg = SimConfig::default();
     cfg.mfu = args.parse_opt("mfu", cfg.mfu)?;
     cfg.prefetch_depth = args.parse_opt("depth", cfg.prefetch_depth)?;
+    // --ranks routes the step clock through the multi-rank builder; with a
+    // trivial scenario the congruence collapse makes it bit-identical to
+    // the single-rank path, so the figures cannot drift
+    let ranks: Option<RankCount> = match args.get("ranks") {
+        None => None,
+        Some(r) => Some(r.parse().map_err(|e: String| anyhow::anyhow!(e))?),
+    };
+    let scenario = ranks.map(|r| Scenario { ranks: r, ..Default::default() });
     let series: Vec<ScalingSeries> = schemes
         .iter()
         .map(|&scheme| ScalingSeries {
             scheme,
-            points: scaling_series(&model, scheme, &machine, &node_counts, &cfg),
+            points: match &scenario {
+                None => scaling_series(&model, scheme, &machine, &node_counts, &cfg),
+                Some(sc) => {
+                    scaling_series_scenario(&model, scheme, &machine, &node_counts, &cfg, sc)
+                }
+            },
         })
         .collect();
     let title = format!(
@@ -278,7 +308,10 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         let scheds: Vec<(String, Schedule)> = schemes
             .iter()
             .map(|&scheme| {
-                let (_, sched) = simulate_step_schedule(&model, scheme, &cluster, &cfg);
+                let sched = match &scenario {
+                    None => simulate_step_schedule(&model, scheme, &cluster, &cfg).1,
+                    Some(sc) => simulate_step_scenario(&model, scheme, &cluster, &cfg, sc).1,
+                };
                 (scheme.name(), sched)
             })
             .collect();
@@ -315,6 +348,212 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Multi-rank straggler/jitter/imbalance study at one scale: per-scheme
+/// baseline-vs-scenario makespans, per-rank stall attribution, and the
+/// slowest rank's critical path.
+fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
+    let model = TransformerSpec::by_name(args.get_or("model", "20b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model (use 10b/20b/125m)"))?;
+    let machine = resolve_machine(args)?;
+    let nodes = args.parse_opt("nodes", 48usize)?;
+    let schemes = parse_schemes(args)?;
+    let mut cfg = SimConfig::default();
+    cfg.mfu = args.parse_opt("mfu", cfg.mfu)?;
+    cfg.prefetch_depth = args.parse_opt("depth", cfg.prefetch_depth)?;
+    let scenario = Scenario {
+        ranks: args.parse_opt("ranks", RankCount::Auto)?,
+        stragglers: Scenario::parse_stragglers(args.get_or("straggler", ""))
+            .map_err(|e| anyhow::anyhow!(e))?,
+        jitter_sigma: args.parse_opt("jitter", 0.0f64)?,
+        seed: args.parse_opt("seed", 42u64)?,
+        imbalance: Scenario::parse_imbalance(args.get_or("imbalance", ""))
+            .map_err(|e| anyhow::anyhow!(e))?,
+    };
+    let rank_rows = args.parse_opt("rank-rows", 12usize)?;
+    let cluster = Cluster::new(machine.clone(), nodes);
+    println!(
+        "scenario on {} x{} nodes ({} workers): ranks={} stragglers={:?} jitter={} seed={} imbalance={:?}",
+        machine.name,
+        nodes,
+        cluster.world_size(),
+        scenario.ranks,
+        scenario.stragglers,
+        scenario.jitter_sigma,
+        scenario.seed,
+        scenario.imbalance,
+    );
+
+    let mut summary = Table::new(&[
+        "scheme",
+        "baseline step (s)",
+        "scenario step (s)",
+        "slowdown",
+        "modeled ranks",
+        "slowest rank",
+    ])
+    .title(format!("Scenario impact — {} @ {} workers", model.name, cluster.world_size()))
+    .left_first();
+    let mut scheds: Vec<(String, Schedule)> = Vec::new();
+    for &scheme in &schemes {
+        let base = simulate_step(&model, scheme, &cluster, &cfg);
+        let (b, sched) = simulate_step_scenario(&model, scheme, &cluster, &cfg, &scenario);
+        summary.row(vec![
+            scheme.name(),
+            fnum(base.step_s, 3),
+            fnum(b.step_s, 3),
+            format!("{:+.2}%", (b.step_s / base.step_s - 1.0) * 100.0),
+            sched.ranks().len().to_string(),
+            format!("r{}", sched.slowest_rank()),
+        ]);
+        scheds.push((scheme.name(), sched));
+    }
+    println!("{}", summary.render());
+
+    for (name, sched) in &scheds {
+        let title = format!("{name} — per-rank attribution");
+        println!("{}", render_rank_table(&title, sched, &machine, rank_rows));
+        println!("{}", render_critical_path(sched, rank_rows));
+    }
+    if let Some(path) = args.get("trace") {
+        let named: Vec<(String, &Schedule)> =
+            scheds.iter().map(|(n, s)| (n.clone(), s)).collect();
+        std::fs::write(path, trace::chrome_trace(&named))?;
+        println!("wrote {path} (open in chrome://tracing or ui.perfetto.dev)");
+    }
+    Ok(())
+}
+
+/// Default location of the committed perf baseline: the repo root, one
+/// level above the cargo manifest.
+fn default_baseline_path() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_baseline.json").to_string()
+}
+
+/// Perf guardrail: recompute the calibrated 20B/384-GCD step times per
+/// scheme on the frontier + dgx builtins and compare against the committed
+/// `BENCH_baseline.json`. `--check` fails (non-zero exit) on drift beyond
+/// the tolerance, so refactors cannot silently move the Fig 7 numbers;
+/// `--write` regenerates the baseline after an *intentional* recalibration.
+fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
+    let model = TransformerSpec::by_name(args.get_or("model", "20b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model (use 10b/20b/125m)"))?;
+    let nodes = args.parse_opt("nodes", 48usize)?;
+    let tolerance = args.parse_opt("tolerance", 0.01f64)?;
+    let machines: Vec<String> = args
+        .get_or("machines", "frontier,dgx")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let schemes = parse_schemes(args)?;
+    let cfg = SimConfig::default();
+    let path = args.get_or("baseline", "");
+    let path = if path.is_empty() { default_baseline_path() } else { path.to_string() };
+
+    // recompute every (machine, scheme) point
+    let mut entries: Vec<(String, String, f64)> = Vec::new();
+    for mname in &machines {
+        let spec = MachineSpec::resolve(mname)?;
+        let cluster = Cluster::new(spec, nodes);
+        for &scheme in &schemes {
+            let b = simulate_step(&model, scheme, &cluster, &cfg);
+            entries.push((mname.clone(), scheme.name(), b.step_s));
+        }
+    }
+
+    if args.flag("write") {
+        let json = Json::obj(vec![
+            ("model", Json::str(args.get_or("model", "20b"))),
+            ("nodes", Json::from(nodes)),
+            ("tolerance", Json::num(tolerance)),
+            (
+                "entries",
+                Json::arr(entries.iter().map(|(m, s, t)| {
+                    Json::obj(vec![
+                        ("machine", Json::str(m.clone())),
+                        ("scheme", Json::str(s.clone())),
+                        ("step_s", Json::num(*t)),
+                    ])
+                })),
+            ),
+        ]);
+        std::fs::write(&path, format!("{json}\n"))?;
+        println!("wrote {path} ({} entries)", entries.len());
+        return Ok(());
+    }
+
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        anyhow::anyhow!("cannot read baseline {path}: {e} (run `calibrate --write`)")
+    })?;
+    let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad baseline {path}: {e}"))?;
+    let mut baseline: std::collections::BTreeMap<(String, String), f64> =
+        std::collections::BTreeMap::new();
+    for e in json
+        .get("entries")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("baseline {path} has no entries array"))?
+    {
+        let m = e.get("machine").and_then(|v| v.as_str()).unwrap_or_default().to_string();
+        let s = e.get("scheme").and_then(|v| v.as_str()).unwrap_or_default().to_string();
+        let t = e
+            .get("step_s")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("baseline entry without step_s"))?;
+        baseline.insert((m, s), t);
+    }
+    // precedence: explicit --tolerance > baseline's recorded field > default
+    let tol = if args.get("tolerance").is_some() {
+        tolerance
+    } else {
+        json.get("tolerance").and_then(|v| v.as_f64()).unwrap_or(tolerance)
+    };
+
+    let mut t = Table::new(&["machine", "scheme", "baseline (s)", "now (s)", "drift"])
+        .title(format!(
+            "Perf guardrail — {} @ {} nodes (tolerance {:.1}%)",
+            model.name,
+            nodes,
+            tol * 100.0
+        ))
+        .left_first();
+    let mut failures = Vec::new();
+    for (m, s, now) in &entries {
+        match baseline.get(&(m.clone(), s.clone())) {
+            Some(&base) => {
+                let drift = (now - base) / base;
+                t.row(vec![
+                    m.clone(),
+                    s.clone(),
+                    format!("{base:.6}"),
+                    format!("{now:.6}"),
+                    format!("{:+.3}%", drift * 100.0),
+                ]);
+                if drift.abs() > tol {
+                    failures.push(format!(
+                        "{m}/{s}: {base:.6}s -> {now:.6}s ({:+.2}%)",
+                        drift * 100.0
+                    ));
+                }
+            }
+            None => failures.push(format!("{m}/{s}: missing from baseline")),
+        }
+    }
+    println!("{}", t.render());
+    if !failures.is_empty() {
+        let msg = format!(
+            "calibration drift beyond {:.1}%:\n  {}\n(if intentional, regenerate with `calibrate --write`)",
+            tol * 100.0,
+            failures.join("\n  ")
+        );
+        if args.flag("check") {
+            anyhow::bail!("{msg}");
+        }
+        eprintln!("warning: {msg}");
+    } else {
+        println!("all {} points within {:.1}% of baseline", entries.len(), tol * 100.0);
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let mut cfg = RunConfig::default();
     cfg.model = args.get_or("model", "tiny").to_string();
@@ -328,6 +567,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.lr = args.parse_opt("lr", 1e-3f32)?;
     cfg.mfu = args.parse_opt("mfu", cfg.mfu)?;
     cfg.prefetch_depth = args.parse_opt("depth", cfg.prefetch_depth)?;
+    cfg.ranks = args.parse_opt("ranks", cfg.ranks)?;
+    cfg.jitter_sigma = args.parse_opt("jitter", cfg.jitter_sigma)?;
+    cfg.stragglers = Scenario::parse_stragglers(args.get_or("straggler", ""))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    cfg.imbalance = Scenario::parse_imbalance(args.get_or("imbalance", ""))
+        .map_err(|e| anyhow::anyhow!(e))?;
     let dir = args.get_or("artifacts", "artifacts");
     // fail fast on a bad --machine before the (expensive) artifact load
     let machine = MachineSpec::resolve(&cfg.machine)?;

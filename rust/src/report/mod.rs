@@ -4,6 +4,7 @@
 use std::collections::BTreeMap;
 
 use crate::metrics::{StepUtilization, Throughput};
+use crate::sched::Schedule;
 use crate::sharding::Scheme;
 use crate::topology::{LinkClass, MachineSpec};
 use crate::util::table::{fnum, Table};
@@ -95,6 +96,90 @@ pub fn render_stall_table(
     out
 }
 
+/// Render the per-rank attribution of a (multi-rank) schedule: one row per
+/// modeled rank — compute busy/end, straggler skew-wait, and the worst
+/// link-class stall — slowest ranks first, capped at `max_rows`. This is
+/// the table the straggler/jitter scenarios surface: which rank sets the
+/// makespan and what everyone else was waiting on.
+pub fn render_rank_table(
+    title: &str,
+    sched: &Schedule,
+    machine: &MachineSpec,
+    max_rows: usize,
+) -> String {
+    let mut ranks = sched.ranks();
+    let ends: BTreeMap<usize, f64> =
+        ranks.iter().map(|&r| (r, sched.rank_compute_end(r))).collect();
+    let skews = sched.skew_waits();
+    ranks.sort_by(|a, b| ends[b].partial_cmp(&ends[a]).expect("finite ends"));
+    let shown = ranks.len().min(max_rows.max(1));
+    let mut t = Table::new(&[
+        "rank",
+        "node",
+        "compute busy (s)",
+        "compute end (s)",
+        "skew wait (s)",
+        "worst stall (s)",
+        "on level",
+    ])
+    .title(title.to_string())
+    .left_first();
+    let wpn = machine.workers_per_node.max(1);
+    for &r in &ranks[..shown] {
+        let u = sched.utilization(r);
+        let stalls = sched.stall_by_class(r);
+        let worst = stalls
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(b.1).expect("finite stalls"))
+            .map(|(c, s)| (*c, *s));
+        t.row(vec![
+            format!("r{r}"),
+            (r / wpn).to_string(),
+            fnum(u.compute_busy, 3),
+            fnum(ends[&r], 3),
+            fnum(skews.get(&r).copied().unwrap_or(0.0), 3),
+            worst.map(|(_, s)| fnum(s, 3)).unwrap_or_else(|| "-".into()),
+            worst.map(|(c, _)| machine.class_label(c)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    let mut out = t.render();
+    if ranks.len() > shown {
+        out.push_str(&format!("  ({} congruent ranks not shown)\n", ranks.len() - shown));
+    }
+    out.push_str(&format!(
+        "makespan {:.3}s; slowest rank r{} (compute ends {:.3}s)\n",
+        sched.makespan(),
+        sched.slowest_rank(),
+        sched.rank_compute_end(sched.slowest_rank()),
+    ));
+    out
+}
+
+/// Render the slowest-rank critical path: the chain of tasks (dependency or
+/// stream-FIFO blockers) ending at the last-finishing task, capped to the
+/// final `max_items` entries.
+pub fn render_critical_path(sched: &Schedule, max_items: usize) -> String {
+    let path = sched.critical_path();
+    let skip = path.len().saturating_sub(max_items.max(1));
+    let mut out = String::from("critical path (slowest chain):\n");
+    if skip > 0 {
+        out.push_str(&format!("  ... {skip} earlier tasks elided ...\n"));
+    }
+    for &id in &path[skip..] {
+        let t = sched.graph().task(id);
+        let s = sched.span(id);
+        out.push_str(&format!(
+            "  r{:<4} {:9} {:24} [{:9.3}s .. {:9.3}s]\n",
+            t.rank,
+            t.stream.name(),
+            t.label,
+            s.start,
+            s.end
+        ));
+    }
+    out
+}
+
 /// CSV with one row per (scheme, scale) for plotting.
 pub fn scaling_csv(series: &[ScalingSeries]) -> String {
     let mut out = String::from("scheme,gcds,tflops_per_gpu,samples_per_sec,efficiency\n");
@@ -144,6 +229,52 @@ mod tests {
         assert!(out.contains("B_GCD"), "{out}");
         assert!(out.contains("20.0"), "{out}");
         assert!(out.contains("70.0% util"), "{out}");
+    }
+
+    #[test]
+    fn renders_rank_table_and_critical_path() {
+        use crate::sched::{simulate, StreamKind, Task, TaskGraph};
+        let mut g = TaskGraph::with_rank_ids(vec![0, 9]);
+        let a = g.add(Task {
+            label: "compute@r0".into(),
+            rank: 0,
+            stream: StreamKind::Compute,
+            work: 1.0,
+            class: None,
+            instance: 0,
+            deps: vec![],
+        });
+        let b = g.add(Task {
+            label: "compute@r9".into(),
+            rank: 9,
+            stream: StreamKind::Compute,
+            work: 3.0,
+            class: None,
+            instance: 0,
+            deps: vec![],
+        });
+        g.add(Task {
+            label: "grad-sync".into(),
+            rank: 0,
+            stream: StreamKind::GradSync,
+            work: 1.0,
+            class: Some(LinkClass::InterNode),
+            instance: 0,
+            deps: vec![a, b],
+        });
+        let sched = simulate(g);
+        let m = MachineSpec::frontier_mi250x();
+        let out = render_rank_table("ranks", &sched, &m, 8);
+        assert!(out.contains("slowest rank r9"), "{out}");
+        assert!(out.contains("r0"), "{out}");
+        // r9 is on node 1 of an 8-wide machine
+        assert!(out.lines().any(|l| l.contains("r9") && l.contains(" 1 ")), "{out}");
+        let capped = render_rank_table("ranks", &sched, &m, 1);
+        assert!(capped.contains("congruent ranks not shown"), "{capped}");
+        let cp = render_critical_path(&sched, 8);
+        assert!(cp.contains("compute@r9") && cp.contains("grad-sync"), "{cp}");
+        let short = render_critical_path(&sched, 1);
+        assert!(short.contains("elided"), "{short}");
     }
 
     #[test]

@@ -30,7 +30,9 @@
 //! loop via [`plan::StepPlan`], so their communication pricing and
 //! schedule semantics can never drift.
 
+pub mod multi;
 pub mod plan;
+pub mod scenario;
 pub mod trace;
 
 use std::collections::BTreeMap;
@@ -98,17 +100,27 @@ impl fmt::Display for Depth {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub struct TaskId(pub usize);
 
-/// One node of the step DAG.
+/// One node of the step DAG. `rank` is a first-class field (graphs with a
+/// declared rank registry reject tasks naming unknown ranks), so per-rank
+/// queries on the schedule can never mis-bucket tasks.
 #[derive(Debug, Clone)]
 pub struct Task {
     pub label: String,
     pub rank: usize,
     pub stream: StreamKind,
-    /// Seconds of work at unit rate (a comm task sharing its link class
-    /// with n-1 concurrent peers proceeds at rate 1/n).
+    /// Seconds of work at unit rate (a comm task sharing its contention
+    /// domain with n-1 concurrent peers proceeds at rate 1/n).
     pub work: f64,
-    /// Contention domain for communication tasks; `None` for compute.
+    /// Link class for communication tasks; `None` for compute.
     pub class: Option<LinkClass>,
+    /// Contention sub-domain within the class: tasks compete for bandwidth
+    /// only when both `class` and `instance` match. Single-rank plans use 0
+    /// everywhere (one shared domain per class, the pre-multi-rank
+    /// semantics); multi-rank plans key instances off physical links — the
+    /// level-`k` block index for `Intra(k)`, one shared fabric for
+    /// `InterNode` — so two GCD pairs' gathers ride separate IF links while
+    /// collectives crossing the same fabric genuinely compete.
+    pub instance: usize,
     pub deps: Vec<TaskId>,
 }
 
@@ -117,11 +129,29 @@ pub struct Task {
 #[derive(Debug, Clone, Default)]
 pub struct TaskGraph {
     tasks: Vec<Task>,
+    /// Declared rank registry (sorted). `None` = infer ranks from tasks
+    /// (single-rank plans); multi-rank builders declare their modeled rank
+    /// ids up front so `add` can reject mis-bucketed tasks.
+    rank_ids: Option<Vec<usize>>,
 }
 
 impl TaskGraph {
     pub fn new() -> TaskGraph {
         TaskGraph::default()
+    }
+
+    /// A graph with an explicit rank registry: every task added must name
+    /// one of `ranks`, and [`Schedule::ranks`] reports exactly this set
+    /// (even for ranks that end up owning only shared tasks).
+    pub fn with_rank_ids(mut ranks: Vec<usize>) -> TaskGraph {
+        assert!(!ranks.is_empty(), "rank registry must be non-empty");
+        ranks.sort_unstable();
+        ranks.dedup();
+        TaskGraph { tasks: Vec::new(), rank_ids: Some(ranks) }
+    }
+
+    pub fn rank_ids(&self) -> Option<&[usize]> {
+        self.rank_ids.as_deref()
     }
 
     /// Add a task; its dependencies must already be in the graph.
@@ -131,6 +161,15 @@ impl TaskGraph {
             assert!(d.0 < id.0, "dependency {:?} added after dependent {:?}", d, id);
         }
         assert!(task.work >= 0.0 && task.work.is_finite(), "bad work {}", task.work);
+        if let Some(ranks) = &self.rank_ids {
+            assert!(
+                ranks.binary_search(&task.rank).is_ok(),
+                "task '{}' names rank {} outside the declared registry {:?}",
+                task.label,
+                task.rank,
+                ranks
+            );
+        }
         self.tasks.push(task);
         id
     }
@@ -217,16 +256,16 @@ pub fn simulate(graph: TaskGraph) -> Schedule {
             panic!("scheduler deadlock: {} of {} tasks unreachable", n - n_done, n);
         }
 
-        // processor-sharing rates per link class
-        let mut active: BTreeMap<LinkClass, usize> = BTreeMap::new();
+        // processor-sharing rates per (link class, instance) domain
+        let mut active: BTreeMap<(LinkClass, usize), usize> = BTreeMap::new();
         for &i in running.values() {
             if let Some(c) = graph.tasks[i].class {
-                *active.entry(c).or_default() += 1;
+                *active.entry((c, graph.tasks[i].instance)).or_default() += 1;
             }
         }
         let rate = |i: usize| -> f64 {
             match graph.tasks[i].class {
-                Some(c) => 1.0 / active[&c] as f64,
+                Some(c) => 1.0 / active[&(c, graph.tasks[i].instance)] as f64,
                 None => 1.0,
             }
         };
@@ -275,8 +314,12 @@ impl Schedule {
         &self.spans
     }
 
-    /// Ranks that own at least one task.
+    /// The schedule's ranks: the graph's declared registry when present,
+    /// otherwise the ranks that own at least one task.
     pub fn ranks(&self) -> Vec<usize> {
+        if let Some(ids) = self.graph.rank_ids() {
+            return ids.to_vec();
+        }
         let mut r: Vec<usize> = self.graph.tasks.iter().map(|t| t.rank).collect();
         r.sort_unstable();
         r.dedup();
@@ -347,6 +390,138 @@ impl Schedule {
             grad_sync_busy: self.stream_busy(rank, StreamKind::GradSync),
         }
     }
+
+    /// Straggler-wait: wall time `rank`'s compute stream sat idle while NO
+    /// communication task was in flight anywhere — idle that
+    /// [`Schedule::stall_by_class`] cannot blame on a link class because the
+    /// rank was waiting on *other ranks' compute* (a straggler or jitter
+    /// victim holding back a collective). Zero by construction in
+    /// single-rank graphs.
+    pub fn skew_wait(&self, rank: usize) -> f64 {
+        self.skew_waits().get(&rank).copied().unwrap_or(0.0)
+    }
+
+    /// [`Schedule::skew_wait`] for every rank of the schedule in one sweep
+    /// over the span windows — O(windows x spans) total instead of per
+    /// rank, which is what the per-rank scenario tables want.
+    pub fn skew_waits(&self) -> BTreeMap<usize, f64> {
+        let mut out: BTreeMap<usize, f64> = self.ranks().into_iter().map(|r| (r, 0.0)).collect();
+        let mut bounds: Vec<f64> = Vec::with_capacity(2 * self.spans.len());
+        for s in &self.spans {
+            bounds.push(s.start);
+            bounds.push(s.end);
+        }
+        bounds.sort_by(|a, b| a.partial_cmp(b).expect("finite span bounds"));
+        bounds.dedup();
+        let mut busy: Vec<usize> = Vec::new();
+        for w in bounds.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            if b <= a {
+                continue;
+            }
+            let mid = 0.5 * (a + b);
+            let mut comm_in_flight = false;
+            busy.clear();
+            for s in &self.spans {
+                if s.start < mid && mid < s.end {
+                    let t = self.graph.task(s.task);
+                    if t.class.is_some() {
+                        comm_in_flight = true;
+                        break;
+                    }
+                    if t.stream == StreamKind::Compute {
+                        busy.push(t.rank);
+                    }
+                }
+            }
+            if comm_in_flight {
+                continue;
+            }
+            busy.sort_unstable();
+            for (&r, v) in out.iter_mut() {
+                if busy.binary_search(&r).is_err() {
+                    *v += b - a;
+                }
+            }
+        }
+        out
+    }
+
+    /// When `rank`'s compute stream finished its last kernel (0 if the rank
+    /// owns no compute tasks).
+    pub fn rank_compute_end(&self, rank: usize) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| {
+                let t = self.graph.task(s.task);
+                t.rank == rank && t.stream == StreamKind::Compute
+            })
+            .map(|s| s.end)
+            .fold(0.0, f64::max)
+    }
+
+    /// The rank whose compute stream finishes last — the straggler under an
+    /// asymmetric scenario, arbitrary-but-stable under a symmetric one.
+    pub fn slowest_rank(&self) -> usize {
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for r in self.ranks() {
+            let end = self.rank_compute_end(r);
+            if end > best.1 {
+                best = (r, end);
+            }
+        }
+        best.0
+    }
+
+    /// The critical path: from the last-finishing task, walk backwards
+    /// through whichever blocker (dependency or same-stream predecessor)
+    /// finished latest. Returned in execution order.
+    pub fn critical_path(&self) -> Vec<TaskId> {
+        if self.spans.is_empty() {
+            return Vec::new();
+        }
+        // same-(rank, stream) FIFO predecessor by insertion order
+        let n = self.graph.len();
+        let mut stream_pred: Vec<Option<TaskId>> = vec![None; n];
+        let mut last_on: BTreeMap<(usize, StreamKind), TaskId> = BTreeMap::new();
+        for (i, t) in self.graph.tasks().iter().enumerate() {
+            let key = (t.rank, t.stream);
+            stream_pred[i] = last_on.get(&key).copied();
+            last_on.insert(key, TaskId(i));
+        }
+        let mut cur = TaskId(0);
+        let mut best_end = f64::NEG_INFINITY;
+        for s in &self.spans {
+            if s.end > best_end {
+                best_end = s.end;
+                cur = s.task;
+            }
+        }
+        let mut path = vec![cur];
+        loop {
+            let t = self.graph.task(cur);
+            let mut blocker: Option<TaskId> = None;
+            let mut blocker_end = f64::NEG_INFINITY;
+            for &d in t.deps.iter().chain(stream_pred[cur.0].iter()) {
+                let e = self.span(d).end;
+                if e > blocker_end {
+                    blocker_end = e;
+                    blocker = Some(d);
+                }
+            }
+            match blocker {
+                // blockers always precede `cur` in insertion order, so the
+                // walk strictly decreases and terminates
+                Some(b) => {
+                    path.push(b);
+                    cur = b;
+                }
+                None => break,
+            }
+        }
+        path.reverse();
+        path
+    }
 }
 
 #[cfg(test)]
@@ -354,11 +529,11 @@ mod tests {
     use super::*;
 
     fn task(stream: StreamKind, work: f64, deps: Vec<TaskId>) -> Task {
-        Task { label: String::new(), rank: 0, stream, work, class: None, deps }
+        Task { label: String::new(), rank: 0, stream, work, class: None, instance: 0, deps }
     }
 
     fn comm(stream: StreamKind, work: f64, class: LinkClass, deps: Vec<TaskId>) -> Task {
-        Task { label: String::new(), rank: 0, stream, work, class: Some(class), deps }
+        Task { label: String::new(), rank: 0, stream, work, class: Some(class), instance: 0, deps }
     }
 
     #[test]
@@ -465,6 +640,7 @@ mod tests {
             stream: StreamKind::Compute,
             work: 2.0,
             class: None,
+            instance: 0,
             deps: vec![],
         });
         g.add(Task {
@@ -473,6 +649,7 @@ mod tests {
             stream: StreamKind::Compute,
             work: 3.0,
             class: None,
+            instance: 0,
             deps: vec![],
         });
         let s = simulate(g);
@@ -510,5 +687,85 @@ mod tests {
     fn forward_dependencies_rejected() {
         let mut g = TaskGraph::new();
         g.add(task(StreamKind::Compute, 1.0, vec![TaskId(5)]));
+    }
+
+    #[test]
+    fn distinct_instances_do_not_contend() {
+        // same link class on two physical link instances: no sharing
+        let mut g = TaskGraph::new();
+        let mut t = comm(StreamKind::Prefetch, 1.0, LinkClass::Intra(0), vec![]);
+        t.instance = 0;
+        g.add(t);
+        let mut t = comm(StreamKind::GradSync, 1.0, LinkClass::Intra(0), vec![]);
+        t.instance = 1;
+        g.add(t);
+        let s = simulate(g);
+        assert!((s.makespan() - 1.0).abs() < 1e-12, "{}", s.makespan());
+    }
+
+    #[test]
+    fn same_instance_contends() {
+        let mut g = TaskGraph::new();
+        g.add(comm(StreamKind::Prefetch, 1.0, LinkClass::Intra(0), vec![]));
+        g.add(comm(StreamKind::GradSync, 1.0, LinkClass::Intra(0), vec![]));
+        let s = simulate(g);
+        assert!((s.makespan() - 2.0).abs() < 1e-12, "{}", s.makespan());
+    }
+
+    #[test]
+    fn rank_registry_is_authoritative() {
+        let mut g = TaskGraph::with_rank_ids(vec![7, 3, 3]);
+        assert_eq!(g.rank_ids(), Some(&[3, 7][..]));
+        let mut t = task(StreamKind::Compute, 1.0, vec![]);
+        t.rank = 3;
+        g.add(t);
+        let s = simulate(g);
+        // rank 7 owns no task but the registry still reports it
+        assert_eq!(s.ranks(), vec![3, 7]);
+        assert_eq!(s.rank_compute_end(7), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the declared registry")]
+    fn rank_registry_rejects_unknown_ranks() {
+        let mut g = TaskGraph::with_rank_ids(vec![0, 1]);
+        let mut t = task(StreamKind::Compute, 1.0, vec![]);
+        t.rank = 2;
+        g.add(t);
+    }
+
+    #[test]
+    fn skew_wait_blames_peer_compute_not_comm() {
+        // rank 0 finishes at t=1 then waits for rank 1's slow compute (no
+        // comm in flight): skew, not a class stall
+        let mut g = TaskGraph::with_rank_ids(vec![0, 1]);
+        let a = g.add(task(StreamKind::Compute, 1.0, vec![]));
+        let mut slow = task(StreamKind::Compute, 3.0, vec![]);
+        slow.rank = 1;
+        let b = g.add(slow);
+        let mut sync = comm(StreamKind::GradSync, 1.0, LinkClass::InterNode, vec![a, b]);
+        sync.rank = 0;
+        g.add(sync);
+        let s = simulate(g);
+        assert!((s.makespan() - 4.0).abs() < 1e-12);
+        // rank 0: idle 1..3 with no comm (skew), idle 3..4 under the sync
+        assert!((s.skew_wait(0) - 2.0).abs() < 1e-12, "{}", s.skew_wait(0));
+        // rank 1's trailing idle is under the sync -> a class stall, not skew
+        assert!(s.skew_wait(1).abs() < 1e-12, "{}", s.skew_wait(1));
+        let stalls = s.stall_by_class(0);
+        assert!((stalls[&LinkClass::InterNode] - 1.0).abs() < 1e-12, "{stalls:?}");
+        assert_eq!(s.slowest_rank(), 1);
+        assert!((s.rank_compute_end(1) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn critical_path_follows_latest_blockers() {
+        let mut g = TaskGraph::new();
+        let a = g.add(task(StreamKind::Prefetch, 1.0, vec![]));
+        let short = g.add(task(StreamKind::Compute, 0.5, vec![]));
+        let b = g.add(task(StreamKind::Compute, 2.0, vec![a]));
+        let c = g.add(task(StreamKind::GradSync, 1.0, vec![b, short]));
+        let s = simulate(g);
+        assert_eq!(s.critical_path(), vec![a, b, c]);
     }
 }

@@ -1,0 +1,386 @@
+//! Multi-rank step graphs: instantiate one compute/prefetch/grad-sync
+//! stream triple per *modeled* rank over a [`StepPlan`], with shared
+//! collective tasks and cross-rank barrier dependencies, so asymmetric
+//! schedules — stragglers, per-node jitter, imbalanced grad-accum groups —
+//! show real cross-rank coupling instead of the congruent-group shortcut.
+//!
+//! Semantics, chosen so the congruent case stays *bit-for-bit* the
+//! single-rank calibrated model:
+//!
+//! * **Shared collectives.** A collective over group `G` is ONE wire
+//!   operation, so the graph holds one task per (group, phase, microbatch),
+//!   priced exactly as [`StepPlan`] prices it — with the full congruent
+//!   world's contention (NIC sharing, group penalties) baked into the
+//!   duration. Every modeled member's consumer depends on it, and it
+//!   depends on every modeled member's readiness: a straggler anywhere in
+//!   the group delays the collective for everyone — the synchronization
+//!   physics Dash et al. blame for Frontier's scaling-efficiency loss.
+//! * **Link-instance contention.** Tasks carry a contention `instance`
+//!   keying the *physical* link they occupy: the level-`k` block index for
+//!   `Intra(k)` (two GCD pairs' gathers ride different IF links and do not
+//!   contend), the shared fabric for `InterNode`. Distinct collectives
+//!   crossing the same instance genuinely compete via the event loop's
+//!   processor sharing — e.g. a late prefetch gather overlapping the
+//!   grad-sync all-to-all on the same node.
+//! * **Congruence collapsing.** Modeling all W ranks of a Frontier-scale
+//!   world is wasteful when most are congruent: [`RankCount::Auto`] keeps
+//!   one representative node per distinct node signature and one rank per
+//!   distinct (multiplier, grad-accum) signature within it. A trivial
+//!   scenario therefore collapses to exactly `StepPlan::build(0)`.
+
+use std::collections::BTreeMap;
+
+use crate::sched::plan::StepPlan;
+use crate::sched::scenario::{RankCount, Scenario};
+use crate::sched::{self, Schedule, StreamKind, Task, TaskGraph, TaskId};
+use crate::topology::{Cluster, LinkClass};
+
+/// A step plan expanded over explicitly modeled ranks.
+#[derive(Debug, Clone)]
+pub struct MultiRankPlan {
+    plan: StepPlan,
+    cluster: Cluster,
+    /// Sorted modeled rank ids (world rank space).
+    modeled: Vec<usize>,
+    /// Per-world-rank compute multipliers (jitter x stragglers).
+    mult: Vec<f64>,
+    /// Per-world-rank grad-accum counts.
+    ga: Vec<usize>,
+}
+
+/// Contention instance of a link class for a group starting at `group_min`:
+/// the aligned block index for intra-node levels, the shared fabric (0) for
+/// inter-node, the rank itself for `Local` (never contends).
+fn instance_of(cluster: &Cluster, class: LinkClass, group_min: usize) -> usize {
+    match class {
+        LinkClass::Local => group_min,
+        LinkClass::Intra(k) => {
+            let k = (k as usize).min(cluster.spec.levels.len() - 1);
+            group_min / cluster.spec.levels[k].span
+        }
+        LinkClass::InterNode => 0,
+    }
+}
+
+/// The synchronization group a sync phase of link class `class` spans for
+/// `rank`: its aligned level-`k` block for `Intra(k)` (ZeRO-topo's per-node
+/// all-to-all), the world for `InterNode`, just the rank for `Local`.
+fn sync_group(cluster: &Cluster, rank: usize, class: LinkClass) -> Vec<usize> {
+    match class {
+        LinkClass::Local => vec![rank],
+        LinkClass::Intra(k) => {
+            let k = (k as usize).min(cluster.spec.levels.len() - 1);
+            cluster.level_group(rank, k)
+        }
+        LinkClass::InterNode => (0..cluster.world_size()).collect(),
+    }
+}
+
+impl MultiRankPlan {
+    /// Expand `plan` over the ranks `scenario` asks for. The plan's
+    /// durations are reused as-is (congruent pricing); the scenario only
+    /// perturbs compute multipliers and per-rank grad-accum counts.
+    pub fn new(plan: &StepPlan, cluster: &Cluster, scenario: &Scenario) -> MultiRankPlan {
+        let world = cluster.world_size();
+        let mult = scenario.compute_multipliers(cluster);
+        let ga = scenario.grad_accums(world, plan.grad_accum);
+        let mut modeled = match scenario.ranks {
+            RankCount::Auto => auto_ranks(cluster, &mult, &ga),
+            RankCount::Count(n) => {
+                let mut m: Vec<usize> = (0..n.min(world)).collect();
+                // scenario-named ranks are always modeled explicitly
+                m.extend(scenario.stragglers.iter().map(|&(r, _)| r).filter(|&r| r < world));
+                m.extend(scenario.imbalance.iter().map(|&(r, _)| r).filter(|&r| r < world));
+                m
+            }
+        };
+        modeled.sort_unstable();
+        modeled.dedup();
+        assert!(!modeled.is_empty());
+        MultiRankPlan { plan: plan.clone(), cluster: cluster.clone(), modeled, mult, ga }
+    }
+
+    /// The explicitly modeled world-rank ids (sorted).
+    pub fn modeled_ranks(&self) -> &[usize] {
+        &self.modeled
+    }
+
+    /// Build the multi-rank step DAG.
+    pub fn build(&self) -> TaskGraph {
+        let p = &self.plan;
+        let mut g = TaskGraph::with_rank_ids(self.modeled.clone());
+        let mpos: BTreeMap<usize, usize> =
+            self.modeled.iter().enumerate().map(|(i, &r)| (r, i)).collect();
+        // per modeled rank, its compute tasks in consumption order
+        let mut consumers: Vec<Vec<TaskId>> = vec![Vec::new(); self.modeled.len()];
+
+        // previous step's §V.D refresh: one world-spanning collective
+        if p.t_update > 0.0 {
+            g.add(Task {
+                label: "update-gather".into(),
+                rank: self.modeled[0],
+                stream: StreamKind::GradSync,
+                work: p.t_update,
+                class: Some(p.class_update),
+                instance: instance_of(&self.cluster, p.class_update, 0),
+                deps: vec![],
+            });
+        }
+
+        // prefetch gate: gather j of rank (position i) may start once
+        // consumer j-1-depth of that rank has finished
+        let gate = |consumers: &[Vec<TaskId>], i: usize, j: usize, ga_r: usize| -> Vec<TaskId> {
+            match p.depth {
+                sched::Depth::Bounded(d) if d < 2 * ga_r => {
+                    let k = j as i64 - 1 - d as i64;
+                    if k >= 0 {
+                        vec![consumers[i][k as usize]]
+                    } else {
+                        vec![]
+                    }
+                }
+                _ => vec![],
+            }
+        };
+
+        let max_ga = self.modeled.iter().map(|&r| self.ga[r]).max().expect("non-empty");
+        for m in 0..max_ga {
+            for (phase, deg, work, class, name, t_compute) in [
+                (0usize, p.d_fwd, p.t_gather_fwd, p.class_fwd, "fwd", p.t_compute_fwd),
+                (1usize, p.d_bwd, p.t_gather_bwd, p.class_bwd, "bwd", p.t_compute_bwd),
+            ] {
+                // modeled members still running microbatch m, by gather group
+                let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+                for &r in &self.modeled {
+                    if m < self.ga[r] {
+                        groups.entry(r / deg.max(1)).or_default().push(r);
+                    }
+                }
+                for (gi, members) in groups {
+                    let mut deps: Vec<TaskId> = Vec::new();
+                    for &r in &members {
+                        for d in gate(&consumers, mpos[&r], 2 * m + phase, self.ga[r]) {
+                            if !deps.contains(&d) {
+                                deps.push(d);
+                            }
+                        }
+                    }
+                    let gather = g.add(Task {
+                        label: format!("gather.{name}[{m}]@g{gi}"),
+                        rank: members[0],
+                        stream: StreamKind::Prefetch,
+                        work,
+                        class: Some(class),
+                        instance: instance_of(&self.cluster, class, gi * deg.max(1)),
+                        deps,
+                    });
+                    for &r in &members {
+                        let c = g.add(Task {
+                            label: format!("compute.{name}[{m}]@r{r}"),
+                            rank: r,
+                            stream: StreamKind::Compute,
+                            work: t_compute * self.mult[r],
+                            class: None,
+                            instance: 0,
+                            deps: vec![gather],
+                        });
+                        consumers[mpos[&r]].push(c);
+                    }
+                }
+            }
+        }
+
+        // gradient-sync phases: one task per synchronization group, gated
+        // by every modeled member's readiness (phase 0: its last compute;
+        // later phases: its previous phase's task)
+        let mut prev_phase: BTreeMap<usize, TaskId> = BTreeMap::new();
+        for (k, phase) in p.sync.iter().enumerate() {
+            let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+            for &r in &self.modeled {
+                let grp = sync_group(&self.cluster, r, phase.class);
+                groups.entry(*grp.iter().min().expect("non-empty group")).or_default().push(r);
+            }
+            let mut next_phase: BTreeMap<usize, TaskId> = BTreeMap::new();
+            for (gmin, members) in groups {
+                let mut deps: Vec<TaskId> = Vec::new();
+                for &r in &members {
+                    let d = if k == 0 {
+                        *consumers[mpos[&r]].last().expect("grad_accum >= 1")
+                    } else {
+                        prev_phase[&r]
+                    };
+                    if !deps.contains(&d) {
+                        deps.push(d);
+                    }
+                }
+                let t = g.add(Task {
+                    label: format!("grad-sync[{k}]@g{gmin}"),
+                    rank: members[0],
+                    stream: StreamKind::GradSync,
+                    work: phase.seconds,
+                    class: Some(phase.class),
+                    instance: instance_of(&self.cluster, phase.class, gmin),
+                    deps,
+                });
+                for &r in &members {
+                    next_phase.insert(r, t);
+                }
+            }
+            prev_phase = next_phase;
+        }
+        g
+    }
+
+    /// Build and run the event loop.
+    pub fn simulate(&self) -> Schedule {
+        sched::simulate(self.build())
+    }
+}
+
+/// Congruence collapsing: keep one representative node per distinct node
+/// signature (the ordered tuple of its ranks' signatures), and within each
+/// kept node one rank per distinct (multiplier, grad-accum) signature.
+fn auto_ranks(cluster: &Cluster, mult: &[f64], ga: &[usize]) -> Vec<usize> {
+    let wpn = cluster.workers_per_node();
+    let sig = |r: usize| (mult[r].to_bits(), ga[r]);
+    let mut kept_nodes: BTreeMap<Vec<(u64, usize)>, usize> = BTreeMap::new();
+    for node in 0..cluster.nodes {
+        let nsig: Vec<(u64, usize)> = (node * wpn..(node + 1) * wpn).map(sig).collect();
+        kept_nodes.entry(nsig).or_insert(node);
+    }
+    let mut nodes: Vec<usize> = kept_nodes.into_values().collect();
+    nodes.sort_unstable();
+    let mut modeled = Vec::new();
+    for node in nodes {
+        let mut seen: Vec<(u64, usize)> = Vec::new();
+        for r in node * wpn..(node + 1) * wpn {
+            if !seen.contains(&sig(r)) {
+                seen.push(sig(r));
+                modeled.push(r);
+            }
+        }
+    }
+    modeled.sort_unstable();
+    modeled
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::cost::{CommEfficiency, CostModel};
+    use crate::sched::Depth;
+    use crate::sharding::{Scheme, ShardingSpec};
+
+    fn plan(scheme: Scheme, nodes: usize, depth: Depth) -> (StepPlan, Cluster) {
+        let cluster = Cluster::frontier(nodes);
+        let cost = CostModel::with_efficiency(cluster.clone(), CommEfficiency::rccl_frontier());
+        let spec = ShardingSpec::resolve(scheme, &cluster).unwrap();
+        let p = StepPlan::from_protocol(
+            &cost,
+            scheme,
+            &spec,
+            1_000_000_000,
+            256,
+            4,
+            2.0,
+            depth,
+        );
+        (p, cluster)
+    }
+
+    #[test]
+    fn trivial_scenario_collapses_to_one_rank() {
+        let (p, cluster) = plan(Scheme::ZeroTopo { sec_degree: 2 }, 4, Depth::Infinite);
+        let mr = MultiRankPlan::new(&p, &cluster, &Scenario::default());
+        assert_eq!(mr.modeled_ranks(), &[0]);
+        // bit-for-bit the single-rank plan
+        assert_eq!(mr.simulate().makespan(), p.simulate().makespan());
+    }
+
+    #[test]
+    fn congruent_explicit_ranks_match_single_rank() {
+        for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }] {
+            let (p, cluster) = plan(scheme, 2, Depth::Infinite);
+            let single = p.simulate().makespan();
+            for n in [1, 2, 8, 16] {
+                let sc = Scenario { ranks: RankCount::Count(n), ..Default::default() };
+                let mk = MultiRankPlan::new(&p, &cluster, &sc).simulate().makespan();
+                assert!(
+                    (mk - single).abs() <= 1e-12 * single.max(1.0),
+                    "{scheme:?} ranks={n}: {mk} vs {single}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn straggler_delays_the_whole_step() {
+        let (p, cluster) = plan(Scheme::ZeroTopo { sec_degree: 2 }, 4, Depth::Infinite);
+        let base = p.simulate().makespan();
+        let sc = Scenario { stragglers: vec![(5, 1.5)], ..Default::default() };
+        let mr = MultiRankPlan::new(&p, &cluster, &sc);
+        assert!(mr.modeled_ranks().contains(&5));
+        let sched = mr.simulate();
+        assert!(sched.makespan() > base * 1.01, "{} vs {base}", sched.makespan());
+        assert_eq!(sched.slowest_rank(), 5);
+        // a non-straggler rank spends the gap waiting on its peer
+        let peer = *mr.modeled_ranks().iter().find(|&&r| r != 5).unwrap();
+        assert!(sched.skew_wait(peer) > 0.0);
+        assert!(sched.skew_wait(5) < sched.skew_wait(peer));
+    }
+
+    #[test]
+    fn auto_collapse_keeps_straggler_node_plus_exemplar() {
+        let (p, cluster) = plan(Scheme::Zero3, 4, Depth::Infinite);
+        let sc = Scenario { stragglers: vec![(5, 1.3)], ..Default::default() };
+        let mr = MultiRankPlan::new(&p, &cluster, &sc);
+        // node 0 (rep + straggler signatures) + one exemplar node rank
+        assert_eq!(mr.modeled_ranks(), &[0, 5, 8]);
+    }
+
+    #[test]
+    fn imbalanced_grad_accum_stretches_makespan() {
+        let (p, cluster) = plan(Scheme::ZeroPP, 2, Depth::Infinite);
+        let base = p.simulate().makespan();
+        let sc = Scenario { imbalance: vec![(3, 6)], ..Default::default() };
+        let sched = MultiRankPlan::new(&p, &cluster, &sc).simulate();
+        assert!(sched.makespan() > base, "{} vs {base}", sched.makespan());
+        assert_eq!(sched.slowest_rank(), 3);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_spreads_nodes() {
+        let (p, cluster) = plan(Scheme::ZeroTopo { sec_degree: 2 }, 4, Depth::Infinite);
+        let sc = Scenario { jitter_sigma: 0.1, seed: 7, ..Default::default() };
+        let a = MultiRankPlan::new(&p, &cluster, &sc);
+        let b = MultiRankPlan::new(&p, &cluster, &sc);
+        // per-node jitter collapses to one rank per node
+        assert_eq!(a.modeled_ranks().len(), 4);
+        let sa = a.simulate();
+        let sb = b.simulate();
+        assert_eq!(sa.makespan(), sb.makespan());
+        for (x, y) in sa.spans().iter().zip(sb.spans()) {
+            assert_eq!(x.start, y.start);
+            assert_eq!(x.end, y.end);
+        }
+        // a different seed moves the makespan (a.s.)
+        let sc2 = Scenario { seed: 8, ..sc };
+        assert_ne!(MultiRankPlan::new(&p, &cluster, &sc2).simulate().makespan(), sa.makespan());
+    }
+
+    #[test]
+    fn gather_instances_separate_physical_links() {
+        // two modeled GCD pairs: their pair gathers ride different IF links
+        let (p, cluster) = plan(Scheme::ZeroTopo { sec_degree: 2 }, 2, Depth::Infinite);
+        let sc = Scenario { ranks: RankCount::Count(4), ..Default::default() };
+        let g = MultiRankPlan::new(&p, &cluster, &sc).build();
+        let gathers: Vec<&Task> = g
+            .tasks()
+            .iter()
+            .filter(|t| t.label.starts_with("gather.fwd[0]"))
+            .collect();
+        assert_eq!(gathers.len(), 2);
+        assert_eq!(gathers[0].class, gathers[1].class);
+        assert_ne!(gathers[0].instance, gathers[1].instance);
+    }
+}

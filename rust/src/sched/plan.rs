@@ -52,6 +52,11 @@ pub struct StepPlan {
     pub t_compute_bwd: f64,
     /// Sequential gradient-sync phases at the accumulation boundary.
     pub sync: Vec<SyncPhase>,
+    /// Gather group degrees (forward / backward) — the congruent-group
+    /// shapes a multi-rank builder needs to place each rank's gathers
+    /// ([`crate::sched::multi::MultiRankPlan`]).
+    pub d_fwd: usize,
+    pub d_bwd: usize,
 }
 
 impl StepPlan {
@@ -164,6 +169,8 @@ impl StepPlan {
             t_compute_fwd: compute_s / (3.0 * ga as f64),
             t_compute_bwd: 2.0 * compute_s / (3.0 * ga as f64),
             sync,
+            d_fwd: spec.weights,
+            d_bwd: bwd_degree,
         }
     }
 
@@ -202,6 +209,7 @@ impl StepPlan {
                 stream: StreamKind::GradSync,
                 work: self.t_update,
                 class: Some(self.class_update),
+                instance: 0,
                 deps: vec![],
             });
         }
@@ -229,6 +237,7 @@ impl StepPlan {
                 stream: StreamKind::Prefetch,
                 work: self.t_gather_fwd,
                 class: Some(self.class_fwd),
+                instance: 0,
                 deps: gate(&consumers, 2 * m),
             });
             let cf = g.add(Task {
@@ -237,6 +246,7 @@ impl StepPlan {
                 stream: StreamKind::Compute,
                 work: self.t_compute_fwd,
                 class: None,
+                instance: 0,
                 deps: vec![f],
             });
             consumers.push(cf);
@@ -246,6 +256,7 @@ impl StepPlan {
                 stream: StreamKind::Prefetch,
                 work: self.t_gather_bwd,
                 class: Some(self.class_bwd),
+                instance: 0,
                 deps: gate(&consumers, 2 * m + 1),
             });
             let cb = g.add(Task {
@@ -254,6 +265,7 @@ impl StepPlan {
                 stream: StreamKind::Compute,
                 work: self.t_compute_bwd,
                 class: None,
+                instance: 0,
                 deps: vec![b],
             });
             consumers.push(cb);
@@ -266,6 +278,7 @@ impl StepPlan {
                 stream: StreamKind::GradSync,
                 work: phase.seconds,
                 class: Some(phase.class),
+                instance: 0,
                 deps: vec![prev],
             });
         }

@@ -1,0 +1,223 @@
+//! Scenario injectors for multi-rank step graphs: stragglers (per-rank
+//! compute multipliers), seeded per-node jitter, and imbalanced
+//! grad-accumulation groups — the asymmetries Dash et al. and Wang et al.
+//! identify as the real limiters of scaling efficiency, which a
+//! single-representative-rank step graph cannot express.
+//!
+//! Everything is deterministic: jitter multipliers derive from a seeded
+//! [`Rng`] (one lognormal draw per node, in node order), never from wall
+//! clocks, so two simulations of the same scenario are bit-identical.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::topology::Cluster;
+use crate::util::rng::Rng;
+
+/// How many ranks the multi-rank builder models explicitly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RankCount {
+    /// Collapse congruent groups: model one representative node per
+    /// distinct node signature, one representative rank per distinct rank
+    /// signature within it. A trivial scenario collapses to a single rank;
+    /// per-node jitter keeps one rank per node; a straggler keeps its node
+    /// plus one exemplar node.
+    Auto,
+    /// Model the first `n` ranks explicitly (scenario-named ranks are
+    /// always added on top).
+    Count(usize),
+}
+
+impl RankCount {
+    pub fn parse(s: &str) -> Option<RankCount> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(RankCount::Auto),
+            other => other.parse::<usize>().ok().filter(|&n| n > 0).map(RankCount::Count),
+        }
+    }
+}
+
+impl FromStr for RankCount {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<RankCount, String> {
+        RankCount::parse(s).ok_or_else(|| format!("bad rank count '{s}' (use N >= 1 or 'auto')"))
+    }
+}
+
+impl fmt::Display for RankCount {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RankCount::Auto => f.write_str("auto"),
+            RankCount::Count(n) => write!(f, "{n}"),
+        }
+    }
+}
+
+/// A deterministic asymmetry recipe for one simulated step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub ranks: RankCount,
+    /// `(rank, compute multiplier)` — e.g. `(5, 1.2)` slows rank 5's
+    /// kernels by 20%. Multipliers compose with jitter.
+    pub stragglers: Vec<(usize, f64)>,
+    /// Lognormal per-node compute jitter: each node draws `exp(sigma * z)`,
+    /// `z ~ N(0,1)`, shared by all its ranks. 0 disables.
+    pub jitter_sigma: f64,
+    /// Seed for the jitter draws.
+    pub seed: u64,
+    /// `(rank, grad_accum)` overrides — imbalanced accumulation groups
+    /// (some ranks run more microbatches before the sync boundary).
+    pub imbalance: Vec<(usize, usize)>,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            ranks: RankCount::Auto,
+            stragglers: Vec::new(),
+            jitter_sigma: 0.0,
+            seed: 42,
+            imbalance: Vec::new(),
+        }
+    }
+}
+
+impl Scenario {
+    /// True when no injector is active (every rank congruent).
+    pub fn is_trivial(&self) -> bool {
+        self.stragglers.is_empty() && self.jitter_sigma == 0.0 && self.imbalance.is_empty()
+    }
+
+    /// Per-rank compute multipliers over the whole world: node jitter
+    /// (seeded, in node order) composed with explicit stragglers.
+    pub fn compute_multipliers(&self, cluster: &Cluster) -> Vec<f64> {
+        let world = cluster.world_size();
+        let wpn = cluster.workers_per_node();
+        let mut mult = vec![1.0; world];
+        if self.jitter_sigma > 0.0 {
+            let mut rng = Rng::new(self.seed);
+            for node in 0..cluster.nodes {
+                let m = (self.jitter_sigma * rng.normal()).exp();
+                for r in node * wpn..(node + 1) * wpn {
+                    mult[r] *= m;
+                }
+            }
+        }
+        for &(r, m) in &self.stragglers {
+            assert!(m > 0.0 && m.is_finite(), "bad straggler multiplier {m}");
+            if r < world {
+                mult[r] *= m;
+            }
+        }
+        mult
+    }
+
+    /// Per-rank grad-accum counts: `base` everywhere, overridden by the
+    /// imbalance list (overrides clamp to >= 1).
+    pub fn grad_accums(&self, world: usize, base: usize) -> Vec<usize> {
+        let mut ga = vec![base.max(1); world];
+        for &(r, g) in &self.imbalance {
+            if r < world {
+                ga[r] = g.max(1);
+            }
+        }
+        ga
+    }
+
+    /// Parse a `rank:mult[,rank:mult...]` list (e.g. `5:1.2,17:1.5`).
+    pub fn parse_stragglers(s: &str) -> Result<Vec<(usize, f64)>, String> {
+        parse_pairs(s, "straggler", |v: f64| v > 0.0 && v.is_finite())
+    }
+
+    /// Parse a `rank:grad_accum[,...]` list (e.g. `3:4`).
+    pub fn parse_imbalance(s: &str) -> Result<Vec<(usize, usize)>, String> {
+        parse_pairs(s, "imbalance", |v: usize| v >= 1)
+    }
+}
+
+fn parse_pairs<T: FromStr + Copy>(
+    s: &str,
+    what: &str,
+    ok: impl Fn(T) -> bool,
+) -> Result<Vec<(usize, T)>, String> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (r, v) = part
+            .split_once(':')
+            .ok_or_else(|| format!("bad {what} '{part}' (want rank:value)"))?;
+        let rank: usize =
+            r.trim().parse().map_err(|_| format!("bad {what} rank '{r}'"))?;
+        let val: T = v.trim().parse().map_err(|_| format!("bad {what} value '{v}'"))?;
+        if !ok(val) {
+            return Err(format!("out-of-range {what} value '{v}'"));
+        }
+        out.push((rank, val));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_count_parses() {
+        assert_eq!(RankCount::parse("auto"), Some(RankCount::Auto));
+        assert_eq!(RankCount::parse("4"), Some(RankCount::Count(4)));
+        assert_eq!(RankCount::parse("0"), None);
+        assert_eq!(RankCount::parse("x"), None);
+        assert_eq!(RankCount::Auto.to_string(), "auto");
+        assert_eq!("8".parse::<RankCount>().unwrap(), RankCount::Count(8));
+    }
+
+    #[test]
+    fn multipliers_compose_jitter_and_stragglers() {
+        let cluster = Cluster::frontier(2);
+        let mut sc = Scenario { jitter_sigma: 0.1, ..Default::default() };
+        sc.stragglers = vec![(3, 2.0)];
+        let m = sc.compute_multipliers(&cluster);
+        assert_eq!(m.len(), 16);
+        // per-node jitter: all ranks of a node share the draw
+        for r in 1..8 {
+            if r != 3 {
+                assert_eq!(m[r], m[0], "rank {r}");
+            }
+        }
+        assert!((m[3] / m[0] - 2.0).abs() < 1e-12);
+        // distinct nodes get distinct draws (a.s.)
+        assert_ne!(m[0], m[8]);
+        // deterministic across calls
+        assert_eq!(m, sc.compute_multipliers(&cluster));
+    }
+
+    #[test]
+    fn trivial_scenario_has_unit_multipliers() {
+        let cluster = Cluster::frontier(2);
+        let sc = Scenario::default();
+        assert!(sc.is_trivial());
+        assert!(sc.compute_multipliers(&cluster).iter().all(|&m| m == 1.0));
+        assert_eq!(sc.grad_accums(4, 3), vec![3, 3, 3, 3]);
+    }
+
+    #[test]
+    fn pair_lists_parse() {
+        assert_eq!(Scenario::parse_stragglers("5:1.2, 7:2").unwrap(), vec![(5, 1.2), (7, 2.0)]);
+        assert_eq!(Scenario::parse_imbalance("3:4").unwrap(), vec![(3, 4)]);
+        assert!(Scenario::parse_stragglers("5").is_err());
+        assert!(Scenario::parse_stragglers("5:-1").is_err());
+        assert!(Scenario::parse_imbalance("3:0").is_err());
+        assert_eq!(Scenario::parse_stragglers("").unwrap(), vec![]);
+    }
+
+    #[test]
+    fn grad_accum_overrides() {
+        let sc = Scenario { imbalance: vec![(1, 5), (9, 2)], ..Default::default() };
+        let ga = sc.grad_accums(4, 3);
+        assert_eq!(ga, vec![3, 5, 3, 3]); // rank 9 out of world: ignored
+    }
+}

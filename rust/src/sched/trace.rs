@@ -46,9 +46,13 @@ pub fn chrome_trace(named: &[(String, &Schedule)]) -> String {
         }
         for span in sched.spans() {
             let task = sched.graph().task(span.task);
-            let mut args = vec![("stream", Json::str(task.stream.name()))];
+            let mut args = vec![
+                ("stream", Json::str(task.stream.name())),
+                ("rank", Json::from(task.rank)),
+            ];
             if let Some(c) = task.class {
                 args.push(("link_class", Json::str(c.to_string())));
+                args.push(("link_instance", Json::from(task.instance)));
             }
             events.push(Json::obj(vec![
                 ("name", Json::str(task.label.clone())),
@@ -83,6 +87,7 @@ mod tests {
             stream: StreamKind::Prefetch,
             work: 1.0,
             class: Some(crate::topology::LinkClass::InterNode),
+            instance: 0,
             deps: vec![],
         });
         g.add(Task {
@@ -91,6 +96,7 @@ mod tests {
             stream: StreamKind::Compute,
             work: 2.0,
             class: None,
+            instance: 0,
             deps: vec![a],
         });
         let sched = simulate(g);
@@ -111,5 +117,34 @@ mod tests {
             .unwrap();
         assert_eq!(fwd.get("ts").and_then(|t| t.as_f64()), Some(1e6));
         assert_eq!(fwd.get("dur").and_then(|t| t.as_f64()), Some(2e6));
+        assert_eq!(fwd.at(&["args", "rank"]).and_then(|r| r.as_usize()), Some(0));
+    }
+
+    #[test]
+    fn multi_rank_trace_gets_one_lane_per_rank_stream() {
+        let mut g = TaskGraph::new();
+        for rank in [0usize, 3] {
+            g.add(Task {
+                label: format!("c@r{rank}"),
+                rank,
+                stream: StreamKind::Compute,
+                work: 1.0,
+                class: None,
+                instance: 0,
+                deps: vec![],
+            });
+        }
+        let sched = simulate(g);
+        let out = chrome_trace(&[("multi".to_string(), &sched)]);
+        let parsed = Json::parse(&out).expect("valid JSON");
+        let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        // 1 process_name + 2 ranks x 3 thread_name + 2 task events
+        assert_eq!(events.len(), 9);
+        let tids: Vec<usize> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .map(|e| e.get("tid").and_then(|t| t.as_usize()).unwrap())
+            .collect();
+        assert_eq!(tids, vec![0, 9]); // rank * 3 + stream
     }
 }

@@ -28,7 +28,9 @@ use crate::comm::cost::CommEfficiency;
 use crate::comm::{CommWorld, Wire};
 use crate::metrics::Throughput;
 use crate::model::TransformerSpec;
+use crate::sched::multi::MultiRankPlan;
 use crate::sched::plan::StepPlan;
+use crate::sched::scenario::Scenario;
 use crate::sched::{Depth, Schedule};
 use crate::sharding::{shard_groups, Scheme, ShardingSpec};
 use crate::topology::{Cluster, MachineSpec};
@@ -81,14 +83,15 @@ pub struct StepBreakdown {
     pub inter_node_bytes: u64,
 }
 
-/// Simulate one (model, scheme, cluster) point and keep the schedule —
-/// the full stream timeline — for trace export / stall attribution.
-pub fn simulate_step_schedule(
+/// Price one (model, scheme, cluster) point: charge the full protocol to
+/// the byte ledger and derive the step's task-graph durations. Shared by
+/// the single-rank and multi-rank simulation entry points.
+fn charge_and_plan(
     model: &TransformerSpec,
     scheme: Scheme,
     cluster: &Cluster,
     cfg: &SimConfig,
-) -> (StepBreakdown, Schedule) {
+) -> (StepPlan, f64, u64) {
     let spec = ShardingSpec::resolve(scheme, cluster).expect("valid scheme");
     let world = cluster.world_size();
     let psi = model.n_params() as usize;
@@ -176,7 +179,7 @@ pub fn simulate_step_schedule(
         }
     }
 
-    // ---- step clock: schedule the task DAG ----
+    // ---- step clock inputs: the task-graph durations ----
     let plan = StepPlan::from_protocol(
         cost,
         scheme,
@@ -187,16 +190,55 @@ pub fn simulate_step_schedule(
         compute_s,
         cfg.prefetch_depth,
     );
-    let schedule = plan.simulate();
+    let inter_node_bytes = cost.inter_node_bytes();
+    (plan, compute_s, inter_node_bytes)
+}
 
-    let breakdown = StepBreakdown {
+fn breakdown_of(
+    plan: &StepPlan,
+    compute_s: f64,
+    inter_node_bytes: u64,
+    step_s: f64,
+) -> StepBreakdown {
+    StepBreakdown {
         compute_s,
         prefetchable_s: plan.prefetchable_s(),
         grad_sync_s: plan.grad_sync_s(),
-        step_s: schedule.makespan(),
-        grad_accum: ga as usize,
-        inter_node_bytes: cost.inter_node_bytes(),
-    };
+        step_s,
+        grad_accum: plan.grad_accum,
+        inter_node_bytes,
+    }
+}
+
+/// Simulate one (model, scheme, cluster) point and keep the schedule —
+/// the full stream timeline — for trace export / stall attribution.
+pub fn simulate_step_schedule(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+) -> (StepBreakdown, Schedule) {
+    let (plan, compute_s, inb) = charge_and_plan(model, scheme, cluster, cfg);
+    let schedule = plan.simulate();
+    let breakdown = breakdown_of(&plan, compute_s, inb, schedule.makespan());
+    (breakdown, schedule)
+}
+
+/// Simulate one point under a multi-rank [`Scenario`] (stragglers, jitter,
+/// imbalanced grad-accum, explicit `--ranks`). A trivial scenario with
+/// auto rank collapsing reproduces [`simulate_step_schedule`] bit-for-bit;
+/// asymmetric ones return the cross-rank schedule whose makespan the
+/// slowest rank sets.
+pub fn simulate_step_scenario(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+    scenario: &Scenario,
+) -> (StepBreakdown, Schedule) {
+    let (plan, compute_s, inb) = charge_and_plan(model, scheme, cluster, cfg);
+    let schedule = MultiRankPlan::new(&plan, cluster, scenario).simulate();
+    let breakdown = breakdown_of(&plan, compute_s, inb, schedule.makespan());
     (breakdown, schedule)
 }
 
@@ -226,6 +268,34 @@ pub fn scaling_series(
             let cluster = Cluster::new(machine.clone(), nodes);
             let world = cluster.world_size();
             let b = simulate_step(model, scheme, &cluster, cfg);
+            let tokens = (b.grad_accum * cfg.micro_batch * model.seq * world) as f64;
+            Throughput {
+                gcds: world,
+                step_seconds: b.step_s,
+                flops_per_step: model.flops_per_token() * tokens,
+                sequences_per_step: tokens / model.seq as f64,
+            }
+        })
+        .collect()
+}
+
+/// [`scaling_series`] under a multi-rank scenario: every point's step time
+/// is the cross-rank makespan. With a trivial scenario this equals the
+/// plain series bit-for-bit (congruence collapsing).
+pub fn scaling_series_scenario(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    machine: &MachineSpec,
+    node_counts: &[usize],
+    cfg: &SimConfig,
+    scenario: &Scenario,
+) -> Vec<Throughput> {
+    node_counts
+        .iter()
+        .map(|&nodes| {
+            let cluster = Cluster::new(machine.clone(), nodes);
+            let world = cluster.world_size();
+            let (b, _) = simulate_step_scenario(model, scheme, &cluster, cfg, scenario);
             let tokens = (b.grad_accum * cfg.micro_batch * model.seq * world) as f64;
             Throughput {
                 gcds: world,
@@ -416,6 +486,72 @@ mod tests {
                 assert!(b.step_s <= last + 1e-9, "{scheme:?} {depth:?}: {} > {last}", b.step_s);
                 last = b.step_s;
             }
+        }
+    }
+
+    #[test]
+    fn trivial_scenario_reproduces_single_rank_step() {
+        let model = TransformerSpec::neox20b();
+        let cfg = SimConfig::default();
+        let c = Cluster::frontier(48);
+        for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }] {
+            let a = simulate_step(&model, scheme, &c, &cfg);
+            let (b, sched) =
+                simulate_step_scenario(&model, scheme, &c, &cfg, &Scenario::default());
+            assert_eq!(a.step_s, b.step_s, "{scheme:?}");
+            assert_eq!(sched.ranks(), vec![0]);
+        }
+    }
+
+    #[test]
+    fn straggler_scenario_stretches_step_and_attributes_skew() {
+        // acceptance: one rank at 1.2x compute measurably stretches the
+        // 20B/384-GCD step and shows up in the per-rank attribution
+        let model = TransformerSpec::neox20b();
+        let cfg = SimConfig::default();
+        let c = Cluster::frontier(48);
+        for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }] {
+            let base = simulate_step(&model, scheme, &c, &cfg);
+            let sc = Scenario { stragglers: vec![(5, 1.2)], ..Default::default() };
+            let (b, sched) = simulate_step_scenario(&model, scheme, &c, &cfg, &sc);
+            assert!(
+                b.step_s > base.step_s * 1.005,
+                "{scheme:?}: {} vs {}",
+                b.step_s,
+                base.step_s
+            );
+            assert_eq!(sched.slowest_rank(), 5, "{scheme:?}");
+            // the victims' wait is visible: either pure skew (compute-bound
+            // schemes) or extra class-attributed stall (comm-bound ones)
+            let victim = *sched.ranks().iter().find(|&&r| r != 5).unwrap();
+            let victim_stall = sched.skew_wait(victim)
+                + sched.stall_by_class(victim).values().sum::<f64>();
+            let straggler_stall = sched.skew_wait(5)
+                + sched.stall_by_class(5).values().sum::<f64>();
+            assert!(
+                victim_stall > straggler_stall,
+                "{scheme:?}: victim {victim_stall} vs straggler {straggler_stall}"
+            );
+        }
+    }
+
+    #[test]
+    fn scenario_scaling_series_matches_plain_when_trivial() {
+        let model = TransformerSpec::neox10b();
+        let cfg = SimConfig::default();
+        let frontier = MachineSpec::frontier_mi250x();
+        let scheme = Scheme::ZeroTopo { sec_degree: 2 };
+        let plain = scaling_series(&model, scheme, &frontier, &[2, 4], &cfg);
+        let sc = scaling_series_scenario(
+            &model,
+            scheme,
+            &frontier,
+            &[2, 4],
+            &cfg,
+            &Scenario::default(),
+        );
+        for (a, b) in plain.iter().zip(&sc) {
+            assert_eq!(a.step_seconds, b.step_seconds);
         }
     }
 

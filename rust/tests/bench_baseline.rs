@@ -1,0 +1,49 @@
+//! Perf guardrail twin of `zero-topo calibrate --check`: the committed
+//! `BENCH_baseline.json` (20B @ 48 nodes, frontier + dgx builtins) must
+//! stay within its tolerance of what the simulator computes today, so a
+//! refactor cannot silently move the calibrated Fig 7 numbers.
+
+use std::path::PathBuf;
+
+use zero_topo::model::TransformerSpec;
+use zero_topo::sharding::Scheme;
+use zero_topo::sim::{simulate_step, SimConfig};
+use zero_topo::topology::{Cluster, MachineSpec};
+use zero_topo::util::json::Json;
+
+fn baseline_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_baseline.json")
+}
+
+#[test]
+fn committed_baseline_matches_simulator() {
+    let text = std::fs::read_to_string(baseline_path()).expect("BENCH_baseline.json committed");
+    let json = Json::parse(&text).expect("valid baseline JSON");
+    let nodes = json.get("nodes").and_then(|n| n.as_usize()).expect("nodes");
+    let tol = json.get("tolerance").and_then(|t| t.as_f64()).expect("tolerance");
+    let model = TransformerSpec::by_name(
+        json.get("model").and_then(|m| m.as_str()).expect("model"),
+    )
+    .expect("known model");
+    let entries = json.get("entries").and_then(|e| e.as_arr()).expect("entries");
+    assert!(entries.len() >= 6, "expected frontier+dgx x 3 schemes");
+
+    let cfg = SimConfig::default();
+    for e in entries {
+        let mname = e.get("machine").and_then(|m| m.as_str()).expect("machine");
+        let sname = e.get("scheme").and_then(|s| s.as_str()).expect("scheme");
+        let base = e.get("step_s").and_then(|s| s.as_f64()).expect("step_s");
+        let scheme = Scheme::parse(sname).unwrap_or_else(|| panic!("unknown scheme {sname}"));
+        let spec = MachineSpec::resolve(mname).expect("known machine");
+        let b = simulate_step(&model, scheme, &Cluster::new(spec, nodes), &cfg);
+        let drift = (b.step_s - base) / base;
+        assert!(
+            drift.abs() <= tol,
+            "{mname}/{sname}: {base}s -> {}s ({:+.3}% > {:.1}%) — \
+             if intentional, regenerate with `cargo run -- calibrate --write`",
+            b.step_s,
+            drift * 100.0,
+            tol * 100.0
+        );
+    }
+}

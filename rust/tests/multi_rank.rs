@@ -1,0 +1,151 @@
+//! Multi-rank determinism gates: a 1-rank `MultiRankPlan` with zero jitter
+//! must reproduce the single-rank `StepPlan` makespan bit-for-bit across
+//! random (scheme, scale, depth, grad-accum) points, seeded jitter must be
+//! reproducible across two simulations, and the acceptance scenario (one
+//! rank at 1.2x compute at 20B/384 GCDs) must stretch the makespan and
+//! show up in the per-rank attribution.
+
+use zero_topo::comm::cost::{CommEfficiency, CostModel};
+use zero_topo::model::TransformerSpec;
+use zero_topo::sched::multi::MultiRankPlan;
+use zero_topo::sched::plan::StepPlan;
+use zero_topo::sched::scenario::{RankCount, Scenario};
+use zero_topo::sched::Depth;
+use zero_topo::sharding::{Scheme, ShardingSpec};
+use zero_topo::sim::{simulate_step, simulate_step_scenario, SimConfig};
+use zero_topo::testing::check;
+use zero_topo::topology::Cluster;
+
+fn plan_for(scheme: Scheme, nodes: usize, ga: usize, depth: Depth) -> (StepPlan, Cluster) {
+    let cluster = Cluster::frontier(nodes);
+    let cost = CostModel::with_efficiency(cluster.clone(), CommEfficiency::rccl_frontier());
+    let spec = ShardingSpec::resolve(scheme, &cluster).unwrap();
+    let plan =
+        StepPlan::from_protocol(&cost, scheme, &spec, 2_000_000_000, 256, ga, 3.0, depth);
+    (plan, cluster)
+}
+
+#[test]
+fn one_rank_multirank_reproduces_stepplan_bit_for_bit() {
+    let schemes = [
+        Scheme::Zero3,
+        Scheme::ZeroPP,
+        Scheme::ZeroTopo { sec_degree: 2 },
+        Scheme::ZeroTopo { sec_degree: 8 },
+        Scheme::Zero1,
+        Scheme::Mics { group: 8 },
+    ];
+    let depths = [Depth::Bounded(0), Depth::Bounded(1), Depth::Bounded(3), Depth::Infinite];
+    check("1-rank MultiRankPlan == StepPlan", 60, |g| {
+        let scheme = *g.pick(&schemes);
+        let nodes = g.usize_in(1, 6);
+        let ga = g.usize_in(1, 6);
+        let depth = *g.pick(&depths);
+        let (plan, cluster) = plan_for(scheme, nodes, ga, depth);
+        let single = plan.simulate();
+        let sc = Scenario { ranks: RankCount::Count(1), ..Default::default() };
+        let multi = MultiRankPlan::new(&plan, &cluster, &sc);
+        assert_eq!(multi.modeled_ranks(), &[0]);
+        let m = multi.simulate();
+        // bit-for-bit: same task count, same spans, same makespan
+        assert_eq!(single.makespan(), m.makespan(), "{scheme:?} n={nodes} ga={ga} {depth:?}");
+        assert_eq!(single.spans().len(), m.spans().len());
+        for (a, b) in single.spans().iter().zip(m.spans()) {
+            assert_eq!(a.start, b.start, "{scheme:?} n={nodes} ga={ga} {depth:?}");
+            assert_eq!(a.end, b.end, "{scheme:?} n={nodes} ga={ga} {depth:?}");
+        }
+    });
+}
+
+#[test]
+fn congruent_explicit_ranks_keep_the_makespan() {
+    // modeling more congruent ranks never changes the step time: shared
+    // collectives + per-instance contention reproduce the calibrated clock
+    check("congruent ranks keep makespan", 40, |g| {
+        let schemes =
+            [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }];
+        let scheme = *g.pick(&schemes);
+        let nodes = g.usize_in(1, 4);
+        let (plan, cluster) = plan_for(scheme, nodes, 4, Depth::Infinite);
+        let single = plan.simulate().makespan();
+        let n = g.usize_in(1, cluster.world_size());
+        let sc = Scenario { ranks: RankCount::Count(n), ..Default::default() };
+        let mk = MultiRankPlan::new(&plan, &cluster, &sc).simulate().makespan();
+        assert!(
+            (mk - single).abs() <= 1e-12 * single.max(1.0),
+            "{scheme:?} nodes={nodes} ranks={n}: {mk} vs {single}"
+        );
+    });
+}
+
+#[test]
+fn seeded_jitter_is_reproducible_across_simulations() {
+    check("seeded jitter reproducible", 30, |g| {
+        let nodes = g.usize_in(2, 6);
+        let seed = g.i64_in(0, 1 << 40) as u64;
+        let sigma = 0.01 + 0.2 * g.f64_unit();
+        let (plan, cluster) =
+            plan_for(Scheme::ZeroTopo { sec_degree: 2 }, nodes, 4, Depth::Infinite);
+        let sc = Scenario { jitter_sigma: sigma, seed, ..Default::default() };
+        let a = MultiRankPlan::new(&plan, &cluster, &sc).simulate();
+        let b = MultiRankPlan::new(&plan, &cluster, &sc).simulate();
+        assert_eq!(a.makespan(), b.makespan(), "seed={seed} sigma={sigma}");
+        assert_eq!(a.spans().len(), b.spans().len());
+        for (x, y) in a.spans().iter().zip(b.spans()) {
+            assert_eq!(x.start, y.start);
+            assert_eq!(x.end, y.end);
+        }
+        // jitter simulates at one modeled rank per node
+        assert_eq!(a.ranks().len(), nodes);
+    });
+}
+
+#[test]
+fn acceptance_straggler_at_20b_384_gcds() {
+    // ISSUE acceptance: `--ranks 1` matches the single-rank step within
+    // 0.1% while a 1.2x straggler measurably stretches the makespan and
+    // shows up in the per-rank stall attribution
+    let model = TransformerSpec::neox20b();
+    let cfg = SimConfig::default();
+    let cluster = Cluster::frontier(48);
+    for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }] {
+        let base = simulate_step(&model, scheme, &cluster, &cfg);
+        let one = Scenario { ranks: RankCount::Count(1), ..Default::default() };
+        let (b1, _) = simulate_step_scenario(&model, scheme, &cluster, &cfg, &one);
+        assert!(
+            (b1.step_s - base.step_s).abs() <= 1e-3 * base.step_s,
+            "{scheme:?}: ranks=1 {} vs single {}",
+            b1.step_s,
+            base.step_s
+        );
+        let sc = Scenario { stragglers: vec![(5, 1.2)], ..Default::default() };
+        let (bs, sched) = simulate_step_scenario(&model, scheme, &cluster, &cfg, &sc);
+        assert!(bs.step_s > base.step_s, "{scheme:?}");
+        assert_eq!(sched.slowest_rank(), 5, "{scheme:?}");
+        let victim = *sched.ranks().iter().find(|&&r| r != 5).unwrap();
+        let victim_wait =
+            sched.skew_wait(victim) + sched.stall_by_class(victim).values().sum::<f64>();
+        let straggler_wait =
+            sched.skew_wait(5) + sched.stall_by_class(5).values().sum::<f64>();
+        assert!(
+            victim_wait > straggler_wait,
+            "{scheme:?}: victim {victim_wait} vs straggler {straggler_wait}"
+        );
+    }
+}
+
+#[test]
+fn imbalanced_grad_groups_shift_the_critical_path() {
+    let (plan, cluster) = plan_for(Scheme::ZeroTopo { sec_degree: 2 }, 2, 4, Depth::Infinite);
+    let base = plan.simulate().makespan();
+    let sc = Scenario { imbalance: vec![(9, 6)], ..Default::default() };
+    let sched = MultiRankPlan::new(&plan, &cluster, &sc).simulate();
+    assert!(sched.makespan() > base);
+    assert_eq!(sched.slowest_rank(), 9);
+    // the slowest chain runs through rank 9's extra microbatches
+    let path = sched.critical_path();
+    assert!(path.iter().any(|&id| {
+        let t = sched.graph().task(id);
+        t.rank == 9 && t.label.contains("[5]")
+    }));
+}
