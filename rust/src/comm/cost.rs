@@ -190,6 +190,27 @@ impl CostModel {
         (2.0 * (d - 1.0) * alpha + 2.0 * ((d - 1.0) / d) * wire_bytes as f64 / b, class)
     }
 
+    /// Point-to-point transfer time between two ranks + the link class it
+    /// crosses — pipeline stage-boundary activation/gradient shipments
+    /// (`sched::pipeline`). Inter-node transfers share the node's NIC with
+    /// the `workers_per_node - 1` peers shipping their own boundary
+    /// traffic concurrently (every DP rank of a stage sends at once) and
+    /// pay the library `inter_efficiency`; intra-node links are dedicated.
+    pub fn priced_p2p(&self, a: usize, b: usize, wire_bytes: u64) -> (f64, LinkClass) {
+        let class = self.cluster.link_between(a, b);
+        if class == LinkClass::Local {
+            return (0.0, LinkClass::Local);
+        }
+        let spec = self.cluster.link_spec(class);
+        let bw = if class == LinkClass::InterNode {
+            spec.bandwidth * self.efficiency.inter_efficiency
+                / self.cluster.workers_per_node() as f64
+        } else {
+            spec.bandwidth
+        };
+        (spec.latency + wire_bytes as f64 / bw, class)
+    }
+
     /// Tree-broadcast time + link class (one scan).
     pub fn priced_broadcast(&self, group: &[usize], wire_bytes: u64) -> (f64, LinkClass) {
         let d = group.len() as f64;
@@ -401,6 +422,21 @@ mod tests {
         let before = m.total_seconds();
         let _ = m.all_gather_time(&g, v);
         assert_eq!(m.total_seconds(), before);
+    }
+
+    #[test]
+    fn p2p_prices_the_crossed_link() {
+        let m = cm(2);
+        // GCD pair: dedicated 200 GB/s intra link
+        let (t, class) = m.priced_p2p(0, 1, 200_000_000);
+        assert_eq!(class, LinkClass::Intra(0));
+        assert!((t - (2e-6 + 0.2e9 / 200e9)).abs() < 1e-15, "{t}");
+        // cross-node: NIC shared by the node's 8 concurrent senders
+        let (t, class) = m.priced_p2p(0, 8, 100_000_000);
+        assert_eq!(class, LinkClass::InterNode);
+        assert!((t - (10e-6 + 0.1e9 / (100e9 / 8.0))).abs() < 1e-15, "{t}");
+        // same rank: free
+        assert_eq!(m.priced_p2p(3, 3, 1_000_000), (0.0, LinkClass::Local));
     }
 
     #[test]

@@ -42,6 +42,14 @@ pub struct RunConfig {
     pub stragglers: Vec<(usize, f64)>,
     /// `(rank, grad_accum)` imbalance overrides for the step clock.
     pub imbalance: Vec<(usize, usize)>,
+    /// Pipeline stages `P` for the step clock (1 = pure data-parallel;
+    /// stages are whole node groups, so `P` must divide the node count).
+    pub pipeline_stages: usize,
+    /// Pipeline microbatches `M` per step for the step clock
+    /// (0 = use `grad_accum`).
+    pub microbatches: usize,
+    /// Virtual chunks per stage `V` (1 = plain 1F1B, >1 = interleaved).
+    pub interleave: usize,
 }
 
 impl Default for RunConfig {
@@ -65,6 +73,9 @@ impl Default for RunConfig {
             jitter_sigma: 0.0,
             stragglers: Vec::new(),
             imbalance: Vec::new(),
+            pipeline_stages: 1,
+            microbatches: 0,
+            interleave: 1,
         }
     }
 }
@@ -146,6 +157,15 @@ impl RunConfig {
             c.imbalance =
                 parse_rank_pairs(v, "imbalance", |e| e.as_usize().filter(|&g| g >= 1))?;
         }
+        c.pipeline_stages = get_usize(j, "pipeline_stages", c.pipeline_stages)?;
+        if c.pipeline_stages == 0 {
+            return Err(ConfigError::Bad("pipeline_stages", "0".into()));
+        }
+        c.microbatches = get_usize(j, "microbatches", c.microbatches)?;
+        c.interleave = get_usize(j, "interleave", c.interleave)?;
+        if c.interleave == 0 {
+            return Err(ConfigError::Bad("interleave", "0".into()));
+        }
         Ok(c)
     }
 
@@ -194,6 +214,9 @@ impl RunConfig {
                     Json::arr([Json::from(r), Json::from(g)])
                 })),
             ),
+            ("pipeline_stages", Json::from(self.pipeline_stages)),
+            ("microbatches", Json::from(self.microbatches)),
+            ("interleave", Json::from(self.interleave)),
         ])
     }
 }
@@ -240,6 +263,9 @@ mod tests {
             jitter_sigma: 0.05,
             stragglers: vec![(3, 1.25)],
             imbalance: vec![(1, 6)],
+            pipeline_stages: 4,
+            microbatches: 16,
+            interleave: 2,
         };
         let j = c.to_json();
         let c2 = RunConfig::from_json(&j).unwrap();
@@ -256,6 +282,9 @@ mod tests {
         assert!((c2.jitter_sigma - 0.05).abs() < 1e-12);
         assert_eq!(c2.stragglers, vec![(3, 1.25)]);
         assert_eq!(c2.imbalance, vec![(1, 6)]);
+        assert_eq!(c2.pipeline_stages, 4);
+        assert_eq!(c2.microbatches, 16);
+        assert_eq!(c2.interleave, 2);
         let sc = c2.scenario();
         assert_eq!(sc.seed, 7);
         assert!(!sc.is_trivial());
@@ -321,5 +350,20 @@ mod tests {
         assert!(RunConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"nodes":-1}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"pipeline_stages":0}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"interleave":0}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn pipeline_fields_default_off() {
+        let c = RunConfig::from_json(&Json::parse(r#"{"model":"e2e"}"#).unwrap()).unwrap();
+        assert_eq!(c.pipeline_stages, 1);
+        assert_eq!(c.microbatches, 0);
+        assert_eq!(c.interleave, 1);
+        let j = Json::parse(r#"{"pipeline_stages":4,"microbatches":8,"interleave":2}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!((c.pipeline_stages, c.microbatches, c.interleave), (4, 8, 2));
     }
 }

@@ -15,7 +15,7 @@ use crate::util::rng::Rng;
 pub struct SyntheticCorpus {
     pub vocab: usize,
     zipf_cdf: Vec<f64>,
-    /// successor[t] = preferred next tokens for t
+    /// `successor[t]` = preferred next tokens for t
     successor: Vec<[u32; 4]>,
     /// probability of following the Markov edge vs drawing from the prior
     pub markov_p: f64,

@@ -42,6 +42,7 @@ use crate::metrics::{LossPoint, TrainLog};
 use crate::optimizer::{global_clip_scale, local_sq_norm, AdamWConfig, AdamWShard};
 use crate::runtime::ModelRunner;
 use crate::sched::multi::MultiRankPlan;
+use crate::sched::pipeline::{even_chunk_params, PipeConfig, PipelinePlan};
 use crate::sched::plan::StepPlan;
 use crate::sharding::{shard_groups, PartitionMap, Scheme, ShardingSpec};
 use crate::topology::{Cluster, MachineSpec};
@@ -120,7 +121,11 @@ impl<'a> TrainEngine<'a> {
         // the multi-rank builder: with the default trivial scenario the
         // congruence collapse makes it bit-identical to the single-rank
         // plan; straggler/jitter configs price the slowest-rank makespan.
-        engine.step_sim_s = {
+        // With `pipeline_stages > 1` the clock prices the hybrid
+        // PP x ZeRO schedule instead (the numerics stay pure-DP).
+        engine.step_sim_s = if engine.cfg.pipeline_stages > 1 {
+            engine.pipeline_step_clock()?
+        } else {
             let plan = engine.plan_step();
             let scenario = engine.cfg.scenario();
             MultiRankPlan::new(&plan, &engine.cluster, &scenario).simulate().makespan()
@@ -433,6 +438,52 @@ impl<'a> TrainEngine<'a> {
             compute_s,
             self.cfg.prefetch_depth,
         )
+    }
+
+    /// The step clock for a pipeline-parallel run (`pipeline_stages > 1`):
+    /// the numerics keep executing the pure data-parallel protocol at
+    /// proxy scale, but the simulated clock prices the hybrid PP × ZeRO
+    /// schedule — per-stage ZeRO plans over an even parameter split of
+    /// the proxy manifest (the manifests carry no per-layer parameter
+    /// map), activation transfers sized from the manifest's
+    /// `(mbs, seq, d_model)`, 1F1B or interleaved order, and scenario
+    /// stragglers/jitter mapped onto whole stages.
+    fn pipeline_step_clock(&self) -> Result<f64> {
+        let m = &self.runner.manifest;
+        let p = self.cfg.pipeline_stages;
+        // stragglers/jitter map onto stages (the block max), but per-rank
+        // grad-accum imbalance has no stage-level analogue yet — refuse
+        // rather than silently ignore the injector
+        if !self.cfg.imbalance.is_empty() {
+            bail!(
+                "--imbalance does not compose with pipeline_stages > 1 yet \
+                 (per-rank grad-accum overrides have no stage-level mapping)"
+            );
+        }
+        let mb = if self.cfg.microbatches > 0 {
+            self.cfg.microbatches
+        } else {
+            self.cfg.grad_accum.max(1)
+        };
+        let pipe = PipeConfig { stages: p, microbatches: mb, interleave: self.cfg.interleave };
+        let tokens_per_micro = (m.mbs * m.seq) as f64;
+        let peak = self.cluster.peak_flops_per_worker();
+        let compute_s =
+            6.0 * m.n_params as f64 * tokens_per_micro * mb as f64 / (peak * self.cfg.mfu);
+        let chunks = even_chunk_params(m.n_params as u64, pipe.chunks());
+        let act = 2 * (m.mbs * m.seq * m.d_model) as u64;
+        let plan = PipelinePlan::from_protocol(
+            &self.comm.cost,
+            self.cfg.scheme,
+            &pipe,
+            &chunks,
+            self.quant_block(),
+            act,
+            compute_s,
+            self.cfg.prefetch_depth,
+        )?
+        .with_stage_multipliers(self.cfg.scenario().stage_multipliers(&self.cluster, p));
+        Ok(plan.simulate().makespan())
     }
 
     /// Snapshot the full training state (weights + sharded AdamW + step).

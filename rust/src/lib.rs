@@ -18,11 +18,13 @@
 //! all-gather, INT4 all-to-all gradient reduce-scatter) and INT8-quantized
 //! secondary weight partitions.
 //!
-//! Layer map (see `DESIGN.md`):
+//! Layer map (see `DESIGN.md`; a module-by-module crate map with CLI
+//! quickstarts lives in `rust/README.md`):
 //! * L3 (this crate): coordinator, simulated Frontier cluster, collective
 //!   engine with an α–β cost model, sharding planners, training engine,
 //!   analytical performance simulator, and the discrete-event multi-stream
-//!   step scheduler ([`sched`]) both clocks run on.
+//!   step scheduler ([`sched`]) both clocks run on — including the
+//!   pipeline-parallel 1F1B/interleaved schedules ([`sched::pipeline`]).
 //! * L2 (`python/compile/model.py`): GPT-NeoX-style flat-parameter model,
 //!   AOT-lowered to HLO text under `artifacts/`.
 //! * L1 (`python/compile/kernels/`): Pallas block-quantization + fused
@@ -40,10 +42,17 @@ pub mod optimizer;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+// the documented public surface (ISSUE 4): every public item in the
+// scheduler, simulator, and topology-spec modules must carry rustdoc —
+// `cargo doc` runs with RUSTDOCFLAGS="-D warnings" in CI, so a missing
+// doc or broken intra-doc link fails the build
+#[warn(missing_docs)]
 pub mod sched;
 pub mod sharding;
+#[warn(missing_docs)]
 pub mod sim;
 pub mod testing;
+#[warn(missing_docs)]
 pub mod topology;
 pub mod util;
 

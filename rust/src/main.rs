@@ -19,15 +19,17 @@ use zero_topo::engine::TrainEngine;
 use zero_topo::memory::MemoryModel;
 use zero_topo::model::TransformerSpec;
 use zero_topo::report::{
-    render_critical_path, render_rank_table, render_scaling_figure, render_stall_table,
-    ScalingSeries,
+    render_critical_path, render_pipeline_table, render_rank_table, render_scaling_figure,
+    render_stall_table, ScalingSeries,
 };
 use zero_topo::runtime::Runtime;
+use zero_topo::sched::pipeline::PipeConfig;
 use zero_topo::sched::scenario::{RankCount, Scenario};
 use zero_topo::sched::{trace, Schedule};
 use zero_topo::sharding::{Scheme, ShardingSpec};
 use zero_topo::sim::{
-    scaling_series, scaling_series_scenario, simulate_step, simulate_step_scenario,
+    scaling_series, scaling_series_pipeline, scaling_series_scenario, simulate_step,
+    simulate_step_pipeline, simulate_step_pipeline_scenario, simulate_step_scenario,
     simulate_step_schedule, SimConfig,
 };
 use zero_topo::topology::{Cluster, LinkClass, MachineSpec};
@@ -50,17 +52,25 @@ JSON (see examples/machines/). Default: frontier.
   capacity  [--machine M] [--nodes N]       max model size per scheme (Sec II)
   simulate  [--machine M] [--model 20b] [--nodes 8,16,32,48]
             [--schemes zero3,zeropp,zerotopo] [--depth N|inf] [--ranks N|auto]
+            [--pp P] [--microbatches M] [--interleave V]
             [--stalls] [--trace out.json]   Fig 7/8 scaling (event-driven sim)
   scale     alias of simulate               cross-scale / cross-machine sweeps
+  pipeline  [--machine M] [--model 20b] [--nodes 48] [--schemes S,...]
+            [--pp 4] [--microbatches 8] [--interleave 2] [--depth N|inf]
+            [--straggler R:MULT,...] [--jitter SIGMA] [--seed S]
+            [--trace out.json]              1F1B vs interleaved: step time +
+                                            bubble fraction per scheme
   scenario  [--machine M] [--model 20b] [--nodes 48] [--schemes S,...]
             [--ranks N|auto] [--straggler R:MULT,...] [--jitter SIGMA]
             [--seed S] [--imbalance R:GA,...] [--depth N|inf] [--rank-rows K]
             [--trace out.json]              multi-rank stragglers/jitter study
   calibrate [--check] [--write] [--baseline FILE] [--tolerance 0.01]
                                             perf guardrail vs BENCH_baseline.json
+                                            (incl. pinned P=4 pipeline points)
   train     [--machine M] [--model tiny] [--scheme zerotopo] [--nodes 1]
             [--steps 10] [--depth N|inf] [--ranks N|auto] [--jitter SIGMA]
-            [--straggler R:MULT,...] [--artifacts DIR] [--csv FILE]
+            [--straggler R:MULT,...] [--pp P] [--microbatches M]
+            [--interleave V] [--artifacts DIR] [--csv FILE]
                                             real training via PJRT
   report    [--machine M]                   print all analytical tables
 ";
@@ -85,6 +95,7 @@ fn main() {
         "memory" => cmd_memory(&args),
         "capacity" => cmd_capacity(&args),
         "simulate" | "scale" => cmd_simulate(&args),
+        "pipeline" => cmd_pipeline(&args),
         "scenario" => cmd_scenario(&args),
         "calibrate" => cmd_calibrate(&args),
         "train" => cmd_train(&args),
@@ -112,6 +123,18 @@ fn parse_schemes(args: &Args) -> anyhow::Result<Vec<Scheme>> {
 fn resolve_machine(args: &Args) -> anyhow::Result<MachineSpec> {
     let raw = args.get("machine").or_else(|| args.get("node")).unwrap_or("frontier");
     Ok(MachineSpec::resolve(raw)?)
+}
+
+/// Parse `--pp` (pipeline stages), rejecting 0 like the JSON config path
+/// does — a typo'd `--pp 0` must not silently run the non-pipeline path.
+fn parse_pp(args: &Args) -> anyhow::Result<usize> {
+    parse_pp_default(args, 1)
+}
+
+fn parse_pp_default(args: &Args, default: usize) -> anyhow::Result<usize> {
+    let pp = args.parse_opt("pp", default)?;
+    anyhow::ensure!(pp >= 1, "--pp must be >= 1 (1 = no pipeline axis)");
+    Ok(pp)
 }
 
 fn cmd_topo(args: &Args) -> anyhow::Result<()> {
@@ -275,25 +298,45 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         Some(r) => Some(r.parse().map_err(|e: String| anyhow::anyhow!(e))?),
     };
     let scenario = ranks.map(|r| Scenario { ranks: r, ..Default::default() });
+    // --pp routes every point through the pipeline builder instead (P=1
+    // would be bit-identical to the plain path; >1 adds the bubble)
+    let pipe = PipeConfig {
+        stages: parse_pp(args)?,
+        microbatches: args.parse_opt("microbatches", 0usize)?,
+        interleave: args.parse_opt("interleave", 1usize)?,
+    };
+    if pipe.stages > 1 && scenario.is_some() {
+        anyhow::bail!("--pp composes with --straggler/--jitter via `pipeline`, not --ranks");
+    }
     let series: Vec<ScalingSeries> = schemes
         .iter()
-        .map(|&scheme| ScalingSeries {
-            scheme,
-            points: match &scenario {
-                None => scaling_series(&model, scheme, &machine, &node_counts, &cfg),
-                Some(sc) => {
-                    scaling_series_scenario(&model, scheme, &machine, &node_counts, &cfg, sc)
+        .map(|&scheme| -> anyhow::Result<ScalingSeries> {
+            let points = if pipe.stages > 1 {
+                scaling_series_pipeline(&model, scheme, &machine, &node_counts, &cfg, &pipe)?
+            } else {
+                match &scenario {
+                    None => scaling_series(&model, scheme, &machine, &node_counts, &cfg),
+                    Some(sc) => {
+                        scaling_series_scenario(&model, scheme, &machine, &node_counts, &cfg, sc)
+                    }
                 }
-            },
+            };
+            Ok(ScalingSeries { scheme, points })
         })
-        .collect();
+        .collect::<anyhow::Result<_>>()?;
+    let pp_note = if pipe.stages > 1 {
+        format!(" pp={} interleave={}", pipe.stages, pipe.effective_interleave())
+    } else {
+        String::new()
+    };
     let title = format!(
-        "Fig 7/8 — TFLOPS per GPU, {} (Ψ={:.1}B) on {}, mfu={} prefetch-depth={}",
+        "Fig 7/8 — TFLOPS per GPU, {} (Ψ={:.1}B) on {}, mfu={} prefetch-depth={}{}",
         model.name,
         model.n_params() as f64 / 1e9,
         machine.name,
         cfg.mfu,
-        cfg.prefetch_depth
+        cfg.prefetch_depth,
+        pp_note
     );
     println!("{}", render_scaling_figure(&title, &series));
 
@@ -307,14 +350,18 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         let cluster = Cluster::new(machine.clone(), largest);
         let scheds: Vec<(String, Schedule)> = schemes
             .iter()
-            .map(|&scheme| {
-                let sched = match &scenario {
-                    None => simulate_step_schedule(&model, scheme, &cluster, &cfg).1,
-                    Some(sc) => simulate_step_scenario(&model, scheme, &cluster, &cfg, sc).1,
+            .map(|&scheme| -> anyhow::Result<(String, Schedule)> {
+                let sched = if pipe.stages > 1 {
+                    simulate_step_pipeline(&model, scheme, &cluster, &cfg, &pipe)?.1
+                } else {
+                    match &scenario {
+                        None => simulate_step_schedule(&model, scheme, &cluster, &cfg).1,
+                        Some(sc) => simulate_step_scenario(&model, scheme, &cluster, &cfg, sc).1,
+                    }
                 };
-                (scheme.name(), sched)
+                Ok((scheme.name(), sched))
             })
-            .collect();
+            .collect::<anyhow::Result<_>>()?;
         if want_stalls {
             for (name, sched) in &scheds {
                 let title = format!(
@@ -344,6 +391,116 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     if let Some(path) = args.get("csv") {
         std::fs::write(path, zero_topo::report::scaling_csv(&series))?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Hybrid pipeline-parallel × ZeRO study at one scale: per scheme, the
+/// pure-DP baseline vs the 1F1B and interleaved schedules — step time,
+/// simulated bubble fraction, and the closed-form bound — plus per-stage
+/// accounting and optional straggler/jitter injection onto stages.
+fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
+    let model = TransformerSpec::by_name(args.get_or("model", "20b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model (use 10b/20b/125m)"))?;
+    let machine = resolve_machine(args)?;
+    let nodes = args.parse_opt("nodes", 48usize)?;
+    let schemes = parse_schemes(args)?;
+    let mut cfg = SimConfig::default();
+    cfg.mfu = args.parse_opt("mfu", cfg.mfu)?;
+    cfg.prefetch_depth = args.parse_opt("depth", cfg.prefetch_depth)?;
+    let pp = parse_pp_default(args, 4)?;
+    let microbatches = args.parse_opt("microbatches", 8usize)?;
+    let interleave = args.parse_opt("interleave", 2usize)?;
+    let scenario = Scenario {
+        stragglers: Scenario::parse_stragglers(args.get_or("straggler", ""))
+            .map_err(|e| anyhow::anyhow!(e))?,
+        jitter_sigma: args.parse_opt("jitter", 0.0f64)?,
+        seed: args.parse_opt("seed", 42u64)?,
+        ..Default::default()
+    };
+    let cluster = Cluster::new(machine.clone(), nodes);
+    println!(
+        "pipeline on {} x{} nodes ({} workers): pp={} microbatches={} interleave={} stragglers={:?} jitter={}",
+        machine.name,
+        nodes,
+        cluster.world_size(),
+        pp,
+        microbatches,
+        interleave,
+        scenario.stragglers,
+        scenario.jitter_sigma,
+    );
+
+    let mut summary = Table::new(&[
+        "scheme",
+        "schedule",
+        "step (s)",
+        "thruput vs P=1",
+        "bubble",
+        "ideal bound",
+        "M",
+    ])
+    .title(format!(
+        "Pipeline schedules — {} @ {} workers, P={pp}",
+        model.name,
+        cluster.world_size()
+    ))
+    .left_first();
+    let mut scheds: Vec<(String, Schedule)> = Vec::new();
+    for &scheme in &schemes {
+        let base = simulate_step(&model, scheme, &cluster, &cfg);
+        // tokens per step differ between the axes (P=1 derives grad-accum
+        // from the global batch; the pipeline runs M microbatches on W/P
+        // pipelines), so the headline ratio is token-normalized throughput
+        let base_rate = (base.grad_accum * cluster.world_size()) as f64 / base.step_s;
+        summary.row(vec![
+            scheme.name(),
+            "P=1 (no pipeline)".into(),
+            fnum(base.step_s, 3),
+            "1.00x".into(),
+            "-".into(),
+            "-".into(),
+            base.grad_accum.to_string(),
+        ]);
+        let mut variants = vec![("1F1B", 1usize)];
+        if interleave > 1 {
+            variants.push(("interleaved", interleave));
+        }
+        for (label, v) in variants {
+            let pipe = PipeConfig { stages: pp, microbatches, interleave: v };
+            let (b, sched, plan) = simulate_step_pipeline_scenario(
+                &model, scheme, &cluster, &cfg, &pipe, &scenario,
+            )?;
+            let rate = (b.microbatches * (cluster.world_size() / pp)) as f64 / b.step_s;
+            summary.row(vec![
+                scheme.name(),
+                if v > 1 { format!("{label} V={v}") } else { label.to_string() },
+                fnum(b.step_s, 3),
+                format!("{:.2}x", rate / base_rate),
+                fnum(b.bubble_fraction, 4),
+                fnum(b.ideal_bubble, 4),
+                b.microbatches.to_string(),
+            ]);
+            if v == 1 {
+                println!(
+                    "{}",
+                    render_pipeline_table(
+                        &format!("{} — 1F1B per-stage accounting", scheme.name()),
+                        &plan,
+                        &sched,
+                        &machine
+                    )
+                );
+            }
+            scheds.push((format!("{}/{}", scheme.name(), label), sched));
+        }
+    }
+    println!("{}", summary.render());
+    if let Some(path) = args.get("trace") {
+        let named: Vec<(String, &Schedule)> =
+            scheds.iter().map(|(n, s)| (n.clone(), s)).collect();
+        std::fs::write(path, trace::chrome_trace(&named))?;
+        println!("wrote {path} (open in chrome://tracing or ui.perfetto.dev)");
     }
     Ok(())
 }
@@ -449,14 +606,37 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     let path = args.get_or("baseline", "");
     let path = if path.is_empty() { default_baseline_path() } else { path.to_string() };
 
-    // recompute every (machine, scheme) point
-    let mut entries: Vec<(String, String, f64)> = Vec::new();
+    // recompute every (machine, scheme) point; (pp, microbatches) =
+    // (1, 0) marks the plain data-parallel entries
+    let mut entries: Vec<(String, String, usize, usize, f64)> = Vec::new();
     for mname in &machines {
         let spec = MachineSpec::resolve(mname)?;
         let cluster = Cluster::new(spec, nodes);
         for &scheme in &schemes {
             let b = simulate_step(&model, scheme, &cluster, &cfg);
-            entries.push((mname.clone(), scheme.name(), b.step_s));
+            entries.push((mname.clone(), scheme.name(), 1, 0, b.step_s));
+        }
+    }
+    // pinned pipeline points (ISSUE 4): ZeRO-topo 1F1B at P=4, M ∈ {8, 32}
+    // on the first machine in the list (frontier by default) — the perf
+    // guardrail covers the pipeline subsystem from day one
+    const PIPELINE_PROBES: [(usize, usize); 2] = [(4, 8), (4, 32)];
+    if let Some(mname) = machines.first() {
+        let spec = MachineSpec::resolve(mname)?;
+        let cluster = Cluster::new(spec, nodes);
+        for (pp, mb) in PIPELINE_PROBES {
+            if nodes % pp != 0 {
+                continue;
+            }
+            let pipe = PipeConfig { stages: pp, microbatches: mb, interleave: 1 };
+            let (b, _, _) = simulate_step_pipeline(
+                &model,
+                Scheme::ZeroTopo { sec_degree: 0 },
+                &cluster,
+                &cfg,
+                &pipe,
+            )?;
+            entries.push((mname.clone(), "ZeRO-topo".into(), pp, mb, b.step_s));
         }
     }
 
@@ -467,12 +647,17 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
             ("tolerance", Json::num(tolerance)),
             (
                 "entries",
-                Json::arr(entries.iter().map(|(m, s, t)| {
-                    Json::obj(vec![
+                Json::arr(entries.iter().map(|(m, s, pp, mb, t)| {
+                    let mut fields = vec![
                         ("machine", Json::str(m.clone())),
                         ("scheme", Json::str(s.clone())),
-                        ("step_s", Json::num(*t)),
-                    ])
+                    ];
+                    if *pp > 1 {
+                        fields.push(("pp", Json::from(*pp)));
+                        fields.push(("microbatches", Json::from(*mb)));
+                    }
+                    fields.push(("step_s", Json::num(*t)));
+                    Json::obj(fields)
                 })),
             ),
         ]);
@@ -485,7 +670,7 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
         anyhow::anyhow!("cannot read baseline {path}: {e} (run `calibrate --write`)")
     })?;
     let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad baseline {path}: {e}"))?;
-    let mut baseline: std::collections::BTreeMap<(String, String), f64> =
+    let mut baseline: std::collections::BTreeMap<(String, String, usize, usize), f64> =
         std::collections::BTreeMap::new();
     for e in json
         .get("entries")
@@ -494,11 +679,13 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     {
         let m = e.get("machine").and_then(|v| v.as_str()).unwrap_or_default().to_string();
         let s = e.get("scheme").and_then(|v| v.as_str()).unwrap_or_default().to_string();
+        let pp = e.get("pp").and_then(|v| v.as_usize()).unwrap_or(1);
+        let mb = e.get("microbatches").and_then(|v| v.as_usize()).unwrap_or(0);
         let t = e
             .get("step_s")
             .and_then(|v| v.as_f64())
             .ok_or_else(|| anyhow::anyhow!("baseline entry without step_s"))?;
-        baseline.insert((m, s), t);
+        baseline.insert((m, s, pp, mb), t);
     }
     // precedence: explicit --tolerance > baseline's recorded field > default
     let tol = if args.get("tolerance").is_some() {
@@ -516,25 +703,26 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
         ))
         .left_first();
     let mut failures = Vec::new();
-    for (m, s, now) in &entries {
-        match baseline.get(&(m.clone(), s.clone())) {
+    for (m, s, pp, mb, now) in &entries {
+        let label = if *pp > 1 { format!("{s} [pp{pp} mb{mb}]") } else { s.clone() };
+        match baseline.get(&(m.clone(), s.clone(), *pp, *mb)) {
             Some(&base) => {
                 let drift = (now - base) / base;
                 t.row(vec![
                     m.clone(),
-                    s.clone(),
+                    label.clone(),
                     format!("{base:.6}"),
                     format!("{now:.6}"),
                     format!("{:+.3}%", drift * 100.0),
                 ]);
                 if drift.abs() > tol {
                     failures.push(format!(
-                        "{m}/{s}: {base:.6}s -> {now:.6}s ({:+.2}%)",
+                        "{m}/{label}: {base:.6}s -> {now:.6}s ({:+.2}%)",
                         drift * 100.0
                     ));
                 }
             }
-            None => failures.push(format!("{m}/{s}: missing from baseline")),
+            None => failures.push(format!("{m}/{label}: missing from baseline")),
         }
     }
     println!("{}", t.render());
@@ -573,6 +761,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         .map_err(|e| anyhow::anyhow!(e))?;
     cfg.imbalance = Scenario::parse_imbalance(args.get_or("imbalance", ""))
         .map_err(|e| anyhow::anyhow!(e))?;
+    cfg.pipeline_stages = parse_pp(args)?;
+    cfg.microbatches = args.parse_opt("microbatches", cfg.microbatches)?;
+    cfg.interleave = args.parse_opt("interleave", cfg.interleave)?;
     let dir = args.get_or("artifacts", "artifacts");
     // fail fast on a bad --machine before the (expensive) artifact load
     let machine = MachineSpec::resolve(&cfg.machine)?;

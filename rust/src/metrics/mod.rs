@@ -41,9 +41,14 @@ pub fn scaling_efficiency(points: &[Throughput]) -> Vec<f64> {
 pub struct StepUtilization {
     /// Event-clock step time.
     pub makespan: f64,
+    /// Busy seconds of the compute stream.
     pub compute_busy: f64,
+    /// Busy seconds of the weight-gather prefetch stream.
     pub prefetch_busy: f64,
+    /// Busy seconds of the gradient-sync stream.
     pub grad_sync_busy: f64,
+    /// Busy seconds of the pipeline-transfer stream (0 for pure-DP steps).
+    pub pipe_busy: f64,
 }
 
 impl StepUtilization {
@@ -140,6 +145,7 @@ mod tests {
             compute_busy: 7.5,
             prefetch_busy: 4.0,
             grad_sync_busy: 1.5,
+            pipe_busy: 0.0,
         };
         assert!((u.compute_utilization() - 0.75).abs() < 1e-12);
         assert!((u.compute_stall() - 2.5).abs() < 1e-12);
@@ -148,6 +154,7 @@ mod tests {
             compute_busy: 0.0,
             prefetch_busy: 0.0,
             grad_sync_busy: 0.0,
+            pipe_busy: 0.0,
         };
         assert_eq!(z.compute_utilization(), 0.0);
     }

@@ -90,6 +90,30 @@ impl TransformerSpec {
         self.n_params() * elem as u64
     }
 
+    /// Parameter count of each of `chunks` contiguous layer blocks for a
+    /// pipeline partition: layers split near-evenly (the first blocks take
+    /// the remainder, so layer counts not divisible by the chunk count
+    /// still partition), input embeddings (token + position) ride the
+    /// first block, the final layer-norm and the (untied) LM head the
+    /// last. Sums to exactly [`TransformerSpec::n_params`].
+    pub fn chunk_params(&self, chunks: usize) -> Vec<u64> {
+        let d = self.d_model as u64;
+        let per_layer = 12 * d * d + 13 * d;
+        let emb = (self.vocab as u64) * d + (self.seq as u64) * d;
+        let head = if self.tied_head { 0 } else { (self.vocab as u64) * d };
+        let layers = crate::sched::pipeline::split_even(self.n_layers, chunks);
+        let mut out: Vec<u64> = layers.iter().map(|&l| l as u64 * per_layer).collect();
+        out[0] += emb;
+        *out.last_mut().expect("chunks > 0") += head + 2 * d;
+        out
+    }
+
+    /// fp16 activation payload one microbatch ships across a pipeline
+    /// stage boundary: `mbs · seq · d_model` half-precision elements.
+    pub fn activation_bytes(&self, micro_batch: usize) -> u64 {
+        2 * (micro_batch * self.seq * self.d_model) as u64
+    }
+
     /// Dense FLOPs for one token, forward pass (2·MAC convention):
     /// 24·d² per layer for the matmuls + 4·d·seq attention score/update +
     /// 2·d·vocab head.
@@ -169,6 +193,31 @@ mod tests {
         let s = TransformerSpec::gpt125m();
         assert_eq!(s.param_bytes(2), 2 * s.n_params());
         assert_eq!(s.param_bytes(4), 4 * s.n_params());
+    }
+
+    #[test]
+    fn chunk_params_sum_to_psi() {
+        for spec in [
+            TransformerSpec::neox20b(),
+            TransformerSpec::neox10b(),
+            TransformerSpec::gpt125m(),
+        ] {
+            for chunks in [1, 2, 3, 4, 7, 8, 16, 64] {
+                let cp = spec.chunk_params(chunks);
+                assert_eq!(cp.len(), chunks, "{} x{chunks}", spec.name);
+                assert_eq!(cp.iter().sum::<u64>(), spec.n_params(), "{} x{chunks}", spec.name);
+            }
+        }
+        // 44 layers over 8 chunks: uneven, no panic, first chunk heaviest
+        let cp = TransformerSpec::neox20b().chunk_params(8);
+        assert!(cp[0] > cp[4]);
+    }
+
+    #[test]
+    fn activation_bytes_are_fp16_elements() {
+        let s = TransformerSpec::gpt125m();
+        assert_eq!(s.activation_bytes(1), 2 * (2048 * 768) as u64);
+        assert_eq!(s.activation_bytes(4), 4 * s.activation_bytes(1));
     }
 
     #[test]

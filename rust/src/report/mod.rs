@@ -4,6 +4,7 @@
 use std::collections::BTreeMap;
 
 use crate::metrics::{StepUtilization, Throughput};
+use crate::sched::pipeline::PipelinePlan;
 use crate::sched::Schedule;
 use crate::sharding::Scheme;
 use crate::topology::{LinkClass, MachineSpec};
@@ -92,6 +93,59 @@ pub fn render_stall_table(
         100.0 * util.compute_utilization(),
         util.prefetch_busy,
         util.grad_sync_busy,
+    ));
+    if util.pipe_busy > 0.0 {
+        out.push_str(&format!("pipe-transfer busy {:.3}s\n", util.pipe_busy));
+    }
+    out
+}
+
+/// Render the per-stage accounting of a pipeline schedule: one row per
+/// stage — its representative rank, compute/pipe/grad-sync busy time,
+/// and the worst link-class stall — plus the step time, the *simulated*
+/// bubble fraction, and the closed-form equal-stage bound it is
+/// predicted against (`(P-1)/(V·M+P-1)`).
+pub fn render_pipeline_table(
+    title: &str,
+    plan: &PipelinePlan,
+    sched: &Schedule,
+    machine: &MachineSpec,
+) -> String {
+    let mut t = Table::new(&[
+        "stage",
+        "rep rank",
+        "compute busy (s)",
+        "pipe busy (s)",
+        "grad-sync busy (s)",
+        "worst stall (s)",
+        "on level",
+    ])
+    .title(title.to_string())
+    .left_first();
+    for (s, &rep) in plan.rep_ranks.iter().enumerate() {
+        let u = sched.utilization(rep);
+        let stalls = sched.stall_by_class(rep);
+        let worst = stalls
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(b.1).expect("finite stalls"))
+            .map(|(c, v)| (*c, *v));
+        t.row(vec![
+            format!("s{s}"),
+            format!("r{rep}"),
+            fnum(u.compute_busy, 3),
+            fnum(u.pipe_busy, 3),
+            fnum(u.grad_sync_busy, 3),
+            worst.map(|(_, v)| fnum(v, 3)).unwrap_or_else(|| "-".into()),
+            worst.map(|(c, _)| machine.class_label(c)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    let mut out = t.render();
+    let (p, m, v) = (plan.stage_count(), plan.microbatches(), plan.interleave);
+    out.push_str(&format!(
+        "step {:.3}s; bubble fraction {:.4} (closed-form equal-stage bound {:.4}); P={p} M={m} V={v}\n",
+        sched.makespan(),
+        plan.bubble_fraction(sched),
+        PipelinePlan::ideal_bubble(p, m, v),
     ));
     out
 }
@@ -222,6 +276,7 @@ mod tests {
             compute_busy: 7.0,
             prefetch_busy: 2.5,
             grad_sync_busy: 2.0,
+            pipe_busy: 0.0,
         };
         let out =
             render_stall_table("stalls", &stalls, &util, &MachineSpec::frontier_mi250x());
@@ -229,6 +284,29 @@ mod tests {
         assert!(out.contains("B_GCD"), "{out}");
         assert!(out.contains("20.0"), "{out}");
         assert!(out.contains("70.0% util"), "{out}");
+        assert!(!out.contains("pipe-transfer"), "{out}");
+        let piped = StepUtilization { pipe_busy: 0.5, ..util };
+        let out = render_stall_table("stalls", &stalls, &piped, &MachineSpec::frontier_mi250x());
+        assert!(out.contains("pipe-transfer busy 0.500s"), "{out}");
+    }
+
+    #[test]
+    fn renders_pipeline_table() {
+        use crate::sched::Depth;
+        let plan = PipelinePlan::synthetic(4, 8, 1, 1.0, 2.0, Depth::Infinite);
+        let sched = plan.simulate();
+        let out = render_pipeline_table(
+            "pipeline",
+            &plan,
+            &sched,
+            &MachineSpec::frontier_mi250x(),
+        );
+        assert!(out.contains("pipeline"), "{out}");
+        assert!(out.contains("s0") && out.contains("s3"), "{out}");
+        assert!(out.contains("P=4 M=8 V=1"), "{out}");
+        // synthetic zero-comm plan: simulated bubble == closed-form bound
+        assert!(out.contains("bubble fraction 0.2727"), "{out}");
+        assert!(out.contains("bound 0.2727"), "{out}");
     }
 
     #[test]

@@ -1,8 +1,8 @@
 //! Discrete-event multi-stream step scheduler (DESIGN.md §5).
 //!
 //! Models one optimizer step as a DAG of tasks executed by per-rank
-//! *resource streams* — the three streams a DeepSpeed/FSDP-style runtime
-//! actually runs:
+//! *resource streams* — the streams a DeepSpeed/FSDP-style runtime
+//! actually runs, plus a pipeline-transfer lane:
 //!
 //! * **Compute**: forward/backward kernels, one serial queue per rank.
 //! * **Prefetch**: the parameter all-gather side stream. Per-microbatch
@@ -14,6 +14,9 @@
 //!   plus the §V.D updated-weight all-gather (charged at the step head:
 //!   in steady state the refresh issued after step `s` overlaps the
 //!   compute of step `s+1`).
+//! * **PipeTransfer**: stage-to-stage activation/gradient point-to-point
+//!   transfers when a pipeline schedule is in play ([`pipeline`]); pure
+//!   data-parallel steps leave it empty.
 //!
 //! The event loop is a fluid-flow simulation: each stream executes its
 //! FIFO queue in order, a task starts when its dependencies are done and
@@ -29,8 +32,43 @@
 //! and `engine::TrainEngine` both obtain their step clock from this event
 //! loop via [`plan::StepPlan`], so their communication pricing and
 //! schedule semantics can never drift.
+//!
+//! # Example
+//!
+//! A 1 s gather feeding a 2 s kernel makes a 3 s step whose stall is
+//! attributed to the gather's link class:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the libxla rpath in this offline env)
+//! use zero_topo::sched::{simulate, StreamKind, Task, TaskGraph};
+//! use zero_topo::topology::LinkClass;
+//!
+//! let mut g = TaskGraph::new();
+//! let gather = g.add(Task {
+//!     label: "gather".into(),
+//!     rank: 0,
+//!     stream: StreamKind::Prefetch,
+//!     work: 1.0,
+//!     class: Some(LinkClass::InterNode),
+//!     instance: 0,
+//!     deps: vec![],
+//! });
+//! g.add(Task {
+//!     label: "fwd".into(),
+//!     rank: 0,
+//!     stream: StreamKind::Compute,
+//!     work: 2.0,
+//!     class: None,
+//!     instance: 0,
+//!     deps: vec![gather],
+//! });
+//! let sched = simulate(g);
+//! assert!((sched.makespan() - 3.0).abs() < 1e-12);
+//! assert!((sched.stall_by_class(0)[&LinkClass::InterNode] - 1.0).abs() < 1e-12);
+//! ```
 
 pub mod multi;
+pub mod pipeline;
 pub mod plan;
 pub mod scenario;
 pub mod trace;
@@ -42,20 +80,28 @@ use std::str::FromStr;
 use crate::metrics::StepUtilization;
 use crate::topology::LinkClass;
 
-/// The three per-rank resource streams of a training step.
+/// The per-rank resource streams of a training step.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum StreamKind {
+    /// Forward/backward kernels, one serial queue per rank.
     Compute,
+    /// The parameter all-gather side stream (bounded by [`Depth`]).
     Prefetch,
+    /// Gradient-sync phases + the §V.D updated-weight refresh.
     GradSync,
+    /// Stage-to-stage activation/gradient transfers of a pipeline
+    /// schedule ([`pipeline::PipelinePlan`]); empty for pure-DP steps.
+    PipeTransfer,
 }
 
 impl StreamKind {
+    /// Short display name ("compute", "prefetch", "grad-sync", "pipe").
     pub fn name(&self) -> &'static str {
         match self {
             StreamKind::Compute => "compute",
             StreamKind::Prefetch => "prefetch",
             StreamKind::GradSync => "grad-sync",
+            StreamKind::PipeTransfer => "pipe",
         }
     }
 }
@@ -66,11 +112,14 @@ impl StreamKind {
 /// run freely.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Depth {
+    /// At most this many gathers ahead of their consumers (0 = on demand).
     Bounded(usize),
+    /// Free-running gather pipeline (DeepSpeed's side stream).
     Infinite,
 }
 
 impl Depth {
+    /// Parse `"0"`, `"2"`, ... or `"inf"`/`"infinite"`/`"unbounded"`.
     pub fn parse(s: &str) -> Option<Depth> {
         match s.to_ascii_lowercase().as_str() {
             "inf" | "infinite" | "unbounded" => Some(Depth::Infinite),
@@ -105,8 +154,11 @@ pub struct TaskId(pub usize);
 /// queries on the schedule can never mis-bucket tasks.
 #[derive(Debug, Clone)]
 pub struct Task {
+    /// Display label ("gather.fwd[0]", "compute.bwd[3]@r5", ...).
     pub label: String,
+    /// World rank whose streams execute this task.
     pub rank: usize,
+    /// Which of the rank's serial streams queues the task.
     pub stream: StreamKind,
     /// Seconds of work at unit rate (a comm task sharing its contention
     /// domain with n-1 concurrent peers proceeds at rate 1/n).
@@ -121,6 +173,8 @@ pub struct Task {
     /// `InterNode` — so two GCD pairs' gathers ride separate IF links while
     /// collectives crossing the same fabric genuinely compete.
     pub instance: usize,
+    /// Tasks that must complete before this one may start (must already
+    /// be in the graph).
     pub deps: Vec<TaskId>,
 }
 
@@ -136,6 +190,7 @@ pub struct TaskGraph {
 }
 
 impl TaskGraph {
+    /// An empty graph with no declared rank registry (ranks inferred).
     pub fn new() -> TaskGraph {
         TaskGraph::default()
     }
@@ -150,6 +205,7 @@ impl TaskGraph {
         TaskGraph { tasks: Vec::new(), rank_ids: Some(ranks) }
     }
 
+    /// The declared rank registry, if one was given at construction.
     pub fn rank_ids(&self) -> Option<&[usize]> {
         self.rank_ids.as_deref()
     }
@@ -174,18 +230,22 @@ impl TaskGraph {
         id
     }
 
+    /// The task behind a handle.
     pub fn task(&self, id: TaskId) -> &Task {
         &self.tasks[id.0]
     }
 
+    /// All tasks, in insertion (= per-stream FIFO) order.
     pub fn tasks(&self) -> &[Task] {
         &self.tasks
     }
 
+    /// Number of tasks in the graph.
     pub fn len(&self) -> usize {
         self.tasks.len()
     }
 
+    /// True when the graph holds no tasks.
     pub fn is_empty(&self) -> bool {
         self.tasks.is_empty()
     }
@@ -194,8 +254,11 @@ impl TaskGraph {
 /// Executed `[start, end)` interval of one task.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Span {
+    /// The executed task.
     pub task: TaskId,
+    /// Simulated start time (seconds).
     pub start: f64,
+    /// Simulated end time (seconds).
     pub end: f64,
 }
 
@@ -298,18 +361,22 @@ pub fn simulate(graph: TaskGraph) -> Schedule {
 }
 
 impl Schedule {
+    /// The graph this schedule executed.
     pub fn graph(&self) -> &TaskGraph {
         &self.graph
     }
 
+    /// Simulated step time: when the last task finished.
     pub fn makespan(&self) -> f64 {
         self.makespan
     }
 
+    /// The executed `[start, end)` interval of one task.
     pub fn span(&self, id: TaskId) -> Span {
         self.spans[id.0]
     }
 
+    /// Every task's executed interval, indexed by [`TaskId`].
     pub fn spans(&self) -> &[Span] {
         &self.spans
     }
@@ -388,6 +455,7 @@ impl Schedule {
             compute_busy: self.stream_busy(rank, StreamKind::Compute),
             prefetch_busy: self.stream_busy(rank, StreamKind::Prefetch),
             grad_sync_busy: self.stream_busy(rank, StreamKind::GradSync),
+            pipe_busy: self.stream_busy(rank, StreamKind::PipeTransfer),
         }
     }
 

@@ -27,6 +27,32 @@
 //!   one representative node per distinct node signature and one rank per
 //!   distinct (multiplier, grad-accum) signature within it. A trivial
 //!   scenario therefore collapses to exactly `StepPlan::build(0)`.
+//!
+//! # Example
+//!
+//! A straggler delays its whole synchronization group:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the libxla rpath in this offline env)
+//! use zero_topo::comm::cost::{CommEfficiency, CostModel};
+//! use zero_topo::sched::multi::MultiRankPlan;
+//! use zero_topo::sched::plan::StepPlan;
+//! use zero_topo::sched::scenario::Scenario;
+//! use zero_topo::sched::Depth;
+//! use zero_topo::sharding::{Scheme, ShardingSpec};
+//! use zero_topo::topology::Cluster;
+//!
+//! let cluster = Cluster::frontier(2);
+//! let cost = CostModel::with_efficiency(cluster.clone(), CommEfficiency::rccl_frontier());
+//! let spec = ShardingSpec::resolve(Scheme::Zero3, &cluster).unwrap();
+//! let plan = StepPlan::from_protocol(
+//!     &cost, Scheme::Zero3, &spec, 1_000_000, 256, 2, 1.0, Depth::Infinite,
+//! );
+//! let base = MultiRankPlan::new(&plan, &cluster, &Scenario::default());
+//! let slow_scenario = Scenario { stragglers: vec![(5, 1.5)], ..Default::default() };
+//! let slow = MultiRankPlan::new(&plan, &cluster, &slow_scenario);
+//! assert!(slow.simulate().makespan() > base.simulate().makespan());
+//! ```
 
 use std::collections::BTreeMap;
 
@@ -50,8 +76,9 @@ pub struct MultiRankPlan {
 
 /// Contention instance of a link class for a group starting at `group_min`:
 /// the aligned block index for intra-node levels, the shared fabric (0) for
-/// inter-node, the rank itself for `Local` (never contends).
-fn instance_of(cluster: &Cluster, class: LinkClass, group_min: usize) -> usize {
+/// inter-node, the rank itself for `Local` (never contends). Shared with
+/// the pipeline builder so stage collectives key the same physical links.
+pub(crate) fn instance_of(cluster: &Cluster, class: LinkClass, group_min: usize) -> usize {
     match class {
         LinkClass::Local => group_min,
         LinkClass::Intra(k) => {

@@ -1,0 +1,850 @@
+//! Pipeline-parallel schedules on the event scheduler (DESIGN.md §11):
+//! 1F1B and interleaved-virtual-stage task graphs with bubble-fraction
+//! prediction, composed with the per-stage ZeRO gather/sync tasks.
+//!
+//! [`PipelinePlan::from_protocol`] partitions the model's layer chunks
+//! into `P` stages placed on contiguous node groups (each stage keeps a
+//! `W/P`-rank data-parallel group running the ZeRO scheme *within* the
+//! stage), prices stage-to-stage activation/gradient transfers through
+//! the same α–β [`CostModel`] every collective uses, and emits the step
+//! as a task graph for [`crate::sched::simulate`]:
+//!
+//! * per (stage, chunk, microbatch): forward/backward compute units on
+//!   the stage's compute stream, in **1F1B order** (warmup forwards,
+//!   steady one-forward-one-backward, cooldown backwards) — or, with
+//!   `interleave = V > 1`, the Megatron-style interleaved order over
+//!   `P·V` virtual stages (each physical stage owns every `P`-th chunk);
+//! * per stage boundary crossed by a chunk edge: a `p2p` transfer task on
+//!   the receiver's [`StreamKind::PipeTransfer`] stream, contending for
+//!   the inter-node fabric with every collective that crosses it;
+//! * per (stage, microbatch): the stage's ZeRO weight gathers on the
+//!   prefetch stream, bounded by [`Depth`] exactly as in [`StepPlan`];
+//! * per stage: the §V.D updated-weight refresh at the grad-stream head
+//!   and the gradient-sync phases after the stage's last backward.
+//!
+//! **Degeneracy contract**: `P = 1` builds a graph whose simulation is
+//! bit-for-bit the single-axis [`StepPlan`] step (same durations, same
+//! spans), so the pipeline path cannot drift from the calibrated clock.
+//! With equal stages and zero communication the simulated
+//! [`PipelinePlan::bubble_fraction`] reproduces the closed-form 1F1B
+//! bound `(P-1)/(M+P-1)` exactly (property-tested in
+//! `tests/pipeline.rs`), and interleaving tightens it to
+//! `(P-1)/(V·M+P-1)`.
+//!
+//! # Example
+//!
+//! A communication-free 2-stage, 4-microbatch 1F1B plan hits the
+//! closed-form bubble bound:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the libxla rpath in this offline env)
+//! use zero_topo::sched::pipeline::PipelinePlan;
+//! use zero_topo::sched::Depth;
+//!
+//! let plan = PipelinePlan::synthetic(2, 4, 1, 1.0, 2.0, Depth::Infinite);
+//! let sched = plan.simulate();
+//! let bubble = plan.bubble_fraction(&sched);
+//! let bound = PipelinePlan::ideal_bubble(2, 4, 1); // (P-1)/(M+P-1) = 0.2
+//! assert!((bubble - bound).abs() < 1e-9);
+//! ```
+
+use crate::comm::cost::CostModel;
+use crate::sched::multi::instance_of;
+use crate::sched::plan::StepPlan;
+use crate::sched::{self, Depth, Schedule, StreamKind, Task, TaskGraph, TaskId};
+use crate::sharding::{Scheme, ShardingError, ShardingSpec};
+use crate::topology::{Cluster, LinkClass};
+
+/// Shape of a pipeline-parallel execution: `stages` pipeline stages ×
+/// a data-parallel group per stage, `microbatches` in flight per
+/// optimizer step, `interleave` virtual chunks per stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PipeConfig {
+    /// Number of pipeline stages `P` (1 = no pipeline axis).
+    pub stages: usize,
+    /// Microbatches `M` per optimizer step (the 1F1B "M"). In the sim /
+    /// engine wrappers `0` means "derive from the global batch /
+    /// grad-accum"; [`PipelinePlan::from_protocol`] requires `>= 1`.
+    pub microbatches: usize,
+    /// Virtual chunks per stage `V` (1 = plain 1F1B, `> 1` = the
+    /// interleaved schedule; requires `M % P == 0` like Megatron's).
+    pub interleave: usize,
+}
+
+impl Default for PipeConfig {
+    fn default() -> Self {
+        PipeConfig { stages: 1, microbatches: 0, interleave: 1 }
+    }
+}
+
+impl PipeConfig {
+    /// The interleave factor actually applied: chunking is meaningless
+    /// without a pipeline axis, so `P = 1` always runs `V = 1`.
+    pub fn effective_interleave(&self) -> usize {
+        if self.stages <= 1 {
+            1
+        } else {
+            self.interleave.max(1)
+        }
+    }
+
+    /// Total virtual chunks `P × V` the layer blocks are partitioned into.
+    pub fn chunks(&self) -> usize {
+        self.stages.max(1) * self.effective_interleave()
+    }
+}
+
+/// Why a pipeline plan could not be constructed.
+#[derive(Debug, thiserror::Error)]
+pub enum PipelineError {
+    /// `stages` was 0.
+    #[error("pipeline stages must be >= 1, got {0}")]
+    BadStages(usize),
+    /// `microbatches` was 0 at plan-construction time.
+    #[error("pipeline microbatches must be >= 1, got {0}")]
+    BadMicrobatches(usize),
+    /// Stages are whole node groups; `P` must divide the node count.
+    #[error("{stages} pipeline stages do not divide {nodes} nodes (each stage is a contiguous node group)")]
+    StagesDontDivideNodes {
+        /// Requested stage count `P`.
+        stages: usize,
+        /// Cluster node count.
+        nodes: usize,
+    },
+    /// The interleaved schedule issues microbatches in groups of `P`.
+    #[error("interleaved schedule needs microbatches ({microbatches}) divisible by stages ({stages})")]
+    InterleaveNeedsDivisibleMicrobatches {
+        /// Requested microbatch count `M`.
+        microbatches: usize,
+        /// Requested stage count `P`.
+        stages: usize,
+    },
+    /// `chunk_params` length disagreed with `P × V`.
+    #[error("chunk_params has {got} entries, want stages x interleave = {want}")]
+    ChunkCount {
+        /// Entries received.
+        got: usize,
+        /// Entries required.
+        want: usize,
+    },
+    /// The ZeRO scheme could not resolve on the per-stage DP group.
+    #[error(transparent)]
+    Sharding(#[from] ShardingError),
+}
+
+/// A pipeline-parallel step plan: per-stage ZeRO [`StepPlan`]s plus the
+/// stage-boundary transfer pricing and the schedule shape, ready to
+/// [`PipelinePlan::build`] into a task graph.
+///
+/// All fields are public (like [`StepPlan`]) so tests and ablations can
+/// construct synthetic plans — e.g. equal stages with zero communication
+/// to check the closed-form bubble bound.
+#[derive(Debug, Clone)]
+pub struct PipelinePlan {
+    /// Per-stage ZeRO plan (`grad_accum` holds `M`), priced over the
+    /// stage's data-parallel sub-cluster; compute terms hold the stage's
+    /// per-microbatch totals across its `V` chunks.
+    pub stages: Vec<StepPlan>,
+    /// `chunk_frac[s][c]`: chunk `c`'s fraction of stage `s`'s
+    /// per-microbatch compute (sums to 1 per stage).
+    pub chunk_frac: Vec<Vec<f64>>,
+    /// Virtual chunks per stage `V` (1 = plain 1F1B).
+    pub interleave: usize,
+    /// Activation transfer seconds per microbatch per stage boundary.
+    pub t_act: f64,
+    /// Activation-gradient transfer seconds (same payload, same time in
+    /// the fp16 wire model, but kept separate for ablations).
+    pub t_grad: f64,
+    /// Link class every stage boundary crosses (stages are whole node
+    /// groups, so `InterNode` whenever `P > 1`).
+    pub class_p2p: LinkClass,
+    /// Representative world rank per stage (the first rank of each
+    /// stage's contiguous DP block).
+    pub rep_ranks: Vec<usize>,
+    /// Per-stage compute multipliers (scenario stragglers/jitter mapped
+    /// onto stages); 1.0 everywhere by default.
+    pub stage_mult: Vec<f64>,
+    /// The full cluster, kept for link-instance resolution of per-stage
+    /// collectives.
+    pub cluster: Cluster,
+}
+
+impl PipelinePlan {
+    /// Derive the pipeline plan for `(scheme, cluster)` from the cost
+    /// model. `chunk_params[j]` is the parameter count of virtual chunk
+    /// `j` (`j = v·P + s` lives on stage `s` as its chunk `v`; length
+    /// must be `pipe.chunks()`), `activation_bytes` the fp16 payload one
+    /// microbatch ships across a stage boundary, and `compute_s` the
+    /// whole-step **full-model** compute seconds per DP rank (all `M`
+    /// microbatches) — split across stages in proportion to their
+    /// parameter share.
+    ///
+    /// Each stage's ZeRO collectives are priced on a sub-cluster of
+    /// `nodes / P` nodes: stage DP blocks are node-aligned, so by the
+    /// nested-aligned-span property the stage groups price identically
+    /// to their congruent stage-0 images.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_protocol(
+        cost: &CostModel,
+        scheme: Scheme,
+        pipe: &PipeConfig,
+        chunk_params: &[u64],
+        quant_block: usize,
+        activation_bytes: u64,
+        compute_s: f64,
+        depth: Depth,
+    ) -> Result<PipelinePlan, PipelineError> {
+        let p = pipe.stages;
+        let m = pipe.microbatches;
+        let v = pipe.effective_interleave();
+        if p == 0 {
+            return Err(PipelineError::BadStages(p));
+        }
+        if m == 0 {
+            return Err(PipelineError::BadMicrobatches(m));
+        }
+        if v > 1 && m % p != 0 {
+            return Err(PipelineError::InterleaveNeedsDivisibleMicrobatches {
+                microbatches: m,
+                stages: p,
+            });
+        }
+        let cluster = &cost.cluster;
+        if cluster.nodes % p != 0 {
+            return Err(PipelineError::StagesDontDivideNodes { stages: p, nodes: cluster.nodes });
+        }
+        if chunk_params.len() != p * v {
+            return Err(PipelineError::ChunkCount { got: chunk_params.len(), want: p * v });
+        }
+
+        let dp = cluster.world_size() / p;
+        let sub = Cluster::new(cluster.spec.clone(), cluster.nodes / p);
+        let sub_cost = CostModel::with_efficiency(sub.clone(), cost.efficiency);
+        let spec = ShardingSpec::resolve(scheme, &sub)?;
+        let psi: u64 = chunk_params.iter().sum();
+
+        let mut stages = Vec::with_capacity(p);
+        let mut chunk_frac = Vec::with_capacity(p);
+        for s in 0..p {
+            let stage_params: u64 = (0..v).map(|c| chunk_params[c * p + s]).sum();
+            let frac = if psi > 0 { stage_params as f64 / psi as f64 } else { 1.0 / p as f64 };
+            stages.push(StepPlan::from_protocol(
+                &sub_cost,
+                scheme,
+                &spec,
+                stage_params as usize,
+                quant_block,
+                m,
+                compute_s * frac,
+                depth,
+            ));
+            chunk_frac.push(
+                (0..v)
+                    .map(|c| {
+                        if stage_params > 0 {
+                            chunk_params[c * p + s] as f64 / stage_params as f64
+                        } else {
+                            1.0 / v as f64
+                        }
+                    })
+                    .collect(),
+            );
+        }
+
+        let rep_ranks: Vec<usize> = (0..p).map(|s| s * dp).collect();
+        let (t_act, class_p2p) = if p > 1 {
+            cost.priced_p2p(rep_ranks[0], rep_ranks[1], activation_bytes)
+        } else {
+            (0.0, LinkClass::Local)
+        };
+        Ok(PipelinePlan {
+            stages,
+            chunk_frac,
+            interleave: v,
+            t_act,
+            t_grad: t_act,
+            class_p2p,
+            rep_ranks,
+            stage_mult: vec![1.0; p],
+            cluster: cluster.clone(),
+        })
+    }
+
+    /// A synthetic plan for tests/ablations: `p` equal stages with zero
+    /// communication (no gathers, no sync, free transfers), `m`
+    /// microbatches, `v`-way interleave, per-microbatch compute
+    /// `t_fwd`/`t_bwd` per stage. Its simulated bubble fraction is the
+    /// closed-form [`PipelinePlan::ideal_bubble`] exactly.
+    pub fn synthetic(
+        p: usize,
+        m: usize,
+        v: usize,
+        t_fwd: f64,
+        t_bwd: f64,
+        depth: Depth,
+    ) -> PipelinePlan {
+        assert!(p >= 1 && m >= 1 && v >= 1, "need p, m, v >= 1");
+        let v = if p == 1 { 1 } else { v };
+        assert!(v == 1 || m % p == 0, "interleave needs m % p == 0");
+        let stage = StepPlan {
+            scheme: Scheme::Zero3,
+            grad_accum: m,
+            depth,
+            t_gather_fwd: 0.0,
+            class_fwd: LinkClass::Local,
+            t_gather_bwd: 0.0,
+            class_bwd: LinkClass::Local,
+            t_update: 0.0,
+            class_update: LinkClass::Local,
+            t_compute_fwd: t_fwd,
+            t_compute_bwd: t_bwd,
+            sync: Vec::new(),
+            d_fwd: 1,
+            d_bwd: 1,
+        };
+        let cluster = Cluster::frontier(p);
+        let wpn = cluster.workers_per_node();
+        PipelinePlan {
+            stages: vec![stage; p],
+            chunk_frac: vec![vec![1.0 / v as f64; v]; p],
+            interleave: v,
+            t_act: 0.0,
+            t_grad: 0.0,
+            class_p2p: if p > 1 { LinkClass::InterNode } else { LinkClass::Local },
+            rep_ranks: (0..p).map(|s| s * wpn).collect(),
+            stage_mult: vec![1.0; p],
+            cluster,
+        }
+    }
+
+    /// Replace the per-stage compute multipliers (scenario injection —
+    /// see `sched::scenario::Scenario::stage_multipliers`).
+    pub fn with_stage_multipliers(mut self, mult: Vec<f64>) -> PipelinePlan {
+        assert_eq!(mult.len(), self.stages.len(), "one multiplier per stage");
+        assert!(mult.iter().all(|&x| x > 0.0 && x.is_finite()), "bad multiplier");
+        self.stage_mult = mult;
+        self
+    }
+
+    /// Number of physical pipeline stages `P`.
+    pub fn stage_count(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Microbatches `M` per step.
+    pub fn microbatches(&self) -> usize {
+        self.stages[0].grad_accum
+    }
+
+    /// The closed-form pipeline-bubble bound for equal stages and free
+    /// communication: `(P-1)/(V·M + P-1)` — the classic `(P-1)/(M+P-1)`
+    /// 1F1B bound at `V = 1`, tightened `V`-fold by interleaving.
+    pub fn ideal_bubble(p: usize, m: usize, v: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        (p - 1) as f64 / ((v * m) as f64 + (p - 1) as f64)
+    }
+
+    /// Fraction of the pipeline's compute window its compute streams sat
+    /// idle: `1 - Σ_s busy_s / (P · window)` where the window spans the
+    /// first compute start to the last compute end. Includes stalls the
+    /// ZeRO gathers and stage transfers induce (this is the *simulated*
+    /// bubble); with zero communication and equal stages it equals
+    /// [`PipelinePlan::ideal_bubble`].
+    pub fn bubble_fraction(&self, sched: &Schedule) -> f64 {
+        let mut t0 = f64::INFINITY;
+        let mut t1 = f64::NEG_INFINITY;
+        let mut busy = 0.0;
+        for span in sched.spans() {
+            if sched.graph().task(span.task).stream == StreamKind::Compute {
+                busy += span.end - span.start;
+                t0 = t0.min(span.start);
+                t1 = t1.max(span.end);
+            }
+        }
+        if t1 <= t0 {
+            return 0.0;
+        }
+        (1.0 - busy / (self.stage_count() as f64 * (t1 - t0))).max(0.0)
+    }
+
+    /// Build the pipeline step DAG over one representative DP rank per
+    /// stage, then hand it to [`crate::sched::simulate`].
+    pub fn simulate(&self) -> Schedule {
+        sched::simulate(self.build())
+    }
+
+    /// Build the pipeline step DAG: per-stage compute units in 1F1B (or
+    /// interleaved) order, stage-boundary transfers on the pipe streams,
+    /// per-(stage, microbatch) ZeRO gathers gated by [`Depth`], and the
+    /// per-stage refresh + gradient-sync chain.
+    pub fn build(&self) -> TaskGraph {
+        let p = self.stage_count();
+        let m = self.microbatches();
+        let v = self.interleave;
+        let nvirt = p * v;
+        let mut g = TaskGraph::with_rank_ids(self.rep_ranks.clone());
+
+        // previous step's §V.D refresh occupies each stage's grad head
+        for (s, sp) in self.stages.iter().enumerate() {
+            if sp.t_update > 0.0 {
+                g.add(Task {
+                    label: format!("update-gather@s{s}"),
+                    rank: self.rep_ranks[s],
+                    stream: StreamKind::GradSync,
+                    work: sp.t_update,
+                    class: Some(sp.class_update),
+                    instance: instance_of(&self.cluster, sp.class_update, self.rep_ranks[s]),
+                    deps: vec![],
+                });
+            }
+        }
+
+        // prefetch gate: the stage's k-th issued gather may start once
+        // the first consumer of gather k-1-depth has finished (the exact
+        // StepPlan semantics, generalized to the 1F1B consumption order)
+        let gate = |consumers: &[TaskId], k: usize| -> Vec<TaskId> {
+            match self.stages[0].depth {
+                Depth::Bounded(d) => {
+                    let idx = k as i64 - 1 - d as i64;
+                    if idx >= 0 {
+                        vec![consumers[idx as usize]]
+                    } else {
+                        vec![]
+                    }
+                }
+                Depth::Infinite => vec![],
+            }
+        };
+
+        let orders: Vec<Vec<Unit>> = (0..p).map(|s| stage_order(s, p, m, v)).collect();
+        let mut next = vec![0usize; p];
+        let mut fwd_task: Vec<Vec<Option<TaskId>>> = vec![vec![None; m]; nvirt];
+        let mut bwd_task: Vec<Vec<Option<TaskId>>> = vec![vec![None; m]; nvirt];
+        let mut fwd_gather: Vec<Vec<Option<TaskId>>> = vec![vec![None; m]; p];
+        let mut bwd_gather: Vec<Vec<Option<TaskId>>> = vec![vec![None; m]; p];
+        let mut gather_consumers: Vec<Vec<TaskId>> = vec![Vec::new(); p];
+        let mut last_compute: Vec<Option<TaskId>> = vec![None; p];
+
+        // merge the per-stage orders into one global insertion order:
+        // round-robin over stages, adding each stage's next units while
+        // their cross-stage producers are already in the graph
+        let total: usize = orders.iter().map(|o| o.len()).sum();
+        let mut added = 0usize;
+        while added < total {
+            let mut progressed = false;
+            for s in 0..p {
+                while next[s] < orders[s].len() {
+                    let unit = orders[s][next[s]];
+                    let ready = match unit {
+                        Unit::Fwd { v: c, m: mm } => {
+                            let j = c * p + s;
+                            j == 0 || fwd_task[j - 1][mm].is_some()
+                        }
+                        Unit::Bwd { v: c, m: mm } => {
+                            let j = c * p + s;
+                            if j == nvirt - 1 {
+                                fwd_task[j][mm].is_some()
+                            } else {
+                                bwd_task[j + 1][mm].is_some()
+                            }
+                        }
+                    };
+                    if !ready {
+                        break;
+                    }
+                    let sp = &self.stages[s];
+                    let rep = self.rep_ranks[s];
+                    match unit {
+                        Unit::Fwd { v: c, m: mm } => {
+                            let j = c * p + s;
+                            let (gid, fresh) = match fwd_gather[s][mm] {
+                                Some(t) => (t, false),
+                                None => {
+                                    let k = gather_consumers[s].len();
+                                    let t = g.add(Task {
+                                        label: format!("gather.fwd[{mm}]@s{s}"),
+                                        rank: rep,
+                                        stream: StreamKind::Prefetch,
+                                        work: sp.t_gather_fwd,
+                                        class: Some(sp.class_fwd),
+                                        instance: instance_of(&self.cluster, sp.class_fwd, rep),
+                                        deps: gate(&gather_consumers[s], k),
+                                    });
+                                    fwd_gather[s][mm] = Some(t);
+                                    (t, true)
+                                }
+                            };
+                            let mut deps = vec![gid];
+                            if j > 0 {
+                                let prod = fwd_task[j - 1][mm].expect("producer added");
+                                let from = (j - 1) % p;
+                                deps.push(g.add(Task {
+                                    label: format!("p2p.act[m{mm}c{c}]@s{from}>s{s}"),
+                                    rank: rep,
+                                    stream: StreamKind::PipeTransfer,
+                                    work: self.t_act,
+                                    class: Some(self.class_p2p),
+                                    instance: 0,
+                                    deps: vec![prod],
+                                }));
+                            }
+                            let ct = g.add(Task {
+                                label: format!("compute.fwd[{mm}]c{c}@s{s}"),
+                                rank: rep,
+                                stream: StreamKind::Compute,
+                                work: sp.t_compute_fwd
+                                    * self.chunk_frac[s][c]
+                                    * self.stage_mult[s],
+                                class: None,
+                                instance: 0,
+                                deps,
+                            });
+                            fwd_task[j][mm] = Some(ct);
+                            if fresh {
+                                gather_consumers[s].push(ct);
+                            }
+                            last_compute[s] = Some(ct);
+                        }
+                        Unit::Bwd { v: c, m: mm } => {
+                            let j = c * p + s;
+                            let (gid, fresh) = match bwd_gather[s][mm] {
+                                Some(t) => (t, false),
+                                None => {
+                                    let k = gather_consumers[s].len();
+                                    let t = g.add(Task {
+                                        label: format!("gather.bwd[{mm}]@s{s}"),
+                                        rank: rep,
+                                        stream: StreamKind::Prefetch,
+                                        work: sp.t_gather_bwd,
+                                        class: Some(sp.class_bwd),
+                                        instance: instance_of(&self.cluster, sp.class_bwd, rep),
+                                        deps: gate(&gather_consumers[s], k),
+                                    });
+                                    bwd_gather[s][mm] = Some(t);
+                                    (t, true)
+                                }
+                            };
+                            let mut deps = vec![gid];
+                            if j == nvirt - 1 {
+                                deps.push(fwd_task[j][mm].expect("own forward added"));
+                            } else {
+                                let prod = bwd_task[j + 1][mm].expect("producer added");
+                                let from = (j + 1) % p;
+                                deps.push(g.add(Task {
+                                    label: format!("p2p.grad[m{mm}c{c}]@s{from}>s{s}"),
+                                    rank: rep,
+                                    stream: StreamKind::PipeTransfer,
+                                    work: self.t_grad,
+                                    class: Some(self.class_p2p),
+                                    instance: 0,
+                                    deps: vec![prod],
+                                }));
+                            }
+                            let ct = g.add(Task {
+                                label: format!("compute.bwd[{mm}]c{c}@s{s}"),
+                                rank: rep,
+                                stream: StreamKind::Compute,
+                                work: sp.t_compute_bwd
+                                    * self.chunk_frac[s][c]
+                                    * self.stage_mult[s],
+                                class: None,
+                                instance: 0,
+                                deps,
+                            });
+                            bwd_task[j][mm] = Some(ct);
+                            if fresh {
+                                gather_consumers[s].push(ct);
+                            }
+                            last_compute[s] = Some(ct);
+                        }
+                    }
+                    next[s] += 1;
+                    added += 1;
+                    progressed = true;
+                }
+            }
+            // the 1F1B / interleaved orders are feasible by construction;
+            // a stalled merge means a malformed hand-built plan
+            assert!(progressed, "infeasible pipeline schedule order (stages {p}, m {m}, v {v})");
+        }
+
+        // gradient-sync phases per stage, after the stage's last unit
+        for (s, sp) in self.stages.iter().enumerate() {
+            let mut prev = last_compute[s].expect("every stage owns compute units");
+            for (k, phase) in sp.sync.iter().enumerate() {
+                prev = g.add(Task {
+                    label: format!("grad-sync[{k}]@s{s}"),
+                    rank: self.rep_ranks[s],
+                    stream: StreamKind::GradSync,
+                    work: phase.seconds,
+                    class: Some(phase.class),
+                    instance: instance_of(&self.cluster, phase.class, self.rep_ranks[s]),
+                    deps: vec![prev],
+                });
+            }
+        }
+        g
+    }
+}
+
+/// One compute unit of a pipeline schedule: chunk `v`'s forward or
+/// backward pass of microbatch `m` on some stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Unit {
+    Fwd { v: usize, m: usize },
+    Bwd { v: usize, m: usize },
+}
+
+/// Stage `s`'s compute order. `v = 1`: textbook 1F1B — `min(P-1-s, M)`
+/// warmup forwards, then one-forward-one-backward, then the cooldown
+/// backwards. `v > 1`: Megatron's interleaved order — forwards grouped
+/// as (microbatch group of `P`) × (chunk) × (index in group), backwards
+/// with the chunk order reversed, warmup `min(2(P-1-s) + (V-1)P, MV)`.
+fn stage_order(s: usize, p: usize, m: usize, v: usize) -> Vec<Unit> {
+    let (fwd, bwd): (Vec<(usize, usize)>, Vec<(usize, usize)>) = if v == 1 {
+        ((0..m).map(|mm| (0, mm)).collect(), (0..m).map(|mm| (0, mm)).collect())
+    } else {
+        debug_assert!(m % p == 0, "interleave needs m % p == 0");
+        let mut f = Vec::with_capacity(m * v);
+        let mut b = Vec::with_capacity(m * v);
+        for grp in 0..m / p {
+            for c in 0..v {
+                for i in 0..p {
+                    f.push((c, grp * p + i));
+                    b.push((v - 1 - c, grp * p + i));
+                }
+            }
+        }
+        (f, b)
+    };
+    let total = m * v;
+    let warmup = if v == 1 {
+        (p - 1 - s).min(total)
+    } else {
+        (2 * (p - 1 - s) + (v - 1) * p).min(total)
+    };
+    let mut order = Vec::with_capacity(2 * total);
+    for &(c, mm) in &fwd[..warmup] {
+        order.push(Unit::Fwd { v: c, m: mm });
+    }
+    let mut bi = 0;
+    for &(c, mm) in &fwd[warmup..] {
+        order.push(Unit::Fwd { v: c, m: mm });
+        let (bc, bm) = bwd[bi];
+        order.push(Unit::Bwd { v: bc, m: bm });
+        bi += 1;
+    }
+    for &(c, mm) in &bwd[bi..] {
+        order.push(Unit::Bwd { v: c, m: mm });
+    }
+    order
+}
+
+/// Near-even contiguous split of `n` items into `chunks` parts: the
+/// first `n % chunks` parts get one extra item; parts may be empty when
+/// `n < chunks` (layer counts not divisible by `P·V` still partition).
+pub fn split_even(n: usize, chunks: usize) -> Vec<usize> {
+    assert!(chunks > 0, "need at least one chunk");
+    let base = n / chunks;
+    let extra = n % chunks;
+    (0..chunks).map(|c| base + usize::from(c < extra)).collect()
+}
+
+/// Even `u64` parameter split for callers that know only a flat total
+/// (the engine's proxy manifests): near-even like [`split_even`], summing
+/// exactly to `total`.
+pub fn even_chunk_params(total: u64, chunks: usize) -> Vec<u64> {
+    assert!(chunks > 0, "need at least one chunk");
+    let base = total / chunks as u64;
+    let extra = (total % chunks as u64) as usize;
+    (0..chunks).map(|c| base + u64::from(c < extra)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::cost::CommEfficiency;
+
+    fn frontier_plan(
+        scheme: Scheme,
+        nodes: usize,
+        pipe: &PipeConfig,
+        depth: Depth,
+    ) -> Result<PipelinePlan, PipelineError> {
+        let cluster = Cluster::frontier(nodes);
+        let cost = CostModel::with_efficiency(cluster, CommEfficiency::rccl_frontier());
+        let chunks = even_chunk_params(2_000_000_000, pipe.chunks());
+        PipelinePlan::from_protocol(&cost, scheme, pipe, &chunks, 256, 25_000_000, 4.0, depth)
+    }
+
+    #[test]
+    fn one_stage_matches_step_plan_spans() {
+        for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }] {
+            for depth in [Depth::Bounded(0), Depth::Bounded(1), Depth::Infinite] {
+                let pipe = PipeConfig { stages: 1, microbatches: 4, interleave: 1 };
+                let pp = frontier_plan(scheme, 4, &pipe, depth).unwrap();
+                let single = pp.stages[0].simulate();
+                let sched = pp.simulate();
+                assert_eq!(single.makespan(), sched.makespan(), "{scheme:?} {depth:?}");
+                assert_eq!(single.spans().len(), sched.spans().len());
+                for (a, b) in single.spans().iter().zip(sched.spans()) {
+                    assert_eq!(a.start, b.start);
+                    assert_eq!(a.end, b.end);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_1f1b_hits_the_closed_form_bubble() {
+        for (p, m) in [(2, 4), (4, 8), (4, 1), (8, 3)] {
+            let plan = PipelinePlan::synthetic(p, m, 1, 1.0, 2.0, Depth::Infinite);
+            let sched = plan.simulate();
+            let bubble = plan.bubble_fraction(&sched);
+            let bound = PipelinePlan::ideal_bubble(p, m, 1);
+            assert!((bubble - bound).abs() < 1e-9, "p={p} m={m}: {bubble} vs {bound}");
+            // and the makespan is exactly (M + P - 1) * (tf + tb)
+            let mk = sched.makespan();
+            let want = (m + p - 1) as f64 * 3.0;
+            assert!((mk - want).abs() < 1e-9, "p={p} m={m}: {mk} vs {want}");
+        }
+    }
+
+    #[test]
+    fn synthetic_interleave_tightens_the_bubble() {
+        for (p, m, v) in [(2, 4, 2), (4, 8, 2), (4, 8, 4), (3, 6, 3)] {
+            let plain = PipelinePlan::synthetic(p, m, 1, 1.0, 2.0, Depth::Infinite);
+            let inter = PipelinePlan::synthetic(p, m, v, 1.0, 2.0, Depth::Infinite);
+            let b1 = plain.bubble_fraction(&plain.simulate());
+            let bv = inter.bubble_fraction(&inter.simulate());
+            let bound = PipelinePlan::ideal_bubble(p, m, v);
+            assert!((bv - bound).abs() < 1e-9, "p={p} m={m} v={v}: {bv} vs {bound}");
+            assert!(bv < b1, "p={p} m={m} v={v}: {bv} !< {b1}");
+        }
+    }
+
+    #[test]
+    fn worst_case_single_microbatch_bubble() {
+        let plan = PipelinePlan::synthetic(4, 1, 1, 1.0, 2.0, Depth::Infinite);
+        let bubble = plan.bubble_fraction(&plan.simulate());
+        assert!((bubble - 0.75).abs() < 1e-9, "{bubble}"); // (P-1)/P
+    }
+
+    #[test]
+    fn stage_orders_cover_every_unit_once() {
+        for (p, m, v) in [(1, 3, 1), (2, 5, 1), (4, 8, 2), (3, 6, 3), (8, 8, 1)] {
+            for s in 0..p {
+                let order = stage_order(s, p, m, v);
+                assert_eq!(order.len(), 2 * m * v, "p={p} m={m} v={v} s={s}");
+                let mut fwd = vec![vec![false; m]; v];
+                let mut bwd = vec![vec![false; m]; v];
+                for u in order {
+                    match u {
+                        Unit::Fwd { v: c, m: mm } => {
+                            assert!(!fwd[c][mm]);
+                            fwd[c][mm] = true;
+                        }
+                        Unit::Bwd { v: c, m: mm } => {
+                            assert!(!bwd[c][mm]);
+                            bwd[c][mm] = true;
+                        }
+                    }
+                }
+                assert!(fwd.iter().flatten().all(|&x| x));
+                assert!(bwd.iter().flatten().all(|&x| x));
+            }
+        }
+    }
+
+    #[test]
+    fn stages_must_divide_nodes() {
+        let pipe = PipeConfig { stages: 3, microbatches: 4, interleave: 1 };
+        assert!(matches!(
+            frontier_plan(Scheme::Zero3, 4, &pipe, Depth::Infinite),
+            Err(PipelineError::StagesDontDivideNodes { stages: 3, nodes: 4 })
+        ));
+    }
+
+    #[test]
+    fn interleave_requires_divisible_microbatches() {
+        let pipe = PipeConfig { stages: 4, microbatches: 6, interleave: 2 };
+        assert!(matches!(
+            frontier_plan(Scheme::Zero3, 4, &pipe, Depth::Infinite),
+            Err(PipelineError::InterleaveNeedsDivisibleMicrobatches { .. })
+        ));
+    }
+
+    #[test]
+    fn uneven_splits_partition_without_panicking() {
+        assert_eq!(split_even(44, 8), vec![6, 6, 6, 6, 5, 5, 5, 5]);
+        assert_eq!(split_even(3, 8), vec![1, 1, 1, 0, 0, 0, 0, 0]);
+        assert_eq!(even_chunk_params(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(even_chunk_params(10, 4).iter().sum::<u64>(), 10);
+        // a pipeline over chunks with zero-parameter stages still builds
+        let cluster = Cluster::frontier(4);
+        let cost = CostModel::with_efficiency(cluster, CommEfficiency::rccl_frontier());
+        let pipe = PipeConfig { stages: 4, microbatches: 4, interleave: 1 };
+        let chunks = vec![1_000_000, 0, 1_000_000, 0];
+        let plan = PipelinePlan::from_protocol(
+            &cost,
+            Scheme::Zero3,
+            &pipe,
+            &chunks,
+            256,
+            1_000_000,
+            4.0,
+            Depth::Infinite,
+        )
+        .unwrap();
+        let sched = plan.simulate();
+        assert!(sched.makespan().is_finite() && sched.makespan() > 0.0);
+    }
+
+    #[test]
+    fn transfers_ride_the_pipe_stream_and_fabric() {
+        let pipe = PipeConfig { stages: 2, microbatches: 4, interleave: 1 };
+        let plan = frontier_plan(Scheme::ZeroTopo { sec_degree: 2 }, 4, &pipe, Depth::Infinite)
+            .unwrap();
+        assert!(plan.t_act > 0.0);
+        assert_eq!(plan.class_p2p, LinkClass::InterNode);
+        let g = plan.build();
+        let transfers: Vec<&Task> =
+            g.tasks().iter().filter(|t| t.stream == StreamKind::PipeTransfer).collect();
+        // (P-1) boundaries x M microbatches x (act + grad)
+        assert_eq!(transfers.len(), 2 * 4);
+        assert!(transfers.iter().all(|t| t.class == Some(LinkClass::InterNode)));
+        // stage reps are the first ranks of each 2-node block
+        assert_eq!(plan.rep_ranks, vec![0, 16]);
+    }
+
+    #[test]
+    fn straggler_stage_stretches_the_step() {
+        let pipe = PipeConfig { stages: 4, microbatches: 8, interleave: 1 };
+        let base = frontier_plan(Scheme::Zero3, 4, &pipe, Depth::Infinite).unwrap();
+        let base_mk = base.simulate().makespan();
+        let slow = base.clone().with_stage_multipliers(vec![1.0, 1.5, 1.0, 1.0]);
+        let mk = slow.simulate().makespan();
+        assert!(mk > base_mk * 1.05, "{mk} vs {base_mk}");
+    }
+
+    #[test]
+    fn pipe_config_helpers() {
+        let pc = PipeConfig { stages: 1, microbatches: 4, interleave: 3 };
+        assert_eq!(pc.effective_interleave(), 1);
+        assert_eq!(pc.chunks(), 1);
+        let pc = PipeConfig { stages: 4, microbatches: 8, interleave: 2 };
+        assert_eq!(pc.effective_interleave(), 2);
+        assert_eq!(pc.chunks(), 8);
+        assert_eq!(PipeConfig::default().stages, 1);
+    }
+
+    #[test]
+    fn ideal_bubble_closed_forms() {
+        assert_eq!(PipelinePlan::ideal_bubble(1, 8, 1), 0.0);
+        assert!((PipelinePlan::ideal_bubble(4, 8, 1) - 3.0 / 11.0).abs() < 1e-15);
+        assert!((PipelinePlan::ideal_bubble(4, 8, 2) - 3.0 / 19.0).abs() < 1e-15);
+        assert!((PipelinePlan::ideal_bubble(4, 1, 1) - 0.75).abs() < 1e-15);
+    }
+}

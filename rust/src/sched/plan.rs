@@ -28,34 +28,44 @@ use crate::topology::LinkClass;
 /// One gradient-sync phase: duration + the link class it occupies.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SyncPhase {
+    /// Phase duration at unit rate.
     pub seconds: f64,
+    /// Link class the phase occupies.
     pub class: LinkClass,
 }
 
 /// Durations + structure of one optimizer step, ready to schedule.
 #[derive(Debug, Clone)]
 pub struct StepPlan {
+    /// The ZeRO scheme the plan prices.
     pub scheme: Scheme,
+    /// Gradient-accumulation microbatches per step.
     pub grad_accum: usize,
+    /// Prefetch depth bounding the gather stream.
     pub depth: Depth,
     /// Per-microbatch forward weight gather.
     pub t_gather_fwd: f64,
+    /// Link class of the forward gather.
     pub class_fwd: LinkClass,
     /// Per-microbatch backward (secondary) gather.
     pub t_gather_bwd: f64,
+    /// Link class of the backward gather.
     pub class_bwd: LinkClass,
     /// §V.D updated-weight all-gather (0 for schemes without one).
     pub t_update: f64,
+    /// Link class of the updated-weight gather.
     pub class_update: LinkClass,
-    /// Per-microbatch forward / backward compute.
+    /// Per-microbatch forward compute.
     pub t_compute_fwd: f64,
+    /// Per-microbatch backward compute (≈ 2× forward).
     pub t_compute_bwd: f64,
     /// Sequential gradient-sync phases at the accumulation boundary.
     pub sync: Vec<SyncPhase>,
-    /// Gather group degrees (forward / backward) — the congruent-group
-    /// shapes a multi-rank builder needs to place each rank's gathers
+    /// Forward gather group degree — the congruent-group shape a
+    /// multi-rank builder needs to place each rank's gathers
     /// ([`crate::sched::multi::MultiRankPlan`]).
     pub d_fwd: usize,
+    /// Backward (secondary) gather group degree.
     pub d_bwd: usize,
 }
 

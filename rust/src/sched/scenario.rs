@@ -29,6 +29,7 @@ pub enum RankCount {
 }
 
 impl RankCount {
+    /// Parse `"auto"` or a positive rank count.
     pub fn parse(s: &str) -> Option<RankCount> {
         match s.to_ascii_lowercase().as_str() {
             "auto" => Some(RankCount::Auto),
@@ -57,6 +58,7 @@ impl fmt::Display for RankCount {
 /// A deterministic asymmetry recipe for one simulated step.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Scenario {
+    /// How many ranks the multi-rank builder models explicitly.
     pub ranks: RankCount,
     /// `(rank, compute multiplier)` — e.g. `(5, 1.2)` slows rank 5's
     /// kernels by 20%. Multipliers compose with jitter.
@@ -111,6 +113,23 @@ impl Scenario {
             }
         }
         mult
+    }
+
+    /// Per-**stage** compute multipliers for a `stages`-deep pipeline
+    /// over `cluster`: the worst (largest) [`Scenario::compute_multipliers`]
+    /// entry within each stage's contiguous `W/P`-rank block. The slowest
+    /// DP rank of a stage gates the stage's collectives, so it sets the
+    /// stage's effective speed — this is how "a straggler on a stage"
+    /// composes with the pipeline schedule
+    /// (`sched::pipeline::PipelinePlan::with_stage_multipliers`).
+    pub fn stage_multipliers(&self, cluster: &Cluster, stages: usize) -> Vec<f64> {
+        let world = cluster.world_size();
+        assert!(stages >= 1 && world % stages == 0, "stages must divide the world");
+        let mult = self.compute_multipliers(cluster);
+        let dp = world / stages;
+        (0..stages)
+            .map(|s| mult[s * dp..(s + 1) * dp].iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b)))
+            .collect()
     }
 
     /// Per-rank grad-accum counts: `base` everywhere, overridden by the
@@ -212,6 +231,22 @@ mod tests {
         assert!(Scenario::parse_stragglers("5:-1").is_err());
         assert!(Scenario::parse_imbalance("3:0").is_err());
         assert_eq!(Scenario::parse_stragglers("").unwrap(), vec![]);
+    }
+
+    #[test]
+    fn stage_multipliers_take_the_block_max() {
+        let cluster = Cluster::frontier(4); // 32 ranks
+        let sc = Scenario { stragglers: vec![(5, 1.5), (20, 2.0)], ..Default::default() };
+        // 4 stages of 8 ranks: rank 5 -> stage 0, rank 20 -> stage 2
+        let m = sc.stage_multipliers(&cluster, 4);
+        assert_eq!(m, vec![1.5, 1.0, 2.0, 1.0]);
+        // one stage = whole-world max
+        assert_eq!(sc.stage_multipliers(&cluster, 1), vec![2.0]);
+        // trivial scenario: all ones
+        assert!(Scenario::default()
+            .stage_multipliers(&cluster, 2)
+            .iter()
+            .all(|&x| x == 1.0));
     }
 
     #[test]

@@ -1,19 +1,29 @@
 //! Chrome-trace (about://tracing / Perfetto) export of a [`Schedule`]:
 //! one process per named schedule, one thread per (rank, stream), one
 //! complete ("X") event per task span. Load the emitted JSON in
-//! `chrome://tracing` or https://ui.perfetto.dev to see the stream
-//! timelines the step scheduler produced.
+//! `chrome://tracing` or <https://ui.perfetto.dev> to see the stream
+//! timelines the step scheduler produced. Pipeline schedules get a
+//! fourth per-rank lane for their stage-to-stage transfers.
 
 use crate::sched::{Schedule, StreamKind};
 use crate::util::json::Json;
+
+/// All stream lanes a rank can own, in lane order.
+const STREAMS: [StreamKind; 4] = [
+    StreamKind::Compute,
+    StreamKind::Prefetch,
+    StreamKind::GradSync,
+    StreamKind::PipeTransfer,
+];
 
 fn tid_of(rank: usize, stream: StreamKind) -> usize {
     let s = match stream {
         StreamKind::Compute => 0,
         StreamKind::Prefetch => 1,
         StreamKind::GradSync => 2,
+        StreamKind::PipeTransfer => 3,
     };
-    rank * 3 + s
+    rank * STREAMS.len() + s
 }
 
 /// Render one or more named schedules (e.g. one per scheme) as a Chrome
@@ -27,8 +37,19 @@ pub fn chrome_trace(named: &[(String, &Schedule)]) -> String {
             ("pid", Json::from(pid)),
             ("args", Json::obj(vec![("name", Json::str(name.clone()))])),
         ]));
+        // the pipe lane only appears for ranks that use it (one pass)
+        let pipe_ranks: std::collections::BTreeSet<usize> = sched
+            .graph()
+            .tasks()
+            .iter()
+            .filter(|t| t.stream == StreamKind::PipeTransfer)
+            .map(|t| t.rank)
+            .collect();
         for rank in sched.ranks() {
-            for stream in [StreamKind::Compute, StreamKind::Prefetch, StreamKind::GradSync] {
+            for stream in STREAMS {
+                if stream == StreamKind::PipeTransfer && !pipe_ranks.contains(&rank) {
+                    continue;
+                }
                 events.push(Json::obj(vec![
                     ("name", Json::str("thread_name")),
                     ("ph", Json::str("M")),
@@ -145,6 +166,41 @@ mod tests {
             .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
             .map(|e| e.get("tid").and_then(|t| t.as_usize()).unwrap())
             .collect();
-        assert_eq!(tids, vec![0, 9]); // rank * 3 + stream
+        assert_eq!(tids, vec![0, 12]); // rank * 4 + stream
+    }
+
+    #[test]
+    fn pipe_lane_appears_only_when_used() {
+        let mut g = TaskGraph::new();
+        let c = g.add(Task {
+            label: "fwd".into(),
+            rank: 0,
+            stream: StreamKind::Compute,
+            work: 1.0,
+            class: None,
+            instance: 0,
+            deps: vec![],
+        });
+        g.add(Task {
+            label: "p2p.act".into(),
+            rank: 0,
+            stream: StreamKind::PipeTransfer,
+            work: 0.5,
+            class: Some(crate::topology::LinkClass::InterNode),
+            instance: 0,
+            deps: vec![c],
+        });
+        let sched = simulate(g);
+        let out = chrome_trace(&[("pipe".to_string(), &sched)]);
+        let parsed = Json::parse(&out).expect("valid JSON");
+        let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        // 1 process_name + 4 thread_name (pipe lane present) + 2 tasks
+        assert_eq!(events.len(), 7);
+        let pipe_tid = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("p2p.act"))
+            .and_then(|e| e.get("tid").and_then(|t| t.as_usize()));
+        assert_eq!(pipe_tid, Some(3));
     }
 }

@@ -23,12 +23,35 @@
 //! gradient sync blocks the step end. `step_s` is the event-clock
 //! makespan; stall time per bandwidth level falls out of the schedule
 //! ([`simulate_step_schedule`]).
+//!
+//! Hybrid pipeline-parallel × ZeRO points go through
+//! [`simulate_step_pipeline`] (1F1B / interleaved schedules with bubble
+//! prediction — DESIGN.md §11).
+//!
+//! # Example
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the libxla rpath in this offline env)
+//! use zero_topo::model::TransformerSpec;
+//! use zero_topo::sharding::Scheme;
+//! use zero_topo::sim::{simulate_step, SimConfig};
+//! use zero_topo::topology::Cluster;
+//!
+//! let b = simulate_step(
+//!     &TransformerSpec::gpt125m(),
+//!     Scheme::ZeroTopo { sec_degree: 2 },
+//!     &Cluster::frontier(1),
+//!     &SimConfig::default(),
+//! );
+//! assert!(b.step_s > 0.0 && b.step_s >= b.compute_s);
+//! ```
 
-use crate::comm::cost::CommEfficiency;
+use crate::comm::cost::{CommEfficiency, CostModel};
 use crate::comm::{CommWorld, Wire};
 use crate::metrics::Throughput;
 use crate::model::TransformerSpec;
 use crate::sched::multi::MultiRankPlan;
+use crate::sched::pipeline::{PipeConfig, PipelineError, PipelinePlan};
 use crate::sched::plan::StepPlan;
 use crate::sched::scenario::Scenario;
 use crate::sched::{Depth, Schedule};
@@ -72,6 +95,7 @@ impl Default for SimConfig {
 /// Breakdown of one simulated optimizer step.
 #[derive(Debug, Clone, Copy)]
 pub struct StepBreakdown {
+    /// Per-rank compute seconds (all grad-accum microbatches).
     pub compute_s: f64,
     /// Prefetchable gather time (weight fwd/bwd + topo update gather).
     pub prefetchable_s: f64,
@@ -79,8 +103,35 @@ pub struct StepBreakdown {
     pub grad_sync_s: f64,
     /// Event-clock makespan of the scheduled step.
     pub step_s: f64,
+    /// Gradient-accumulation microbatches per step.
     pub grad_accum: usize,
+    /// Wire bytes the step pushed across node boundaries.
     pub inter_node_bytes: u64,
+}
+
+/// Breakdown of one simulated **pipeline-parallel** optimizer step
+/// ([`simulate_step_pipeline`]).
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineBreakdown {
+    /// Event-clock makespan of the scheduled pipeline step.
+    pub step_s: f64,
+    /// Simulated bubble fraction: idle share of the compute window,
+    /// including the stalls ZeRO gathers and stage transfers induce.
+    pub bubble_fraction: f64,
+    /// Closed-form equal-stage free-communication bound
+    /// `(P-1)/(V·M + P-1)`.
+    pub ideal_bubble: f64,
+    /// Pipeline stages `P`.
+    pub stages: usize,
+    /// Microbatches per step `M` (explicit, or derived from the global
+    /// batch over the `W/P`-rank data-parallel width).
+    pub microbatches: usize,
+    /// Virtual chunks per stage `V` (1 = plain 1F1B).
+    pub interleave: usize,
+    /// Full-model per-DP-rank compute seconds for the step.
+    pub compute_s: f64,
+    /// Activation transfer seconds per microbatch per stage boundary.
+    pub t_act: f64,
 }
 
 /// Price one (model, scheme, cluster) point: charge the full protocol to
@@ -250,6 +301,132 @@ pub fn simulate_step(
     cfg: &SimConfig,
 ) -> StepBreakdown {
     simulate_step_schedule(model, scheme, cluster, cfg).0
+}
+
+fn pipeline_point(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+    pipe: &PipeConfig,
+    scenario: Option<&Scenario>,
+) -> Result<(PipelineBreakdown, Schedule, PipelinePlan), PipelineError> {
+    let p = pipe.stages;
+    if p == 0 {
+        return Err(PipelineError::BadStages(0));
+    }
+    if cluster.nodes % p != 0 {
+        return Err(PipelineError::StagesDontDivideNodes { stages: p, nodes: cluster.nodes });
+    }
+    let dp = cluster.world_size() / p;
+    let tokens_per_micro = (cfg.micro_batch * model.seq) as f64;
+    // microbatches: explicit, or the grad-accum needed to reach the global
+    // batch over the W/P-wide data-parallel axis (P = 1 reproduces the
+    // simulate_step derivation exactly)
+    let m = if pipe.microbatches > 0 {
+        pipe.microbatches as f64
+    } else {
+        (cfg.global_batch_tokens / (tokens_per_micro * dp as f64)).round().max(1.0)
+    };
+    let flops_per_rank_step = model.flops_per_token() * tokens_per_micro * m;
+    let peak = cluster.peak_flops_per_worker();
+    let compute_s = flops_per_rank_step / (peak * cfg.mfu);
+
+    let resolved =
+        PipeConfig { stages: p, microbatches: m as usize, interleave: pipe.interleave };
+    let cost = CostModel::with_efficiency(cluster.clone(), cfg.efficiency);
+    let chunk_params = model.chunk_params(resolved.chunks());
+    let mut plan = PipelinePlan::from_protocol(
+        &cost,
+        scheme,
+        &resolved,
+        &chunk_params,
+        cfg.quant_block,
+        model.activation_bytes(cfg.micro_batch),
+        compute_s,
+        cfg.prefetch_depth,
+    )?;
+    if let Some(sc) = scenario {
+        if !sc.is_trivial() {
+            plan = plan.with_stage_multipliers(sc.stage_multipliers(cluster, p));
+        }
+    }
+    let sched = plan.simulate();
+    let breakdown = PipelineBreakdown {
+        step_s: sched.makespan(),
+        bubble_fraction: plan.bubble_fraction(&sched),
+        ideal_bubble: PipelinePlan::ideal_bubble(p, plan.microbatches(), plan.interleave),
+        stages: p,
+        microbatches: plan.microbatches(),
+        interleave: plan.interleave,
+        compute_s,
+        t_act: plan.t_act,
+    };
+    Ok((breakdown, sched, plan))
+}
+
+/// Simulate one point under a hybrid pipeline-parallel × ZeRO execution:
+/// `P` stages on contiguous node groups, the ZeRO scheme inside each
+/// stage's `W/P`-rank group, 1F1B (or interleaved, `pipe.interleave > 1`)
+/// microbatch schedule. `pipe.microbatches == 0` derives `M` from the
+/// global batch. With `P = 1` the step time is **bit-for-bit**
+/// [`simulate_step`]'s (the pipeline path degenerates to the calibrated
+/// single-axis plan — gated by `tests/pipeline.rs`). Returns the step
+/// breakdown, the executed schedule (trace/stall queries), and the
+/// priced plan (per-stage rendering).
+pub fn simulate_step_pipeline(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+    pipe: &PipeConfig,
+) -> Result<(PipelineBreakdown, Schedule, PipelinePlan), PipelineError> {
+    pipeline_point(model, scheme, cluster, cfg, pipe, None)
+}
+
+/// [`simulate_step_pipeline`] with a [`Scenario`] mapped onto stages:
+/// each stage runs at the *slowest* multiplier among its ranks
+/// (stragglers gate their stage's collectives), so "straggler on a
+/// stage" studies compose with the pipeline schedule.
+pub fn simulate_step_pipeline_scenario(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+    pipe: &PipeConfig,
+    scenario: &Scenario,
+) -> Result<(PipelineBreakdown, Schedule, PipelinePlan), PipelineError> {
+    pipeline_point(model, scheme, cluster, cfg, pipe, Some(scenario))
+}
+
+/// [`scaling_series`] under a pipeline-parallel execution: every point's
+/// step time is the pipeline makespan over `P × (W/P)` ranks; the global
+/// batch per step is `M` microbatches on each of the `W/P` data-parallel
+/// pipelines. Errors if any node count is not a multiple of `P`.
+pub fn scaling_series_pipeline(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    machine: &MachineSpec,
+    node_counts: &[usize],
+    cfg: &SimConfig,
+    pipe: &PipeConfig,
+) -> Result<Vec<Throughput>, PipelineError> {
+    node_counts
+        .iter()
+        .map(|&nodes| {
+            let cluster = Cluster::new(machine.clone(), nodes);
+            let world = cluster.world_size();
+            let (b, _, _) = simulate_step_pipeline(model, scheme, &cluster, cfg, pipe)?;
+            let dp = world / b.stages;
+            let tokens = (b.microbatches * cfg.micro_batch * model.seq * dp) as f64;
+            Ok(Throughput {
+                gcds: world,
+                step_seconds: b.step_s,
+                flops_per_step: model.flops_per_token() * tokens,
+                sequences_per_step: tokens / model.seq as f64,
+            })
+        })
+        .collect()
 }
 
 /// Produce the paper's per-scale Throughput series for one scheme on one
@@ -553,6 +730,87 @@ mod tests {
         for (a, b) in plain.iter().zip(&sc) {
             assert_eq!(a.step_seconds, b.step_seconds);
         }
+    }
+
+    #[test]
+    fn pipeline_p1_is_bitwise_simulate_step() {
+        let model = TransformerSpec::neox20b();
+        let cfg = SimConfig::default();
+        let c = Cluster::frontier(48);
+        let pipe = PipeConfig { stages: 1, microbatches: 0, interleave: 1 };
+        for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }] {
+            let a = simulate_step(&model, scheme, &c, &cfg);
+            let (b, _, _) = simulate_step_pipeline(&model, scheme, &c, &cfg, &pipe).unwrap();
+            assert_eq!(a.step_s, b.step_s, "{scheme:?}");
+            assert_eq!(a.grad_accum, b.microbatches, "{scheme:?}");
+            // no pipeline axis: the closed-form bubble bound is zero (the
+            // simulated fraction still reports the comm-stall share)
+            assert_eq!(b.ideal_bubble, 0.0, "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn pipeline_bubble_shrinks_with_microbatches_and_interleave() {
+        let model = TransformerSpec::neox20b();
+        let cfg = SimConfig::default();
+        let c = Cluster::frontier(48);
+        let scheme = Scheme::ZeroTopo { sec_degree: 2 };
+        let at = |mb: usize, v: usize| {
+            let pipe = PipeConfig { stages: 4, microbatches: mb, interleave: v };
+            simulate_step_pipeline(&model, scheme, &c, &cfg, &pipe).unwrap().0
+        };
+        let m8 = at(8, 1);
+        let m32 = at(32, 1);
+        assert!(m32.bubble_fraction < m8.bubble_fraction, "{m32:?} vs {m8:?}");
+        assert!(m8.ideal_bubble > 0.0 && m8.bubble_fraction >= m8.ideal_bubble - 1e-9);
+        let inter = at(8, 2);
+        assert!(inter.ideal_bubble < m8.ideal_bubble);
+        // per-microbatch work is fixed, so more microbatches = longer step
+        assert!(m32.step_s > m8.step_s);
+    }
+
+    #[test]
+    fn pipeline_rejects_bad_stage_counts() {
+        let model = TransformerSpec::neox10b();
+        let cfg = SimConfig::default();
+        let c = Cluster::frontier(6);
+        let pipe = PipeConfig { stages: 4, microbatches: 8, interleave: 1 };
+        assert!(simulate_step_pipeline(&model, Scheme::Zero3, &c, &cfg, &pipe).is_err());
+    }
+
+    #[test]
+    fn pipeline_scaling_series_runs_cross_machine() {
+        let model = TransformerSpec::neox10b();
+        let cfg = SimConfig::default();
+        let pipe = PipeConfig { stages: 2, microbatches: 8, interleave: 1 };
+        for m in [MachineSpec::frontier_mi250x(), MachineSpec::dgx_a100()] {
+            let pts = scaling_series_pipeline(
+                &model,
+                Scheme::ZeroTopo { sec_degree: 0 },
+                &m,
+                &[2, 4, 8],
+                &cfg,
+                &pipe,
+            )
+            .unwrap();
+            assert_eq!(pts.len(), 3);
+            assert!(pts.iter().all(|p| p.step_seconds.is_finite() && p.step_seconds > 0.0));
+        }
+    }
+
+    #[test]
+    fn pipeline_straggler_stage_stretches_step() {
+        let model = TransformerSpec::neox20b();
+        let cfg = SimConfig::default();
+        let c = Cluster::frontier(48);
+        let pipe = PipeConfig { stages: 4, microbatches: 8, interleave: 1 };
+        let scheme = Scheme::ZeroTopo { sec_degree: 2 };
+        let (base, _, _) = simulate_step_pipeline(&model, scheme, &c, &cfg, &pipe).unwrap();
+        // rank 100 lives in stage 1 (ranks 96..192 at 48 nodes / P=4)
+        let sc = Scenario { stragglers: vec![(100, 1.3)], ..Default::default() };
+        let (slow, _, _) =
+            simulate_step_pipeline_scenario(&model, scheme, &c, &cfg, &pipe, &sc).unwrap();
+        assert!(slow.step_s > base.step_s * 1.01, "{} vs {}", slow.step_s, base.step_s);
     }
 
     #[test]

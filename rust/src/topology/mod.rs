@@ -61,11 +61,14 @@ impl fmt::Display for LinkClass {
 /// as GPUs — paper §VI), numbered consecutively within each node.
 #[derive(Debug, Clone)]
 pub struct Cluster {
+    /// The node flavor every node of the cluster shares.
     pub spec: MachineSpec,
+    /// Number of nodes.
     pub nodes: usize,
 }
 
 impl Cluster {
+    /// A cluster of `nodes` identical `spec` nodes.
     pub fn new(spec: MachineSpec, nodes: usize) -> Self {
         // JSON loads always validate; catch hand-built invalid specs early
         debug_assert!(
@@ -77,22 +80,27 @@ impl Cluster {
         Cluster { spec, nodes }
     }
 
+    /// Shorthand for `nodes` Frontier-MI250X nodes (the paper's machine).
     pub fn frontier(nodes: usize) -> Self {
         Cluster::new(MachineSpec::frontier_mi250x(), nodes)
     }
 
+    /// Shorthand for `nodes` DGX-A100 nodes.
     pub fn dgx(nodes: usize) -> Self {
         Cluster::new(MachineSpec::dgx_a100(), nodes)
     }
 
+    /// Workers (GCDs / GPUs / tiles) per node.
     pub fn workers_per_node(&self) -> usize {
         self.spec.workers_per_node
     }
 
+    /// Peak dense fp16 FLOP/s per worker.
     pub fn peak_flops_per_worker(&self) -> f64 {
         self.spec.peak_flops_per_worker
     }
 
+    /// HBM bytes per worker.
     pub fn hbm_per_worker(&self) -> f64 {
         self.spec.hbm_per_worker
     }
@@ -102,10 +110,12 @@ impl Cluster {
         self.spec.link_spec(class)
     }
 
+    /// Total worker count (`nodes × workers_per_node`).
     pub fn world_size(&self) -> usize {
         self.nodes * self.spec.workers_per_node
     }
 
+    /// The node a world rank lives on.
     pub fn node_of(&self, rank: usize) -> usize {
         rank / self.spec.workers_per_node
     }

@@ -55,6 +55,7 @@ pub struct MachineLevel {
     pub name: String,
     /// Workers per group at this level.
     pub span: usize,
+    /// α–β parameters of this level's link.
     pub link: LinkSpec,
 }
 
@@ -62,6 +63,7 @@ pub struct MachineLevel {
 /// intra-node bandwidth hierarchy and the inter-node fabric.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MachineSpec {
+    /// Display name; builtin lookup is by CLI name, files by path.
     pub name: String,
     /// Workers (GCDs / GPUs / tiles) per node; equals the outermost span.
     pub workers_per_node: usize,
@@ -75,16 +77,31 @@ pub struct MachineSpec {
     pub inter_node: LinkSpec,
 }
 
+/// Why a machine spec failed to load, parse, or validate.
 #[derive(Debug, thiserror::Error)]
 pub enum SpecError {
+    /// The spec file could not be read.
     #[error("io: {0}")]
     Io(#[from] std::io::Error),
+    /// The spec file is not valid JSON.
     #[error("json: {0}")]
     Json(#[from] JsonError),
+    /// The spec parsed but violates the structural rules.
     #[error("machine spec '{name}': {why}")]
-    Invalid { name: String, why: String },
+    Invalid {
+        /// The offending spec's name.
+        name: String,
+        /// What rule it broke.
+        why: String,
+    },
+    /// Not a builtin name and not a readable file path.
     #[error("unknown machine '{name}': not a builtin (try {builtins}) and no such file")]
-    Unknown { name: String, builtins: String },
+    Unknown {
+        /// The unresolvable machine string.
+        name: String,
+        /// Comma-separated builtin names for the error message.
+        builtins: String,
+    },
 }
 
 impl MachineSpec {
@@ -203,6 +220,27 @@ impl MachineSpec {
 
     // -- JSON ------------------------------------------------------------
 
+    /// Parse + validate a spec from its JSON object form (see the module
+    /// doc for the schema and a worked example).
+    ///
+    /// ```no_run
+    /// // (no_run: doctest binaries miss the libxla rpath in this offline env)
+    /// use zero_topo::topology::MachineSpec;
+    /// use zero_topo::util::json::Json;
+    ///
+    /// let j = Json::parse(
+    ///     r#"{"name": "two-tier", "workers_per_node": 4,
+    ///         "peak_flops_per_worker": 100e12, "hbm_per_worker": 32e9,
+    ///         "levels": [
+    ///           {"name": "fast", "span": 2, "bandwidth": 300e9, "latency": 1e-6},
+    ///           {"name": "slow", "span": 4, "bandwidth": 100e9, "latency": 2e-6}],
+    ///         "inter_node": {"bandwidth": 50e9, "latency": 9e-6}}"#,
+    /// )
+    /// .unwrap();
+    /// let spec = MachineSpec::from_json(&j).unwrap();
+    /// assert_eq!(spec.innermost_span(), 2);
+    /// assert_eq!(spec.level_spans(), vec![2, 4]);
+    /// ```
     pub fn from_json(j: &Json) -> Result<MachineSpec, SpecError> {
         let name = j
             .get("name")
@@ -275,6 +313,7 @@ impl MachineSpec {
         Ok(spec)
     }
 
+    /// The JSON object form ([`MachineSpec::from_json`] round-trips it).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),
@@ -302,11 +341,13 @@ impl MachineSpec {
         ])
     }
 
+    /// Load + validate a spec from a JSON file.
     pub fn load(path: impl AsRef<Path>) -> Result<MachineSpec, SpecError> {
         let text = std::fs::read_to_string(path)?;
         Self::from_json(&Json::parse(&text)?)
     }
 
+    /// Write the spec's JSON form to a file.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<(), SpecError> {
         std::fs::write(path, format!("{}\n", self.to_json()))?;
         Ok(())

@@ -1,13 +1,15 @@
 //! Perf guardrail twin of `zero-topo calibrate --check`: the committed
-//! `BENCH_baseline.json` (20B @ 48 nodes, frontier + dgx builtins) must
-//! stay within its tolerance of what the simulator computes today, so a
-//! refactor cannot silently move the calibrated Fig 7 numbers.
+//! `BENCH_baseline.json` (20B @ 48 nodes, frontier + dgx builtins, plus
+//! the pinned P=4 pipeline points) must stay within its tolerance of
+//! what the simulator computes today, so a refactor cannot silently move
+//! the calibrated Fig 7 numbers or the pipeline step times.
 
 use std::path::PathBuf;
 
 use zero_topo::model::TransformerSpec;
+use zero_topo::sched::pipeline::PipeConfig;
 use zero_topo::sharding::Scheme;
-use zero_topo::sim::{simulate_step, SimConfig};
+use zero_topo::sim::{simulate_step, simulate_step_pipeline, SimConfig};
 use zero_topo::topology::{Cluster, MachineSpec};
 use zero_topo::util::json::Json;
 
@@ -26,24 +28,37 @@ fn committed_baseline_matches_simulator() {
     )
     .expect("known model");
     let entries = json.get("entries").and_then(|e| e.as_arr()).expect("entries");
-    assert!(entries.len() >= 6, "expected frontier+dgx x 3 schemes");
+    assert!(entries.len() >= 8, "expected frontier+dgx x 3 schemes + 2 pipeline points");
 
     let cfg = SimConfig::default();
+    let mut pipeline_entries = 0usize;
     for e in entries {
         let mname = e.get("machine").and_then(|m| m.as_str()).expect("machine");
         let sname = e.get("scheme").and_then(|s| s.as_str()).expect("scheme");
+        let pp = e.get("pp").and_then(|v| v.as_usize()).unwrap_or(1);
+        let mb = e.get("microbatches").and_then(|v| v.as_usize()).unwrap_or(0);
         let base = e.get("step_s").and_then(|s| s.as_f64()).expect("step_s");
         let scheme = Scheme::parse(sname).unwrap_or_else(|| panic!("unknown scheme {sname}"));
         let spec = MachineSpec::resolve(mname).expect("known machine");
-        let b = simulate_step(&model, scheme, &Cluster::new(spec, nodes), &cfg);
-        let drift = (b.step_s - base) / base;
+        let cluster = Cluster::new(spec, nodes);
+        let step_s = if pp > 1 {
+            pipeline_entries += 1;
+            let pipe = PipeConfig { stages: pp, microbatches: mb, interleave: 1 };
+            simulate_step_pipeline(&model, scheme, &cluster, &cfg, &pipe)
+                .expect("pipeline point prices")
+                .0
+                .step_s
+        } else {
+            simulate_step(&model, scheme, &cluster, &cfg).step_s
+        };
+        let drift = (step_s - base) / base;
         assert!(
             drift.abs() <= tol,
-            "{mname}/{sname}: {base}s -> {}s ({:+.3}% > {:.1}%) — \
+            "{mname}/{sname} pp{pp} mb{mb}: {base}s -> {step_s}s ({:+.3}% > {:.1}%) — \
              if intentional, regenerate with `cargo run -- calibrate --write`",
-            b.step_s,
             drift * 100.0,
             tol * 100.0
         );
     }
+    assert_eq!(pipeline_entries, 2, "the two pinned P=4 pipeline points must be present");
 }

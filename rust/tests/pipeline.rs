@@ -1,0 +1,131 @@
+//! Pipeline determinism and bubble-prediction gates (ISSUE 4): `P = 1`
+//! reproduces the single-axis step bit-for-bit, the simulated bubble of a
+//! communication-free equal-stage 1F1B plan matches the closed-form
+//! `(P-1)/(M+P-1)` bound across random grids, `M = 1` hits the worst
+//! case, interleaving tightens the bound to `(P-1)/(V·M+P-1)`, and
+//! uneven layer counts partition without panicking.
+
+use zero_topo::model::TransformerSpec;
+use zero_topo::sched::pipeline::{even_chunk_params, split_even, PipeConfig, PipelinePlan};
+use zero_topo::sched::Depth;
+use zero_topo::sharding::Scheme;
+use zero_topo::sim::{simulate_step, simulate_step_pipeline, SimConfig};
+use zero_topo::testing::check;
+use zero_topo::topology::Cluster;
+
+#[test]
+fn p1_reproduces_single_axis_step_bit_for_bit() {
+    let cfg = SimConfig::default();
+    let schemes =
+        [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }, Scheme::Zero1];
+    check("pipeline P=1 == simulate_step", 24, |g| {
+        let scheme = *g.pick(&schemes);
+        let model =
+            if g.bool() { TransformerSpec::neox20b() } else { TransformerSpec::neox10b() };
+        let nodes = *g.pick(&[1usize, 2, 4, 8, 48]);
+        let c = Cluster::frontier(nodes);
+        let base = simulate_step(&model, scheme, &c, &cfg);
+        let pipe = PipeConfig { stages: 1, microbatches: 0, interleave: 1 };
+        let (b, _, _) = simulate_step_pipeline(&model, scheme, &c, &cfg, &pipe).unwrap();
+        assert_eq!(base.step_s, b.step_s, "{scheme:?} nodes={nodes}");
+        assert_eq!(base.grad_accum, b.microbatches, "{scheme:?} nodes={nodes}");
+    });
+}
+
+#[test]
+fn bubble_matches_closed_form_on_random_grids() {
+    check("1F1B bubble == (P-1)/(M+P-1)", 60, |g| {
+        let p = g.usize_in(1, 8);
+        let m = g.usize_in(1, 16);
+        let tf = 0.5 + g.f64_unit();
+        let tb = 2.0 * tf;
+        let plan = PipelinePlan::synthetic(p, m, 1, tf, tb, Depth::Infinite);
+        let sched = plan.simulate();
+        let bubble = plan.bubble_fraction(&sched);
+        let bound = PipelinePlan::ideal_bubble(p, m, 1);
+        assert!((bubble - bound).abs() < 1e-9, "p={p} m={m}: {bubble} vs {bound}");
+        // and the compute-only makespan is exactly (M + P - 1) (tf + tb)
+        let want = (m + p - 1) as f64 * (tf + tb);
+        assert!(
+            (sched.makespan() - want).abs() < 1e-9 * want,
+            "p={p} m={m}: {} vs {want}",
+            sched.makespan()
+        );
+    });
+}
+
+#[test]
+fn single_microbatch_hits_the_worst_case_bubble() {
+    for p in [2usize, 3, 4, 8] {
+        let plan = PipelinePlan::synthetic(p, 1, 1, 1.0, 2.0, Depth::Infinite);
+        let bubble = plan.bubble_fraction(&plan.simulate());
+        let worst = (p - 1) as f64 / p as f64;
+        assert!((bubble - worst).abs() < 1e-9, "p={p}: {bubble} vs {worst}");
+    }
+}
+
+#[test]
+fn interleaving_matches_its_bound_and_wins() {
+    check("interleaved bubble == (P-1)/(VM+P-1)", 40, |g| {
+        let p = g.usize_in(2, 6);
+        let m = g.usize_in(1, 4) * p;
+        let v = g.usize_in(2, 4);
+        let plan = PipelinePlan::synthetic(p, m, v, 1.0, 2.0, Depth::Infinite);
+        let bubble = plan.bubble_fraction(&plan.simulate());
+        let bound = PipelinePlan::ideal_bubble(p, m, v);
+        assert!((bubble - bound).abs() < 1e-9, "p={p} m={m} v={v}: {bubble} vs {bound}");
+        let plain = PipelinePlan::synthetic(p, m, 1, 1.0, 2.0, Depth::Infinite);
+        assert!(bubble < plain.bubble_fraction(&plain.simulate()), "p={p} m={m} v={v}");
+    });
+}
+
+#[test]
+fn uneven_layer_counts_partition_cleanly() {
+    check("layer split covers", 60, |g| {
+        let layers = g.usize_in(1, 96);
+        let chunks = g.usize_in(1, 32);
+        let split = split_even(layers, chunks);
+        assert_eq!(split.len(), chunks);
+        assert_eq!(split.iter().sum::<usize>(), layers);
+        assert!(split.iter().max().unwrap() - split.iter().min().unwrap() <= 1);
+        let total = g.i64_in(1, 1 << 40) as u64;
+        let cp = even_chunk_params(total, chunks);
+        assert_eq!(cp.iter().sum::<u64>(), total);
+    });
+}
+
+#[test]
+fn indivisible_layer_counts_simulate_end_to_end() {
+    // 44 NeoX-20B layers over P=8 stages (not divisible) must price and
+    // schedule without panicking, on frontier and dgx
+    let model = TransformerSpec::neox20b();
+    let cfg = SimConfig::default();
+    for nodes in [8usize, 48] {
+        let c = Cluster::frontier(nodes);
+        let pipe = PipeConfig { stages: 8, microbatches: 8, interleave: 1 };
+        let (b, _, _) =
+            simulate_step_pipeline(&model, Scheme::ZeroTopo { sec_degree: 2 }, &c, &cfg, &pipe)
+                .unwrap();
+        assert!(b.step_s.is_finite() && b.step_s > 0.0, "nodes={nodes}");
+        assert!(b.bubble_fraction >= 0.0 && b.bubble_fraction < 1.0, "nodes={nodes}");
+    }
+}
+
+#[test]
+fn acceptance_pipeline_20b_384_gcds() {
+    // ISSUE acceptance: step time + bubble fraction for 1F1B and
+    // interleaved at 20B / 384 GCDs, P=4
+    let model = TransformerSpec::neox20b();
+    let cfg = SimConfig::default();
+    let c = Cluster::frontier(48);
+    let scheme = Scheme::ZeroTopo { sec_degree: 2 };
+    let pipe = |mb: usize, v: usize| PipeConfig { stages: 4, microbatches: mb, interleave: v };
+    let (f1b, _, _) = simulate_step_pipeline(&model, scheme, &c, &cfg, &pipe(8, 1)).unwrap();
+    assert!(f1b.bubble_fraction > 0.0 && f1b.bubble_fraction < 1.0, "{f1b:?}");
+    assert!((f1b.ideal_bubble - 3.0 / 11.0).abs() < 1e-12);
+    let (inter, _, _) = simulate_step_pipeline(&model, scheme, &c, &cfg, &pipe(8, 2)).unwrap();
+    assert!(inter.ideal_bubble < f1b.ideal_bubble);
+    // more microbatches amortize the fill/drain: smaller bubble
+    let (m32, _, _) = simulate_step_pipeline(&model, scheme, &c, &cfg, &pipe(32, 1)).unwrap();
+    assert!(m32.bubble_fraction < f1b.bubble_fraction, "{} vs {}", m32.bubble_fraction, f1b.bubble_fraction);
+}
