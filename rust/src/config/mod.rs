@@ -31,8 +31,15 @@ pub struct RunConfig {
     pub lr: f32,
     /// MFU anchor for the simulated compute term of the step clock.
     pub mfu: f64,
-    /// Prefetch depth for the step scheduler's gather stream.
+    /// Prefetch depth for the step scheduler's gather stream: gather
+    /// *units* ahead of the compute cursor — whole microbatch gathers
+    /// when `layer_blocks == 1`, layer blocks when `layer_blocks > 1`.
     pub prefetch_depth: Depth,
+    /// Layer blocks the step clock splits each microbatch gather into
+    /// (layer-granular prefetch; 1 = monolithic, today's clock
+    /// bit-for-bit). The engine splits its proxy manifest's flat
+    /// parameter count near-evenly (manifests carry no layer map).
+    pub layer_blocks: usize,
     /// How many ranks the step clock models explicitly (`auto` collapses
     /// congruent groups — with no asymmetry below, a single rank).
     pub ranks: RankCount,
@@ -69,6 +76,7 @@ impl Default for RunConfig {
             lr: 1e-3,
             mfu: 0.35,
             prefetch_depth: Depth::Infinite,
+            layer_blocks: 1,
             ranks: RankCount::Auto,
             jitter_sigma: 0.0,
             stragglers: Vec::new(),
@@ -135,6 +143,10 @@ impl RunConfig {
                 _ => return Err(ConfigError::Bad("prefetch_depth", v.to_string())),
             };
         }
+        c.layer_blocks = get_usize(j, "layer_blocks", c.layer_blocks)?;
+        if c.layer_blocks == 0 {
+            return Err(ConfigError::Bad("layer_blocks", "0".into()));
+        }
         if let Some(v) = j.get("ranks") {
             // like prefetch_depth: a number or the string "auto"
             c.ranks = match (v.as_usize(), v.as_str()) {
@@ -200,6 +212,7 @@ impl RunConfig {
             ("lr", Json::num(self.lr as f64)),
             ("mfu", Json::num(self.mfu)),
             ("prefetch_depth", Json::str(self.prefetch_depth.to_string())),
+            ("layer_blocks", Json::from(self.layer_blocks)),
             ("ranks", Json::str(self.ranks.to_string())),
             ("jitter_sigma", Json::num(self.jitter_sigma)),
             (
@@ -259,6 +272,7 @@ mod tests {
             lr: 3e-4,
             mfu: 0.4,
             prefetch_depth: Depth::Bounded(2),
+            layer_blocks: 8,
             ranks: RankCount::Count(4),
             jitter_sigma: 0.05,
             stragglers: vec![(3, 1.25)],
@@ -278,6 +292,7 @@ mod tests {
         assert!((c2.lr - 3e-4).abs() < 1e-9);
         assert!((c2.mfu - 0.4).abs() < 1e-12);
         assert_eq!(c2.prefetch_depth, Depth::Bounded(2));
+        assert_eq!(c2.layer_blocks, 8);
         assert_eq!(c2.ranks, RankCount::Count(4));
         assert!((c2.jitter_sigma - 0.05).abs() < 1e-12);
         assert_eq!(c2.stragglers, vec![(3, 1.25)]);
@@ -354,6 +369,16 @@ mod tests {
         assert!(RunConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"interleave":0}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"layer_blocks":0}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn layer_blocks_default_monolithic() {
+        let c = RunConfig::from_json(&Json::parse(r#"{"model":"e2e"}"#).unwrap()).unwrap();
+        assert_eq!(c.layer_blocks, 1);
+        let j = Json::parse(r#"{"layer_blocks":16}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().layer_blocks, 16);
     }
 
     #[test]

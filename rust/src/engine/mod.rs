@@ -421,13 +421,28 @@ impl<'a> TrainEngine<'a> {
     /// not the layer geometry the simulator's detailed account needs — so
     /// engine and sim step clocks agree on communication and scheduling,
     /// and differ on compute only by 6Ψ-vs-detailed (under ~15% for large
-    /// models, more for tiny proxies).
+    /// models, more for tiny proxies). With `layer_blocks > 1` the clock
+    /// runs the layer-granular prefetch schedule over a near-even split
+    /// of the flat parameter count (manifests carry no per-layer map).
     fn plan_step(&self) -> StepPlan {
         let m = &self.runner.manifest;
         let tokens_per_micro = (m.mbs * m.seq) as f64;
         let peak = self.cluster.peak_flops_per_worker();
         let compute_s = 6.0 * m.n_params as f64 * tokens_per_micro * self.cfg.grad_accum as f64
             / (peak * self.cfg.mfu);
+        if self.cfg.layer_blocks > 1 {
+            let blocks = even_chunk_params(m.n_params as u64, self.cfg.layer_blocks);
+            return StepPlan::from_protocol_layered(
+                &self.comm.cost,
+                self.cfg.scheme,
+                &self.spec,
+                &blocks,
+                self.quant_block(),
+                self.cfg.grad_accum,
+                compute_s,
+                self.cfg.prefetch_depth,
+            );
+        }
         StepPlan::from_protocol(
             &self.comm.cost,
             self.cfg.scheme,
@@ -481,6 +496,7 @@ impl<'a> TrainEngine<'a> {
             act,
             compute_s,
             self.cfg.prefetch_depth,
+            self.cfg.layer_blocks > 1,
         )?
         .with_stage_multipliers(self.cfg.scenario().stage_multipliers(&self.cluster, p));
         Ok(plan.simulate().makespan())

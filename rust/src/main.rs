@@ -52,32 +52,48 @@ JSON (see examples/machines/). Default: frontier.
   capacity  [--machine M] [--nodes N]       max model size per scheme (Sec II)
   simulate  [--machine M] [--model 20b] [--nodes 8,16,32,48]
             [--schemes zero3,zeropp,zerotopo] [--depth N|inf] [--ranks N|auto]
-            [--pp P] [--microbatches M] [--interleave V]
+            [--layer-granular] [--blocks B] [--pp P] [--microbatches M]
+            [--interleave V]
             [--stalls] [--trace out.json]   Fig 7/8 scaling (event-driven sim)
   scale     alias of simulate               cross-scale / cross-machine sweeps
   pipeline  [--machine M] [--model 20b] [--nodes 48] [--schemes S,...]
             [--pp 4] [--microbatches 8] [--interleave 2] [--depth N|inf]
-            [--straggler R:MULT,...] [--jitter SIGMA] [--seed S]
-            [--trace out.json]              1F1B vs interleaved: step time +
+            [--layer-granular] [--straggler R:MULT,...] [--jitter SIGMA]
+            [--seed S] [--trace out.json]   1F1B vs interleaved: step time +
                                             bubble fraction per scheme
   scenario  [--machine M] [--model 20b] [--nodes 48] [--schemes S,...]
             [--ranks N|auto] [--straggler R:MULT,...] [--jitter SIGMA]
-            [--seed S] [--imbalance R:GA,...] [--depth N|inf] [--rank-rows K]
+            [--seed S] [--imbalance R:GA,...] [--depth N|inf]
+            [--layer-granular] [--blocks B] [--rank-rows K]
             [--trace out.json]              multi-rank stragglers/jitter study
   calibrate [--check] [--write] [--baseline FILE] [--tolerance 0.01]
-                                            perf guardrail vs BENCH_baseline.json
-                                            (incl. pinned P=4 pipeline points)
+            [--md FILE]                     perf guardrail vs BENCH_baseline.json
+                                            (incl. pinned P=4 pipeline points);
+                                            --md appends the drift table as
+                                            markdown (CI: $GITHUB_STEP_SUMMARY)
   train     [--machine M] [--model tiny] [--scheme zerotopo] [--nodes 1]
-            [--steps 10] [--depth N|inf] [--ranks N|auto] [--jitter SIGMA]
-            [--straggler R:MULT,...] [--pp P] [--microbatches M]
-            [--interleave V] [--artifacts DIR] [--csv FILE]
-                                            real training via PJRT
+            [--steps 10] [--depth N|inf] [--layer-granular] [--blocks B]
+            [--ranks N|auto] [--jitter SIGMA] [--straggler R:MULT,...]
+            [--pp P] [--microbatches M] [--interleave V] [--artifacts DIR]
+            [--csv FILE]                    real training via PJRT
   report    [--machine M]                   print all analytical tables
+
+--depth bounds the prefetch stream: how many gather units may run ahead of
+the compute that consumes them (0 = fetch on demand, inf = free-running).
+The unit is one whole per-microbatch gather by default; with
+--layer-granular (or --blocks B > 1) gathers split per layer block and
+--depth counts *layer blocks* ahead — DeepSpeed's parameter-prefetch
+window in layers (sched::Depth rustdoc, DESIGN.md §12). --layer-granular
+defaults to one block per transformer layer; --blocks overrides the
+count. In pipeline runs the blocks are each stage's virtual chunks.
 ";
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(raw, &["verbose", "json", "help", "stalls", "check", "write"]) {
+    let args = match Args::parse(
+        raw,
+        &["verbose", "json", "help", "stalls", "check", "write", "layer-granular"],
+    ) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
@@ -135,6 +151,31 @@ fn parse_pp_default(args: &Args, default: usize) -> anyhow::Result<usize> {
     let pp = args.parse_opt("pp", default)?;
     anyhow::ensure!(pp >= 1, "--pp must be >= 1 (1 = no pipeline axis)");
     Ok(pp)
+}
+
+/// Resolve the layer-granular prefetch block count: `--blocks B` wins,
+/// bare `--layer-granular` defaults to one block per transformer layer,
+/// neither keeps the monolithic plan (`1`, bit-for-bit today's schedule).
+fn parse_layer_blocks(args: &Args, per_layer_default: usize) -> anyhow::Result<usize> {
+    let blocks = match args.get("blocks") {
+        Some(_) => args.parse_opt("blocks", 1usize)?,
+        None if args.flag("layer-granular") => per_layer_default,
+        None => 1,
+    };
+    anyhow::ensure!(blocks >= 1, "--blocks must be >= 1 (1 = monolithic gathers)");
+    Ok(blocks)
+}
+
+/// Pipeline runs take their block count from the chunk axis (a stage's
+/// blocks are exactly its `--interleave` chunk slice), so an explicit
+/// `--blocks` would be silently ignored — reject it instead.
+fn ensure_no_blocks_under_pipeline(args: &Args, stages: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        stages <= 1 || args.get("blocks").is_none(),
+        "--blocks does not apply with --pp > 1: a stage's layer blocks are its \
+         --interleave chunk slice; use --layer-granular (and --interleave V) instead"
+    );
+    Ok(())
 }
 
 fn cmd_topo(args: &Args) -> anyhow::Result<()> {
@@ -290,6 +331,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let mut cfg = SimConfig::default();
     cfg.mfu = args.parse_opt("mfu", cfg.mfu)?;
     cfg.prefetch_depth = args.parse_opt("depth", cfg.prefetch_depth)?;
+    cfg.layer_blocks = parse_layer_blocks(args, model.n_layers)?;
     // --ranks routes the step clock through the multi-rank builder; with a
     // trivial scenario the congruence collapse makes it bit-identical to
     // the single-rank path, so the figures cannot drift
@@ -308,6 +350,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     if pipe.stages > 1 && scenario.is_some() {
         anyhow::bail!("--pp composes with --straggler/--jitter via `pipeline`, not --ranks");
     }
+    ensure_no_blocks_under_pipeline(args, pipe.stages)?;
     let series: Vec<ScalingSeries> = schemes
         .iter()
         .map(|&scheme| -> anyhow::Result<ScalingSeries> {
@@ -324,11 +367,14 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             Ok(ScalingSeries { scheme, points })
         })
         .collect::<anyhow::Result<_>>()?;
-    let pp_note = if pipe.stages > 1 {
+    let mut pp_note = if pipe.stages > 1 {
         format!(" pp={} interleave={}", pipe.stages, pipe.effective_interleave())
     } else {
         String::new()
     };
+    if cfg.layer_blocks > 1 {
+        pp_note.push_str(&format!(" layer-blocks={}", cfg.layer_blocks));
+    }
     let title = format!(
         "Fig 7/8 — TFLOPS per GPU, {} (Ψ={:.1}B) on {}, mfu={} prefetch-depth={}{}",
         model.name,
@@ -408,7 +454,11 @@ fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
     let mut cfg = SimConfig::default();
     cfg.mfu = args.parse_opt("mfu", cfg.mfu)?;
     cfg.prefetch_depth = args.parse_opt("depth", cfg.prefetch_depth)?;
+    // pipeline blocks are each stage's chunk slice, so the flag alone
+    // turns the layered path on (the count comes from --interleave)
     let pp = parse_pp_default(args, 4)?;
+    ensure_no_blocks_under_pipeline(args, pp)?;
+    cfg.layer_blocks = parse_layer_blocks(args, model.n_layers)?;
     let microbatches = args.parse_opt("microbatches", 8usize)?;
     let interleave = args.parse_opt("interleave", 2usize)?;
     let scenario = Scenario {
@@ -517,6 +567,7 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
     let mut cfg = SimConfig::default();
     cfg.mfu = args.parse_opt("mfu", cfg.mfu)?;
     cfg.prefetch_depth = args.parse_opt("depth", cfg.prefetch_depth)?;
+    cfg.layer_blocks = parse_layer_blocks(args, model.n_layers)?;
     let scenario = Scenario {
         ranks: args.parse_opt("ranks", RankCount::Auto)?,
         stragglers: Scenario::parse_stragglers(args.get_or("straggler", ""))
@@ -702,6 +753,17 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
             tol * 100.0
         ))
         .left_first();
+    // --md: the same drift table as GitHub-flavored markdown, appended to
+    // FILE (CI points this at $GITHUB_STEP_SUMMARY so guardrail failures
+    // are diagnosable from the run page without rerunning locally)
+    let mut md = format!(
+        "### Perf guardrail — {} @ {} nodes (tolerance {:.1}%)\n\n\
+         | machine | scheme | baseline (s) | now (s) | drift | status |\n\
+         |---|---|---|---|---|---|\n",
+        model.name,
+        nodes,
+        tol * 100.0
+    );
     let mut failures = Vec::new();
     for (m, s, pp, mb, now) in &entries {
         let label = if *pp > 1 { format!("{s} [pp{pp} mb{mb}]") } else { s.clone() };
@@ -715,17 +777,37 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
                     format!("{now:.6}"),
                     format!("{:+.3}%", drift * 100.0),
                 ]);
-                if drift.abs() > tol {
+                let ok = drift.abs() <= tol;
+                md.push_str(&format!(
+                    "| {m} | {label} | {base:.6} | {now:.6} | {:+.3}% | {} |\n",
+                    drift * 100.0,
+                    if ok { "ok" } else { "**DRIFT**" }
+                ));
+                if !ok {
                     failures.push(format!(
                         "{m}/{label}: {base:.6}s -> {now:.6}s ({:+.2}%)",
                         drift * 100.0
                     ));
                 }
             }
-            None => failures.push(format!("{m}/{label}: missing from baseline")),
+            None => {
+                md.push_str(&format!("| {m} | {label} | — | {now:.6} | — | **MISSING** |\n"));
+                failures.push(format!("{m}/{label}: missing from baseline"));
+            }
         }
     }
     println!("{}", t.render());
+    if let Some(md_path) = args.get("md") {
+        use std::io::Write;
+        md.push('\n');
+        // append, never truncate: $GITHUB_STEP_SUMMARY is shared by steps
+        std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(md_path)?
+            .write_all(md.as_bytes())?;
+        println!("appended markdown drift table to {md_path}");
+    }
     if !failures.is_empty() {
         let msg = format!(
             "calibration drift beyond {:.1}%:\n  {}\n(if intentional, regenerate with `calibrate --write`)",
@@ -771,6 +853,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     eprintln!("loading artifacts from {dir} ...");
     let rt = Runtime::load(dir)?;
     let runner = rt.model(&cfg.model)?;
+    // layer-granular step clock: --layer-granular defaults to one block
+    // per manifest layer (the flat parameter count still splits
+    // near-evenly — manifests carry no per-layer parameter map)
+    ensure_no_blocks_under_pipeline(args, cfg.pipeline_stages)?;
+    cfg.layer_blocks = parse_layer_blocks(args, runner.manifest.n_layers.max(1))?;
     eprintln!(
         "model {}: {} params, seq {}, mbs {}; scheme {}, {} {} nodes ({} workers)",
         cfg.model,

@@ -5,10 +5,11 @@
 //! actually runs, plus a pipeline-transfer lane:
 //!
 //! * **Compute**: forward/backward kernels, one serial queue per rank.
-//! * **Prefetch**: the parameter all-gather side stream. Per-microbatch
-//!   weight gathers issue here in consumption order, bounded by the
-//!   prefetch [`Depth`] (how many gathers may run ahead of the compute
-//!   that consumes them).
+//! * **Prefetch**: the parameter all-gather side stream. Weight gathers
+//!   issue here in consumption order — one per microbatch phase, or one
+//!   per layer block under layer-granular prefetch — bounded by the
+//!   prefetch [`Depth`] (how many gather units may run ahead of the
+//!   compute that consumes them).
 //! * **GradSync**: the gradient/optimizer path — blocking reduce-scatter /
 //!   all-to-all / all-reduce phases at the grad-accumulation boundary,
 //!   plus the §V.D updated-weight all-gather (charged at the step head:
@@ -106,13 +107,26 @@ impl StreamKind {
     }
 }
 
-/// Prefetch depth: how many weight gathers the prefetch stream may run
-/// ahead of the compute that consumes them. `Bounded(0)` fetches only
-/// when needed (fully serialized); `Infinite` lets the gather pipeline
-/// run freely.
+/// Prefetch depth: how many gather *units* the prefetch stream may run
+/// ahead of the compute that consumes them. The unit depends on the plan:
+///
+/// * **monolithic** plans (the default — [`plan::StepPlan`] with no layer
+///   blocks) issue one whole-model gather per microbatch phase, so
+///   `Bounded(d)` means *d per-microbatch gathers* ahead;
+/// * **layer-granular** plans ([`plan::StepPlan::from_protocol_layered`],
+///   CLI `--layer-granular` / `--blocks`) split each microbatch gather
+///   into per-layer-block tasks, so `Bounded(d)` means *d layer blocks*
+///   ahead of the compute cursor — DeepSpeed's parameter-prefetch window
+///   expressed in layers (DESIGN.md §12).
+///
+/// `Bounded(0)` fetches only when needed (fully serialized) in both
+/// modes; `Infinite` lets the gather pipeline run freely (DeepSpeed's
+/// free-running side stream).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Depth {
-    /// At most this many gathers ahead of their consumers (0 = on demand).
+    /// At most this many gather units ahead of their consumers (0 = on
+    /// demand). Units are microbatch gathers or layer blocks — see the
+    /// enum docs.
     Bounded(usize),
     /// Free-running gather pipeline (DeepSpeed's side stream).
     Infinite,

@@ -8,10 +8,11 @@
 //! single-rank calibrated model:
 //!
 //! * **Shared collectives.** A collective over group `G` is ONE wire
-//!   operation, so the graph holds one task per (group, phase, microbatch),
-//!   priced exactly as [`StepPlan`] prices it — with the full congruent
-//!   world's contention (NIC sharing, group penalties) baked into the
-//!   duration. Every modeled member's consumer depends on it, and it
+//!   operation, so the graph holds one task per (group, phase, microbatch,
+//!   layer block) — layered plans split each microbatch gather into its
+//!   per-block chain, monolithic plans keep one — priced exactly as
+//!   [`StepPlan`] prices it, with the full congruent world's contention
+//!   (NIC sharing, group penalties) baked into the duration. Every modeled member's consumer depends on it, and it
 //!   depends on every modeled member's readiness: a straggler anywhere in
 //!   the group delays the collective for everyone — the synchronization
 //!   physics Dash et al. blame for Frontier's scaling-efficiency loss.
@@ -154,12 +155,18 @@ impl MultiRankPlan {
             });
         }
 
-        // prefetch gate: gather j of rank (position i) may start once
-        // consumer j-1-depth of that rank has finished
-        let gate = |consumers: &[Vec<TaskId>], i: usize, j: usize, ga_r: usize| -> Vec<TaskId> {
+        // prefetch gate: the next gather of rank (position i) may start
+        // once consumer j-1-depth of that rank has finished, where j is
+        // the rank's consumer count so far — with a layered plan `depth`
+        // counts *layer blocks* ahead of the compute cursor (§12)
+        let fwd_blocks = p.fwd_blocks();
+        let bwd_blocks = p.bwd_blocks();
+        let layered = p.blocks.len() > 1;
+        let per_micro = fwd_blocks.len() + bwd_blocks.len();
+        let gate = |consumers: &[Vec<TaskId>], i: usize, ga_r: usize| -> Vec<TaskId> {
             match p.depth {
-                sched::Depth::Bounded(d) if d < 2 * ga_r => {
-                    let k = j as i64 - 1 - d as i64;
+                sched::Depth::Bounded(d) if d < per_micro * ga_r => {
+                    let k = consumers[i].len() as i64 - 1 - d as i64;
                     if k >= 0 {
                         vec![consumers[i][k as usize]]
                     } else {
@@ -172,9 +179,9 @@ impl MultiRankPlan {
 
         let max_ga = self.modeled.iter().map(|&r| self.ga[r]).max().expect("non-empty");
         for m in 0..max_ga {
-            for (phase, deg, work, class, name, t_compute) in [
-                (0usize, p.d_fwd, p.t_gather_fwd, p.class_fwd, "fwd", p.t_compute_fwd),
-                (1usize, p.d_bwd, p.t_gather_bwd, p.class_bwd, "bwd", p.t_compute_bwd),
+            for (deg, class, name, blocks) in [
+                (p.d_fwd, p.class_fwd, "fwd", &fwd_blocks),
+                (p.d_bwd, p.class_bwd, "bwd", &bwd_blocks),
             ] {
                 // modeled members still running microbatch m, by gather group
                 let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
@@ -183,35 +190,38 @@ impl MultiRankPlan {
                         groups.entry(r / deg.max(1)).or_default().push(r);
                     }
                 }
-                for (gi, members) in groups {
-                    let mut deps: Vec<TaskId> = Vec::new();
-                    for &r in &members {
-                        for d in gate(&consumers, mpos[&r], 2 * m + phase, self.ga[r]) {
-                            if !deps.contains(&d) {
-                                deps.push(d);
+                for &(bid, t_gather, t_compute) in blocks.iter() {
+                    let suffix = if layered { format!("b{bid}") } else { String::new() };
+                    for (&gi, members) in &groups {
+                        let mut deps: Vec<TaskId> = Vec::new();
+                        for &r in members {
+                            for d in gate(&consumers, mpos[&r], self.ga[r]) {
+                                if !deps.contains(&d) {
+                                    deps.push(d);
+                                }
                             }
                         }
-                    }
-                    let gather = g.add(Task {
-                        label: format!("gather.{name}[{m}]@g{gi}"),
-                        rank: members[0],
-                        stream: StreamKind::Prefetch,
-                        work,
-                        class: Some(class),
-                        instance: instance_of(&self.cluster, class, gi * deg.max(1)),
-                        deps,
-                    });
-                    for &r in &members {
-                        let c = g.add(Task {
-                            label: format!("compute.{name}[{m}]@r{r}"),
-                            rank: r,
-                            stream: StreamKind::Compute,
-                            work: t_compute * self.mult[r],
-                            class: None,
-                            instance: 0,
-                            deps: vec![gather],
+                        let gather = g.add(Task {
+                            label: format!("gather.{name}[{m}]{suffix}@g{gi}"),
+                            rank: members[0],
+                            stream: StreamKind::Prefetch,
+                            work: t_gather,
+                            class: Some(class),
+                            instance: instance_of(&self.cluster, class, gi * deg.max(1)),
+                            deps,
                         });
-                        consumers[mpos[&r]].push(c);
+                        for &r in members {
+                            let c = g.add(Task {
+                                label: format!("compute.{name}[{m}]{suffix}@r{r}"),
+                                rank: r,
+                                stream: StreamKind::Compute,
+                                work: t_compute * self.mult[r],
+                                class: None,
+                                instance: 0,
+                                deps: vec![gather],
+                            });
+                            consumers[mpos[&r]].push(c);
+                        }
                     }
                 }
             }
@@ -393,6 +403,44 @@ mod tests {
         // a different seed moves the makespan (a.s.)
         let sc2 = Scenario { seed: 8, ..sc };
         assert_ne!(MultiRankPlan::new(&p, &cluster, &sc2).simulate().makespan(), sa.makespan());
+    }
+
+    #[test]
+    fn layered_plan_threads_through_multi_rank() {
+        let cluster = Cluster::frontier(2);
+        let cost =
+            CostModel::with_efficiency(cluster.clone(), CommEfficiency::rccl_frontier());
+        let spec = ShardingSpec::resolve(Scheme::Zero3, &cluster).unwrap();
+        let elems = crate::sched::pipeline::even_chunk_params(1_000_000_000, 4);
+        let p = StepPlan::from_protocol_layered(
+            &cost,
+            Scheme::Zero3,
+            &spec,
+            &elems,
+            256,
+            2,
+            2.0,
+            crate::sched::Depth::Bounded(2),
+        );
+        // 1-rank multi reproduces the layered single-rank schedule bit-for-bit
+        let single = p.simulate();
+        let sc = Scenario { ranks: RankCount::Count(1), ..Default::default() };
+        let multi = MultiRankPlan::new(&p, &cluster, &sc).simulate();
+        assert_eq!(single.makespan(), multi.makespan());
+        assert_eq!(single.spans().len(), multi.spans().len());
+        for (a, b) in single.spans().iter().zip(multi.spans()) {
+            assert_eq!((a.start, a.end), (b.start, b.end));
+        }
+        // a straggler still stretches the step, and the shared gathers
+        // carry block labels
+        let sc = Scenario { stragglers: vec![(5, 1.5)], ..Default::default() };
+        let sched = MultiRankPlan::new(&p, &cluster, &sc).simulate();
+        assert!(sched.makespan() > single.makespan());
+        assert!(sched
+            .graph()
+            .tasks()
+            .iter()
+            .any(|t| t.label.starts_with("gather.bwd[0]b3@")));
     }
 
     #[test]

@@ -18,6 +18,24 @@
 //!   state);
 //! * at the grad-accumulation boundary: the scheme's gradient-sync
 //!   phases, sequential on the grad-sync stream, blocking the step end.
+//!
+//! # Layer-granular prefetch (DESIGN.md §12)
+//!
+//! [`StepPlan::from_protocol_layered`] splits each per-microbatch gather
+//! into a chain of per-layer-block gather tasks — one per entry of the
+//! model's contiguous layer-chunk partition
+//! (`model::TransformerSpec::chunk_params`: embeddings ride the first
+//! block, the LM head the last). Forward compute splits into per-block
+//! units consuming their block's gather in layer order; backward consumes
+//! the blocks in **reverse** order (the head's gradients flow first), so
+//! [`Depth::Bounded`]`(d)` gates the prefetch stream at *`d` layer blocks*
+//! ahead of the compute cursor — DeepSpeed's parameter-prefetch window
+//! expressed in layers. Per-block gather times are the block's
+//! [`CostModel::priced_all_gather`] share of the monolithic gather,
+//! rescaled so they sum *exactly* to `t_gather_fwd`/`t_gather_bwd` (one
+//! coalesced ring launch per microbatch window — the split never changes
+//! the total gather volume or [`StepPlan::prefetchable_s`]). With one
+//! block (or none) the plan is bit-for-bit today's monolithic schedule.
 
 use crate::comm::cost::CostModel;
 use crate::comm::Wire;
@@ -32,6 +50,23 @@ pub struct SyncPhase {
     pub seconds: f64,
     /// Link class the phase occupies.
     pub class: LinkClass,
+}
+
+/// One layer block of a layer-granular plan: its share of the
+/// per-microbatch weight gathers and of the microbatch compute. Blocks
+/// are consumed in layer order forward and in reverse order backward;
+/// their gather times sum to the plan's monolithic
+/// `t_gather_fwd`/`t_gather_bwd` by construction (gather-splitting is
+/// conservative — property-tested in `tests/layered_prefetch.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerBlock {
+    /// Per-microbatch forward gather seconds for this block.
+    pub t_gather_fwd: f64,
+    /// Per-microbatch backward (secondary) gather seconds for this block.
+    pub t_gather_bwd: f64,
+    /// This block's fraction of the per-microbatch compute (the block's
+    /// parameter share; fractions sum to 1).
+    pub compute_frac: f64,
 }
 
 /// Durations + structure of one optimizer step, ready to schedule.
@@ -67,6 +102,11 @@ pub struct StepPlan {
     pub d_fwd: usize,
     /// Backward (secondary) gather group degree.
     pub d_bwd: usize,
+    /// Per-layer-block split of the microbatch gathers + compute
+    /// (layer-granular prefetch, DESIGN.md §12). Empty (or a single
+    /// entry) = monolithic whole-model gathers — today's schedule,
+    /// bit-for-bit.
+    pub blocks: Vec<LayerBlock>,
 }
 
 impl StepPlan {
@@ -181,7 +221,85 @@ impl StepPlan {
             sync,
             d_fwd: spec.weights,
             d_bwd: bwd_degree,
+            blocks: Vec::new(),
         }
+    }
+
+    /// [`StepPlan::from_protocol`] with the per-microbatch gathers and
+    /// compute split over `block_elems` contiguous layer blocks
+    /// (`block_elems[b]` = parameter count of block `b`; the model side
+    /// produces these via `TransformerSpec::chunk_params`). Each block's
+    /// gather is priced by [`CostModel::priced_all_gather`] on its own
+    /// wire bytes, then the per-block times are rescaled to sum exactly
+    /// to the monolithic `t_gather_fwd`/`t_gather_bwd` (one coalesced
+    /// ring launch per window — the ring setup latency is amortized
+    /// across the blocks, and the total gather volume is unchanged).
+    /// A single block degenerates to [`StepPlan::from_protocol`]
+    /// bit-for-bit.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_protocol_layered(
+        cost: &CostModel,
+        scheme: Scheme,
+        spec: &ShardingSpec,
+        block_elems: &[u64],
+        quant_block: usize,
+        grad_accum: usize,
+        compute_s: f64,
+        depth: Depth,
+    ) -> StepPlan {
+        assert!(!block_elems.is_empty(), "need at least one layer block");
+        let n_elems = block_elems.iter().sum::<u64>() as usize;
+        let mut plan = StepPlan::from_protocol(
+            cost,
+            scheme,
+            spec,
+            n_elems,
+            quant_block,
+            grad_accum,
+            compute_s,
+            depth,
+        );
+        if block_elems.len() > 1 {
+            plan.blocks = layer_blocks_of(cost, scheme, block_elems, quant_block, &plan);
+        }
+        plan
+    }
+
+    /// Number of layer blocks the microbatch gathers are split into
+    /// (1 = monolithic).
+    pub fn layer_blocks(&self) -> usize {
+        self.blocks.len().max(1)
+    }
+
+    /// Forward-phase consumption order: `(block id, gather seconds,
+    /// compute seconds)` per layer block, layer order. Monolithic plans
+    /// return the single whole-model entry. Shared by the single-rank,
+    /// multi-rank and pipeline builders so their gather chains can never
+    /// disagree.
+    pub fn fwd_blocks(&self) -> Vec<(usize, f64, f64)> {
+        if self.blocks.len() <= 1 {
+            return vec![(0, self.t_gather_fwd, self.t_compute_fwd)];
+        }
+        self.blocks
+            .iter()
+            .enumerate()
+            .map(|(b, lb)| (b, lb.t_gather_fwd, self.t_compute_fwd * lb.compute_frac))
+            .collect()
+    }
+
+    /// Backward-phase consumption order: like [`StepPlan::fwd_blocks`]
+    /// but blocks in **reverse** layer order (the head's gradients flow
+    /// first, so the backward gather chain consumes tail blocks first).
+    pub fn bwd_blocks(&self) -> Vec<(usize, f64, f64)> {
+        if self.blocks.len() <= 1 {
+            return vec![(0, self.t_gather_bwd, self.t_compute_bwd)];
+        }
+        self.blocks
+            .iter()
+            .enumerate()
+            .rev()
+            .map(|(b, lb)| (b, lb.t_gather_bwd, self.t_compute_bwd * lb.compute_frac))
+            .collect()
     }
 
     /// Total prefetchable gather seconds (microbatch gathers + update).
@@ -223,13 +341,20 @@ impl StepPlan {
                 deps: vec![],
             });
         }
-        // consumer order: cf_0, cb_0, cf_1, ... — gather j (feeding
-        // consumer j) may start once consumer j-1-depth has finished
-        let mut consumers: Vec<TaskId> = Vec::with_capacity(2 * self.grad_accum);
+        // consumer order per microbatch: forward blocks in layer order,
+        // then backward blocks in reverse layer order (monolithic: cf_m,
+        // cb_m). Gather j (feeding consumer j) may start once consumer
+        // j-1-depth has finished — with layer blocks, `depth` counts
+        // *blocks* ahead of the compute cursor (DESIGN.md §12).
+        let fwd = self.fwd_blocks();
+        let bwd = self.bwd_blocks();
+        let layered = self.blocks.len() > 1;
+        let total = (fwd.len() + bwd.len()) * self.grad_accum;
+        let mut consumers: Vec<TaskId> = Vec::with_capacity(total);
         let gate = |consumers: &[TaskId], j: usize| -> Vec<TaskId> {
             match self.depth {
                 // a depth >= the number of consumers never gates anything
-                Depth::Bounded(d) if d < 2 * self.grad_accum => {
+                Depth::Bounded(d) if d < total => {
                     let k = j as i64 - 1 - d as i64;
                     if k >= 0 {
                         vec![consumers[k as usize]]
@@ -241,44 +366,33 @@ impl StepPlan {
             }
         };
         for m in 0..self.grad_accum {
-            let f = g.add(Task {
-                label: format!("gather.fwd[{m}]"),
-                rank,
-                stream: StreamKind::Prefetch,
-                work: self.t_gather_fwd,
-                class: Some(self.class_fwd),
-                instance: 0,
-                deps: gate(&consumers, 2 * m),
-            });
-            let cf = g.add(Task {
-                label: format!("compute.fwd[{m}]"),
-                rank,
-                stream: StreamKind::Compute,
-                work: self.t_compute_fwd,
-                class: None,
-                instance: 0,
-                deps: vec![f],
-            });
-            consumers.push(cf);
-            let b = g.add(Task {
-                label: format!("gather.bwd[{m}]"),
-                rank,
-                stream: StreamKind::Prefetch,
-                work: self.t_gather_bwd,
-                class: Some(self.class_bwd),
-                instance: 0,
-                deps: gate(&consumers, 2 * m + 1),
-            });
-            let cb = g.add(Task {
-                label: format!("compute.bwd[{m}]"),
-                rank,
-                stream: StreamKind::Compute,
-                work: self.t_compute_bwd,
-                class: None,
-                instance: 0,
-                deps: vec![b],
-            });
-            consumers.push(cb);
+            for (name, class, blocks) in
+                [("fwd", self.class_fwd, &fwd), ("bwd", self.class_bwd, &bwd)]
+            {
+                for &(bid, t_gather, t_compute) in blocks {
+                    let suffix =
+                        if layered { format!("b{bid}") } else { String::new() };
+                    let gt = g.add(Task {
+                        label: format!("gather.{name}[{m}]{suffix}"),
+                        rank,
+                        stream: StreamKind::Prefetch,
+                        work: t_gather,
+                        class: Some(class),
+                        instance: 0,
+                        deps: gate(&consumers, consumers.len()),
+                    });
+                    let ct = g.add(Task {
+                        label: format!("compute.{name}[{m}]{suffix}"),
+                        rank,
+                        stream: StreamKind::Compute,
+                        work: t_compute,
+                        class: None,
+                        instance: 0,
+                        deps: vec![gt],
+                    });
+                    consumers.push(ct);
+                }
+            }
         }
         let mut prev = *consumers.last().expect("grad_accum >= 1");
         for (k, phase) in self.sync.iter().enumerate() {
@@ -301,6 +415,60 @@ impl StepPlan {
     pub fn simulate(&self) -> Schedule {
         sched::simulate(self.build(0))
     }
+}
+
+/// Split the plan's per-microbatch gather times over contiguous layer
+/// blocks: price each block's all-gather on its own wire bytes via
+/// [`CostModel::priced_all_gather`], then rescale so the block times sum
+/// exactly to the monolithic `t_gather_fwd`/`t_gather_bwd` (one coalesced
+/// ring launch per microbatch window — the per-block pricing only decides
+/// how the window divides, never its total). Compute fractions are the
+/// blocks' parameter shares.
+fn layer_blocks_of(
+    cost: &CostModel,
+    scheme: Scheme,
+    block_elems: &[u64],
+    quant_block: usize,
+    plan: &StepPlan,
+) -> Vec<LayerBlock> {
+    let wire =
+        if scheme.quantized() { Wire::Int8 { block: quant_block } } else { Wire::F16 };
+    let total: u64 = block_elems.iter().sum();
+    let raw = |degree: usize| -> Vec<f64> {
+        if degree <= 1 {
+            return vec![0.0; block_elems.len()];
+        }
+        let g: Vec<usize> = (0..degree).collect();
+        block_elems
+            .iter()
+            .map(|&e| cost.priced_all_gather(&g, wire.wire_bytes(e as usize) as u64).0)
+            .collect()
+    };
+    let share = |raw: &[f64], total_t: f64| -> Vec<f64> {
+        let s: f64 = raw.iter().sum();
+        if s > 0.0 {
+            raw.iter().map(|&r| total_t * (r / s)).collect()
+        } else {
+            // zero-time gathers (degree <= 1): nothing to distribute
+            vec![total_t / raw.len() as f64; raw.len()]
+        }
+    };
+    // the plan already resolved the gather group degrees in from_protocol
+    let fwd = share(&raw(plan.d_fwd), plan.t_gather_fwd);
+    let bwd = share(&raw(plan.d_bwd), plan.t_gather_bwd);
+    block_elems
+        .iter()
+        .enumerate()
+        .map(|(b, &e)| LayerBlock {
+            t_gather_fwd: fwd[b],
+            t_gather_bwd: bwd[b],
+            compute_frac: if total > 0 {
+                e as f64 / total as f64
+            } else {
+                1.0 / block_elems.len() as f64
+            },
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -393,5 +561,129 @@ mod tests {
         // compute busy == compute_s
         let busy = sched.stream_busy(0, StreamKind::Compute);
         assert!((busy - p.compute_s()).abs() < 1e-9, "{busy}");
+    }
+
+    fn layered(scheme: Scheme, nodes: usize, depth: Depth, blocks: usize) -> StepPlan {
+        let cluster = Cluster::frontier(nodes);
+        let cost = CostModel::with_efficiency(cluster.clone(), CommEfficiency::rccl_frontier());
+        let spec = ShardingSpec::resolve(scheme, &cluster).unwrap();
+        let elems = crate::sched::pipeline::even_chunk_params(1_000_000_000, blocks);
+        StepPlan::from_protocol_layered(&cost, scheme, &spec, &elems, 256, 4, 2.0, depth)
+    }
+
+    #[test]
+    fn single_block_layered_is_monolithic_bit_for_bit() {
+        for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }] {
+            let mono = plan(scheme, 4, Depth::Bounded(1));
+            let one = layered(scheme, 4, Depth::Bounded(1), 1);
+            assert!(one.blocks.is_empty(), "{scheme:?}");
+            let (a, b) = (mono.simulate(), one.simulate());
+            assert_eq!(a.makespan(), b.makespan(), "{scheme:?}");
+            assert_eq!(a.spans().len(), b.spans().len());
+            for (x, y) in a.spans().iter().zip(b.spans()) {
+                assert_eq!((x.start, x.end), (y.start, y.end), "{scheme:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn layered_blocks_sum_to_monolithic_gathers() {
+        for blocks in [2usize, 3, 7, 44] {
+            let p = layered(Scheme::ZeroTopo { sec_degree: 2 }, 4, Depth::Infinite, blocks);
+            assert_eq!(p.blocks.len(), blocks);
+            let f: f64 = p.blocks.iter().map(|b| b.t_gather_fwd).sum();
+            let b: f64 = p.blocks.iter().map(|b| b.t_gather_bwd).sum();
+            let c: f64 = p.blocks.iter().map(|b| b.compute_frac).sum();
+            assert!((f - p.t_gather_fwd).abs() <= 1e-12 * p.t_gather_fwd.max(1.0), "{f}");
+            assert!((b - p.t_gather_bwd).abs() <= 1e-12 * p.t_gather_bwd.max(1.0), "{b}");
+            assert!((c - 1.0).abs() < 1e-12, "{c}");
+        }
+    }
+
+    #[test]
+    fn layered_depth_zero_serializes_exactly() {
+        // depth-in-layers 0 still degenerates to the serialized reference:
+        // the split conserves gather and compute totals
+        let p = layered(Scheme::Zero3, 4, Depth::Bounded(0), 8);
+        let mk = p.simulate().makespan();
+        assert!((mk - p.serialized_s()).abs() < 1e-9 * p.serialized_s(), "{mk}");
+    }
+
+    #[test]
+    fn layered_depth_monotone() {
+        let steps: Vec<f64> = [
+            Depth::Bounded(0),
+            Depth::Bounded(1),
+            Depth::Bounded(2),
+            Depth::Bounded(8),
+            Depth::Infinite,
+        ]
+        .iter()
+        .map(|&d| layered(Scheme::Zero3, 4, d, 8).simulate().makespan())
+        .collect();
+        for w in steps.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "{steps:?}");
+        }
+        // depth 0 in layers == the monolithic serialized reference (totals
+        // are conserved, and fetch-on-demand exposes every gather)
+        let mono0 = plan(Scheme::Zero3, 4, Depth::Bounded(0)).simulate().makespan();
+        assert!((steps[0] - mono0).abs() <= 1e-9 * mono0, "{} vs {mono0}", steps[0]);
+    }
+
+    #[test]
+    fn layered_graph_shape_and_reverse_backward_order() {
+        let p = layered(Scheme::ZeroTopo { sec_degree: 2 }, 2, Depth::Bounded(1), 3);
+        let g = p.build(0);
+        // update + 4 microbatches x 3 blocks x (gather+compute) x 2 phases + 2 sync
+        assert_eq!(g.len(), 1 + 4 * 3 * 2 * 2 + 2);
+        let labels: Vec<&str> = g
+            .tasks()
+            .iter()
+            .map(|t| t.label.as_str())
+            .filter(|l| l.contains("[0]") && !l.starts_with("grad-sync"))
+            .collect();
+        // forward blocks in layer order, backward blocks reversed
+        assert_eq!(
+            labels,
+            vec![
+                "gather.fwd[0]b0",
+                "compute.fwd[0]b0",
+                "gather.fwd[0]b1",
+                "compute.fwd[0]b1",
+                "gather.fwd[0]b2",
+                "compute.fwd[0]b2",
+                "gather.bwd[0]b2",
+                "compute.bwd[0]b2",
+                "gather.bwd[0]b1",
+                "compute.bwd[0]b1",
+                "gather.bwd[0]b0",
+                "compute.bwd[0]b0",
+            ]
+        );
+    }
+
+    #[test]
+    fn layered_infinite_depth_bounded_by_monolithic() {
+        // at depth=inf the layered step can only be FASTER than the
+        // monolithic one, and only by less than one microbatch's compute:
+        // the tail after the last gather shrinks from a whole backward
+        // unit to one block's share. The compute-bound calibrated scheme
+        // (ZeRO-topo) converges within 1%; comm-bound ZeRO-3 keeps the
+        // full ~t_compute_bwd head start.
+        for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }] {
+            let mono = plan(scheme, 4, Depth::Infinite);
+            let a = mono.simulate().makespan();
+            let b = layered(scheme, 4, Depth::Infinite, 44).simulate().makespan();
+            assert!(b <= a + 1e-9 * a, "{scheme:?}: layered {b} slower than mono {a}");
+            let micro_compute = mono.t_compute_fwd + mono.t_compute_bwd;
+            assert!(b >= a - micro_compute - 1e-9 * a, "{scheme:?}: {b} vs {a}");
+        }
+        let mono = plan(Scheme::ZeroTopo { sec_degree: 2 }, 4, Depth::Infinite)
+            .simulate()
+            .makespan();
+        let lay = layered(Scheme::ZeroTopo { sec_degree: 2 }, 4, Depth::Infinite, 44)
+            .simulate()
+            .makespan();
+        assert!((lay - mono).abs() <= 0.01 * mono, "{lay} vs {mono}");
     }
 }

@@ -1,0 +1,193 @@
+//! Gather-splitting invariants for layer-granular prefetch (ISSUE 5):
+//! per-block gather seconds must sum to the monolithic
+//! `t_gather_fwd`/`t_gather_bwd` (and `prefetchable_s`/`serialized_s`
+//! must be preserved) for arbitrary chunk counts; a single block must
+//! reproduce today's `StepPlan` schedule bit-for-bit; depth-in-layers
+//! must be monotone; and at the calibrated 20B/384-GCD points the
+//! layered depth=∞ step must track the monolithic one — never slower,
+//! at most one microbatch's compute faster (the shrunken step tail),
+//! and within 1% for the compute-bound ZeRO-topo headline.
+
+use zero_topo::comm::cost::{CommEfficiency, CostModel};
+use zero_topo::model::TransformerSpec;
+use zero_topo::sched::pipeline::even_chunk_params;
+use zero_topo::sched::plan::StepPlan;
+use zero_topo::sched::{Depth, StreamKind};
+use zero_topo::sharding::{Scheme, ShardingSpec};
+use zero_topo::sim::{simulate_step, SimConfig};
+use zero_topo::testing::check;
+use zero_topo::topology::Cluster;
+
+const SCHEMES: [Scheme; 5] = [
+    Scheme::Zero3,
+    Scheme::ZeroPP,
+    Scheme::ZeroTopo { sec_degree: 2 },
+    Scheme::ZeroTopo { sec_degree: 8 },
+    Scheme::Zero1,
+];
+
+fn plans(
+    scheme: Scheme,
+    nodes: usize,
+    ga: usize,
+    depth: Depth,
+    psi: u64,
+    blocks: usize,
+) -> (StepPlan, StepPlan) {
+    let cluster = Cluster::frontier(nodes);
+    let cost = CostModel::with_efficiency(cluster.clone(), CommEfficiency::rccl_frontier());
+    let spec = ShardingSpec::resolve(scheme, &cluster).unwrap();
+    let mono =
+        StepPlan::from_protocol(&cost, scheme, &spec, psi as usize, 256, ga, 3.0, depth);
+    let elems = even_chunk_params(psi, blocks);
+    let layered =
+        StepPlan::from_protocol_layered(&cost, scheme, &spec, &elems, 256, ga, 3.0, depth);
+    (mono, layered)
+}
+
+#[test]
+fn per_block_gathers_sum_to_monolithic_for_arbitrary_chunk_counts() {
+    check("block gather sums == monolithic", 60, |g| {
+        let scheme = *g.pick(&SCHEMES);
+        let nodes = g.usize_in(1, 6);
+        let ga = g.usize_in(1, 6);
+        let blocks = g.usize_in(2, 64);
+        let psi = g.i64_in(1_000, 4_000_000_000) as u64;
+        let (mono, lay) = plans(scheme, nodes, ga, Depth::Infinite, psi, blocks);
+        assert_eq!(lay.blocks.len(), blocks);
+        let ctx = format!("{scheme:?} nodes={nodes} ga={ga} blocks={blocks} psi={psi}");
+        let f: f64 = lay.blocks.iter().map(|b| b.t_gather_fwd).sum();
+        let b: f64 = lay.blocks.iter().map(|b| b.t_gather_bwd).sum();
+        let c: f64 = lay.blocks.iter().map(|b| b.compute_frac).sum();
+        assert!((f - mono.t_gather_fwd).abs() <= 1e-9 * mono.t_gather_fwd.max(1e-12), "{ctx}");
+        assert!((b - mono.t_gather_bwd).abs() <= 1e-9 * mono.t_gather_bwd.max(1e-12), "{ctx}");
+        assert!((c - 1.0).abs() < 1e-9, "{ctx}: fracs sum to {c}");
+        // the derived totals every consumer reads are preserved exactly
+        assert_eq!(lay.t_gather_fwd, mono.t_gather_fwd, "{ctx}");
+        assert_eq!(lay.t_gather_bwd, mono.t_gather_bwd, "{ctx}");
+        assert_eq!(lay.prefetchable_s(), mono.prefetchable_s(), "{ctx}");
+        assert_eq!(lay.serialized_s(), mono.serialized_s(), "{ctx}");
+        // and the scheduled prefetch stream does the same total work (only
+        // asserted without a §V.D update gather, whose processor sharing
+        // with same-class block gathers legitimately stretches spans)
+        if mono.t_update == 0.0 {
+            let sched = lay.simulate();
+            let busy = sched.stream_busy(0, StreamKind::Prefetch);
+            let want = ga as f64 * (mono.t_gather_fwd + mono.t_gather_bwd);
+            assert!((busy - want).abs() <= 1e-6 * want.max(1e-12), "{ctx}: {busy} vs {want}");
+        }
+    });
+}
+
+#[test]
+fn single_block_reproduces_todays_schedule_bit_for_bit() {
+    let depths = [Depth::Bounded(0), Depth::Bounded(1), Depth::Bounded(3), Depth::Infinite];
+    check("blocks=1 == StepPlan", 40, |g| {
+        let scheme = *g.pick(&SCHEMES);
+        let nodes = g.usize_in(1, 6);
+        let ga = g.usize_in(1, 6);
+        let depth = *g.pick(&depths);
+        let psi = g.i64_in(1_000, 4_000_000_000) as u64;
+        let (mono, lay) = plans(scheme, nodes, ga, depth, psi, 1);
+        assert!(lay.blocks.is_empty());
+        let (a, b) = (mono.simulate(), lay.simulate());
+        let ctx = format!("{scheme:?} nodes={nodes} ga={ga} {depth:?}");
+        assert_eq!(a.makespan(), b.makespan(), "{ctx}");
+        assert_eq!(a.spans().len(), b.spans().len(), "{ctx}");
+        for (x, y) in a.spans().iter().zip(b.spans()) {
+            assert_eq!((x.start, x.end), (y.start, y.end), "{ctx}");
+        }
+    });
+}
+
+#[test]
+fn depth_in_layers_is_monotone_non_increasing() {
+    // update-free schemes: without the §V.D refresh no two comm tasks can
+    // share a contention domain in a single-rank plan, so weakening the
+    // gate can only move start times earlier — monotone rigorously
+    let schemes = [Scheme::Zero3, Scheme::ZeroPP, Scheme::Zero1];
+    check("depth-in-layers monotone", 30, |g| {
+        let scheme = *g.pick(&schemes);
+        let nodes = g.usize_in(1, 4);
+        let blocks = g.usize_in(2, 24);
+        let psi = g.i64_in(1_000_000, 4_000_000_000) as u64;
+        let mut last = f64::INFINITY;
+        for depth in [
+            Depth::Bounded(0),
+            Depth::Bounded(1),
+            Depth::Bounded(2),
+            Depth::Bounded(blocks),
+            Depth::Infinite,
+        ] {
+            let (_, lay) = plans(scheme, nodes, 4, depth, psi, blocks);
+            let mk = lay.simulate().makespan();
+            assert!(
+                mk <= last + 1e-9 * last.max(1.0),
+                "{scheme:?} nodes={nodes} blocks={blocks} {depth:?}: {mk} > {last}"
+            );
+            last = mk;
+        }
+    });
+}
+
+#[test]
+fn acceptance_layered_inf_tracks_monolithic_inf() {
+    // ISSUE acceptance at the calibrated 20B/384-GCD points, frontier and
+    // dgx: blocks=1 reproduces the BENCH_baseline entries at 0 drift; at
+    // depth=inf the layered step is never slower than the monolithic one
+    // and gains at most one microbatch's compute (the step tail after the
+    // last gather shrinks from a whole backward to one block); for the
+    // compute-bound calibrated scheme (ZeRO-topo, the Fig 7 headline) the
+    // two agree within 1%.
+    let model = TransformerSpec::neox20b();
+    for machine in ["frontier", "dgx"] {
+        let spec = zero_topo::topology::MachineSpec::resolve(machine).unwrap();
+        let cluster = Cluster::new(spec, 48);
+        for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }] {
+            let mono = simulate_step(&model, scheme, &cluster, &SimConfig::default());
+            let mut cfg = SimConfig::default();
+            cfg.layer_blocks = 1;
+            let one = simulate_step(&model, scheme, &cluster, &cfg);
+            assert_eq!(mono.step_s, one.step_s, "{machine}/{scheme:?}: blocks=1 drifted");
+            cfg.layer_blocks = model.n_layers;
+            let lay = simulate_step(&model, scheme, &cluster, &cfg);
+            let micro_compute = mono.compute_s / mono.grad_accum as f64;
+            assert!(
+                lay.step_s <= mono.step_s + 1e-9 * mono.step_s,
+                "{machine}/{scheme:?}: layered inf {} slower than monolithic {}",
+                lay.step_s,
+                mono.step_s
+            );
+            assert!(
+                lay.step_s >= mono.step_s - micro_compute - 1e-9 * mono.step_s,
+                "{machine}/{scheme:?}: layered inf {} gained more than one \
+                 microbatch compute over {}",
+                lay.step_s,
+                mono.step_s
+            );
+            if matches!(scheme, Scheme::ZeroTopo { .. }) {
+                assert!(
+                    (lay.step_s - mono.step_s).abs() <= 0.01 * mono.step_s,
+                    "{machine}: ZeRO-topo layered inf {} vs monolithic inf {}",
+                    lay.step_s,
+                    mono.step_s
+                );
+            }
+            // totals conserved through the sim path too
+            assert!((lay.prefetchable_s - mono.prefetchable_s).abs() < 1e-9);
+            assert!((lay.grad_sync_s - mono.grad_sync_s).abs() < 1e-9);
+        }
+    }
+}
+
+#[test]
+fn depth_zero_in_layers_still_serializes_exactly() {
+    // the split is conservative, so fetch-on-demand degenerates to the
+    // same serialized reference as the monolithic plan (ZeRO-3: no
+    // update gather to overlap)
+    let (mono, lay) = plans(Scheme::Zero3, 4, 4, Depth::Bounded(0), 2_000_000_000, 16);
+    let a = mono.simulate().makespan();
+    let b = lay.simulate().makespan();
+    assert!((a - b).abs() <= 1e-9 * a, "{a} vs {b}");
+    assert!((b - lay.serialized_s()).abs() <= 1e-9 * b);
+}
