@@ -57,6 +57,9 @@ pub struct RunConfig {
     pub microbatches: usize,
     /// Virtual chunks per stage `V` (1 = plain 1F1B, >1 = interleaved).
     pub interleave: usize,
+    /// Per-step telemetry JSONL sink (`None` = off). One self-describing
+    /// JSON object per optimizer step (DESIGN.md §13).
+    pub telemetry: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -84,6 +87,7 @@ impl Default for RunConfig {
             pipeline_stages: 1,
             microbatches: 0,
             interleave: 1,
+            telemetry: None,
         }
     }
 }
@@ -178,6 +182,15 @@ impl RunConfig {
         if c.interleave == 0 {
             return Err(ConfigError::Bad("interleave", "0".into()));
         }
+        match j.get("telemetry") {
+            None | Some(Json::Null) => {}
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| ConfigError::Bad("telemetry", v.to_string()))?;
+                c.telemetry = Some(s.to_string());
+            }
+        }
         Ok(c)
     }
 
@@ -230,6 +243,13 @@ impl RunConfig {
             ("pipeline_stages", Json::from(self.pipeline_stages)),
             ("microbatches", Json::from(self.microbatches)),
             ("interleave", Json::from(self.interleave)),
+            (
+                "telemetry",
+                match &self.telemetry {
+                    Some(p) => Json::str(p.clone()),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 }
@@ -280,6 +300,7 @@ mod tests {
             pipeline_stages: 4,
             microbatches: 16,
             interleave: 2,
+            telemetry: Some("steps.jsonl".into()),
         };
         let j = c.to_json();
         let c2 = RunConfig::from_json(&j).unwrap();
@@ -300,6 +321,7 @@ mod tests {
         assert_eq!(c2.pipeline_stages, 4);
         assert_eq!(c2.microbatches, 16);
         assert_eq!(c2.interleave, 2);
+        assert_eq!(c2.telemetry.as_deref(), Some("steps.jsonl"));
         let sc = c2.scenario();
         assert_eq!(sc.seed, 7);
         assert!(!sc.is_trivial());
@@ -379,6 +401,20 @@ mod tests {
         assert_eq!(c.layer_blocks, 1);
         let j = Json::parse(r#"{"layer_blocks":16}"#).unwrap();
         assert_eq!(RunConfig::from_json(&j).unwrap().layer_blocks, 16);
+    }
+
+    #[test]
+    fn telemetry_defaults_off_and_null_roundtrips() {
+        let c = RunConfig::from_json(&Json::parse(r#"{"model":"e2e"}"#).unwrap()).unwrap();
+        assert_eq!(c.telemetry, None);
+        // to_json writes an explicit null — from_json must read it back
+        let c2 = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.telemetry, None);
+        let j = Json::parse(r#"{"telemetry":"out/steps.jsonl"}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.telemetry.as_deref(), Some("out/steps.jsonl"));
+        let j = Json::parse(r#"{"telemetry":7}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
     }
 
     #[test]

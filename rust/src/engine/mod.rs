@@ -33,19 +33,22 @@ pub mod checkpoint;
 
 use anyhow::{bail, Result};
 
+use std::collections::BTreeMap;
+
 use crate::comm::cost::CommEfficiency;
 use crate::comm::{CommWorld, Wire};
 use crate::config::RunConfig;
 use crate::data::{BatchStream, SyntheticCorpus};
 use crate::dtype::round_f16_slice;
-use crate::metrics::{LossPoint, TrainLog};
+use crate::metrics::{LossPoint, StepUtilization, TrainLog};
 use crate::optimizer::{global_clip_scale, local_sq_norm, AdamWConfig, AdamWShard};
 use crate::runtime::ModelRunner;
 use crate::sched::multi::MultiRankPlan;
 use crate::sched::pipeline::{even_chunk_params, PipeConfig, PipelinePlan};
 use crate::sched::plan::StepPlan;
+use crate::sched::Schedule;
 use crate::sharding::{shard_groups, PartitionMap, Scheme, ShardingSpec};
-use crate::topology::{Cluster, MachineSpec};
+use crate::topology::{Cluster, LinkClass, MachineSpec};
 
 /// The engine over a PJRT-compiled model.
 pub struct TrainEngine<'a> {
@@ -65,6 +68,9 @@ pub struct TrainEngine<'a> {
     grad_accum_bufs: Vec<Vec<f32>>,
     /// Event-clock makespan of one step (constant per run; priced once).
     step_sim_s: f64,
+    /// The priced per-step schedule behind `step_sim_s` — kept for the
+    /// telemetry views (stall attribution, link utilization, trace).
+    step_schedule: Option<Schedule>,
     pub log: TrainLog,
 }
 
@@ -112,6 +118,7 @@ impl<'a> TrainEngine<'a> {
             step_idx: 0,
             grad_accum_bufs: Vec::new(),
             step_sim_s: 0.0,
+            step_schedule: None,
             cfg,
         };
         // the plan is a pure function of (cfg, spec, cluster, manifest),
@@ -123,13 +130,15 @@ impl<'a> TrainEngine<'a> {
         // plan; straggler/jitter configs price the slowest-rank makespan.
         // With `pipeline_stages > 1` the clock prices the hybrid
         // PP x ZeRO schedule instead (the numerics stay pure-DP).
-        engine.step_sim_s = if engine.cfg.pipeline_stages > 1 {
+        let step_schedule = if engine.cfg.pipeline_stages > 1 {
             engine.pipeline_step_clock()?
         } else {
             let plan = engine.plan_step();
             let scenario = engine.cfg.scenario();
-            MultiRankPlan::new(&plan, &engine.cluster, &scenario).simulate().makespan()
+            MultiRankPlan::new(&plan, &engine.cluster, &scenario).simulate()
         };
+        engine.step_sim_s = step_schedule.makespan();
+        engine.step_schedule = Some(step_schedule);
         Ok(engine)
     }
 
@@ -414,6 +423,31 @@ impl<'a> TrainEngine<'a> {
         self.log.sim_seconds
     }
 
+    /// Event-clock seconds of ONE optimizer step (constant per run).
+    pub fn step_sim_seconds(&self) -> f64 {
+        self.step_sim_s
+    }
+
+    /// The priced per-step schedule (stall/utilization/trace queries).
+    pub fn step_schedule(&self) -> Option<&Schedule> {
+        self.step_schedule.as_ref()
+    }
+
+    /// Per-stream busy accounting of the priced step (modeled rank 0's
+    /// congruence class) — what the train-path telemetry records.
+    pub fn step_utilization(&self) -> Option<StepUtilization> {
+        let sched = self.step_schedule.as_ref()?;
+        let rank = sched.ranks().first().copied().unwrap_or(0);
+        Some(sched.utilization(rank))
+    }
+
+    /// Compute-stall attribution per link class of the priced step.
+    pub fn step_stalls(&self) -> Option<BTreeMap<LinkClass, f64>> {
+        let sched = self.step_schedule.as_ref()?;
+        let rank = sched.ranks().first().copied().unwrap_or(0);
+        Some(sched.stall_by_class(rank))
+    }
+
     /// The step plan priced for this engine's protocol: per-microbatch
     /// gather durations and sync phases from the cost model (identical to
     /// the simulator's pricing by construction). The compute term uses the
@@ -462,8 +496,9 @@ impl<'a> TrainEngine<'a> {
     /// the proxy manifest (the manifests carry no per-layer parameter
     /// map), activation transfers sized from the manifest's
     /// `(mbs, seq, d_model)`, 1F1B or interleaved order, and scenario
-    /// stragglers/jitter mapped onto whole stages.
-    fn pipeline_step_clock(&self) -> Result<f64> {
+    /// stragglers/jitter mapped onto whole stages. Returns the executed
+    /// schedule so `new` can keep it for the telemetry views.
+    fn pipeline_step_clock(&self) -> Result<Schedule> {
         let m = &self.runner.manifest;
         let p = self.cfg.pipeline_stages;
         // stragglers/jitter map onto stages (the block max), but per-rank
@@ -499,7 +534,7 @@ impl<'a> TrainEngine<'a> {
             self.cfg.layer_blocks > 1,
         )?
         .with_stage_multipliers(self.cfg.scenario().stage_multipliers(&self.cluster, p));
-        Ok(plan.simulate().makespan())
+        Ok(plan.simulate())
     }
 
     /// Snapshot the full training state (weights + sharded AdamW + step).

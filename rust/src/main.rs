@@ -17,10 +17,13 @@
 use zero_topo::config::RunConfig;
 use zero_topo::engine::TrainEngine;
 use zero_topo::memory::MemoryModel;
+use zero_topo::metrics::registry::Registry;
+use zero_topo::metrics::telemetry::{register_step, StepKind, StepRecord, TelemetryWriter};
+use zero_topo::metrics::Throughput;
 use zero_topo::model::TransformerSpec;
 use zero_topo::report::{
     render_critical_path, render_pipeline_table, render_rank_table, render_scaling_figure,
-    render_stall_table, ScalingSeries,
+    render_stall_table, render_utilization_table, ScalingSeries,
 };
 use zero_topo::runtime::Runtime;
 use zero_topo::sched::pipeline::PipeConfig;
@@ -28,9 +31,10 @@ use zero_topo::sched::scenario::{RankCount, Scenario};
 use zero_topo::sched::{trace, Schedule};
 use zero_topo::sharding::{Scheme, ShardingSpec};
 use zero_topo::sim::{
-    scaling_series, scaling_series_pipeline, scaling_series_scenario, simulate_step,
-    simulate_step_pipeline, simulate_step_pipeline_scenario, simulate_step_scenario,
-    simulate_step_schedule, SimConfig,
+    profile_step, profile_step_pipeline, scaling_series, scaling_series_pipeline,
+    scaling_series_scenario, simulate_step, simulate_step_pipeline,
+    simulate_step_pipeline_scenario, simulate_step_scenario, simulate_step_schedule,
+    simulate_step_telemetry, SimConfig, SimProfile,
 };
 use zero_topo::topology::{Cluster, LinkClass, MachineSpec};
 use zero_topo::util::cli::Args;
@@ -53,13 +57,15 @@ JSON (see examples/machines/). Default: frontier.
   simulate  [--machine M] [--model 20b] [--nodes 8,16,32,48]
             [--schemes zero3,zeropp,zerotopo] [--depth N|inf] [--ranks N|auto]
             [--layer-granular] [--blocks B] [--pp P] [--microbatches M]
-            [--interleave V]
+            [--interleave V] [--telemetry out.jsonl] [--prom out.prom]
             [--stalls] [--trace out.json]   Fig 7/8 scaling (event-driven sim)
   scale     alias of simulate               cross-scale / cross-machine sweeps
   pipeline  [--machine M] [--model 20b] [--nodes 48] [--schemes S,...]
             [--pp 4] [--microbatches 8] [--interleave 2] [--depth N|inf]
             [--layer-granular] [--straggler R:MULT,...] [--jitter SIGMA]
-            [--seed S] [--trace out.json]   1F1B vs interleaved: step time +
+            [--seed S] [--trace out.json]
+            [--telemetry out.jsonl] [--prom out.prom]
+                                            1F1B vs interleaved: step time +
                                             bubble fraction per scheme
   scenario  [--machine M] [--model 20b] [--nodes 48] [--schemes S,...]
             [--ranks N|auto] [--straggler R:MULT,...] [--jitter SIGMA]
@@ -70,12 +76,15 @@ JSON (see examples/machines/). Default: frontier.
             [--md FILE]                     perf guardrail vs BENCH_baseline.json
                                             (incl. pinned P=4 pipeline points);
                                             --md appends the drift table as
-                                            markdown (CI: $GITHUB_STEP_SUMMARY)
+                                            markdown (CI: $GITHUB_STEP_SUMMARY);
+                                            also self-profiles the simulator
+                                            (tasks/sec, soft warn-only gate)
   train     [--machine M] [--model tiny] [--scheme zerotopo] [--nodes 1]
             [--steps 10] [--depth N|inf] [--layer-granular] [--blocks B]
             [--ranks N|auto] [--jitter SIGMA] [--straggler R:MULT,...]
             [--pp P] [--microbatches M] [--interleave V] [--artifacts DIR]
-            [--csv FILE]                    real training via PJRT
+            [--csv FILE] [--telemetry out.jsonl] [--prom out.prom]
+                                            real training via PJRT
   report    [--machine M]                   print all analytical tables
 
 --depth bounds the prefetch stream: how many gather units may run ahead of
@@ -86,6 +95,12 @@ The unit is one whole per-microbatch gather by default; with
 window in layers (sched::Depth rustdoc, DESIGN.md §12). --layer-granular
 defaults to one block per transformer layer; --blocks overrides the
 count. In pipeline runs the blocks are each stage's virtual chunks.
+
+--telemetry streams one self-describing JSON object per priced step
+(simulate/pipeline: one per scheme x scale point; train: one per
+optimizer step) — schema in DESIGN.md §13. --prom writes a Prometheus
+text-format snapshot of the same run's metrics registry. All quantities
+are simulated seconds/bytes; only calibrate's tasks/sec is wall time.
 ";
 
 fn main() {
@@ -386,6 +401,62 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     );
     println!("{}", render_scaling_figure(&title, &series));
 
+    // --telemetry / --prom: one self-describing JSONL record per
+    // (scheme, scale) point plus an optional Prometheus snapshot
+    // (DESIGN.md §13). Points are re-priced through the exact entry
+    // points the figure used, so the streamed numbers cannot diverge.
+    let telemetry_path = args.get("telemetry");
+    let prom_path = args.get("prom");
+    if telemetry_path.is_some() || prom_path.is_some() {
+        let mut writer = telemetry_path.map(TelemetryWriter::create).transpose()?;
+        let mut reg = Registry::new();
+        let mut step = 0usize;
+        let psi = model.n_params() as f64;
+        for s in &series {
+            for (&n, point) in node_counts.iter().zip(&s.points) {
+                let cluster = Cluster::new(machine.clone(), n);
+                let mem = MemoryModel::new(s.scheme, ShardingSpec::resolve(s.scheme, &cluster)?)
+                    .per_device(psi);
+                let mut rec = StepRecord::new(
+                    step,
+                    StepKind::Simulate,
+                    &s.scheme.name(),
+                    &machine.name,
+                    n,
+                    point,
+                )
+                .with_memory(mem);
+                if pipe.stages > 1 {
+                    let (b, sched, _) =
+                        simulate_step_pipeline(&model, s.scheme, &cluster, &cfg, &pipe)?;
+                    rec = rec.with_schedule(&sched, &machine).with_bubble(b.bubble_fraction);
+                } else {
+                    let (_, sched, cost) = simulate_step_telemetry(
+                        &model,
+                        s.scheme,
+                        &cluster,
+                        &cfg,
+                        scenario.as_ref(),
+                    );
+                    rec = rec.with_comm(&cost).with_schedule(&sched, &machine);
+                }
+                register_step(&mut reg, &rec);
+                if let Some(w) = writer.as_mut() {
+                    w.write_record(&rec)?;
+                }
+                step += 1;
+            }
+        }
+        if let (Some(w), Some(path)) = (writer.as_mut(), telemetry_path) {
+            w.flush()?;
+            println!("wrote {} telemetry records to {path}", w.written());
+        }
+        if let Some(path) = prom_path {
+            std::fs::write(path, reg.to_prometheus())?;
+            println!("wrote Prometheus snapshot to {path}");
+        }
+    }
+
     // schedule the largest scale once per scheme for the stall breakdown
     // and the optional Chrome-trace export of the stream timelines
     let largest =
@@ -425,12 +496,21 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                         &cluster.spec
                     )
                 );
+                println!(
+                    "{}",
+                    render_utilization_table(
+                        &format!("{name} — link utilization"),
+                        sched,
+                        &cluster.spec,
+                        0
+                    )
+                );
             }
         }
         if let Some(path) = trace_path {
             let named: Vec<(String, &Schedule)> =
                 scheds.iter().map(|(n, s)| (n.clone(), s)).collect();
-            std::fs::write(path, trace::chrome_trace(&named))?;
+            std::fs::write(path, trace::chrome_trace_labeled(&named, Some(&machine)))?;
             println!("wrote {path} (open in chrome://tracing or ui.perfetto.dev)");
         }
     }
@@ -496,6 +576,11 @@ fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
         cluster.world_size()
     ))
     .left_first();
+    let telemetry_path = args.get("telemetry");
+    let prom_path = args.get("prom");
+    let mut writer = telemetry_path.map(TelemetryWriter::create).transpose()?;
+    let mut reg = Registry::new();
+    let mut telemetry_step = 0usize;
     let mut scheds: Vec<(String, Schedule)> = Vec::new();
     for &scheme in &schemes {
         let base = simulate_step(&model, scheme, &cluster, &cfg);
@@ -541,15 +626,63 @@ fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
                         &machine
                     )
                 );
+                println!(
+                    "{}",
+                    render_utilization_table(
+                        &format!("{} — link utilization", scheme.name()),
+                        &sched,
+                        &machine,
+                        0
+                    )
+                );
+            }
+            if writer.is_some() || prom_path.is_some() {
+                // token-normalized point: M microbatches on each of the
+                // W/P data-parallel pipelines
+                let dp = cluster.world_size() / pp;
+                let point = Throughput {
+                    gcds: cluster.world_size(),
+                    step_seconds: b.step_s,
+                    flops_per_step: model.flops_per_token()
+                        * (cfg.micro_batch * model.seq * b.microbatches * dp) as f64,
+                    sequences_per_step: (cfg.micro_batch * b.microbatches * dp) as f64,
+                };
+                let mem =
+                    MemoryModel::new(scheme, ShardingSpec::resolve(scheme, &cluster)?)
+                        .per_device(model.n_params() as f64);
+                let rec = StepRecord::new(
+                    telemetry_step,
+                    StepKind::Pipeline,
+                    &scheme.name(),
+                    &machine.name,
+                    nodes,
+                    &point,
+                )
+                .with_memory(mem)
+                .with_schedule(&sched, &machine)
+                .with_bubble(b.bubble_fraction);
+                register_step(&mut reg, &rec);
+                if let Some(w) = writer.as_mut() {
+                    w.write_record(&rec)?;
+                }
+                telemetry_step += 1;
             }
             scheds.push((format!("{}/{}", scheme.name(), label), sched));
         }
     }
     println!("{}", summary.render());
+    if let (Some(w), Some(path)) = (writer.as_mut(), telemetry_path) {
+        w.flush()?;
+        println!("wrote {} telemetry records to {path}", w.written());
+    }
+    if let Some(path) = prom_path {
+        std::fs::write(path, reg.to_prometheus())?;
+        println!("wrote Prometheus snapshot to {path}");
+    }
     if let Some(path) = args.get("trace") {
         let named: Vec<(String, &Schedule)> =
             scheds.iter().map(|(n, s)| (n.clone(), s)).collect();
-        std::fs::write(path, trace::chrome_trace(&named))?;
+        std::fs::write(path, trace::chrome_trace_labeled(&named, Some(&machine)))?;
         println!("wrote {path} (open in chrome://tracing or ui.perfetto.dev)");
     }
     Ok(())
@@ -625,7 +758,7 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
     if let Some(path) = args.get("trace") {
         let named: Vec<(String, &Schedule)> =
             scheds.iter().map(|(n, s)| (n.clone(), s)).collect();
-        std::fs::write(path, trace::chrome_trace(&named))?;
+        std::fs::write(path, trace::chrome_trace_labeled(&named, Some(&machine)))?;
         println!("wrote {path} (open in chrome://tracing or ui.perfetto.dev)");
     }
     Ok(())
@@ -658,14 +791,16 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     let path = if path.is_empty() { default_baseline_path() } else { path.to_string() };
 
     // recompute every (machine, scheme) point; (pp, microbatches) =
-    // (1, 0) marks the plain data-parallel entries
-    let mut entries: Vec<(String, String, usize, usize, f64)> = Vec::new();
+    // (1, 0) marks the plain data-parallel entries. Each point carries
+    // its wall-clock self-profile (sim::SimProfile) — real time, strictly
+    // apart from the simulated step_s it sits next to.
+    let mut entries: Vec<(String, String, usize, usize, f64, SimProfile)> = Vec::new();
     for mname in &machines {
         let spec = MachineSpec::resolve(mname)?;
         let cluster = Cluster::new(spec, nodes);
         for &scheme in &schemes {
-            let b = simulate_step(&model, scheme, &cluster, &cfg);
-            entries.push((mname.clone(), scheme.name(), 1, 0, b.step_s));
+            let (b, _, prof) = profile_step(&model, scheme, &cluster, &cfg);
+            entries.push((mname.clone(), scheme.name(), 1, 0, b.step_s, prof));
         }
     }
     // pinned pipeline points (ISSUE 4): ZeRO-topo 1F1B at P=4, M ∈ {8, 32}
@@ -680,14 +815,14 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
                 continue;
             }
             let pipe = PipeConfig { stages: pp, microbatches: mb, interleave: 1 };
-            let (b, _, _) = simulate_step_pipeline(
+            let (b, _, _, prof) = profile_step_pipeline(
                 &model,
                 Scheme::ZeroTopo { sec_degree: 0 },
                 &cluster,
                 &cfg,
                 &pipe,
             )?;
-            entries.push((mname.clone(), "ZeRO-topo".into(), pp, mb, b.step_s));
+            entries.push((mname.clone(), "ZeRO-topo".into(), pp, mb, b.step_s, prof));
         }
     }
 
@@ -698,7 +833,7 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
             ("tolerance", Json::num(tolerance)),
             (
                 "entries",
-                Json::arr(entries.iter().map(|(m, s, pp, mb, t)| {
+                Json::arr(entries.iter().map(|(m, s, pp, mb, t, prof)| {
                     let mut fields = vec![
                         ("machine", Json::str(m.clone())),
                         ("scheme", Json::str(s.clone())),
@@ -708,6 +843,11 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
                         fields.push(("microbatches", Json::from(*mb)));
                     }
                     fields.push(("step_s", Json::num(*t)));
+                    // wall-clock self-profile: soft reference only — the
+                    // drift gate never hard-fails on machine speed
+                    fields.push(("tasks", Json::from(prof.tasks)));
+                    fields.push(("wall_s", Json::num(prof.total_wall_s())));
+                    fields.push(("tasks_per_s", Json::num(prof.tasks_per_sec())));
                     Json::obj(fields)
                 })),
             ),
@@ -721,7 +861,10 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
         anyhow::anyhow!("cannot read baseline {path}: {e} (run `calibrate --write`)")
     })?;
     let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad baseline {path}: {e}"))?;
-    let mut baseline: std::collections::BTreeMap<(String, String, usize, usize), f64> =
+    // value: (step_s, optional baseline tasks_per_s) — old baselines
+    // without the self-profile fields still parse (speed column shows —)
+    type BaselineKey = (String, String, usize, usize);
+    let mut baseline: std::collections::BTreeMap<BaselineKey, (f64, Option<f64>)> =
         std::collections::BTreeMap::new();
     for e in json
         .get("entries")
@@ -736,7 +879,8 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
             .get("step_s")
             .and_then(|v| v.as_f64())
             .ok_or_else(|| anyhow::anyhow!("baseline entry without step_s"))?;
-        baseline.insert((m, s, pp, mb), t);
+        let tps = e.get("tasks_per_s").and_then(|v| v.as_f64()).filter(|&v| v > 0.0);
+        baseline.insert((m, s, pp, mb), (t, tps));
     }
     // precedence: explicit --tolerance > baseline's recorded field > default
     let tol = if args.get("tolerance").is_some() {
@@ -745,30 +889,40 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
         json.get("tolerance").and_then(|v| v.as_f64()).unwrap_or(tolerance)
     };
 
-    let mut t = Table::new(&["machine", "scheme", "baseline (s)", "now (s)", "drift"])
-        .title(format!(
-            "Perf guardrail — {} @ {} nodes (tolerance {:.1}%)",
-            model.name,
-            nodes,
-            tol * 100.0
-        ))
-        .left_first();
+    let mut t =
+        Table::new(&["machine", "scheme", "baseline (s)", "now (s)", "drift", "tasks/s"])
+            .title(format!(
+                "Perf guardrail — {} @ {} nodes (tolerance {:.1}%)",
+                model.name,
+                nodes,
+                tol * 100.0
+            ))
+            .left_first();
     // --md: the same drift table as GitHub-flavored markdown, appended to
     // FILE (CI points this at $GITHUB_STEP_SUMMARY so guardrail failures
-    // are diagnosable from the run page without rerunning locally)
+    // are diagnosable from the run page without rerunning locally).
+    // tasks/s + speed are the wall-clock self-profile: a soft, warn-only
+    // signal — machine speed must never hard-fail the accuracy gate.
     let mut md = format!(
         "### Perf guardrail — {} @ {} nodes (tolerance {:.1}%)\n\n\
-         | machine | scheme | baseline (s) | now (s) | drift | status |\n\
-         |---|---|---|---|---|---|\n",
+         | machine | scheme | baseline (s) | now (s) | drift | status | tasks/s | speed |\n\
+         |---|---|---|---|---|---|---|---|\n",
         model.name,
         nodes,
         tol * 100.0
     );
     let mut failures = Vec::new();
-    for (m, s, pp, mb, now) in &entries {
+    let mut slowdowns = Vec::new();
+    for (m, s, pp, mb, now, prof) in &entries {
         let label = if *pp > 1 { format!("{s} [pp{pp} mb{mb}]") } else { s.clone() };
+        let now_tps = prof.tasks_per_sec();
+        let tps_cell = if now_tps > 0.0 {
+            format!("{now_tps:.0}")
+        } else {
+            "—".to_string()
+        };
         match baseline.get(&(m.clone(), s.clone(), *pp, *mb)) {
-            Some(&base) => {
+            Some(&(base, base_tps)) => {
                 let drift = (now - base) / base;
                 t.row(vec![
                     m.clone(),
@@ -776,10 +930,15 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
                     format!("{base:.6}"),
                     format!("{now:.6}"),
                     format!("{:+.3}%", drift * 100.0),
+                    tps_cell.clone(),
                 ]);
                 let ok = drift.abs() <= tol;
+                let speed = match base_tps {
+                    Some(b_tps) if now_tps > 0.0 => format!("{:.2}x", now_tps / b_tps),
+                    _ => "—".to_string(),
+                };
                 md.push_str(&format!(
-                    "| {m} | {label} | {base:.6} | {now:.6} | {:+.3}% | {} |\n",
+                    "| {m} | {label} | {base:.6} | {now:.6} | {:+.3}% | {} | {tps_cell} | {speed} |\n",
                     drift * 100.0,
                     if ok { "ok" } else { "**DRIFT**" }
                 ));
@@ -789,14 +948,51 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
                         drift * 100.0
                     ));
                 }
+                if let Some(b_tps) = base_tps {
+                    if now_tps > 0.0 && now_tps < b_tps / 3.0 {
+                        slowdowns.push(format!(
+                            "{m}/{label}: {b_tps:.0} -> {now_tps:.0} tasks/s"
+                        ));
+                    }
+                }
             }
             None => {
-                md.push_str(&format!("| {m} | {label} | — | {now:.6} | — | **MISSING** |\n"));
+                t.row(vec![
+                    m.clone(),
+                    label.clone(),
+                    "—".into(),
+                    format!("{now:.6}"),
+                    "—".into(),
+                    tps_cell.clone(),
+                ]);
+                md.push_str(&format!(
+                    "| {m} | {label} | — | {now:.6} | — | **MISSING** | {tps_cell} | — |\n"
+                ));
                 failures.push(format!("{m}/{label}: missing from baseline"));
             }
         }
     }
     println!("{}", t.render());
+    // simulator self-profile roll-up (ROADMAP "Simulator raw speed"):
+    // real wall time, reported next to — never mixed into — the pins
+    let total_tasks: usize = entries.iter().map(|e| e.5.tasks).sum();
+    let total_wall: f64 = entries.iter().map(|e| e.5.total_wall_s()).sum();
+    let loop_wall: f64 = entries.iter().map(|e| e.5.event_loop_wall_s).sum();
+    let agg_tps = if loop_wall > 0.0 {
+        total_tasks as f64 / loop_wall
+    } else {
+        0.0
+    };
+    println!(
+        "self-profile: {total_tasks} tasks in {total_wall:.3}s wall \
+         ({agg_tps:.0} tasks/s event loop)"
+    );
+    if !slowdowns.is_empty() {
+        eprintln!(
+            "warning: simulator >3x slower than baseline (soft gate, not failing):\n  {}",
+            slowdowns.join("\n  ")
+        );
+    }
     if let Some(md_path) = args.get("md") {
         use std::io::Write;
         md.push('\n');
@@ -846,6 +1042,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.pipeline_stages = parse_pp(args)?;
     cfg.microbatches = args.parse_opt("microbatches", cfg.microbatches)?;
     cfg.interleave = args.parse_opt("interleave", cfg.interleave)?;
+    cfg.telemetry = args.get("telemetry").map(String::from);
     let dir = args.get_or("artifacts", "artifacts");
     // fail fast on a bad --machine before the (expensive) artifact load
     let machine = MachineSpec::resolve(&cfg.machine)?;
@@ -871,6 +1068,31 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     );
     let steps = cfg.steps;
     let csv = args.get("csv").map(|s| s.to_string());
+    // capture what the per-step telemetry records need before cfg moves
+    // into the engine
+    let scheme = cfg.scheme;
+    let nodes = cfg.nodes;
+    let world = cfg.nodes * machine.workers_per_node;
+    let (pp, grad_accum, microbatches) = (cfg.pipeline_stages, cfg.grad_accum, cfg.microbatches);
+    let telemetry_path = cfg.telemetry.clone();
+    let prom_path = args.get("prom").map(|s| s.to_string());
+    let mut writer = telemetry_path.as_deref().map(TelemetryWriter::create).transpose()?;
+    let mut reg = Registry::new();
+    let cluster = Cluster::new(machine.clone(), nodes);
+    let mem = MemoryModel::new(scheme, ShardingSpec::resolve(scheme, &cluster)?)
+        .per_device(runner.manifest.n_params as f64);
+    // sequences per optimizer step: grad-accum microbatches on every rank
+    // (data-parallel), or M microbatches on each of the W/P pipelines
+    let seqs_per_step = if pp > 1 {
+        let m = if microbatches > 0 { microbatches } else { grad_accum };
+        (runner.manifest.mbs * m * (world / pp)) as f64
+    } else {
+        (runner.manifest.mbs * grad_accum * world) as f64
+    };
+    // the engine's step clock prices compute with the 6Ψ FLOPs-per-token
+    // rule, so telemetry reports the same model FLOPs
+    let flops_per_step =
+        6.0 * runner.manifest.n_params as f64 * seqs_per_step * runner.manifest.seq as f64;
     let mut engine = TrainEngine::new(cfg, &runner)?;
     let t0 = std::time::Instant::now();
     for s in 0..steps {
@@ -883,6 +1105,42 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             engine.comm_seconds(),
             t0.elapsed().as_secs_f64()
         );
+        if writer.is_some() || prom_path.is_some() {
+            let point = Throughput {
+                gcds: world,
+                step_seconds: engine.step_sim_seconds(),
+                flops_per_step,
+                sequences_per_step: seqs_per_step,
+            };
+            // NB: the train comm ledger is cumulative over the run (a
+            // monotonic counter, Prometheus-style) — see DESIGN.md §13
+            let mut rec = StepRecord::new(
+                s,
+                StepKind::Train,
+                &scheme.name(),
+                &machine.name,
+                nodes,
+                &point,
+            )
+            .with_comm(&engine.comm.cost)
+            .with_memory(mem)
+            .with_loss(loss);
+            if let Some(sched) = engine.step_schedule() {
+                rec = rec.with_schedule(sched, &machine);
+            }
+            register_step(&mut reg, &rec);
+            if let Some(w) = writer.as_mut() {
+                w.write_record(&rec)?;
+            }
+        }
+    }
+    if let (Some(w), Some(path)) = (writer.as_mut(), telemetry_path.as_deref()) {
+        w.flush()?;
+        println!("wrote {} telemetry records to {path}", w.written());
+    }
+    if let Some(path) = prom_path {
+        std::fs::write(&path, reg.to_prometheus())?;
+        println!("wrote Prometheus snapshot to {path}");
     }
     if let Some(path) = csv {
         std::fs::write(&path, engine.log.to_csv())?;

@@ -1,6 +1,11 @@
 //! Training-run metrics: the quantities the paper reports (TFLOPS per GPU,
 //! samples/sec, scaling efficiency) computed from simulated step times and
-//! the comm ledger.
+//! the comm ledger, plus the telemetry subsystem (DESIGN.md §13) — a
+//! labeled metrics [`registry`] and the per-step JSONL [`telemetry`]
+//! stream behind `--telemetry`.
+
+pub mod registry;
+pub mod telemetry;
 
 /// Throughput metrics for one configuration point (one bar of Fig 7/8).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -16,21 +21,38 @@ pub struct Throughput {
 
 impl Throughput {
     /// TFLOPS per GPU — the paper's headline metric (GCD == GPU on Frontier).
+    /// Degenerate points (zero GCDs or a non-positive step time) report 0.0
+    /// rather than NaN/Inf so downstream tables and telemetry stay finite.
     pub fn tflops_per_gpu(&self) -> f64 {
+        if self.gcds == 0 || self.step_seconds <= 0.0 {
+            return 0.0;
+        }
         self.flops_per_step / self.step_seconds / self.gcds as f64 / 1e12
     }
 
+    /// Sequences per second at this point's step time (0.0 when the step
+    /// time is degenerate, mirroring [`Throughput::tflops_per_gpu`]).
     pub fn samples_per_second(&self) -> f64 {
+        if self.step_seconds <= 0.0 {
+            return 0.0;
+        }
         self.sequences_per_step / self.step_seconds
     }
 }
 
 /// Scaling efficiency of a series of points relative to its first point:
 /// `eff_i = (tflops_i / tflops_0)` with per-GPU normalization (weak-scaling
-/// style, as the paper's Fig 7/8 efficiency curves).
+/// style, as the paper's Fig 7/8 efficiency curves). An empty series yields
+/// an empty vec; a degenerate base point (zero per-GPU TFLOPS) reports 0.0
+/// everywhere instead of dividing by zero.
 pub fn scaling_efficiency(points: &[Throughput]) -> Vec<f64> {
-    assert!(!points.is_empty());
-    let base = points[0].tflops_per_gpu();
+    let Some(first) = points.first() else {
+        return Vec::new();
+    };
+    let base = first.tflops_per_gpu();
+    if base <= 0.0 {
+        return vec![0.0; points.len()];
+    }
     points.iter().map(|p| p.tflops_per_gpu() / base).collect()
 }
 
@@ -136,6 +158,34 @@ mod tests {
         let eff = scaling_efficiency(&pts);
         assert!((eff[0] - 1.0).abs() < 1e-12);
         assert!(eff[1] < 1.0 && eff[2] < eff[1]);
+    }
+
+    #[test]
+    fn efficiency_of_empty_series_is_empty() {
+        assert!(scaling_efficiency(&[]).is_empty());
+    }
+
+    #[test]
+    fn degenerate_points_report_zero_not_nan() {
+        let zero_step = Throughput {
+            gcds: 8,
+            step_seconds: 0.0,
+            flops_per_step: 1e15,
+            sequences_per_step: 64.0,
+        };
+        assert_eq!(zero_step.tflops_per_gpu(), 0.0);
+        assert_eq!(zero_step.samples_per_second(), 0.0);
+        let zero_gcds = Throughput { gcds: 0, step_seconds: 1.0, ..zero_step };
+        assert_eq!(zero_gcds.tflops_per_gpu(), 0.0);
+        // a degenerate base point zeroes the efficiency series (no NaN)
+        let ok = Throughput {
+            gcds: 8,
+            step_seconds: 2.0,
+            flops_per_step: 1e15,
+            sequences_per_step: 64.0,
+        };
+        let eff = scaling_efficiency(&[zero_step, ok]);
+        assert_eq!(eff, vec![0.0, 0.0]);
     }
 
     #[test]

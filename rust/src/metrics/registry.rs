@@ -1,0 +1,400 @@
+//! A small, dependency-free metrics registry: labeled counters, gauges,
+//! and fixed-bucket histograms with deterministic snapshot order and
+//! JSON / Prometheus-text export.
+//!
+//! Everything is plain data — the registry never reads a clock. Values in
+//! the *simulated* domain (step seconds, busy seconds, bytes) come from
+//! the event clock and the cost ledger; wall-clock self-profiling of the
+//! simulator itself lives in `sim::SimProfile` and is exported under
+//! explicit `*_wall_*` names so the two time domains can never be
+//! confused (DESIGN.md §13).
+//!
+//! Determinism: metric families and label sets are stored in `BTreeMap`s,
+//! so [`Registry::snapshot`], [`Registry::to_json`], and
+//! [`Registry::to_prometheus`] emit samples in one canonical order
+//! regardless of insertion order.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// A sorted label set (`key -> value`), the identity of one sample within
+/// a metric family.
+pub type Labels = BTreeMap<String, String>;
+
+/// Build a [`Labels`] map from `(key, value)` pairs.
+pub fn labels(pairs: &[(&str, &str)]) -> Labels {
+    pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+/// A fixed-bucket histogram: explicit finite upper bounds plus the
+/// implicit `+Inf` overflow bucket, with running `sum` and `count`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    /// A histogram over strictly increasing finite upper `bounds`.
+    pub fn new(bounds: &[f64]) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bucket bound");
+        assert!(bounds.iter().all(|b| b.is_finite()), "histogram bounds must be finite");
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "histogram bounds must increase");
+        Histogram { bounds: bounds.to_vec(), counts: vec![0; bounds.len() + 1], sum: 0.0, count: 0 }
+    }
+
+    /// Record one observation (`v <= bounds[i]` lands in bucket `i`).
+    pub fn observe(&mut self, v: f64) {
+        assert!(v.is_finite(), "histogram observation must be finite");
+        let idx = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all observations.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// The finite upper bounds this histogram was built with.
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Cumulative bucket counts in Prometheus `le` convention: entry `i`
+    /// counts observations `<= bounds[i]`; the final entry (`+Inf`) equals
+    /// [`Histogram::count`].
+    pub fn cumulative(&self) -> Vec<u64> {
+        let mut acc = 0u64;
+        let mut out = Vec::with_capacity(self.counts.len());
+        for &c in &self.counts {
+            acc += c;
+            out.push(acc);
+        }
+        out
+    }
+}
+
+/// One flattened sample of a [`Registry`] snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    /// Metric family name (e.g. `sim_step_seconds`).
+    pub name: String,
+    /// Label set identifying the sample within its family. Histogram
+    /// bucket samples carry a synthetic `le` label.
+    pub labels: Labels,
+    /// Sample value (bucket and `_count` samples are exact integers).
+    pub value: f64,
+}
+
+/// Labeled counters, gauges, and histograms with deterministic export.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, BTreeMap<Labels, f64>>,
+    gauges: BTreeMap<String, BTreeMap<Labels, f64>>,
+    histograms: BTreeMap<String, BTreeMap<Labels, Histogram>>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Add `delta` (must be finite and `>= 0`) to a counter sample,
+    /// creating it at zero first if absent.
+    pub fn inc(&mut self, name: &str, label_pairs: &[(&str, &str)], delta: f64) {
+        assert!(delta.is_finite() && delta >= 0.0, "counter increments must be finite and >= 0");
+        let family = self.counters.entry(name.to_string()).or_default();
+        *family.entry(labels(label_pairs)).or_insert(0.0) += delta;
+    }
+
+    /// Set a gauge sample to `value` (must be finite).
+    pub fn set(&mut self, name: &str, label_pairs: &[(&str, &str)], value: f64) {
+        assert!(value.is_finite(), "gauge values must be finite");
+        self.gauges.entry(name.to_string()).or_default().insert(labels(label_pairs), value);
+    }
+
+    /// Record one histogram observation; the sample's histogram is created
+    /// with `bounds` on first use (later calls must pass the same bounds).
+    pub fn observe(&mut self, name: &str, label_pairs: &[(&str, &str)], bounds: &[f64], v: f64) {
+        let family = self.histograms.entry(name.to_string()).or_default();
+        let hist = family.entry(labels(label_pairs)).or_insert_with(|| Histogram::new(bounds));
+        assert_eq!(hist.bounds(), bounds, "histogram {name} re-observed with different bounds");
+        hist.observe(v);
+    }
+
+    /// Current value of a counter sample (0 if never incremented).
+    pub fn counter(&self, name: &str, label_pairs: &[(&str, &str)]) -> f64 {
+        let key = labels(label_pairs);
+        self.counters.get(name).and_then(|m| m.get(&key)).copied().unwrap_or(0.0)
+    }
+
+    /// Current value of a gauge sample, if it was ever set.
+    pub fn gauge(&self, name: &str, label_pairs: &[(&str, &str)]) -> Option<f64> {
+        let key = labels(label_pairs);
+        self.gauges.get(name).and_then(|m| m.get(&key)).copied()
+    }
+
+    /// The histogram behind a sample, if any observation was recorded.
+    pub fn histogram(&self, name: &str, label_pairs: &[(&str, &str)]) -> Option<&Histogram> {
+        let key = labels(label_pairs);
+        self.histograms.get(name).and_then(|m| m.get(&key))
+    }
+
+    /// Flatten every sample into one deterministic, sorted list: counters,
+    /// then gauges, then histograms (each histogram expands into
+    /// `_bucket{le=...}` samples plus `_sum` and `_count`).
+    pub fn snapshot(&self) -> Vec<Sample> {
+        let mut out = Vec::new();
+        for (name, family) in &self.counters {
+            for (ls, v) in family {
+                out.push(Sample { name: name.clone(), labels: ls.clone(), value: *v });
+            }
+        }
+        for (name, family) in &self.gauges {
+            for (ls, v) in family {
+                out.push(Sample { name: name.clone(), labels: ls.clone(), value: *v });
+            }
+        }
+        for (name, family) in &self.histograms {
+            for (ls, h) in family {
+                for (bound, cum) in hist_buckets(h) {
+                    let mut bl = ls.clone();
+                    bl.insert("le".to_string(), bound);
+                    let name = format!("{name}_bucket");
+                    out.push(Sample { name, labels: bl, value: cum as f64 });
+                }
+                out.push(Sample { name: format!("{name}_sum"), labels: ls.clone(), value: h.sum });
+                let count = h.count as f64;
+                out.push(Sample { name: format!("{name}_count"), labels: ls.clone(), value: count });
+            }
+        }
+        out
+    }
+
+    /// Export the registry as one JSON document (deterministic key order).
+    pub fn to_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (name, family) in &self.counters {
+            counters.insert(name.clone(), scalar_family_json(family));
+        }
+        let mut gauges = BTreeMap::new();
+        for (name, family) in &self.gauges {
+            gauges.insert(name.clone(), scalar_family_json(family));
+        }
+        let mut hists = BTreeMap::new();
+        for (name, family) in &self.histograms {
+            let mut samples = Vec::new();
+            for (ls, h) in family {
+                let mut buckets = Vec::new();
+                for (bound, cum) in hist_buckets(h) {
+                    let b = Json::obj(vec![("le", Json::str(bound)), ("count", Json::from(cum))]);
+                    buckets.push(b);
+                }
+                samples.push(Json::obj(vec![
+                    ("labels", labels_json(ls)),
+                    ("buckets", Json::arr(buckets)),
+                    ("sum", Json::num(h.sum)),
+                    ("count", Json::from(h.count)),
+                ]));
+            }
+            hists.insert(name.clone(), Json::arr(samples));
+        }
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(hists)),
+        ])
+    }
+
+    /// Export the registry in the Prometheus text exposition format
+    /// (`# TYPE` headers, `name{labels} value` lines, histogram `le`
+    /// buckets), in deterministic order.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, family) in &self.counters {
+            let name = prom_name(name);
+            let _ = writeln!(out, "# TYPE {name} counter");
+            for (ls, v) in family {
+                let _ = writeln!(out, "{name}{} {v}", prom_labels(ls));
+            }
+        }
+        for (name, family) in &self.gauges {
+            let name = prom_name(name);
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            for (ls, v) in family {
+                let _ = writeln!(out, "{name}{} {v}", prom_labels(ls));
+            }
+        }
+        for (name, family) in &self.histograms {
+            let name = prom_name(name);
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            for (ls, h) in family {
+                for (bound, cum) in hist_buckets(h) {
+                    let mut bl = ls.clone();
+                    bl.insert("le".to_string(), bound);
+                    let _ = writeln!(out, "{name}_bucket{} {cum}", prom_labels(&bl));
+                }
+                let _ = writeln!(out, "{name}_sum{} {}", prom_labels(ls), h.sum);
+                let _ = writeln!(out, "{name}_count{} {}", prom_labels(ls), h.count);
+            }
+        }
+        out
+    }
+}
+
+/// Histogram buckets as `(le-label, cumulative count)` pairs, ending with
+/// the `+Inf` bucket.
+fn hist_buckets(h: &Histogram) -> Vec<(String, u64)> {
+    let cum = h.cumulative();
+    let mut out = Vec::with_capacity(cum.len());
+    for (b, c) in h.bounds().iter().zip(&cum) {
+        out.push((format!("{b}"), *c));
+    }
+    out.push(("+Inf".to_string(), *cum.last().expect("histogram has buckets")));
+    out
+}
+
+fn scalar_family_json(family: &BTreeMap<Labels, f64>) -> Json {
+    let mut samples = Vec::new();
+    for (ls, v) in family {
+        samples.push(Json::obj(vec![("labels", labels_json(ls)), ("value", Json::num(*v))]));
+    }
+    Json::arr(samples)
+}
+
+fn labels_json(ls: &Labels) -> Json {
+    Json::Obj(ls.iter().map(|(k, v)| (k.clone(), Json::str(v.clone()))).collect())
+}
+
+/// Map a metric name onto the Prometheus grammar
+/// (`[a-zA-Z_:][a-zA-Z0-9_:]*`): every other byte becomes `_`.
+fn prom_name(name: &str) -> String {
+    let ok = |c: char| c.is_ascii_alphanumeric() || c == '_' || c == ':';
+    let mut s: String = name.chars().map(|c| if ok(c) { c } else { '_' }).collect();
+    if s.chars().next().is_none_or(|c| c.is_ascii_digit()) {
+        s.insert(0, '_');
+    }
+    s
+}
+
+/// Render a label set as `{k="v",...}` with Prometheus escaping; empty
+/// label sets render as the empty string.
+fn prom_labels(ls: &Labels) -> String {
+    if ls.is_empty() {
+        return String::new();
+    }
+    let mut body = Vec::with_capacity(ls.len());
+    for (k, v) in ls {
+        let v = v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n");
+        body.push(format!("{}=\"{v}\"", prom_name(k)));
+    }
+    format!("{{{}}}", body.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_per_label_set() {
+        let mut r = Registry::new();
+        r.inc("bytes_total", &[("class", "inter")], 10.0);
+        r.inc("bytes_total", &[("class", "inter")], 5.0);
+        r.inc("bytes_total", &[("class", "intra0")], 1.0);
+        assert_eq!(r.counter("bytes_total", &[("class", "inter")]), 15.0);
+        assert_eq!(r.counter("bytes_total", &[("class", "intra0")]), 1.0);
+        assert_eq!(r.counter("bytes_total", &[("class", "nope")]), 0.0);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let mut r = Registry::new();
+        r.set("step_seconds", &[], 2.0);
+        r.set("step_seconds", &[], 3.5);
+        assert_eq!(r.gauge("step_seconds", &[]), Some(3.5));
+        assert_eq!(r.gauge("missing", &[]), None);
+    }
+
+    #[test]
+    fn histogram_buckets_and_cumulative_counts() {
+        let mut h = Histogram::new(&[0.1, 1.0, 10.0]);
+        for v in [0.05, 0.5, 0.5, 5.0, 50.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 56.05).abs() < 1e-12);
+        assert_eq!(h.cumulative(), vec![1, 3, 4, 5]);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_complete() {
+        let mut r = Registry::new();
+        r.set("z_gauge", &[], 1.0);
+        r.inc("a_counter", &[("k", "v")], 2.0);
+        r.observe("lat", &[], &[1.0], 0.5);
+        let snap = r.snapshot();
+        let names: Vec<&str> = snap.iter().map(|s| s.name.as_str()).collect();
+        // counters, then gauges, then histogram expansion
+        let want = vec!["a_counter", "z_gauge", "lat_bucket", "lat_bucket", "lat_sum", "lat_count"];
+        assert_eq!(names, want);
+        assert_eq!(snap[2].labels.get("le").map(String::as_str), Some("1"));
+        assert_eq!(snap[3].labels.get("le").map(String::as_str), Some("+Inf"));
+    }
+
+    #[test]
+    fn json_export_parses_and_is_deterministic() {
+        let mut r = Registry::new();
+        r.inc("steps_total", &[("scheme", "ZeRO-topo")], 3.0);
+        r.set("tflops_per_gcd", &[("scheme", "ZeRO-topo")], 71.4);
+        r.observe("step_seconds_hist", &[], &[10.0, 20.0], 12.9);
+        let a = r.to_json().to_string();
+        let b = r.clone().to_json().to_string();
+        assert_eq!(a, b);
+        let parsed = Json::parse(&a).unwrap();
+        let fam = parsed.at(&["counters", "steps_total"]).and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(fam[0].get("value").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(fam[0].at(&["labels", "scheme"]).and_then(|v| v.as_str()), Some("ZeRO-topo"));
+        let hist = parsed.at(&["histograms", "step_seconds_hist"]).unwrap().as_arr().unwrap();
+        assert_eq!(hist[0].get("count").and_then(|c| c.as_f64()), Some(1.0));
+        assert_eq!(hist[0].get("buckets").and_then(|b| b.as_arr()).map(|b| b.len()), Some(3));
+    }
+
+    #[test]
+    fn prometheus_text_format() {
+        let mut r = Registry::new();
+        r.inc("sim_bytes_total", &[("class", "B_inter (node-node)")], 4096.0);
+        r.set("sim_step_seconds", &[("scheme", "ZeRO-3")], 33.5);
+        r.observe("sim_step_hist", &[], &[10.0, 100.0], 33.5);
+        let text = r.to_prometheus();
+        assert!(text.contains("# TYPE sim_bytes_total counter\n"));
+        assert!(text.contains("sim_bytes_total{class=\"B_inter (node-node)\"} 4096\n"));
+        assert!(text.contains("sim_step_seconds{scheme=\"ZeRO-3\"} 33.5\n"));
+        assert!(text.contains("sim_step_hist_bucket{le=\"100\"} 1\n"));
+        assert!(text.contains("sim_step_hist_bucket{le=\"+Inf\"} 1\n"));
+        assert!(text.contains("sim_step_hist_count 1\n"));
+        // every non-comment line is `name{...} value` with a sane name
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let name: String = line.chars().take_while(|&c| c != '{' && c != ' ').collect();
+            assert!(name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'));
+        }
+    }
+
+    #[test]
+    fn prom_name_sanitizes() {
+        assert_eq!(prom_name("B_inter (node-node)"), "B_inter__node_node_");
+        assert_eq!(prom_name("0abc"), "_0abc");
+        assert_eq!(prom_name(""), "_");
+    }
+}

@@ -1,0 +1,472 @@
+//! Per-step JSONL telemetry stream (DESIGN.md §13) behind the CLI's
+//! `--telemetry FILE` flag: one self-describing JSON object per optimizer
+//! step, carrying the step time, TFLOPS/GCD, samples/s, the comm byte
+//! ledger, the per-GCD memory estimate, and the stall + link-utilization
+//! breakdowns derived from the executed schedule.
+//!
+//! Every quantity here is *simulated* (event-clock seconds, modeled
+//! bytes); wall-clock self-profiling lives separately in
+//! `sim::SimProfile` so the two time bases can never mix. Records are
+//! deterministic: map-valued fields use `BTreeMap`, list-valued fields
+//! are explicitly sorted, and serialization goes through
+//! [`crate::util::json::Json`] (sorted object keys).
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+use crate::comm::cost::CostModel;
+use crate::memory::DeviceMemory;
+use crate::metrics::registry::Registry;
+use crate::metrics::{StepUtilization, Throughput};
+use crate::sched::Schedule;
+use crate::topology::MachineSpec;
+use crate::util::json::Json;
+
+/// Version stamped into every record's `schema` field; bump on any
+/// backwards-incompatible change to the record shape (DESIGN.md §13).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Histogram bucket bounds (seconds) for step-time observations fed into
+/// a [`Registry`] by [`register_step`].
+pub const STEP_SECONDS_BOUNDS: [f64; 7] = [0.5, 1.0, 2.0, 5.0, 10.0, 30.0, 60.0];
+
+/// Which CLI path produced a record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepKind {
+    /// `simulate` — one priced step per invocation.
+    Simulate,
+    /// `train` — one record per engine step.
+    Train,
+    /// `pipeline` — one priced pipeline step per invocation.
+    Pipeline,
+}
+
+impl StepKind {
+    /// The `kind` string written into the record.
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepKind::Simulate => "simulate",
+            StepKind::Train => "train",
+            StepKind::Pipeline => "pipeline",
+        }
+    }
+}
+
+/// One comm-ledger row: a (collective, link class) cell of the byte
+/// ledger, labeled with the machine's link name.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommRow {
+    /// Collective name (`all-gather`, `reduce-scatter`, ...).
+    pub coll: String,
+    /// Machine link label (`MachineSpec::class_label`).
+    pub link: String,
+    /// Number of calls charged.
+    pub calls: u64,
+    /// Wire bytes moved per rank.
+    pub wire_bytes: u64,
+    /// Modeled seconds charged to this cell.
+    pub seconds: f64,
+}
+
+/// One link-utilization row: a link class's busy share of the step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UtilRow {
+    /// Machine link label (`MachineSpec::class_label`).
+    pub link: String,
+    /// Distinct `(class, instance)` links that carried traffic.
+    pub instances: usize,
+    /// Union-of-spans busy seconds across the class's instances.
+    pub busy_s: f64,
+    /// `busy_s / step_s` (0.0 when the step time is degenerate).
+    pub frac_of_step: f64,
+    /// Sum of span durations (overlap counted once per task).
+    pub task_seconds: f64,
+    /// Peak concurrent transfers across the class's instances.
+    pub peak_in_flight: usize,
+}
+
+/// One telemetry record: everything the paper's observability story needs
+/// about a single optimizer step, in simulated units.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepRecord {
+    /// Step index (0 for one-shot `simulate`/`pipeline` records).
+    pub step: usize,
+    /// Producing CLI path.
+    pub kind: StepKind,
+    /// Sharding scheme name.
+    pub scheme: String,
+    /// Machine name.
+    pub machine: String,
+    /// Node count.
+    pub nodes: usize,
+    /// Worker (GCD) count.
+    pub gcds: usize,
+    /// Event-clock step seconds.
+    pub step_s: f64,
+    /// TFLOPS per GCD at this step time.
+    pub tflops_per_gcd: f64,
+    /// Sequences per second at this step time.
+    pub samples_per_s: f64,
+    /// Wire bytes the step pushed across node boundaries.
+    pub inter_node_bytes: u64,
+    /// Comm byte ledger, sorted by (collective, link).
+    pub comm: Vec<CommRow>,
+    /// Per-GCD model-state memory estimate, when priced.
+    pub memory: Option<DeviceMemory>,
+    /// Compute-stall seconds attributed per link label (rank 0's ledger).
+    pub stalls: BTreeMap<String, f64>,
+    /// Link busy-time rows, fastest class first.
+    pub utilization: Vec<UtilRow>,
+    /// Per-stream busy accounting for the modeled rank.
+    pub streams: Option<StepUtilization>,
+    /// Simulated pipeline bubble fraction (pipeline records only).
+    pub bubble_fraction: Option<f64>,
+    /// Training loss after this step (train records only).
+    pub loss: Option<f64>,
+}
+
+impl StepRecord {
+    /// A record with the identity + throughput scalars filled in; chain
+    /// the `with_*` builders to attach ledger, memory, and schedule views.
+    pub fn new(
+        step: usize,
+        kind: StepKind,
+        scheme: &str,
+        machine: &str,
+        nodes: usize,
+        point: &Throughput,
+    ) -> StepRecord {
+        StepRecord {
+            step,
+            kind,
+            scheme: scheme.to_string(),
+            machine: machine.to_string(),
+            nodes,
+            gcds: point.gcds,
+            step_s: point.step_seconds,
+            tflops_per_gcd: point.tflops_per_gpu(),
+            samples_per_s: point.samples_per_second(),
+            inter_node_bytes: 0,
+            comm: Vec::new(),
+            memory: None,
+            stalls: BTreeMap::new(),
+            utilization: Vec::new(),
+            streams: None,
+            bubble_fraction: None,
+            loss: None,
+        }
+    }
+
+    /// Attach the comm byte ledger (and its inter-node byte total), with
+    /// link cells labeled by the cost model's machine.
+    pub fn with_comm(mut self, cost: &CostModel) -> StepRecord {
+        let spec = &cost.cluster.spec;
+        let mut rows: Vec<CommRow> = cost
+            .entries()
+            .map(|((coll, class), e)| CommRow {
+                coll: coll.name().to_string(),
+                link: spec.class_label(*class),
+                calls: e.calls,
+                wire_bytes: e.wire_bytes,
+                seconds: e.seconds,
+            })
+            .collect();
+        rows.sort_by(|a, b| (&a.coll, &a.link).cmp(&(&b.coll, &b.link)));
+        self.comm = rows;
+        self.inter_node_bytes = cost.inter_node_bytes();
+        self
+    }
+
+    /// Attach the per-GCD model-state memory estimate.
+    pub fn with_memory(mut self, memory: DeviceMemory) -> StepRecord {
+        self.memory = Some(memory);
+        self
+    }
+
+    /// Attach the schedule-derived views: per-link stall attribution,
+    /// link-utilization rows (busy/task seconds, peak in-flight), and the
+    /// modeled rank's per-stream busy accounting. Labels come from
+    /// `machine` so telemetry, stall table, and trace counters agree.
+    pub fn with_schedule(mut self, sched: &Schedule, machine: &MachineSpec) -> StepRecord {
+        let rank = sched.ranks().first().copied().unwrap_or(0);
+        self.stalls = sched
+            .stall_by_class(rank)
+            .into_iter()
+            .map(|(class, s)| (machine.class_label(class), s))
+            .collect();
+        let usage = sched.link_usage();
+        let busy = sched.class_busy();
+        let mut rows = Vec::new();
+        for class in sched.link_classes() {
+            let mut instances = 0usize;
+            let mut task_seconds = 0.0;
+            let mut peak = 0usize;
+            for ((c, _), u) in &usage {
+                if *c == class {
+                    instances += 1;
+                    task_seconds += u.task_seconds;
+                    peak = peak.max(u.peak_in_flight);
+                }
+            }
+            let busy_s = busy.get(&class).copied().unwrap_or(0.0);
+            let frac = if self.step_s > 0.0 { busy_s / self.step_s } else { 0.0 };
+            rows.push(UtilRow {
+                link: machine.class_label(class),
+                instances,
+                busy_s,
+                frac_of_step: frac,
+                task_seconds,
+                peak_in_flight: peak,
+            });
+        }
+        self.utilization = rows;
+        self.streams = Some(sched.utilization(rank));
+        self
+    }
+
+    /// Attach the simulated pipeline bubble fraction.
+    pub fn with_bubble(mut self, bubble_fraction: f64) -> StepRecord {
+        self.bubble_fraction = Some(bubble_fraction);
+        self
+    }
+
+    /// Attach the post-step training loss.
+    pub fn with_loss(mut self, loss: f64) -> StepRecord {
+        self.loss = Some(loss);
+        self
+    }
+
+    /// Serialize to the one-object-per-line JSON shape of DESIGN.md §13.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("schema", Json::num(SCHEMA_VERSION as f64)),
+            ("step", Json::from(self.step)),
+            ("kind", Json::str(self.kind.name())),
+            ("scheme", Json::str(self.scheme.clone())),
+            ("machine", Json::str(self.machine.clone())),
+            ("nodes", Json::from(self.nodes)),
+            ("gcds", Json::from(self.gcds)),
+            ("step_s", Json::num(self.step_s)),
+            ("tflops_per_gcd", Json::num(self.tflops_per_gcd)),
+            ("samples_per_s", Json::num(self.samples_per_s)),
+            ("inter_node_bytes", Json::num(self.inter_node_bytes as f64)),
+        ];
+        let comm = self.comm.iter().map(|r| {
+            Json::obj(vec![
+                ("coll", Json::str(r.coll.clone())),
+                ("link", Json::str(r.link.clone())),
+                ("calls", Json::num(r.calls as f64)),
+                ("wire_bytes", Json::num(r.wire_bytes as f64)),
+                ("seconds", Json::num(r.seconds)),
+            ])
+        });
+        fields.push(("comm", Json::arr(comm)));
+        if let Some(m) = self.memory {
+            fields.push((
+                "memory_per_gcd",
+                Json::obj(vec![
+                    ("weights", Json::num(m.weights)),
+                    ("secondary", Json::num(m.secondary)),
+                    ("grads", Json::num(m.grads)),
+                    ("optim", Json::num(m.optim)),
+                    ("total", Json::num(m.total())),
+                ]),
+            ));
+        }
+        let stalls: BTreeMap<String, Json> =
+            self.stalls.iter().map(|(k, v)| (k.clone(), Json::num(*v))).collect();
+        fields.push(("stall_s", Json::Obj(stalls)));
+        let util = self.utilization.iter().map(|u| {
+            Json::obj(vec![
+                ("link", Json::str(u.link.clone())),
+                ("instances", Json::from(u.instances)),
+                ("busy_s", Json::num(u.busy_s)),
+                ("frac_of_step", Json::num(u.frac_of_step)),
+                ("task_seconds", Json::num(u.task_seconds)),
+                ("peak_in_flight", Json::from(u.peak_in_flight)),
+            ])
+        });
+        fields.push(("utilization", Json::arr(util)));
+        if let Some(u) = self.streams {
+            fields.push((
+                "streams",
+                Json::obj(vec![
+                    ("compute_busy_s", Json::num(u.compute_busy)),
+                    ("prefetch_busy_s", Json::num(u.prefetch_busy)),
+                    ("grad_sync_busy_s", Json::num(u.grad_sync_busy)),
+                    ("pipe_busy_s", Json::num(u.pipe_busy)),
+                    ("compute_utilization", Json::num(u.compute_utilization())),
+                ]),
+            ));
+        }
+        if let Some(b) = self.bubble_fraction {
+            fields.push(("bubble_fraction", Json::num(b)));
+        }
+        if let Some(l) = self.loss {
+            fields.push(("loss", Json::num(l)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Fold a record into a [`Registry`]: step counters, per-scheme step-time
+/// totals + histogram, throughput gauges, and per-link busy/stall counters
+/// (Prometheus-style naming, see DESIGN.md §13).
+pub fn register_step(reg: &mut Registry, rec: &StepRecord) {
+    let base = [("machine", rec.machine.as_str()), ("scheme", rec.scheme.as_str())];
+    reg.inc("sim_steps_total", &[("kind", rec.kind.name()), ("scheme", &rec.scheme)], 1.0);
+    reg.inc("sim_step_seconds_total", &base, rec.step_s);
+    reg.inc("sim_inter_node_bytes_total", &base, rec.inter_node_bytes as f64);
+    reg.set("sim_tflops_per_gcd", &base, rec.tflops_per_gcd);
+    reg.set("sim_samples_per_second", &base, rec.samples_per_s);
+    reg.observe("sim_step_seconds", &base, &STEP_SECONDS_BOUNDS, rec.step_s);
+    for u in &rec.utilization {
+        reg.inc("sim_link_busy_seconds_total", &[("link", &u.link)], u.busy_s);
+    }
+    for (link, s) in &rec.stalls {
+        reg.inc("sim_stall_seconds_total", &[("link", link)], *s);
+    }
+}
+
+/// Buffered JSONL writer: one [`StepRecord`] object per line.
+#[derive(Debug)]
+pub struct TelemetryWriter {
+    out: BufWriter<File>,
+    written: usize,
+}
+
+impl TelemetryWriter {
+    /// Create (truncate) `path` for writing.
+    pub fn create(path: impl AsRef<Path>) -> io::Result<TelemetryWriter> {
+        Ok(TelemetryWriter { out: BufWriter::new(File::create(path)?), written: 0 })
+    }
+
+    /// Append one record as a single JSON line.
+    pub fn write_record(&mut self, rec: &StepRecord) -> io::Result<()> {
+        writeln!(self.out, "{}", rec.to_json())?;
+        self.written += 1;
+        Ok(())
+    }
+
+    /// Records written so far.
+    pub fn written(&self) -> usize {
+        self.written
+    }
+
+    /// Flush buffered lines to disk.
+    pub fn flush(&mut self) -> io::Result<()> {
+        self.out.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{simulate, StreamKind, Task, TaskGraph};
+    use crate::topology::LinkClass;
+
+    fn tiny_schedule() -> Schedule {
+        let mut g = TaskGraph::new();
+        let a = g.add(Task {
+            label: "gather".into(),
+            rank: 0,
+            stream: StreamKind::Prefetch,
+            work: 2.0,
+            class: Some(LinkClass::InterNode),
+            instance: 0,
+            deps: vec![],
+        });
+        g.add(Task {
+            label: "fwd".into(),
+            rank: 0,
+            stream: StreamKind::Compute,
+            work: 1.0,
+            class: None,
+            instance: 0,
+            deps: vec![a],
+        });
+        simulate(g)
+    }
+
+    fn tiny_record() -> StepRecord {
+        let sched = tiny_schedule();
+        let machine = MachineSpec::frontier_mi250x();
+        let point = Throughput {
+            gcds: 8,
+            step_seconds: sched.makespan(),
+            flops_per_step: 1e15,
+            sequences_per_step: 8.0,
+        };
+        StepRecord::new(0, StepKind::Simulate, "zero3", &machine.name, 1, &point)
+            .with_schedule(&sched, &machine)
+    }
+
+    #[test]
+    fn record_serializes_with_schema_and_reconciling_views() {
+        let rec = tiny_record();
+        // the 2s exposed gather both stalls compute and keeps the link busy
+        let label = MachineSpec::frontier_mi250x().class_label(LinkClass::InterNode);
+        assert_eq!(rec.stalls.get(&label).copied(), Some(2.0));
+        assert_eq!(rec.utilization.len(), 1);
+        let u = &rec.utilization[0];
+        assert_eq!(u.link, label);
+        assert_eq!(u.busy_s, 2.0);
+        assert!(rec.stalls[&label] <= u.busy_s + 1e-12);
+        let j = rec.to_json();
+        assert_eq!(j.get("schema").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("simulate"));
+        assert_eq!(j.get("step_s").and_then(|v| v.as_f64()), Some(3.0));
+        let frac = j
+            .at(&["utilization"])
+            .and_then(|a| a.as_arr())
+            .and_then(|a| a[0].get("frac_of_step"))
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!((frac - 2.0 / 3.0).abs() < 1e-12);
+        // round-trips through the parser
+        let back = Json::parse(&j.to_string()).expect("valid JSON");
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn writer_emits_one_parseable_object_per_line() {
+        let path = std::env::temp_dir().join("zero_topo_telemetry_writer_test.jsonl");
+        {
+            let mut w = TelemetryWriter::create(&path).unwrap();
+            let rec = tiny_record();
+            w.write_record(&rec).unwrap();
+            w.write_record(&rec.clone().with_loss(3.5)).unwrap();
+            assert_eq!(w.written(), 2);
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            let j = Json::parse(line).expect("each line is a JSON object");
+            assert!(j.get("schema").is_some());
+        }
+        let last = Json::parse(lines[1]).unwrap();
+        assert_eq!(last.get("loss").and_then(|v| v.as_f64()), Some(3.5));
+    }
+
+    #[test]
+    fn register_step_accumulates_counters_and_histogram() {
+        let mut reg = Registry::new();
+        let rec = tiny_record();
+        register_step(&mut reg, &rec);
+        register_step(&mut reg, &rec);
+        let kind = [("kind", "simulate"), ("scheme", "zero3")];
+        assert_eq!(reg.counter("sim_steps_total", &kind), 2.0);
+        let base = [("machine", rec.machine.as_str()), ("scheme", "zero3")];
+        assert_eq!(reg.counter("sim_step_seconds_total", &base), 6.0);
+        let h = reg.histogram("sim_step_seconds", &base).unwrap();
+        assert_eq!(h.count(), 2);
+        let label = MachineSpec::frontier_mi250x().class_label(LinkClass::InterNode);
+        let link = [("link", label.as_str())];
+        assert_eq!(reg.counter("sim_link_busy_seconds_total", &link), 4.0);
+    }
+}

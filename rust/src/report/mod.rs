@@ -209,6 +209,63 @@ pub fn render_rank_table(
     out
 }
 
+/// Render the link-utilization accounting of a scheduled step: one row per
+/// link class that carried traffic — contended links, union busy seconds,
+/// busy share of the step, summed task seconds, peak concurrent transfers,
+/// and the compute stall `rank` attributes to the class. Busy time is a
+/// union of transfer spans, so each class's attributed stall can never
+/// exceed its busy cell (reconciliation enforced by `tests/telemetry.rs`);
+/// level labels match the stall table and the Chrome-trace counter tracks.
+pub fn render_utilization_table(
+    title: &str,
+    sched: &Schedule,
+    machine: &MachineSpec,
+    rank: usize,
+) -> String {
+    let usage = sched.link_usage();
+    let busy = sched.class_busy();
+    let stalls = sched.stall_by_class(rank);
+    let makespan = sched.makespan();
+    let mut t = Table::new(&[
+        "bandwidth level",
+        "links",
+        "busy (s)",
+        "% of step",
+        "task seconds",
+        "peak in-flight",
+        "stall (s)",
+    ])
+    .title(title.to_string())
+    .left_first();
+    for class in sched.link_classes() {
+        let mut links = 0usize;
+        let mut task_seconds = 0.0;
+        let mut peak = 0usize;
+        for ((c, _), u) in &usage {
+            if *c == class {
+                links += 1;
+                task_seconds += u.task_seconds;
+                peak = peak.max(u.peak_in_flight);
+            }
+        }
+        let b = busy.get(&class).copied().unwrap_or(0.0);
+        t.row(vec![
+            machine.class_label(class),
+            links.to_string(),
+            fnum(b, 3),
+            fnum(100.0 * b / makespan.max(f64::MIN_POSITIVE), 1),
+            fnum(task_seconds, 3),
+            peak.to_string(),
+            fnum(stalls.get(&class).copied().unwrap_or(0.0), 3),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "step {makespan:.3}s; busy = union of concurrent transfers per level\n"
+    ));
+    out
+}
+
 /// Render the slowest-rank critical path: the chain of tasks (dependency or
 /// stream-FIFO blockers) ending at the last-finishing task, capped to the
 /// final `max_items` entries.
@@ -353,6 +410,147 @@ mod tests {
         assert!(cp.contains("compute@r9") && cp.contains("grad-sync"), "{cp}");
         let short = render_critical_path(&sched, 1);
         assert!(short.contains("elided"), "{short}");
+    }
+
+    // -- golden-string renderer tests: pinned small configs, exact match --
+
+    #[test]
+    fn stall_table_golden() {
+        let mut stalls = BTreeMap::new();
+        stalls.insert(LinkClass::InterNode, 2.0);
+        stalls.insert(LinkClass::Intra(0), 0.5);
+        let util = StepUtilization {
+            makespan: 10.0,
+            compute_busy: 7.0,
+            prefetch_busy: 2.5,
+            grad_sync_busy: 2.0,
+            pipe_busy: 0.0,
+        };
+        let out =
+            render_stall_table("stalls", &stalls, &util, &MachineSpec::frontier_mi250x());
+        let expected = "\
+stalls
++---------------------+-------------------+-----------+
+| bandwidth level     | compute stall (s) | % of step |
++---------------------+-------------------+-----------+
+| B_GCD (GCD-GCD)     |             0.500 |       5.0 |
+| B_inter (node-node) |             2.000 |      20.0 |
++---------------------+-------------------+-----------+
+step 10.000s: compute busy 7.000s (70.0% util), prefetch busy 2.500s, grad-sync busy 2.000s
+";
+        assert_eq!(out, expected);
+    }
+
+    #[test]
+    fn rank_table_golden() {
+        use crate::sched::{simulate, StreamKind, Task, TaskGraph};
+        let mut g = TaskGraph::with_rank_ids(vec![0, 9]);
+        g.add(Task {
+            label: "compute@r0".into(),
+            rank: 0,
+            stream: StreamKind::Compute,
+            work: 1.0,
+            class: None,
+            instance: 0,
+            deps: vec![],
+        });
+        g.add(Task {
+            label: "compute@r9".into(),
+            rank: 9,
+            stream: StreamKind::Compute,
+            work: 3.0,
+            class: None,
+            instance: 0,
+            deps: vec![],
+        });
+        let sched = simulate(g);
+        let out = render_rank_table("ranks", &sched, &MachineSpec::frontier_mi250x(), 8);
+        let expected = "\
+ranks
++------+------+------------------+-----------------+---------------+-----------------+----------+
+| rank | node | compute busy (s) | compute end (s) | skew wait (s) | worst stall (s) | on level |
++------+------+------------------+-----------------+---------------+-----------------+----------+
+| r9   |    1 |            3.000 |           3.000 |         0.000 |               - |        - |
+| r0   |    0 |            1.000 |           1.000 |         2.000 |               - |        - |
++------+------+------------------+-----------------+---------------+-----------------+----------+
+makespan 3.000s; slowest rank r9 (compute ends 3.000s)
+";
+        assert_eq!(out, expected);
+    }
+
+    #[test]
+    fn pipeline_table_golden() {
+        use crate::sched::Depth;
+        let plan = PipelinePlan::synthetic(2, 2, 1, 1.0, 2.0, Depth::Infinite);
+        let sched = plan.simulate();
+        let out = render_pipeline_table(
+            "pipeline",
+            &plan,
+            &sched,
+            &MachineSpec::frontier_mi250x(),
+        );
+        let expected = "\
+pipeline
++-------+----------+------------------+---------------+--------------------+-----------------+----------+
+| stage | rep rank | compute busy (s) | pipe busy (s) | grad-sync busy (s) | worst stall (s) | on level |
++-------+----------+------------------+---------------+--------------------+-----------------+----------+
+| s0    |       r0 |            6.000 |         0.000 |              0.000 |               - |        - |
+| s1    |       r8 |            6.000 |         0.000 |              0.000 |               - |        - |
++-------+----------+------------------+---------------+--------------------+-----------------+----------+
+step 9.000s; bubble fraction 0.3333 (closed-form equal-stage bound 0.3333); P=2 M=2 V=1
+";
+        assert_eq!(out, expected);
+    }
+
+    #[test]
+    fn utilization_table_golden() {
+        use crate::sched::{simulate, StreamKind, Task, TaskGraph};
+        let mut g = TaskGraph::new();
+        let gather = g.add(Task {
+            label: "gather".into(),
+            rank: 0,
+            stream: StreamKind::Prefetch,
+            work: 2.0,
+            class: Some(LinkClass::InterNode),
+            instance: 0,
+            deps: vec![],
+        });
+        let fwd = g.add(Task {
+            label: "fwd".into(),
+            rank: 0,
+            stream: StreamKind::Compute,
+            work: 1.0,
+            class: None,
+            instance: 0,
+            deps: vec![gather],
+        });
+        g.add(Task {
+            label: "sync".into(),
+            rank: 0,
+            stream: StreamKind::GradSync,
+            work: 1.0,
+            class: Some(LinkClass::Intra(0)),
+            instance: 0,
+            deps: vec![fwd],
+        });
+        let sched = simulate(g);
+        let out = render_utilization_table(
+            "utilization",
+            &sched,
+            &MachineSpec::frontier_mi250x(),
+            0,
+        );
+        let expected = "\
+utilization
++---------------------+-------+----------+-----------+--------------+----------------+-----------+
+| bandwidth level     | links | busy (s) | % of step | task seconds | peak in-flight | stall (s) |
++---------------------+-------+----------+-----------+--------------+----------------+-----------+
+| B_GCD (GCD-GCD)     |     1 |    1.000 |      25.0 |        1.000 |              1 |     1.000 |
+| B_inter (node-node) |     1 |    2.000 |      50.0 |        2.000 |              1 |     2.000 |
++---------------------+-------+----------+-----------+--------------+----------------+-----------+
+step 4.000s; busy = union of concurrent transfers per level
+";
+        assert_eq!(out, expected);
     }
 
     #[test]

@@ -276,6 +276,24 @@ pub struct Span {
     pub end: f64,
 }
 
+/// Link-utilization accounting of one `(LinkClass, instance)` contention
+/// domain, derived post-hoc from the executed spans — the telemetry layer
+/// (DESIGN.md §13) reads the timeline the event loop already produced, so
+/// enabling it cannot perturb the event clock.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LinkUsage {
+    /// Seconds at least one task occupied the domain (union of spans).
+    pub busy: f64,
+    /// Summed task span seconds (`>= busy`; the ratio is the mean
+    /// processor-sharing fan-in while the domain was busy).
+    pub task_seconds: f64,
+    /// Number of tasks that rode the domain.
+    pub tasks: usize,
+    /// Peak concurrent tasks in flight (the worst fan-in the event loop
+    /// arbitrated on the domain).
+    pub peak_in_flight: usize,
+}
+
 /// The executed timeline of a [`TaskGraph`].
 #[derive(Debug, Clone)]
 pub struct Schedule {
@@ -473,6 +491,85 @@ impl Schedule {
         }
     }
 
+    /// Per-`(LinkClass, instance)` link accounting: for every contention
+    /// domain the event loop arbitrated, the union-of-spans busy seconds,
+    /// summed task seconds, task count, and peak processor-sharing fan-in.
+    /// Purely span-derived (post-hoc), so telemetry cannot move the clock.
+    pub fn link_usage(&self) -> BTreeMap<(LinkClass, usize), LinkUsage> {
+        let mut intervals: BTreeMap<(LinkClass, usize), Vec<(f64, f64)>> = BTreeMap::new();
+        for s in &self.spans {
+            let t = self.graph.task(s.task);
+            if let Some(c) = t.class {
+                intervals.entry((c, t.instance)).or_default().push((s.start, s.end));
+            }
+        }
+        intervals.into_iter().map(|(key, iv)| (key, usage_of(&iv))).collect()
+    }
+
+    /// Busy seconds per link class: the measure of time at least one task
+    /// of the class was in flight on *any* instance (a union, not a sum —
+    /// two concurrent gathers on different IF links count once).
+    ///
+    /// Reconciles with [`Schedule::stall_by_class`]: a stall window is
+    /// charged to class `c` only while a class-`c` task is in flight, so
+    /// for every rank `stall_by_class(rank)[c] <= class_busy()[c]`
+    /// (enforced by `tests/telemetry.rs` on the pinned guardrail configs).
+    pub fn class_busy(&self) -> BTreeMap<LinkClass, f64> {
+        let mut intervals: BTreeMap<LinkClass, Vec<(f64, f64)>> = BTreeMap::new();
+        for s in &self.spans {
+            if let Some(c) = self.graph.task(s.task).class {
+                intervals.entry(c).or_default().push((s.start, s.end));
+            }
+        }
+        intervals.into_iter().map(|(c, mut iv)| (c, union_seconds(&mut iv))).collect()
+    }
+
+    /// Every link class that appears in the schedule, fastest-first.
+    pub fn link_classes(&self) -> Vec<LinkClass> {
+        let mut out: Vec<LinkClass> = self.graph.tasks.iter().filter_map(|t| t.class).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Piecewise-constant in-flight task count of link class `class`
+    /// across all its instances: `(time, count)` change points starting at
+    /// `t = 0` — the series the Chrome-trace counter tracks render.
+    pub fn class_in_flight(&self, class: LinkClass) -> Vec<(f64, usize)> {
+        let intervals: Vec<(f64, f64)> = self
+            .spans
+            .iter()
+            .filter(|s| self.graph.task(s.task).class == Some(class))
+            .map(|s| (s.start, s.end))
+            .collect();
+        depth_timeline(&intervals)
+    }
+
+    /// Piecewise-constant ready-but-unstarted backlog of one stream's FIFO
+    /// queue: a task is queued from the moment its last dependency finished
+    /// until its span starts (FIFO wait + depth gating). `(time, depth)`
+    /// change points starting at `t = 0`.
+    pub fn stream_queue(&self, rank: usize, stream: StreamKind) -> Vec<(f64, usize)> {
+        let mut intervals = Vec::new();
+        for s in &self.spans {
+            let t = self.graph.task(s.task);
+            if t.rank != rank || t.stream != stream {
+                continue;
+            }
+            let ready = t.deps.iter().map(|d| self.span(*d).end).fold(0.0, f64::max);
+            if s.start > ready {
+                intervals.push((ready, s.start));
+            }
+        }
+        depth_timeline(&intervals)
+    }
+
+    /// Peak of [`Schedule::stream_queue`] — how deep the stream's backlog
+    /// ever got.
+    pub fn stream_peak_queue(&self, rank: usize, stream: StreamKind) -> usize {
+        self.stream_queue(rank, stream).into_iter().map(|(_, d)| d).max().unwrap_or(0)
+    }
+
     /// Straggler-wait: wall time `rank`'s compute stream sat idle while NO
     /// communication task was in flight anywhere — idle that
     /// [`Schedule::stall_by_class`] cannot blame on a link class because the
@@ -603,6 +700,74 @@ impl Schedule {
         }
         path.reverse();
         path
+    }
+}
+
+/// Union measure of a set of `[start, end)` intervals (sorts in place).
+fn union_seconds(intervals: &mut [(f64, f64)]) -> f64 {
+    intervals.sort_by(|a, b| a.partial_cmp(b).expect("finite span bounds"));
+    let mut total = 0.0;
+    let mut cur: Option<(f64, f64)> = None;
+    for &(a, b) in intervals.iter() {
+        if b <= a {
+            continue;
+        }
+        match cur {
+            Some((s, e)) if a <= e => cur = Some((s, e.max(b))),
+            Some((s, e)) => {
+                total += e - s;
+                cur = Some((a, b));
+            }
+            None => cur = Some((a, b)),
+        }
+    }
+    if let Some((s, e)) = cur {
+        total += e - s;
+    }
+    total
+}
+
+/// Piecewise-constant count of concurrently open intervals: `(time, count)`
+/// change points, always seeded at `t = 0`. Events sharing a timestamp are
+/// merged, so back-to-back spans never show a spurious dip.
+fn depth_timeline(intervals: &[(f64, f64)]) -> Vec<(f64, usize)> {
+    let mut events: Vec<(f64, i64)> = Vec::with_capacity(2 * intervals.len());
+    for &(a, b) in intervals {
+        if b > a {
+            events.push((a, 1));
+            events.push((b, -1));
+        }
+    }
+    events.sort_by(|a, b| a.partial_cmp(b).expect("finite span bounds"));
+    let mut out: Vec<(f64, usize)> = vec![(0.0, 0)];
+    let mut cur = 0i64;
+    let mut i = 0;
+    while i < events.len() {
+        let t = events[i].0;
+        while i < events.len() && events[i].0 == t {
+            cur += events[i].1;
+            i += 1;
+        }
+        let v = usize::try_from(cur.max(0)).expect("balanced events");
+        if t == 0.0 {
+            out[0].1 = v;
+        } else if out.last().expect("seeded at t = 0").1 != v {
+            out.push((t, v));
+        }
+    }
+    out
+}
+
+/// Fold one domain's task intervals into its [`LinkUsage`].
+fn usage_of(intervals: &[(f64, f64)]) -> LinkUsage {
+    let mut iv = intervals.to_vec();
+    let task_seconds: f64 = iv.iter().map(|&(a, b)| (b - a).max(0.0)).sum();
+    let peak = depth_timeline(&iv).into_iter().map(|(_, d)| d).max().unwrap_or(0);
+    LinkUsage {
+        busy: union_seconds(&mut iv),
+        task_seconds,
+        tasks: intervals.len(),
+        peak_in_flight: peak,
     }
 }
 
@@ -838,6 +1003,75 @@ mod tests {
         assert!((stalls[&LinkClass::InterNode] - 1.0).abs() < 1e-12, "{stalls:?}");
         assert_eq!(s.slowest_rank(), 1);
         assert!((s.rank_compute_end(1) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn link_usage_unions_overlap_and_tracks_peak() {
+        // two 1-unit transfers share the fabric: processor sharing runs
+        // both over [0, 2) at half rate
+        let mut g = TaskGraph::new();
+        g.add(comm(StreamKind::Prefetch, 1.0, LinkClass::InterNode, vec![]));
+        g.add(comm(StreamKind::GradSync, 1.0, LinkClass::InterNode, vec![]));
+        let s = simulate(g);
+        let usage = s.link_usage();
+        let u = usage[&(LinkClass::InterNode, 0)];
+        assert!((u.busy - 2.0).abs() < 1e-12, "{u:?}");
+        assert!((u.task_seconds - 4.0).abs() < 1e-12, "{u:?}");
+        assert_eq!(u.tasks, 2);
+        assert_eq!(u.peak_in_flight, 2);
+        // the in-flight counter series steps 2 -> 0 at the shared finish
+        assert_eq!(s.class_in_flight(LinkClass::InterNode), vec![(0.0, 2), (2.0, 0)]);
+    }
+
+    #[test]
+    fn class_busy_is_a_union_across_instances() {
+        // concurrent tasks on two instances of one class: separate usage
+        // entries, but the class-level busy union counts the window once
+        let mut g = TaskGraph::new();
+        g.add(comm(StreamKind::Prefetch, 1.0, LinkClass::Intra(0), vec![]));
+        let mut other = comm(StreamKind::GradSync, 1.0, LinkClass::Intra(0), vec![]);
+        other.instance = 1;
+        g.add(other);
+        let s = simulate(g);
+        assert!((s.class_busy()[&LinkClass::Intra(0)] - 1.0).abs() < 1e-12);
+        let usage = s.link_usage();
+        assert_eq!(usage.len(), 2);
+        assert!((usage[&(LinkClass::Intra(0), 0)].busy - 1.0).abs() < 1e-12);
+        assert!((usage[&(LinkClass::Intra(0), 1)].busy - 1.0).abs() < 1e-12);
+        assert_eq!(s.link_classes(), vec![LinkClass::Intra(0)]);
+    }
+
+    #[test]
+    fn stalls_reconcile_with_class_busy() {
+        // a 2s inter-node gather gates 1s of compute; a 1s intra sync
+        // follows the compute — stall per class <= class busy seconds
+        let mut g = TaskGraph::new();
+        let gather = g.add(comm(StreamKind::Prefetch, 2.0, LinkClass::InterNode, vec![]));
+        let c = g.add(task(StreamKind::Compute, 1.0, vec![gather]));
+        g.add(comm(StreamKind::GradSync, 1.0, LinkClass::Intra(0), vec![c]));
+        let s = simulate(g);
+        let busy = s.class_busy();
+        for rank in s.ranks() {
+            for (class, stall) in s.stall_by_class(rank) {
+                assert!(stall <= busy[&class] + 1e-9, "{class}: {stall} > {}", busy[&class]);
+            }
+        }
+        assert!((busy[&LinkClass::InterNode] - 2.0).abs() < 1e-12);
+        assert!((busy[&LinkClass::Intra(0)] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stream_queue_counts_ready_but_unstarted_tasks() {
+        // two prefetch tasks both ready at t=0: FIFO serializes, so the
+        // second sits queued over [0, 1)
+        let mut g = TaskGraph::new();
+        g.add(task(StreamKind::Prefetch, 1.0, vec![]));
+        g.add(task(StreamKind::Prefetch, 1.0, vec![]));
+        let s = simulate(g);
+        assert_eq!(s.stream_queue(0, StreamKind::Prefetch), vec![(0.0, 1), (1.0, 0)]);
+        assert_eq!(s.stream_peak_queue(0, StreamKind::Prefetch), 1);
+        // the compute stream never queued anything
+        assert_eq!(s.stream_peak_queue(0, StreamKind::Compute), 0);
     }
 
     #[test]

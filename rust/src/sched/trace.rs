@@ -1,11 +1,19 @@
 //! Chrome-trace (about://tracing / Perfetto) export of a [`Schedule`]:
 //! one process per named schedule, one thread per (rank, stream), one
-//! complete ("X") event per task span. Load the emitted JSON in
+//! complete ("X") event per task span, plus one counter ("C") track per
+//! link class showing its in-flight task count over time — the
+//! utilization timeline next to the span lanes. Load the emitted JSON in
 //! `chrome://tracing` or <https://ui.perfetto.dev> to see the stream
 //! timelines the step scheduler produced. Pipeline schedules get a
 //! fourth per-rank lane for their stage-to-stage transfers.
+//!
+//! Lanes carry `thread_sort_index` metadata so Perfetto renders each
+//! rank's streams in Compute / Prefetch / GradSync / PipeTransfer order,
+//! and counter tracks are named with the machine's link labels (the same
+//! labels the stall table prints) when a [`MachineSpec`] is supplied.
 
 use crate::sched::{Schedule, StreamKind};
+use crate::topology::spec::MachineSpec;
 use crate::util::json::Json;
 
 /// All stream lanes a rank can own, in lane order.
@@ -28,7 +36,22 @@ fn tid_of(rank: usize, stream: StreamKind) -> usize {
 
 /// Render one or more named schedules (e.g. one per scheme) as a Chrome
 /// trace JSON document. Timestamps are microseconds of simulated time.
+/// Counter tracks fall back to the generic [`LinkClass`] display names;
+/// pass the machine through [`chrome_trace_labeled`] to use its level
+/// names instead.
+///
+/// [`LinkClass`]: crate::topology::LinkClass
 pub fn chrome_trace(named: &[(String, &Schedule)]) -> String {
+    chrome_trace_labeled(named, None)
+}
+
+/// [`chrome_trace`] with link-utilization counter tracks named after
+/// `machine`'s link labels (`MachineSpec::class_label`), so the trace, the
+/// stall table, and the utilization table all speak the same names.
+pub fn chrome_trace_labeled(
+    named: &[(String, &Schedule)],
+    machine: Option<&MachineSpec>,
+) -> String {
     let mut events: Vec<Json> = Vec::new();
     for (pid, (name, sched)) in named.iter().enumerate() {
         events.push(Json::obj(vec![
@@ -50,11 +73,12 @@ pub fn chrome_trace(named: &[(String, &Schedule)]) -> String {
                 if stream == StreamKind::PipeTransfer && !pipe_ranks.contains(&rank) {
                     continue;
                 }
+                let tid = tid_of(rank, stream);
                 events.push(Json::obj(vec![
                     ("name", Json::str("thread_name")),
                     ("ph", Json::str("M")),
                     ("pid", Json::from(pid)),
-                    ("tid", Json::from(tid_of(rank, stream))),
+                    ("tid", Json::from(tid)),
                     (
                         "args",
                         Json::obj(vec![(
@@ -62,6 +86,14 @@ pub fn chrome_trace(named: &[(String, &Schedule)]) -> String {
                             Json::str(format!("rank{rank}/{}", stream.name())),
                         )]),
                     ),
+                ]));
+                // lane order within the rank = stream declaration order
+                events.push(Json::obj(vec![
+                    ("name", Json::str("thread_sort_index")),
+                    ("ph", Json::str("M")),
+                    ("pid", Json::from(pid)),
+                    ("tid", Json::from(tid)),
+                    ("args", Json::obj(vec![("sort_index", Json::from(tid))])),
                 ]));
             }
         }
@@ -86,6 +118,23 @@ pub fn chrome_trace(named: &[(String, &Schedule)]) -> String {
                 ("args", Json::obj(args)),
             ]));
         }
+        // one counter track per link class: in-flight tasks over time,
+        // named consistently with the stall-table link labels
+        for class in sched.link_classes() {
+            let label = match machine {
+                Some(m) => m.class_label(class),
+                None => class.to_string(),
+            };
+            for (t, depth) in sched.class_in_flight(class) {
+                events.push(Json::obj(vec![
+                    ("name", Json::str(format!("util:{label}"))),
+                    ("ph", Json::str("C")),
+                    ("pid", Json::from(pid)),
+                    ("ts", Json::num(t * 1e6)),
+                    ("args", Json::obj(vec![("in_flight", Json::from(depth))])),
+                ]));
+            }
+        }
     }
     let doc = Json::obj(vec![
         ("traceEvents", Json::arr(events)),
@@ -98,6 +147,13 @@ pub fn chrome_trace(named: &[(String, &Schedule)]) -> String {
 mod tests {
     use super::*;
     use crate::sched::{simulate, Task, TaskGraph};
+
+    fn count_ph(events: &[Json], ph: &str) -> usize {
+        events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some(ph))
+            .count()
+    }
 
     #[test]
     fn trace_roundtrips_through_json() {
@@ -124,8 +180,11 @@ mod tests {
         let out = chrome_trace(&[("demo".to_string(), &sched)]);
         let parsed = Json::parse(&out).expect("valid JSON");
         let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
-        // 1 process_name + 3 thread_name + 2 task events
-        assert_eq!(events.len(), 6);
+        // 1 process_name + 3 x (thread_name + thread_sort_index) + 2 task
+        // events + 2 counter samples (gather in flight over [0, 1))
+        assert_eq!(events.len(), 11);
+        assert_eq!(count_ph(events, "M"), 7);
+        assert_eq!(count_ph(events, "C"), 2);
         let xs: Vec<&Json> = events
             .iter()
             .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
@@ -159,8 +218,10 @@ mod tests {
         let out = chrome_trace(&[("multi".to_string(), &sched)]);
         let parsed = Json::parse(&out).expect("valid JSON");
         let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
-        // 1 process_name + 2 ranks x 3 thread_name + 2 task events
-        assert_eq!(events.len(), 9);
+        // 1 process_name + 2 ranks x 3 x (thread_name + sort_index) + 2
+        // task events; no link classes, so no counter tracks
+        assert_eq!(events.len(), 15);
+        assert_eq!(count_ph(events, "C"), 0);
         let tids: Vec<usize> = events
             .iter()
             .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
@@ -194,13 +255,65 @@ mod tests {
         let out = chrome_trace(&[("pipe".to_string(), &sched)]);
         let parsed = Json::parse(&out).expect("valid JSON");
         let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
-        // 1 process_name + 4 thread_name (pipe lane present) + 2 tasks
-        assert_eq!(events.len(), 7);
+        // 1 process_name + 4 x (thread_name + sort_index) + 2 tasks + 3
+        // counter samples (seed at 0, rise at 1.0, fall at 1.5)
+        assert_eq!(events.len(), 14);
+        assert_eq!(count_ph(events, "C"), 3);
         let pipe_tid = events
             .iter()
             .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
             .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("p2p.act"))
             .and_then(|e| e.get("tid").and_then(|t| t.as_usize()));
         assert_eq!(pipe_tid, Some(3));
+    }
+
+    #[test]
+    fn sort_index_orders_lanes_and_machine_labels_name_counters() {
+        let mut g = TaskGraph::new();
+        let a = g.add(Task {
+            label: "gather".into(),
+            rank: 0,
+            stream: StreamKind::Prefetch,
+            work: 1.0,
+            class: Some(crate::topology::LinkClass::InterNode),
+            instance: 0,
+            deps: vec![],
+        });
+        g.add(Task {
+            label: "fwd".into(),
+            rank: 0,
+            stream: StreamKind::Compute,
+            work: 1.0,
+            class: None,
+            instance: 0,
+            deps: vec![a],
+        });
+        let sched = simulate(g);
+        let frontier = MachineSpec::frontier_mi250x();
+        let out = chrome_trace_labeled(&[("demo".to_string(), &sched)], Some(&frontier));
+        let parsed = Json::parse(&out).expect("valid JSON");
+        let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        // every lane carries a sort index equal to its tid
+        let sorts: Vec<(usize, usize)> = events
+            .iter()
+            .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some("thread_sort_index"))
+            .map(|e| {
+                let tid = e.get("tid").and_then(|t| t.as_usize()).unwrap();
+                let idx = e
+                    .at(&["args", "sort_index"])
+                    .and_then(|s| s.as_usize())
+                    .unwrap();
+                (tid, idx)
+            })
+            .collect();
+        assert_eq!(sorts, vec![(0, 0), (1, 1), (2, 2)]);
+        // counter tracks use the machine's stall-table label
+        let counter = events
+            .iter()
+            .find(|e| e.get("ph").and_then(|p| p.as_str()) == Some("C"))
+            .unwrap();
+        let name = counter.get("name").and_then(|n| n.as_str()).unwrap();
+        let label = frontier.class_label(crate::topology::LinkClass::InterNode);
+        assert_eq!(name, format!("util:{label}"));
     }
 }

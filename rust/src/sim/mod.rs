@@ -145,6 +145,40 @@ pub struct PipelineBreakdown {
     pub t_act: f64,
 }
 
+/// Wall-clock self-profile of one simulator invocation — REAL time from
+/// `std::time::Instant`, kept strictly apart from the simulated event
+/// clock (which telemetry must never perturb): how long plan construction
+/// and event-loop execution took and how many tasks the loop retired.
+/// This is the ROADMAP "Simulator raw speed" number; `calibrate` reports
+/// it as tasks/sec and the CI drift table tracks it as a soft (warn-only)
+/// gate next to the hard accuracy pins.
+#[derive(Debug, Clone, Copy)]
+pub struct SimProfile {
+    /// Wall seconds spent charging the protocol and building the plan.
+    pub plan_build_wall_s: f64,
+    /// Wall seconds spent executing the discrete-event loop.
+    pub event_loop_wall_s: f64,
+    /// Tasks the executed schedule retired.
+    pub tasks: usize,
+}
+
+impl SimProfile {
+    /// Event-loop throughput in tasks per wall second (0.0 when the timer
+    /// resolution rounds the loop duration to zero).
+    pub fn tasks_per_sec(&self) -> f64 {
+        if self.event_loop_wall_s > 0.0 {
+            self.tasks as f64 / self.event_loop_wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Total wall seconds: plan build + event loop.
+    pub fn total_wall_s(&self) -> f64 {
+        self.plan_build_wall_s + self.event_loop_wall_s
+    }
+}
+
 /// Price one (model, scheme, cluster) point: charge the full protocol to
 /// the byte ledger and derive the step's task-graph durations. Shared by
 /// the single-rank and multi-rank simulation entry points.
@@ -153,7 +187,7 @@ fn charge_and_plan(
     scheme: Scheme,
     cluster: &Cluster,
     cfg: &SimConfig,
-) -> (StepPlan, f64, u64) {
+) -> (StepPlan, f64, CostModel) {
     let spec = ShardingSpec::resolve(scheme, cluster).expect("valid scheme");
     let world = cluster.world_size();
     let psi = model.n_params() as usize;
@@ -267,8 +301,7 @@ fn charge_and_plan(
             cfg.prefetch_depth,
         )
     };
-    let inter_node_bytes = cost.inter_node_bytes();
-    (plan, compute_s, inter_node_bytes)
+    (plan, compute_s, world_comm.cost)
 }
 
 fn breakdown_of(
@@ -295,10 +328,30 @@ pub fn simulate_step_schedule(
     cluster: &Cluster,
     cfg: &SimConfig,
 ) -> (StepBreakdown, Schedule) {
-    let (plan, compute_s, inb) = charge_and_plan(model, scheme, cluster, cfg);
-    let schedule = plan.simulate();
-    let breakdown = breakdown_of(&plan, compute_s, inb, schedule.makespan());
+    let (breakdown, schedule, _) = simulate_step_telemetry(model, scheme, cluster, cfg, None);
     (breakdown, schedule)
+}
+
+/// [`simulate_step_schedule`] (or, with a scenario, the multi-rank step
+/// clock of [`simulate_step_scenario`]) that additionally keeps the full
+/// byte ledger — the per-collective [`CostModel`] the telemetry stream
+/// serializes. The simulated numbers are bit-identical to the plain entry
+/// points; only what is *returned* differs.
+pub fn simulate_step_telemetry(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+    scenario: Option<&Scenario>,
+) -> (StepBreakdown, Schedule, CostModel) {
+    let (plan, compute_s, cost) = charge_and_plan(model, scheme, cluster, cfg);
+    let schedule = match scenario {
+        None => plan.simulate(),
+        Some(sc) => MultiRankPlan::new(&plan, cluster, sc).simulate(),
+    };
+    let breakdown =
+        breakdown_of(&plan, compute_s, cost.inter_node_bytes(), schedule.makespan());
+    (breakdown, schedule, cost)
 }
 
 /// Simulate one point under a multi-rank [`Scenario`] (stragglers, jitter,
@@ -313,10 +366,34 @@ pub fn simulate_step_scenario(
     cfg: &SimConfig,
     scenario: &Scenario,
 ) -> (StepBreakdown, Schedule) {
-    let (plan, compute_s, inb) = charge_and_plan(model, scheme, cluster, cfg);
-    let schedule = MultiRankPlan::new(&plan, cluster, scenario).simulate();
-    let breakdown = breakdown_of(&plan, compute_s, inb, schedule.makespan());
+    let (breakdown, schedule, _) =
+        simulate_step_telemetry(model, scheme, cluster, cfg, Some(scenario));
     (breakdown, schedule)
+}
+
+/// [`simulate_step_schedule`] with wall-clock self-profiling around the
+/// plan build and the event loop. The simulated result is identical —
+/// the timers only observe; they never feed the event clock.
+pub fn profile_step(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+) -> (StepBreakdown, Schedule, SimProfile) {
+    let t0 = std::time::Instant::now();
+    let (plan, compute_s, cost) = charge_and_plan(model, scheme, cluster, cfg);
+    let plan_build_wall_s = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let schedule = plan.simulate();
+    let event_loop_wall_s = t1.elapsed().as_secs_f64();
+    let breakdown =
+        breakdown_of(&plan, compute_s, cost.inter_node_bytes(), schedule.makespan());
+    let profile = SimProfile {
+        plan_build_wall_s,
+        event_loop_wall_s,
+        tasks: schedule.spans().len(),
+    };
+    (breakdown, schedule, profile)
 }
 
 /// Simulate one (model, scheme, cluster) point.
@@ -336,7 +413,8 @@ fn pipeline_point(
     cfg: &SimConfig,
     pipe: &PipeConfig,
     scenario: Option<&Scenario>,
-) -> Result<(PipelineBreakdown, Schedule, PipelinePlan), PipelineError> {
+) -> Result<(PipelineBreakdown, Schedule, PipelinePlan, SimProfile), PipelineError> {
+    let t0 = std::time::Instant::now();
     let p = pipe.stages;
     if p == 0 {
         return Err(PipelineError::BadStages(0));
@@ -378,7 +456,15 @@ fn pipeline_point(
             plan = plan.with_stage_multipliers(sc.stage_multipliers(cluster, p));
         }
     }
+    let plan_build_wall_s = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
     let sched = plan.simulate();
+    let event_loop_wall_s = t1.elapsed().as_secs_f64();
+    let profile = SimProfile {
+        plan_build_wall_s,
+        event_loop_wall_s,
+        tasks: sched.spans().len(),
+    };
     let breakdown = PipelineBreakdown {
         step_s: sched.makespan(),
         bubble_fraction: plan.bubble_fraction(&sched),
@@ -389,7 +475,7 @@ fn pipeline_point(
         compute_s,
         t_act: plan.t_act,
     };
-    Ok((breakdown, sched, plan))
+    Ok((breakdown, sched, plan, profile))
 }
 
 /// Simulate one point under a hybrid pipeline-parallel × ZeRO execution:
@@ -408,6 +494,18 @@ pub fn simulate_step_pipeline(
     cfg: &SimConfig,
     pipe: &PipeConfig,
 ) -> Result<(PipelineBreakdown, Schedule, PipelinePlan), PipelineError> {
+    pipeline_point(model, scheme, cluster, cfg, pipe, None).map(|(b, s, p, _)| (b, s, p))
+}
+
+/// [`simulate_step_pipeline`] with wall-clock self-profiling around plan
+/// build and event loop (same contract as [`profile_step`]).
+pub fn profile_step_pipeline(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+    pipe: &PipeConfig,
+) -> Result<(PipelineBreakdown, Schedule, PipelinePlan, SimProfile), PipelineError> {
     pipeline_point(model, scheme, cluster, cfg, pipe, None)
 }
 
@@ -423,7 +521,7 @@ pub fn simulate_step_pipeline_scenario(
     pipe: &PipeConfig,
     scenario: &Scenario,
 ) -> Result<(PipelineBreakdown, Schedule, PipelinePlan), PipelineError> {
-    pipeline_point(model, scheme, cluster, cfg, pipe, Some(scenario))
+    pipeline_point(model, scheme, cluster, cfg, pipe, Some(scenario)).map(|(b, s, p, _)| (b, s, p))
 }
 
 /// [`scaling_series`] under a pipeline-parallel execution: every point's
@@ -772,6 +870,38 @@ mod tests {
             // a stage's blocks are exactly its chunk slice (V per stage)
             assert!(plan.stages.iter().all(|sp| sp.blocks.len() == 2));
         }
+    }
+
+    #[test]
+    fn profiling_observes_without_perturbing_the_event_clock() {
+        let model = TransformerSpec::neox20b();
+        let cfg = SimConfig::default();
+        let c = Cluster::frontier(48);
+        for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }] {
+            let plain = simulate_step(&model, scheme, &c, &cfg);
+            let (b, sched, prof) = profile_step(&model, scheme, &c, &cfg);
+            assert_eq!(plain.step_s, b.step_s, "{scheme:?}");
+            assert_eq!(prof.tasks, sched.spans().len());
+            assert!(prof.tasks > 0);
+            assert!(prof.plan_build_wall_s >= 0.0 && prof.event_loop_wall_s >= 0.0);
+            assert!(prof.total_wall_s() >= prof.event_loop_wall_s);
+        }
+        let pipe = PipeConfig { stages: 4, microbatches: 8, interleave: 1 };
+        let scheme = Scheme::ZeroTopo { sec_degree: 2 };
+        let (plain, _, _) = simulate_step_pipeline(&model, scheme, &c, &cfg, &pipe).unwrap();
+        let (b, sched, _, prof) =
+            profile_step_pipeline(&model, scheme, &c, &cfg, &pipe).unwrap();
+        assert_eq!(plain.step_s, b.step_s);
+        assert_eq!(prof.tasks, sched.spans().len());
+    }
+
+    #[test]
+    fn tasks_per_sec_guards_zero_wall_time() {
+        let z = SimProfile { plan_build_wall_s: 0.0, event_loop_wall_s: 0.0, tasks: 100 };
+        assert_eq!(z.tasks_per_sec(), 0.0);
+        let p = SimProfile { plan_build_wall_s: 0.1, event_loop_wall_s: 0.5, tasks: 100 };
+        assert!((p.tasks_per_sec() - 200.0).abs() < 1e-9);
+        assert!((p.total_wall_s() - 0.6).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! Telemetry must observe without perturbing: every committed
+//! `BENCH_baseline.json` step time must reproduce at exactly 0.0 drift
+//! when priced through the telemetry-bearing entry points, and the
+//! link-utilization view must reconcile with the stall-attribution
+//! ledger — a stall charged to a link class can never exceed that
+//! class's busy time, which can never exceed the step (ISSUE 6
+//! acceptance criteria).
+
+use std::path::PathBuf;
+
+use zero_topo::metrics::telemetry::{StepKind, StepRecord, TelemetryWriter, SCHEMA_VERSION};
+use zero_topo::metrics::Throughput;
+use zero_topo::model::TransformerSpec;
+use zero_topo::sched::pipeline::PipeConfig;
+use zero_topo::sched::Schedule;
+use zero_topo::sharding::Scheme;
+use zero_topo::sim::{
+    profile_step, profile_step_pipeline, simulate_step, simulate_step_pipeline,
+    simulate_step_telemetry, SimConfig,
+};
+use zero_topo::topology::{Cluster, MachineSpec};
+use zero_topo::util::json::Json;
+
+fn baseline_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_baseline.json")
+}
+
+/// Absolute slack for reconciliation sums (interval unions accumulate
+/// float error; the quantities compared are tens of seconds).
+const EPS: f64 = 1e-9;
+
+/// The reconciliation invariant between the utilization report and the
+/// stall-attribution ledger, checked on every rank and link class.
+fn reconcile(sched: &Schedule, ctx: &str) {
+    let busy = sched.class_busy();
+    let makespan = sched.makespan();
+    for (&class, &b) in &busy {
+        assert!(
+            b <= makespan + EPS,
+            "{ctx}: {class:?} busy {b}s exceeds makespan {makespan}s"
+        );
+    }
+    for rank in sched.ranks() {
+        for (class, stall) in sched.stall_by_class(rank) {
+            let b = busy.get(&class).copied().unwrap_or(0.0);
+            assert!(
+                stall <= b + EPS,
+                "{ctx}: rank {rank} stall {stall}s on {class:?} exceeds class busy {b}s"
+            );
+        }
+    }
+}
+
+#[test]
+fn baseline_reproduces_at_zero_drift_with_telemetry() {
+    let text = std::fs::read_to_string(baseline_path()).expect("BENCH_baseline.json committed");
+    let json = Json::parse(&text).expect("valid baseline JSON");
+    let nodes = json.get("nodes").and_then(|n| n.as_usize()).expect("nodes");
+    let model = TransformerSpec::by_name(
+        json.get("model").and_then(|m| m.as_str()).expect("model"),
+    )
+    .expect("known model");
+    let entries = json.get("entries").and_then(|e| e.as_arr()).expect("entries");
+    assert!(entries.len() >= 8, "expected frontier+dgx x 3 schemes + 2 pipeline points");
+
+    let cfg = SimConfig::default();
+    let tmp = std::env::temp_dir().join("zero_topo_telemetry_baseline_test.jsonl");
+    let mut writer = TelemetryWriter::create(&tmp).expect("temp telemetry file");
+
+    for (i, e) in entries.iter().enumerate() {
+        let mname = e.get("machine").and_then(|m| m.as_str()).expect("machine");
+        let sname = e.get("scheme").and_then(|s| s.as_str()).expect("scheme");
+        let pp = e.get("pp").and_then(|v| v.as_usize()).unwrap_or(1);
+        let mb = e.get("microbatches").and_then(|v| v.as_usize()).unwrap_or(0);
+        let base = e.get("step_s").and_then(|s| s.as_f64()).expect("step_s");
+        let scheme = Scheme::parse(sname).unwrap_or_else(|| panic!("unknown scheme {sname}"));
+        let spec = MachineSpec::resolve(mname).expect("known machine");
+        let cluster = Cluster::new(spec.clone(), nodes);
+        let ctx = format!("{mname}/{sname} pp{pp} mb{mb}");
+
+        // price through the telemetry-bearing path AND the plain path:
+        // both must land on the committed pin exactly — telemetry is
+        // span-derived after the fact and cannot move the event clock
+        let (step_s, sched, rec) = if pp > 1 {
+            let pipe = PipeConfig { stages: pp, microbatches: mb, interleave: 1 };
+            let plain = simulate_step_pipeline(&model, scheme, &cluster, &cfg, &pipe)
+                .expect("pipeline point prices")
+                .0
+                .step_s;
+            let (b, sched, _, prof) =
+                profile_step_pipeline(&model, scheme, &cluster, &cfg, &pipe)
+                    .expect("pipeline point profiles");
+            assert_eq!(b.step_s, plain, "{ctx}: profiling changed the pipeline clock");
+            assert_eq!(prof.tasks, sched.spans().len(), "{ctx}: profile task count");
+            let point = Throughput {
+                gcds: cluster.world_size(),
+                step_seconds: b.step_s,
+                flops_per_step: 1.0,
+                sequences_per_step: 1.0,
+            };
+            let rec = StepRecord::new(i, StepKind::Pipeline, sname, mname, nodes, &point)
+                .with_schedule(&sched, &spec)
+                .with_bubble(b.bubble_fraction);
+            (b.step_s, sched, rec)
+        } else {
+            let plain = simulate_step(&model, scheme, &cluster, &cfg).step_s;
+            let (b, sched, cost) =
+                simulate_step_telemetry(&model, scheme, &cluster, &cfg, None);
+            assert_eq!(b.step_s, plain, "{ctx}: telemetry changed the step clock");
+            let (pb, psched, prof) = profile_step(&model, scheme, &cluster, &cfg);
+            assert_eq!(pb.step_s, plain, "{ctx}: wall-clock profiling moved the clock");
+            assert_eq!(prof.tasks, psched.spans().len(), "{ctx}: profile task count");
+            let point = Throughput {
+                gcds: cluster.world_size(),
+                step_seconds: b.step_s,
+                flops_per_step: 1.0,
+                sequences_per_step: 1.0,
+            };
+            let rec = StepRecord::new(i, StepKind::Simulate, sname, mname, nodes, &point)
+                .with_comm(&cost)
+                .with_schedule(&sched, &spec);
+            (b.step_s, sched, rec)
+        };
+
+        // the hard pin: exactly the committed value, 0.0 drift
+        assert_eq!(
+            step_s, base,
+            "{ctx}: telemetry-path step_s {step_s} != pinned {base} (drift must be 0.0)"
+        );
+
+        // busy/stall reconciliation on the real schedule
+        reconcile(&sched, &ctx);
+
+        // the serialized record agrees with the schedule it came from
+        assert_eq!(rec.step_s, step_s);
+        let busy = sched.class_busy();
+        for row in &rec.utilization {
+            let class = *busy
+                .keys()
+                .find(|&&c| spec.class_label(c) == row.link)
+                .unwrap_or_else(|| panic!("{ctx}: unknown link label {}", row.link));
+            let b = busy[&class];
+            assert!((row.busy_s - b).abs() <= EPS, "{ctx}: busy mismatch on {}", row.link);
+            assert!(row.busy_s <= step_s + EPS, "{ctx}: {} busy exceeds step", row.link);
+        }
+        for (link, stall) in &rec.stalls {
+            let row = rec.utilization.iter().find(|u| &u.link == link);
+            if let Some(u) = row {
+                assert!(
+                    *stall <= u.busy_s + EPS,
+                    "{ctx}: serialized stall {stall}s on {link} exceeds busy {}s",
+                    u.busy_s
+                );
+            }
+        }
+        writer.write_record(&rec).expect("record writes");
+    }
+
+    // the JSONL stream round-trips: one self-describing object per line
+    writer.flush().expect("flush");
+    let text = std::fs::read_to_string(&tmp).expect("telemetry file readable");
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), entries.len());
+    for (i, line) in lines.iter().enumerate() {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("line {i} not JSON: {e}"));
+        assert_eq!(j.get("schema").and_then(|v| v.as_i64()), Some(SCHEMA_VERSION as i64));
+        assert_eq!(j.get("step").and_then(|v| v.as_usize()), Some(i));
+        for key in ["kind", "scheme", "machine", "nodes", "step_s", "stall_s", "utilization"] {
+            assert!(j.get(key).is_some(), "line {i} missing key {key}");
+        }
+        let pinned = entries[i].get("step_s").and_then(|v| v.as_f64()).unwrap();
+        assert_eq!(
+            j.get("step_s").and_then(|v| v.as_f64()),
+            Some(pinned),
+            "line {i}: step_s must round-trip the pinned value exactly"
+        );
+    }
+    std::fs::remove_file(&tmp).ok();
+}
+
+/// Reconciliation must also hold under asymmetric multi-rank scenarios,
+/// where stalls and skew interact — not just the collapsed fast path.
+#[test]
+fn reconciliation_holds_under_stragglers() {
+    let model = TransformerSpec::by_name("20b").expect("known model");
+    let cluster = Cluster::new(MachineSpec::resolve("frontier").expect("frontier"), 8);
+    let cfg = SimConfig::default();
+    let scenario = zero_topo::sched::scenario::Scenario {
+        stragglers: vec![(3, 1.5)],
+        ..Default::default()
+    };
+    for scheme in [
+        Scheme::Zero3,
+        Scheme::ZeroPP,
+        Scheme::ZeroTopo { sec_degree: 0 },
+    ] {
+        let (_, sched, _) =
+            simulate_step_telemetry(&model, scheme, &cluster, &cfg, Some(&scenario));
+        reconcile(&sched, &format!("straggler scenario, {}", scheme.name()));
+    }
+}
