@@ -21,18 +21,21 @@ use zero_topo::metrics::registry::Registry;
 use zero_topo::metrics::telemetry::{register_step, StepKind, StepRecord, TelemetryWriter};
 use zero_topo::metrics::Throughput;
 use zero_topo::model::TransformerSpec;
+use zero_topo::metrics::sensitivity::DEFAULT_EPSILON;
 use zero_topo::report::{
-    render_critical_path, render_pipeline_table, render_rank_table, render_scaling_figure,
-    render_stall_table, render_utilization_table, ScalingSeries,
+    category_label, render_critical_path, render_decomposition_table, render_pipeline_table,
+    render_rank_table, render_scaling_figure, render_shadow_price_table, render_stall_table,
+    render_utilization_table, ScalingSeries,
 };
 use zero_topo::runtime::Runtime;
+use zero_topo::sched::critical::{decompose, Decomposition};
 use zero_topo::sched::pipeline::PipeConfig;
 use zero_topo::sched::scenario::{RankCount, Scenario};
 use zero_topo::sched::{trace, Schedule};
 use zero_topo::sharding::{Scheme, ShardingSpec};
 use zero_topo::sim::{
     profile_step, profile_step_pipeline, scaling_series, scaling_series_pipeline,
-    scaling_series_scenario, simulate_step, simulate_step_pipeline,
+    scaling_series_scenario, shadow_prices, simulate_step, simulate_step_pipeline,
     simulate_step_pipeline_scenario, simulate_step_scenario, simulate_step_schedule,
     simulate_step_telemetry, SimConfig, SimProfile,
 };
@@ -85,6 +88,24 @@ JSON (see examples/machines/). Default: frontier.
             [--pp P] [--microbatches M] [--interleave V] [--artifacts DIR]
             [--csv FILE] [--telemetry out.jsonl] [--prom out.prom]
                                             real training via PJRT
+  explain   [--machine M] [--model 20b] [--nodes 48] [--schemes S,...]
+            [--pp P] [--microbatches M] [--interleave V] [--depth N|inf]
+            [--layer-granular] [--blocks B] [--eps 0.05] [--json]
+                                            bottleneck attribution (DESIGN.md
+                                            §14): conserved critical-path
+                                            decomposition + ranked link
+                                            shadow prices per scheme
+  explain   --baseline FILE [--tolerance t] [--json]
+                                            re-price every pinned BENCH entry;
+                                            gate ledger conservation (1e-12)
+                                            and step-time drift vs the pin
+  explain   --diff A B [--tolerance t] [--json]
+                                            attribute the step-time delta
+                                            between two telemetry JSONL
+                                            streams or two BENCH_*.json
+                                            snapshots to ledger categories
+                                            (gates drift when --tolerance
+                                            is given)
   report    [--machine M]                   print all analytical tables
 
 --depth bounds the prefetch stream: how many gather units may run ahead of
@@ -107,7 +128,7 @@ fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = match Args::parse(
         raw,
-        &["verbose", "json", "help", "stalls", "check", "write", "layer-granular"],
+        &["verbose", "json", "help", "stalls", "check", "write", "layer-granular", "diff"],
     ) {
         Ok(a) => a,
         Err(e) => {
@@ -129,6 +150,7 @@ fn main() {
         "pipeline" => cmd_pipeline(&args),
         "scenario" => cmd_scenario(&args),
         "calibrate" => cmd_calibrate(&args),
+        "explain" => cmd_explain(&args),
         "train" => cmd_train(&args),
         "report" => cmd_report(&args),
         other => {
@@ -1016,6 +1038,532 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
         eprintln!("warning: {msg}");
     } else {
         println!("all {} points within {:.1}% of baseline", entries.len(), tol * 100.0);
+    }
+    Ok(())
+}
+
+/// The decomposition ledger as the JSON shape shared by `explain --json`
+/// and the telemetry stream's `critical` object (plus the conservation
+/// defect and the binding category, which `explain` gates on).
+fn decomposition_json(d: &Decomposition, machine: &MachineSpec) -> Json {
+    let comm = d.comm_s().iter().map(|(&c, &s)| {
+        Json::obj(vec![
+            ("link", Json::str(machine.class_label(c))),
+            ("seconds", Json::num(s)),
+        ])
+    });
+    Json::obj(vec![
+        ("compute_s", Json::num(d.compute_s())),
+        ("idle_s", Json::num(d.idle_s())),
+        ("comm", Json::arr(comm)),
+        ("makespan_s", Json::num(d.makespan())),
+        ("conservation_error", Json::num(d.conservation_error())),
+        ("bound_by", Json::str(category_label(d.dominant(), machine))),
+    ])
+}
+
+/// One priced point for `explain`: step seconds + the executed schedule,
+/// through the exact entry points the figures use (pipeline when `pipe`
+/// is set).
+fn explain_point(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+    pipe: Option<&PipeConfig>,
+) -> anyhow::Result<(f64, Schedule)> {
+    Ok(match pipe {
+        None => {
+            let (b, sched) = simulate_step_schedule(model, scheme, cluster, cfg);
+            (b.step_s, sched)
+        }
+        Some(p) => {
+            let (b, sched, _) = simulate_step_pipeline(model, scheme, cluster, cfg, p)?;
+            (b.step_s, sched)
+        }
+    })
+}
+
+/// `explain` — the bottleneck-attribution engine (DESIGN.md §14).
+/// Default: decomposition + shadow prices per scheme; `--baseline FILE`
+/// re-prices the pinned BENCH entries and gates conservation + drift;
+/// `--diff A B` attributes the step-time delta between two runs.
+fn cmd_explain(args: &Args) -> anyhow::Result<()> {
+    if args.flag("diff") {
+        return cmd_explain_diff(args);
+    }
+    if let Some(path) = args.get("baseline") {
+        return cmd_explain_baseline(args, path);
+    }
+    let model = TransformerSpec::by_name(args.get_or("model", "20b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model (use 10b/20b/125m)"))?;
+    let machine = resolve_machine(args)?;
+    let nodes = args.parse_opt("nodes", 48usize)?;
+    let schemes = parse_schemes(args)?;
+    let mut cfg = SimConfig::default();
+    cfg.mfu = args.parse_opt("mfu", cfg.mfu)?;
+    cfg.prefetch_depth = args.parse_opt("depth", cfg.prefetch_depth)?;
+    let pp = parse_pp(args)?;
+    ensure_no_blocks_under_pipeline(args, pp)?;
+    cfg.layer_blocks = parse_layer_blocks(args, model.n_layers)?;
+    let microbatches = args.parse_opt("microbatches", 0usize)?;
+    let interleave = args.parse_opt("interleave", 1usize)?;
+    let pipe = (pp > 1).then(|| PipeConfig { stages: pp, microbatches, interleave });
+    let eps = args.parse_opt("eps", DEFAULT_EPSILON)?;
+    anyhow::ensure!(eps > 0.0, "--eps must be > 0");
+    let cluster = Cluster::new(machine.clone(), nodes);
+    let mut out = Vec::new();
+    for &scheme in &schemes {
+        let (step_s, sched) = explain_point(&model, scheme, &cluster, &cfg, pipe.as_ref())?;
+        let d = decompose(&sched);
+        let prices = shadow_prices(&model, scheme, &cluster, &cfg, pipe.as_ref(), eps)?;
+        if args.flag("json") {
+            let rows = prices.prices.iter().map(|p| {
+                Json::obj(vec![
+                    ("knob", Json::str(p.label.clone())),
+                    ("saving_s", Json::num(p.saving)),
+                    ("improved_s", Json::num(p.improved_s)),
+                    (
+                        "derivative",
+                        p.derivative.map(Json::num).unwrap_or(Json::Null),
+                    ),
+                ])
+            });
+            out.push(Json::obj(vec![
+                ("scheme", Json::str(scheme.name())),
+                ("step_s", Json::num(step_s)),
+                ("critical", decomposition_json(&d, &machine)),
+                ("shadow_prices", Json::arr(rows)),
+            ]));
+        } else {
+            let at = format!(
+                "{} — {} @ {} x{} nodes ({} workers)",
+                scheme.name(),
+                model.name,
+                machine.name,
+                nodes,
+                cluster.world_size()
+            );
+            println!(
+                "{}",
+                render_decomposition_table(
+                    &format!("{at} — critical-path decomposition"),
+                    &d,
+                    &machine
+                )
+            );
+            println!(
+                "{}",
+                render_shadow_price_table(
+                    &format!("{} — link shadow prices", scheme.name()),
+                    &prices
+                )
+            );
+        }
+    }
+    if args.flag("json") {
+        let j = Json::obj(vec![
+            ("model", Json::str(model.name)),
+            ("machine", Json::str(machine.name.clone())),
+            ("nodes", Json::from(nodes)),
+            ("epsilon", Json::num(eps)),
+            ("schemes", Json::arr(out)),
+        ]);
+        println!("{j}");
+    }
+    Ok(())
+}
+
+/// `explain --baseline FILE`: re-simulate the same probe set `calibrate`
+/// pins (machines x schemes, plus the P=4 pipeline probes), decompose
+/// each step, and gate (a) ledger conservation at 1e-12 absolute on every
+/// entry and (b) step-time drift against the pinned value.
+fn cmd_explain_baseline(args: &Args, path: &str) -> anyhow::Result<()> {
+    let model = TransformerSpec::by_name(args.get_or("model", "20b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model (use 10b/20b/125m)"))?;
+    let nodes = args.parse_opt("nodes", 48usize)?;
+    let machines: Vec<String> = args
+        .get_or("machines", "frontier,dgx")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let schemes = parse_schemes(args)?;
+    let cfg = SimConfig::default();
+    const CONSERVATION_BUDGET: f64 = 1e-12;
+
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read baseline {path}: {e}"))?;
+    let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad baseline {path}: {e}"))?;
+    type PinKey = (String, String, usize, usize);
+    let mut pins: std::collections::BTreeMap<PinKey, f64> = std::collections::BTreeMap::new();
+    for e in json
+        .get("entries")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("baseline {path} has no entries array"))?
+    {
+        let m = e.get("machine").and_then(|v| v.as_str()).unwrap_or_default().to_string();
+        let s = e.get("scheme").and_then(|v| v.as_str()).unwrap_or_default().to_string();
+        let pp = e.get("pp").and_then(|v| v.as_usize()).unwrap_or(1);
+        let mb = e.get("microbatches").and_then(|v| v.as_usize()).unwrap_or(0);
+        let t = e
+            .get("step_s")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("baseline entry without step_s"))?;
+        pins.insert((m, s, pp, mb), t);
+    }
+    let tol = if args.get("tolerance").is_some() {
+        args.parse_opt("tolerance", 0.01f64)?
+    } else {
+        json.get("tolerance").and_then(|v| v.as_f64()).unwrap_or(0.01)
+    };
+
+    // the exact probe set calibrate pins: (machine x scheme) DP points,
+    // then the P=4 ZeRO-topo pipeline probes on the first machine
+    let mut probes: Vec<(String, MachineSpec, Scheme, usize, usize)> = Vec::new();
+    for mname in &machines {
+        let spec = MachineSpec::resolve(mname)?;
+        for &scheme in &schemes {
+            probes.push((mname.clone(), spec.clone(), scheme, 1, 0));
+        }
+    }
+    const PIPELINE_PROBES: [(usize, usize); 2] = [(4, 8), (4, 32)];
+    if let Some(mname) = machines.first() {
+        let spec = MachineSpec::resolve(mname)?;
+        for (pp, mb) in PIPELINE_PROBES {
+            if nodes % pp == 0 {
+                probes.push((
+                    mname.clone(),
+                    spec.clone(),
+                    Scheme::ZeroTopo { sec_degree: 0 },
+                    pp,
+                    mb,
+                ));
+            }
+        }
+    }
+
+    let mut t = Table::new(&[
+        "machine",
+        "scheme",
+        "step (s)",
+        "pinned (s)",
+        "drift",
+        "conserve err",
+        "bound by",
+    ])
+    .title(format!(
+        "Bottleneck attribution vs {path} — {} @ {nodes} nodes (tolerance {:.1}%)",
+        model.name,
+        tol * 100.0
+    ))
+    .left_first();
+    let mut failures = Vec::new();
+    let mut out = Vec::new();
+    let mut matched: std::collections::BTreeSet<PinKey> = std::collections::BTreeSet::new();
+    for (mname, spec, scheme, pp, mb) in &probes {
+        let cluster = Cluster::new(spec.clone(), nodes);
+        let pipe = (*pp > 1)
+            .then(|| PipeConfig { stages: *pp, microbatches: *mb, interleave: 1 });
+        let (step_s, sched) = explain_point(&model, *scheme, &cluster, &cfg, pipe.as_ref())?;
+        let d = decompose(&sched);
+        let label = if *pp > 1 {
+            format!("{} [pp{pp} mb{mb}]", scheme.name())
+        } else {
+            scheme.name()
+        };
+        if d.conservation_error() > CONSERVATION_BUDGET {
+            failures.push(format!(
+                "{mname}/{label}: ledger conservation error {:.3e} > {CONSERVATION_BUDGET:.0e}",
+                d.conservation_error()
+            ));
+        }
+        let key = (mname.clone(), scheme.name(), *pp, *mb);
+        let pin = pins.get(&key).copied();
+        match pin {
+            Some(base) => {
+                matched.insert(key);
+                let drift = (step_s - base) / base;
+                if drift.abs() > tol {
+                    failures.push(format!(
+                        "{mname}/{label}: {base:.6}s -> {step_s:.6}s ({:+.2}%)",
+                        drift * 100.0
+                    ));
+                }
+                t.row(vec![
+                    mname.clone(),
+                    label.clone(),
+                    format!("{step_s:.6}"),
+                    format!("{base:.6}"),
+                    format!("{:+.3}%", drift * 100.0),
+                    format!("{:.1e}", d.conservation_error()),
+                    category_label(d.dominant(), spec),
+                ]);
+            }
+            None => {
+                failures.push(format!("{mname}/{label}: not pinned in {path}"));
+                t.row(vec![
+                    mname.clone(),
+                    label.clone(),
+                    format!("{step_s:.6}"),
+                    "—".into(),
+                    "—".into(),
+                    format!("{:.1e}", d.conservation_error()),
+                    category_label(d.dominant(), spec),
+                ]);
+            }
+        }
+        let mut fields = vec![
+            ("machine", Json::str(mname.clone())),
+            ("scheme", Json::str(scheme.name())),
+        ];
+        if *pp > 1 {
+            fields.push(("pp", Json::from(*pp)));
+            fields.push(("microbatches", Json::from(*mb)));
+        }
+        fields.push(("step_s", Json::num(step_s)));
+        if let Some(base) = pin {
+            fields.push(("pinned_s", Json::num(base)));
+            fields.push(("drift", Json::num((step_s - base) / base)));
+        }
+        fields.push(("critical", decomposition_json(&d, spec)));
+        out.push(Json::obj(fields));
+    }
+    for (key, _) in pins.iter().filter(|&(k, _)| !matched.contains(k)) {
+        failures.push(format!(
+            "pinned entry {}/{} [pp{} mb{}] not covered by the probe set",
+            key.0, key.1, key.2, key.3
+        ));
+    }
+    if args.flag("json") {
+        let j = Json::obj(vec![
+            ("baseline", Json::str(path)),
+            ("model", Json::str(model.name)),
+            ("nodes", Json::from(nodes)),
+            ("tolerance", Json::num(tol)),
+            ("conservation_budget", Json::num(CONSERVATION_BUDGET)),
+            ("entries", Json::arr(out)),
+            ("ok", Json::Bool(failures.is_empty())),
+        ]);
+        println!("{j}");
+    } else {
+        println!("{}", t.render());
+    }
+    if !failures.is_empty() {
+        anyhow::bail!(
+            "bottleneck attribution gate failed:\n  {}",
+            failures.join("\n  ")
+        );
+    }
+    if !args.flag("json") {
+        println!(
+            "all {} entries conserved (<= {CONSERVATION_BUDGET:.0e}) and within {:.1}% of the pin",
+            probes.len(),
+            tol * 100.0
+        );
+    }
+    Ok(())
+}
+
+/// One side of an `explain --diff`: mean step seconds and the mean
+/// attribution ledger per comparable group.
+#[derive(Debug, Clone, Default)]
+struct DiffPoint {
+    step_s: f64,
+    n: usize,
+    ledger: std::collections::BTreeMap<String, f64>,
+}
+
+/// Load one `--diff` operand: a `BENCH_*.json` snapshot (whole-file JSON
+/// with an `entries` array; one point per pinned entry, no ledger) or a
+/// telemetry JSONL stream (one record per line; records grouped by
+/// (machine, scheme, kind, nodes) and averaged, ledgers included).
+fn load_diff_side(path: &str) -> anyhow::Result<std::collections::BTreeMap<String, DiffPoint>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+    let mut out: std::collections::BTreeMap<String, DiffPoint> = std::collections::BTreeMap::new();
+    // a whole-file parse with an `entries` array is a BENCH snapshot;
+    // anything else (including a one-line stream) is telemetry JSONL
+    let parsed = Json::parse(&text).ok();
+    if let Some(entries) =
+        parsed.as_ref().and_then(|j| j.get("entries")).and_then(|e| e.as_arr())
+    {
+        for e in entries {
+            let m = e.get("machine").and_then(|v| v.as_str()).unwrap_or("?");
+            let s = e.get("scheme").and_then(|v| v.as_str()).unwrap_or("?");
+            let pp = e.get("pp").and_then(|v| v.as_usize()).unwrap_or(1);
+            let mb = e.get("microbatches").and_then(|v| v.as_usize()).unwrap_or(0);
+            let step_s = e
+                .get("step_s")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("{path}: entry without step_s"))?;
+            let key = if pp > 1 {
+                format!("{m}/{s} [pp{pp} mb{mb}]")
+            } else {
+                format!("{m}/{s}")
+            };
+            out.insert(key, DiffPoint { step_s, n: 1, ledger: Default::default() });
+        }
+        return Ok(out);
+    }
+    // telemetry JSONL: one record per line
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("{path}:{}: not a JSON record: {e}", i + 1))?;
+        let m = j.get("machine").and_then(|v| v.as_str()).unwrap_or("?");
+        let s = j.get("scheme").and_then(|v| v.as_str()).unwrap_or("?");
+        let kind = j.get("kind").and_then(|v| v.as_str()).unwrap_or("?");
+        let nodes = j.get("nodes").and_then(|v| v.as_usize()).unwrap_or(0);
+        let step_s = j
+            .get("step_s")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("{path}:{}: record without step_s", i + 1))?;
+        let p = out.entry(format!("{m}/{s} [{kind} n{nodes}]")).or_default();
+        p.n += 1;
+        p.step_s += step_s;
+        if let Some(c) = j.get("critical") {
+            let mut add = |cat: String, v: f64| *p.ledger.entry(cat).or_default() += v;
+            add("compute".into(), c.get("compute_s").and_then(|v| v.as_f64()).unwrap_or(0.0));
+            add("idle".into(), c.get("idle_s").and_then(|v| v.as_f64()).unwrap_or(0.0));
+            for row in c.get("comm").and_then(|a| a.as_arr()).unwrap_or(&[]) {
+                let link = row.get("link").and_then(|v| v.as_str()).unwrap_or("?");
+                let secs = row.get("seconds").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                add(format!("comm {link}"), secs);
+            }
+        }
+    }
+    anyhow::ensure!(!out.is_empty(), "{path}: no telemetry records");
+    for p in out.values_mut() {
+        let n = p.n as f64;
+        p.step_s /= n;
+        for v in p.ledger.values_mut() {
+            *v /= n;
+        }
+    }
+    Ok(out)
+}
+
+/// `explain --diff A B`: the regression explainer. A is the candidate
+/// (new) run, B the reference; the step-time delta of every shared group
+/// is attributed to the ledger category that moved the most. With
+/// `--tolerance` the diff gates: any shared group drifting beyond it, or
+/// any group missing from one side, fails the command.
+fn cmd_explain_diff(args: &Args) -> anyhow::Result<()> {
+    let (a_path, b_path) = match (args.pos(0), args.pos(1)) {
+        (Some(a), Some(b)) => (a.to_string(), b.to_string()),
+        _ => anyhow::bail!("--diff needs two files: explain --diff A.jsonl B.jsonl"),
+    };
+    let a = load_diff_side(&a_path)?;
+    let b = load_diff_side(&b_path)?;
+    let gate = args.get("tolerance").is_some();
+    let tol = args.parse_opt("tolerance", 0.01f64)?;
+    let keys: std::collections::BTreeSet<&String> = a.keys().chain(b.keys()).collect();
+    let mut t = Table::new(&[
+        "group",
+        "A step (s)",
+        "B step (s)",
+        "delta (s)",
+        "drift",
+        "biggest mover",
+    ])
+    .title(format!("step-time diff — A={a_path} vs B={b_path}"))
+    .left_first();
+    let mut rows = Vec::new();
+    let mut failures = Vec::new();
+    let mut max_drift = 0.0f64;
+    for key in keys {
+        match (a.get(key), b.get(key)) {
+            (Some(pa), Some(pb)) => {
+                let delta = pa.step_s - pb.step_s;
+                let drift = if pb.step_s != 0.0 { delta / pb.step_s } else { 0.0 };
+                max_drift = max_drift.max(drift.abs());
+                // the ledger category whose seconds moved the most
+                // explains the delta; bench snapshots carry no ledger
+                let cats: std::collections::BTreeSet<&String> =
+                    pa.ledger.keys().chain(pb.ledger.keys()).collect();
+                let mover = cats
+                    .into_iter()
+                    .map(|c| {
+                        let d = pa.ledger.get(c).copied().unwrap_or(0.0)
+                            - pb.ledger.get(c).copied().unwrap_or(0.0);
+                        (c.clone(), d)
+                    })
+                    .max_by(|x, y| x.1.abs().partial_cmp(&y.1.abs()).expect("finite ledger"));
+                let mover_cell = mover
+                    .as_ref()
+                    .map(|(c, d)| format!("{c} ({d:+.3}s)"))
+                    .unwrap_or_else(|| "- (no ledger)".into());
+                t.row(vec![
+                    key.clone(),
+                    fnum(pa.step_s, 3),
+                    fnum(pb.step_s, 3),
+                    format!("{delta:+.3}"),
+                    format!("{:+.2}%", drift * 100.0),
+                    mover_cell,
+                ]);
+                if gate && drift.abs() > tol {
+                    failures.push(format!(
+                        "{key}: {:.6}s -> {:.6}s ({:+.2}%)",
+                        pb.step_s,
+                        pa.step_s,
+                        drift * 100.0
+                    ));
+                }
+                let mut fields = vec![
+                    ("group", Json::str(key.clone())),
+                    ("a_step_s", Json::num(pa.step_s)),
+                    ("b_step_s", Json::num(pb.step_s)),
+                    ("delta_s", Json::num(delta)),
+                    ("drift", Json::num(drift)),
+                ];
+                if let Some((c, d)) = mover {
+                    fields.push(("mover", Json::str(c)));
+                    fields.push(("mover_delta_s", Json::num(d)));
+                }
+                rows.push(Json::obj(fields));
+            }
+            (pa, pb) => {
+                let side = if pa.is_none() { &a_path } else { &b_path };
+                t.row(vec![
+                    key.clone(),
+                    pa.map(|p| fnum(p.step_s, 3)).unwrap_or_else(|| "—".into()),
+                    pb.map(|p| fnum(p.step_s, 3)).unwrap_or_else(|| "—".into()),
+                    "—".into(),
+                    "—".into(),
+                    format!("missing from {side}"),
+                ]);
+                if gate {
+                    failures.push(format!("{key}: missing from {side}"));
+                }
+                rows.push(Json::obj(vec![
+                    ("group", Json::str(key.clone())),
+                    ("missing_from", Json::str(side.clone())),
+                ]));
+            }
+        }
+    }
+    if args.flag("json") {
+        let j = Json::obj(vec![
+            ("a", Json::str(a_path)),
+            ("b", Json::str(b_path)),
+            ("max_drift", Json::num(max_drift)),
+            ("tolerance", if gate { Json::num(tol) } else { Json::Null }),
+            ("rows", Json::arr(rows)),
+            ("ok", Json::Bool(failures.is_empty())),
+        ]);
+        println!("{j}");
+    } else {
+        println!("{}", t.render());
+        println!("max |drift| {:.3}%", max_drift * 100.0);
+    }
+    if !failures.is_empty() {
+        anyhow::bail!(
+            "step-time drift beyond {:.1}%:\n  {}",
+            tol * 100.0,
+            failures.join("\n  ")
+        );
     }
     Ok(())
 }

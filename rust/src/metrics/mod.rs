@@ -2,9 +2,11 @@
 //! samples/sec, scaling efficiency) computed from simulated step times and
 //! the comm ledger, plus the telemetry subsystem (DESIGN.md §13) — a
 //! labeled metrics [`registry`] and the per-step JSONL [`telemetry`]
-//! stream behind `--telemetry`.
+//! stream behind `--telemetry` — and the bottleneck-attribution
+//! [`sensitivity`] sweep (link shadow prices, DESIGN.md §14).
 
 pub mod registry;
+pub mod sensitivity;
 pub mod telemetry;
 
 /// Throughput metrics for one configuration point (one bar of Fig 7/8).

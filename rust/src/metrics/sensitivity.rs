@@ -1,0 +1,251 @@
+//! Link shadow prices: ∂step-time/∂knob by re-pricing a plan under a
+//! perturbed [`MachineSpec`] (DESIGN.md §14).
+//!
+//! A knob's **shadow price** is the step-time saving from a one-notch
+//! improvement — bandwidth or peak compute doubled, latency halved,
+//! prefetch depth +1, layer blocks ×2, the next secondary degree — and,
+//! for the continuous machine knobs, the ε-probe derivative
+//! `(step(1) - step(1+ε)) / ε`. Ranked descending by saving, the table
+//! answers the planner's question directly: *which resource is binding,
+//! and what is a unit of it worth?* ("doubling inter-node BW saves
+//! 15.4 s for ZeRO-3 and 0.49 s for ZeRO-topo" is the paper's Fig-7
+//! story as a first-class artifact — see EXPERIMENTS.md §Bottleneck
+//! attribution.)
+//!
+//! This module owns the machine-knob enumeration and the sweep loop; the
+//! simulator evaluator lives in [`crate::sim::shadow_prices`], which also
+//! appends the discrete schedule knobs it owns (depth/blocks/sec_degree).
+
+use crate::topology::{LinkClass, MachineSpec};
+
+/// Default relative step for the derivative probe.
+pub const DEFAULT_EPSILON: f64 = 0.05;
+
+/// One tunable the sweep perturbs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Knob {
+    /// Peak FLOP/s per worker (the compute side of the ledger — without
+    /// it a compute-bound step would misattribute its binding resource
+    /// to whichever link saves a few milliseconds).
+    ComputeRate,
+    /// Bandwidth of one link class (±ε per level, one-notch ×2).
+    LinkBandwidth(LinkClass),
+    /// Latency (α) of one link class (one-notch ÷2).
+    LinkLatency(LinkClass),
+    /// Prefetch depth +1 (bounded depths only; discrete, evaluator-owned).
+    PrefetchDepth,
+    /// Layer-granular gather blocks ×2 (discrete, evaluator-owned).
+    LayerBlocks,
+    /// ZeRO-topo secondary degree bumped to the next level span
+    /// (discrete, evaluator-owned).
+    SecDegree,
+}
+
+impl Knob {
+    /// Human-readable row label, resolving link classes against
+    /// `machine`'s level names.
+    pub fn label(&self, machine: &MachineSpec) -> String {
+        match self {
+            Knob::ComputeRate => "peak compute (FLOP/s)".into(),
+            Knob::LinkBandwidth(c) => format!("BW {}", machine.class_label(*c)),
+            Knob::LinkLatency(c) => format!("lat {}", machine.class_label(*c)),
+            Knob::PrefetchDepth => "prefetch depth (+1)".into(),
+            Knob::LayerBlocks => "layer blocks (x2)".into(),
+            Knob::SecDegree => "secondary degree (next span)".into(),
+        }
+    }
+
+    /// The machine knobs for `machine` in report order: compute rate
+    /// first, then bandwidths fastest link first, then latencies. The
+    /// discrete schedule knobs are appended by the evaluator that owns
+    /// their configuration ([`crate::sim::shadow_prices`]).
+    pub fn machine_knobs(machine: &MachineSpec) -> Vec<Knob> {
+        let mut knobs = vec![Knob::ComputeRate];
+        knobs.extend(machine.classes().into_iter().map(Knob::LinkBandwidth));
+        knobs.extend(machine.classes().into_iter().map(Knob::LinkLatency));
+        knobs
+    }
+
+    /// `machine` with this knob improved by `factor >= 1`: bandwidth and
+    /// compute scale up by `factor`, latency scales down by `factor`.
+    /// `None` when the knob is not a machine knob, targets a `Local`
+    /// link, or the perturbed spec fails validation (an inner level
+    /// overtaken by a boosted outer one must be skipped, not priced).
+    pub fn improve(&self, machine: &MachineSpec, factor: f64) -> Option<MachineSpec> {
+        debug_assert!(factor >= 1.0, "improve() wants a factor >= 1");
+        let mut m = machine.clone();
+        match *self {
+            Knob::ComputeRate => m.peak_flops_per_worker *= factor,
+            Knob::LinkBandwidth(LinkClass::Intra(k)) => {
+                m.levels.get_mut(k as usize)?.link.bandwidth *= factor;
+            }
+            Knob::LinkBandwidth(LinkClass::InterNode) => m.inter_node.bandwidth *= factor,
+            Knob::LinkLatency(LinkClass::Intra(k)) => {
+                m.levels.get_mut(k as usize)?.link.latency /= factor;
+            }
+            Knob::LinkLatency(LinkClass::InterNode) => m.inter_node.latency /= factor,
+            Knob::LinkBandwidth(LinkClass::Local)
+            | Knob::LinkLatency(LinkClass::Local)
+            | Knob::PrefetchDepth
+            | Knob::LayerBlocks
+            | Knob::SecDegree => return None,
+        }
+        m.validate().ok()?;
+        Some(m)
+    }
+}
+
+/// One ranked row of the shadow-price table.
+#[derive(Debug, Clone)]
+pub struct ShadowPrice {
+    /// Which knob was improved.
+    pub knob: Knob,
+    /// Its display label (resolved against the base machine).
+    pub label: String,
+    /// Step seconds under the one-notch improvement.
+    pub improved_s: f64,
+    /// `base_s - improved_s` — the ranking key. Non-negative for pure
+    /// bandwidth/compute increases; discrete knobs may price negative
+    /// (the current setting is already optimal).
+    pub saving: f64,
+    /// ε-probe derivative `(base - step(1+ε)) / ε` for continuous
+    /// machine knobs; `None` for the discrete ones.
+    pub derivative: Option<f64>,
+}
+
+/// The ranked shadow-price table for one (plan, machine) pair.
+#[derive(Debug, Clone)]
+pub struct SensitivityReport {
+    /// Unperturbed step seconds.
+    pub base_s: f64,
+    /// Relative ε used for the derivative probes.
+    pub epsilon: f64,
+    /// Rows sorted by descending saving (stable: exact ties keep the
+    /// [`Knob::machine_knobs`] enumeration order).
+    pub prices: Vec<ShadowPrice>,
+}
+
+impl SensitivityReport {
+    /// The highest-priced knob, if any knob was evaluable.
+    pub fn top(&self) -> Option<&ShadowPrice> {
+        self.prices.first()
+    }
+
+    /// Zero-based rank of the first row matching `pred`.
+    pub fn rank_of(&self, pred: impl Fn(&Knob) -> bool) -> Option<usize> {
+        self.prices.iter().position(|p| pred(&p.knob))
+    }
+
+    /// Insert an evaluator-owned row and restore the ranking order.
+    pub fn add(&mut self, price: ShadowPrice) {
+        self.prices.push(price);
+        sort_prices(&mut self.prices);
+    }
+}
+
+fn sort_prices(prices: &mut [ShadowPrice]) {
+    // stable sort: exact ties (typically 0.0 savings) keep knob order
+    prices.sort_by(|a, b| b.saving.partial_cmp(&a.saving).unwrap_or(std::cmp::Ordering::Equal));
+}
+
+/// Sweep every machine knob: re-evaluate `eval` under the one-notch
+/// (factor 2) improvement and the ε derivative probe. `eval` returns the
+/// re-simulated step seconds for a perturbed machine, or `None` to drop
+/// the knob (infeasible point). Rows come back ranked by saving.
+pub fn sweep(
+    machine: &MachineSpec,
+    base_s: f64,
+    epsilon: f64,
+    mut eval: impl FnMut(&MachineSpec) -> Option<f64>,
+) -> SensitivityReport {
+    assert!(epsilon > 0.0 && epsilon.is_finite(), "epsilon must be a positive relative step");
+    let mut prices = Vec::new();
+    for knob in Knob::machine_knobs(machine) {
+        let Some(doubled) = knob.improve(machine, 2.0) else { continue };
+        let Some(improved_s) = eval(&doubled) else { continue };
+        let derivative = knob
+            .improve(machine, 1.0 + epsilon)
+            .and_then(|m| eval(&m))
+            .map(|t| (base_s - t) / epsilon);
+        prices.push(ShadowPrice {
+            knob,
+            label: knob.label(machine),
+            improved_s,
+            saving: base_s - improved_s,
+            derivative,
+        });
+    }
+    sort_prices(&mut prices);
+    SensitivityReport { base_s, epsilon, prices }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn machine_knobs_enumerate_compute_then_bw_then_lat() {
+        let m = MachineSpec::frontier_mi250x();
+        let knobs = Knob::machine_knobs(&m);
+        assert_eq!(knobs[0], Knob::ComputeRate);
+        assert_eq!(knobs[1], Knob::LinkBandwidth(LinkClass::Intra(0)));
+        assert_eq!(knobs[4], Knob::LinkBandwidth(LinkClass::InterNode));
+        assert_eq!(*knobs.last().unwrap(), Knob::LinkLatency(LinkClass::InterNode));
+        assert_eq!(knobs.len(), 1 + 2 * 4);
+    }
+
+    #[test]
+    fn improve_scales_the_right_field() {
+        let m = MachineSpec::frontier_mi250x();
+        let b = Knob::LinkBandwidth(LinkClass::InterNode).improve(&m, 2.0).unwrap();
+        assert_eq!(b.inter_node.bandwidth, 2.0 * m.inter_node.bandwidth);
+        assert_eq!(b.levels, m.levels);
+        let l = Knob::LinkLatency(LinkClass::Intra(0)).improve(&m, 2.0).unwrap();
+        assert_eq!(l.levels[0].link.latency, m.levels[0].link.latency / 2.0);
+        let c = Knob::ComputeRate.improve(&m, 2.0).unwrap();
+        assert_eq!(c.peak_flops_per_worker, 2.0 * m.peak_flops_per_worker);
+        assert!(Knob::PrefetchDepth.improve(&m, 2.0).is_none());
+        assert!(Knob::LinkBandwidth(LinkClass::Local).improve(&m, 2.0).is_none());
+    }
+
+    #[test]
+    fn improve_rejects_invalid_perturbations() {
+        // boosting an outer level 8x overtakes the inner levels: the
+        // perturbed spec fails validation and the knob must drop out
+        let m = MachineSpec::frontier_mi250x();
+        assert!(Knob::LinkBandwidth(LinkClass::Intra(2)).improve(&m, 8.0).is_none());
+        assert!(Knob::LinkBandwidth(LinkClass::Intra(2)).improve(&m, 2.0).is_some());
+    }
+
+    #[test]
+    fn sweep_ranks_by_saving_with_stable_ties() {
+        let m = MachineSpec::frontier_mi250x();
+        // synthetic evaluator: only inter-node bandwidth matters
+        let report = sweep(&m, 10.0, DEFAULT_EPSILON, |spec| {
+            let inter = spec.inter_node.bandwidth / MachineSpec::frontier_mi250x().inter_node.bandwidth;
+            Some(10.0 - 2.0 * (inter - 1.0))
+        });
+        assert_eq!(report.base_s, 10.0);
+        assert_eq!(report.top().unwrap().knob, Knob::LinkBandwidth(LinkClass::InterNode));
+        assert!((report.top().unwrap().saving - 2.0).abs() < 1e-12);
+        let d = report.top().unwrap().derivative.unwrap();
+        assert!((d - 2.0).abs() < 1e-9, "linear model derivative, got {d}");
+        // every other knob saves exactly 0.0 and keeps enumeration order
+        assert_eq!(report.prices[1].knob, Knob::ComputeRate);
+        assert!(report.prices.iter().skip(1).all(|p| p.saving == 0.0));
+    }
+
+    #[test]
+    fn add_restores_ranking() {
+        let m = MachineSpec::frontier_mi250x();
+        let mut report = sweep(&m, 5.0, DEFAULT_EPSILON, |_| Some(5.0));
+        report.add(ShadowPrice {
+            knob: Knob::SecDegree,
+            label: Knob::SecDegree.label(&m),
+            improved_s: 4.0,
+            saving: 1.0,
+            derivative: None,
+        });
+        assert_eq!(report.top().unwrap().knob, Knob::SecDegree);
+    }
+}

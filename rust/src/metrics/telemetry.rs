@@ -87,6 +87,31 @@ pub struct UtilRow {
     pub peak_in_flight: usize,
 }
 
+/// The critical-path attribution ledger of one step
+/// ([`crate::sched::critical::decompose`], DESIGN.md §14): conserved
+/// compute / per-link comm / idle seconds summing to the makespan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CriticalLedger {
+    /// Compute seconds on the critical path.
+    pub compute_s: f64,
+    /// Idle-gap seconds on the critical path (structurally 0.0 for
+    /// simulator-produced schedules).
+    pub idle_s: f64,
+    /// Per-link comm seconds on the path, fastest class first, labeled
+    /// by `MachineSpec::class_label`.
+    pub comm_s: Vec<(String, f64)>,
+    /// The makespan the ledger partitions (== the record's `step_s` for
+    /// single-step records).
+    pub makespan_s: f64,
+}
+
+impl CriticalLedger {
+    /// Sum of every ledger category; equals `makespan_s` to 1e-12.
+    pub fn total(&self) -> f64 {
+        self.compute_s + self.idle_s + self.comm_s.iter().map(|(_, v)| v).sum::<f64>()
+    }
+}
+
 /// One telemetry record: everything the paper's observability story needs
 /// about a single optimizer step, in simulated units.
 #[derive(Debug, Clone, PartialEq)]
@@ -119,6 +144,8 @@ pub struct StepRecord {
     pub stalls: BTreeMap<String, f64>,
     /// Link busy-time rows, fastest class first.
     pub utilization: Vec<UtilRow>,
+    /// Critical-path attribution ledger (set by `with_schedule`).
+    pub critical: Option<CriticalLedger>,
     /// Per-stream busy accounting for the modeled rank.
     pub streams: Option<StepUtilization>,
     /// Simulated pipeline bubble fraction (pipeline records only).
@@ -153,6 +180,7 @@ impl StepRecord {
             memory: None,
             stalls: BTreeMap::new(),
             utilization: Vec::new(),
+            critical: None,
             streams: None,
             bubble_fraction: None,
             loss: None,
@@ -222,6 +250,22 @@ impl StepRecord {
             });
         }
         self.utilization = rows;
+        let decomp = crate::sched::critical::decompose(sched);
+        let mut comm_s: Vec<(String, f64)> = Vec::new();
+        for (class, s) in decomp.comm_s() {
+            let label = machine.class_label(*class);
+            // distinct classes can share a label on exotic specs; merge them
+            match comm_s.iter_mut().find(|(l, _)| *l == label) {
+                Some((_, acc)) => *acc += s,
+                None => comm_s.push((label, *s)),
+            }
+        }
+        self.critical = Some(CriticalLedger {
+            compute_s: decomp.compute_s(),
+            idle_s: decomp.idle_s(),
+            comm_s,
+            makespan_s: decomp.makespan(),
+        });
         self.streams = Some(sched.utilization(rank));
         self
     }
@@ -289,6 +333,21 @@ impl StepRecord {
             ])
         });
         fields.push(("utilization", Json::arr(util)));
+        if let Some(c) = &self.critical {
+            let comm =
+                c.comm_s.iter().map(|(link, s)| {
+                    Json::obj(vec![("link", Json::str(link.clone())), ("seconds", Json::num(*s))])
+                });
+            fields.push((
+                "critical",
+                Json::obj(vec![
+                    ("compute_s", Json::num(c.compute_s)),
+                    ("idle_s", Json::num(c.idle_s)),
+                    ("comm", Json::arr(comm)),
+                    ("makespan_s", Json::num(c.makespan_s)),
+                ]),
+            ));
+        }
         if let Some(u) = self.streams {
             fields.push((
                 "streams",
@@ -425,6 +484,16 @@ mod tests {
             .and_then(|v| v.as_f64())
             .unwrap();
         assert!((frac - 2.0 / 3.0).abs() < 1e-12);
+        // the critical ledger reconciles with the step time (2s gather + 1s fwd)
+        let ledger = rec.critical.as_ref().expect("with_schedule sets critical");
+        assert_eq!(ledger.compute_s, 1.0);
+        assert_eq!(ledger.idle_s, 0.0);
+        assert_eq!(ledger.comm_s, vec![(label.clone(), 2.0)]);
+        assert!((ledger.total() - ledger.makespan_s).abs() <= 1e-12);
+        assert_eq!(ledger.makespan_s, rec.step_s);
+        let jc = j.get("critical").expect("critical serialized");
+        assert_eq!(jc.get("compute_s").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(jc.get("makespan_s").and_then(|v| v.as_f64()), Some(3.0));
         // round-trips through the parser
         let back = Json::parse(&j.to_string()).expect("valid JSON");
         assert_eq!(back, j);

@@ -3,7 +3,9 @@
 
 use std::collections::BTreeMap;
 
+use crate::metrics::sensitivity::SensitivityReport;
 use crate::metrics::{StepUtilization, Throughput};
+use crate::sched::critical::{Category, Decomposition};
 use crate::sched::pipeline::PipelinePlan;
 use crate::sched::Schedule;
 use crate::sharding::Scheme;
@@ -222,6 +224,9 @@ pub fn render_utilization_table(
     machine: &MachineSpec,
     rank: usize,
 ) -> String {
+    if sched.graph().is_empty() {
+        return format!("{title}\n(empty schedule: no tasks)\n");
+    }
     let usage = sched.link_usage();
     let busy = sched.class_busy();
     let stalls = sched.stall_by_class(rank);
@@ -262,6 +267,83 @@ pub fn render_utilization_table(
     let mut out = t.render();
     out.push_str(&format!(
         "step {makespan:.3}s; busy = union of concurrent transfers per level\n"
+    ));
+    out
+}
+
+/// Human label of a ledger category, with comm rows resolved against the
+/// machine's level names (so decomposition, stall, and utilization tables
+/// name links identically).
+pub fn category_label(cat: Category, machine: &MachineSpec) -> String {
+    match cat {
+        Category::Compute => "compute".to_string(),
+        Category::Comm(c) => format!("comm {}", machine.class_label(c)),
+        Category::Idle => "idle".to_string(),
+    }
+}
+
+/// Render the conserved critical-path decomposition of a step
+/// (`sched::critical::decompose`, DESIGN.md §14): one row per ledger
+/// category — compute, per-link comm (fastest class first), idle — with
+/// its share of the makespan, plus the conservation defect and the
+/// binding category. Comm rows carry the machine's level labels so they
+/// line up with the stall and utilization tables.
+pub fn render_decomposition_table(
+    title: &str,
+    decomp: &Decomposition,
+    machine: &MachineSpec,
+) -> String {
+    if decomp.segments().is_empty() {
+        return format!("{title}\n(empty schedule: no tasks)\n");
+    }
+    let label = |cat: Category| category_label(cat, machine);
+    let makespan = decomp.makespan();
+    let mut t = Table::new(&["category", "seconds", "% of step"])
+        .title(title.to_string())
+        .left_first();
+    for (cat, secs) in decomp.entries() {
+        t.row(vec![
+            label(cat),
+            fnum(secs, 3),
+            fnum(100.0 * secs / makespan.max(f64::MIN_POSITIVE), 1),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "step {:.3}s over {} critical tasks; bound by {}; conservation error {:.1e}\n",
+        makespan,
+        decomp.segments().len(),
+        label(decomp.dominant()),
+        decomp.conservation_error(),
+    ));
+    out
+}
+
+/// Render the ranked link shadow-price table (`sim::shadow_prices`,
+/// DESIGN.md §14): per knob, the step-time saving of a one-notch
+/// improvement (bandwidth/compute x2, latency /2, or the discrete
+/// schedule knobs), the resulting step time, and — for the continuous
+/// machine knobs — the eps-probe derivative.
+pub fn render_shadow_price_table(title: &str, report: &SensitivityReport) -> String {
+    if report.prices.is_empty() {
+        return format!("{title}\n(no evaluable knobs)\n");
+    }
+    let mut t = Table::new(&["rank", "knob", "saves (s)", "new step (s)", "d(step)/d(knob)"])
+        .title(title.to_string())
+        .left_first();
+    for (i, p) in report.prices.iter().enumerate() {
+        t.row(vec![
+            format!("#{}", i + 1),
+            p.label.clone(),
+            fnum(p.saving, 3),
+            fnum(p.improved_s, 3),
+            p.derivative.map(|d| fnum(d, 3)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "base step {:.3}s; one notch = x2 bandwidth/compute or /2 latency; derivative probed at eps={}\n",
+        report.base_s, report.epsilon,
     ));
     out
 }
@@ -551,6 +633,97 @@ utilization
 step 4.000s; busy = union of concurrent transfers per level
 ";
         assert_eq!(out, expected);
+    }
+
+    #[test]
+    fn decomposition_table_golden() {
+        use crate::sched::critical::decompose;
+        use crate::sched::{simulate, StreamKind, Task, TaskGraph};
+        let mut g = TaskGraph::new();
+        let gather = g.add(Task {
+            label: "gather".into(),
+            rank: 0,
+            stream: StreamKind::Prefetch,
+            work: 3.0,
+            class: Some(LinkClass::InterNode),
+            instance: 0,
+            deps: vec![],
+        });
+        g.add(Task {
+            label: "fwd".into(),
+            rank: 0,
+            stream: StreamKind::Compute,
+            work: 1.0,
+            class: None,
+            instance: 0,
+            deps: vec![gather],
+        });
+        let d = decompose(&simulate(g));
+        let out = render_decomposition_table("decomposition", &d, &MachineSpec::frontier_mi250x());
+        let expected = "\
+decomposition
++--------------------------+---------+-----------+
+| category                 | seconds | % of step |
++--------------------------+---------+-----------+
+| compute                  |   1.000 |      25.0 |
+| comm B_inter (node-node) |   3.000 |      75.0 |
+| idle                     |   0.000 |       0.0 |
++--------------------------+---------+-----------+
+step 4.000s over 2 critical tasks; bound by comm B_inter (node-node); conservation error 0.0e0
+";
+        assert_eq!(out, expected);
+    }
+
+    #[test]
+    fn empty_schedules_render_guards_not_panics() {
+        use crate::sched::critical::decompose;
+        use crate::sched::{simulate, TaskGraph};
+        let sched = simulate(TaskGraph::new());
+        let m = MachineSpec::frontier_mi250x();
+        let util = render_utilization_table("utilization", &sched, &m, 0);
+        assert_eq!(util, "utilization\n(empty schedule: no tasks)\n");
+        let d = decompose(&sched);
+        let dec = render_decomposition_table("decomposition", &d, &m);
+        assert_eq!(dec, "decomposition\n(empty schedule: no tasks)\n");
+    }
+
+    #[test]
+    fn renders_shadow_price_table() {
+        use crate::metrics::sensitivity::{Knob, SensitivityReport, ShadowPrice};
+        let m = MachineSpec::frontier_mi250x();
+        let empty = SensitivityReport { base_s: 1.0, epsilon: 0.05, prices: vec![] };
+        assert_eq!(
+            render_shadow_price_table("prices", &empty),
+            "prices\n(no evaluable knobs)\n"
+        );
+        let report = SensitivityReport {
+            base_s: 33.501,
+            epsilon: 0.05,
+            prices: vec![
+                ShadowPrice {
+                    knob: Knob::LinkBandwidth(LinkClass::InterNode),
+                    label: Knob::LinkBandwidth(LinkClass::InterNode).label(&m),
+                    improved_s: 18.069,
+                    saving: 15.432,
+                    derivative: Some(29.395),
+                },
+                ShadowPrice {
+                    knob: Knob::SecDegree,
+                    label: Knob::SecDegree.label(&m),
+                    improved_s: 33.0,
+                    saving: 0.501,
+                    derivative: None,
+                },
+            ],
+        };
+        let out = render_shadow_price_table("prices", &report);
+        assert!(out.contains("#1"), "{out}");
+        assert!(out.contains("BW B_inter (node-node)"), "{out}");
+        assert!(out.contains("15.432"), "{out}");
+        // discrete knobs have no derivative cell
+        assert!(out.lines().any(|l| l.contains("secondary degree") && l.ends_with("- |")), "{out}");
+        assert!(out.contains("base step 33.501s"), "{out}");
+        assert!(out.contains("eps=0.05"), "{out}");
     }
 
     #[test]

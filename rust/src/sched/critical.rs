@@ -1,0 +1,381 @@
+//! Exact critical-path decomposition: the attribution half of the
+//! bottleneck engine (DESIGN.md §14).
+//!
+//! [`critical_path`] walks any [`Schedule`] — single-rank, multi-rank,
+//! pipeline, layered — backwards from the last-finishing task through
+//! whichever blocker (dependency or same-stream FIFO predecessor)
+//! finished latest. [`decompose`] then partitions the makespan along
+//! that path into a **conserved ledger**: compute seconds, per-link-class
+//! communication seconds, and idle gaps. The conservation contract is
+//! hard: `compute + idle + Σ comm == makespan` to 1e-12 absolute on
+//! every graph the simulator can produce (the event loop issues a task
+//! at the exact completion instant of its latest blocker, so segment
+//! boundaries are bitwise-shared and the gaps are exactly zero;
+//! Neumaier-compensated accumulation keeps the per-category sums from
+//! drifting on long paths).
+//!
+//! This module is the one home of the critical-path walk:
+//! [`Schedule::critical_path`] and the multi-rank/pipeline report tables
+//! delegate here, bit-for-bit unchanged.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::sched::{Schedule, StreamKind, TaskId};
+use crate::topology::LinkClass;
+
+/// What a critical-path segment spent its time on.
+///
+/// The derived order — `Compute`, then `Comm` fastest link first, then
+/// `Idle` — is the ledger's display order, and breaks exact ties in
+/// [`Decomposition::dominant`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Category {
+    /// A compute task (no link class) on the path.
+    Compute,
+    /// A communication task on the path, keyed by its link class.
+    Comm(LinkClass),
+    /// A gap on the path: the next task's start minus the previous
+    /// task's end. Structurally zero for simulator-produced schedules
+    /// (tasks issue at their latest blocker's completion instant); kept
+    /// so the ledger stays conserved on any hand-built span set.
+    Idle,
+}
+
+impl fmt::Display for Category {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Category::Compute => write!(f, "compute"),
+            Category::Comm(c) => write!(f, "comm {c}"),
+            Category::Idle => write!(f, "idle"),
+        }
+    }
+}
+
+/// One tile of the critical path: task, category, and the half-open
+/// `[start, end)` slice of the makespan it owns (clipped so consecutive
+/// segments never overlap), plus the idle gap that preceded it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PathSegment {
+    /// The task this segment belongs to.
+    pub task: TaskId,
+    /// Its ledger category.
+    pub category: Category,
+    /// Segment start (the later of the task's start and the previous
+    /// segment's end).
+    pub start: f64,
+    /// Segment end (the task's span end).
+    pub end: f64,
+    /// Gap between the previous segment's end and this task's start
+    /// (clamped at zero).
+    pub idle_before: f64,
+}
+
+/// Neumaier-compensated running sum: exact enough that category totals
+/// never drift past the 1e-12 conservation budget, however long the path.
+#[derive(Debug, Clone, Copy, Default)]
+struct Acc {
+    sum: f64,
+    comp: f64,
+}
+
+impl Acc {
+    fn add(&mut self, x: f64) {
+        let t = self.sum + x;
+        if self.sum.abs() >= x.abs() {
+            self.comp += (self.sum - t) + x;
+        } else {
+            self.comp += (x - t) + self.sum;
+        }
+        self.sum = t;
+    }
+
+    fn total(self) -> f64 {
+        self.sum + self.comp
+    }
+}
+
+/// The conserved makespan ledger of one schedule's critical path.
+#[derive(Debug, Clone)]
+pub struct Decomposition {
+    makespan: f64,
+    compute_s: f64,
+    idle_s: f64,
+    comm_s: BTreeMap<LinkClass, f64>,
+    segments: Vec<PathSegment>,
+}
+
+impl Decomposition {
+    /// The schedule's makespan (the quantity the ledger partitions).
+    pub fn makespan(&self) -> f64 {
+        self.makespan
+    }
+
+    /// Compute seconds on the critical path.
+    pub fn compute_s(&self) -> f64 {
+        self.compute_s
+    }
+
+    /// Idle-gap seconds on the critical path.
+    pub fn idle_s(&self) -> f64 {
+        self.idle_s
+    }
+
+    /// Per-link-class communication seconds on the critical path,
+    /// fastest class first.
+    pub fn comm_s(&self) -> &BTreeMap<LinkClass, f64> {
+        &self.comm_s
+    }
+
+    /// Total communication seconds on the critical path.
+    pub fn comm_total(&self) -> f64 {
+        let mut acc = Acc::default();
+        for &v in self.comm_s.values() {
+            acc.add(v);
+        }
+        acc.total()
+    }
+
+    /// Sum of every ledger category; equals [`Decomposition::makespan`]
+    /// within 1e-12 absolute.
+    pub fn total(&self) -> f64 {
+        self.compute_s + self.idle_s + self.comm_total()
+    }
+
+    /// `|total - makespan|` — the conservation defect this module
+    /// guarantees stays under 1e-12 absolute.
+    pub fn conservation_error(&self) -> f64 {
+        (self.total() - self.makespan).abs()
+    }
+
+    /// The ledger rows in display order: compute, per-class comm
+    /// (fastest link first), idle.
+    pub fn entries(&self) -> Vec<(Category, f64)> {
+        let mut rows = vec![(Category::Compute, self.compute_s)];
+        rows.extend(self.comm_s.iter().map(|(&c, &v)| (Category::Comm(c), v)));
+        rows.push((Category::Idle, self.idle_s));
+        rows
+    }
+
+    /// The category holding the largest share of the makespan — "what is
+    /// this step bound by". Exact ties go to the earlier category in
+    /// [`Decomposition::entries`] order (compute outranks comm outranks
+    /// idle), so the answer is deterministic.
+    pub fn dominant(&self) -> Category {
+        let mut best = (Category::Compute, f64::NEG_INFINITY);
+        for (cat, v) in self.entries() {
+            if v > best.1 {
+                best = (cat, v);
+            }
+        }
+        best.0
+    }
+
+    /// The path segments in execution order.
+    pub fn segments(&self) -> &[PathSegment] {
+        &self.segments
+    }
+}
+
+/// The critical path of `sched`: from the last-finishing task, walk
+/// backwards through whichever blocker (dependency or same-stream FIFO
+/// predecessor) finished latest. Returned in execution order.
+///
+/// This is the canonical walk; [`Schedule::critical_path`] is a thin
+/// wrapper around it.
+pub fn critical_path(sched: &Schedule) -> Vec<TaskId> {
+    if sched.spans().is_empty() {
+        return Vec::new();
+    }
+    // same-(rank, stream) FIFO predecessor by insertion order
+    let graph = sched.graph();
+    let n = graph.len();
+    let mut stream_pred: Vec<Option<TaskId>> = vec![None; n];
+    let mut last_on: BTreeMap<(usize, StreamKind), TaskId> = BTreeMap::new();
+    for (i, t) in graph.tasks().iter().enumerate() {
+        let key = (t.rank, t.stream);
+        stream_pred[i] = last_on.get(&key).copied();
+        last_on.insert(key, TaskId(i));
+    }
+    let mut cur = TaskId(0);
+    let mut best_end = f64::NEG_INFINITY;
+    for s in sched.spans() {
+        if s.end > best_end {
+            best_end = s.end;
+            cur = s.task;
+        }
+    }
+    let mut path = vec![cur];
+    loop {
+        let t = graph.task(cur);
+        let mut blocker: Option<TaskId> = None;
+        let mut blocker_end = f64::NEG_INFINITY;
+        for &d in t.deps.iter().chain(stream_pred[cur.0].iter()) {
+            let e = sched.span(d).end;
+            if e > blocker_end {
+                blocker_end = e;
+                blocker = Some(d);
+            }
+        }
+        match blocker {
+            // blockers always precede `cur` in insertion order, so the
+            // walk strictly decreases and terminates
+            Some(b) => {
+                path.push(b);
+                cur = b;
+            }
+            None => break,
+        }
+    }
+    path.reverse();
+    path
+}
+
+/// Partition `sched`'s makespan into the conserved attribution ledger.
+///
+/// Walks [`critical_path`] front to back with a cursor: any gap before a
+/// task is `Idle`, the remainder of the task's span is `Compute` or
+/// `Comm(class)` by whether the task holds a link class. An empty
+/// schedule decomposes to an all-zero ledger.
+pub fn decompose(sched: &Schedule) -> Decomposition {
+    let path = critical_path(sched);
+    let mut compute = Acc::default();
+    let mut idle = Acc::default();
+    let mut comm: BTreeMap<LinkClass, Acc> = BTreeMap::new();
+    let mut segments = Vec::with_capacity(path.len());
+    let mut cursor = 0.0f64;
+    for &id in &path {
+        let span = sched.span(id);
+        let gap = (span.start - cursor).max(0.0);
+        if gap > 0.0 {
+            idle.add(gap);
+        }
+        let start = span.start.max(cursor);
+        let dur = span.end - start;
+        let category = match sched.graph().task(id).class {
+            None => Category::Compute,
+            Some(c) => Category::Comm(c),
+        };
+        match category {
+            Category::Compute => compute.add(dur),
+            Category::Comm(c) => comm.entry(c).or_default().add(dur),
+            Category::Idle => unreachable!("segments are never Idle"),
+        }
+        segments.push(PathSegment { task: id, category, start, end: span.end, idle_before: gap });
+        cursor = span.end;
+    }
+    Decomposition {
+        makespan: sched.makespan(),
+        compute_s: compute.total(),
+        idle_s: idle.total(),
+        comm_s: comm.into_iter().map(|(c, a)| (c, a.total())).collect(),
+        segments,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{simulate, Task, TaskGraph};
+
+    fn graph_with(specs: &[(&str, StreamKind, f64, Option<LinkClass>, Vec<usize>)]) -> Schedule {
+        let mut g = TaskGraph::new();
+        for (label, stream, work, class, deps) in specs {
+            g.add(Task {
+                label: (*label).into(),
+                rank: 0,
+                stream: *stream,
+                work: *work,
+                class: *class,
+                instance: 0,
+                deps: deps.iter().map(|&d| TaskId(d)).collect(),
+            });
+        }
+        simulate(g)
+    }
+
+    #[test]
+    fn empty_schedule_decomposes_to_zero() {
+        let sched = simulate(TaskGraph::new());
+        let d = decompose(&sched);
+        assert_eq!(d.makespan(), 0.0);
+        assert_eq!(d.total(), 0.0);
+        assert_eq!(d.conservation_error(), 0.0);
+        assert!(d.segments().is_empty());
+        assert_eq!(d.dominant(), Category::Compute);
+    }
+
+    #[test]
+    fn gather_then_compute_splits_exactly() {
+        let sched = graph_with(&[
+            ("gather", StreamKind::Prefetch, 1.5, Some(LinkClass::InterNode), vec![]),
+            ("fwd", StreamKind::Compute, 2.0, None, vec![0]),
+        ]);
+        let d = decompose(&sched);
+        assert_eq!(d.makespan(), 3.5);
+        assert_eq!(d.compute_s(), 2.0);
+        assert_eq!(d.comm_s()[&LinkClass::InterNode], 1.5);
+        assert_eq!(d.idle_s(), 0.0);
+        assert_eq!(d.conservation_error(), 0.0);
+        assert_eq!(d.dominant(), Category::Compute);
+    }
+
+    #[test]
+    fn overlapped_gather_attributes_only_exposed_time() {
+        // compute a || gather, then compute b needing the gather: the
+        // gather's exposed slice on the path is only its tail
+        let sched = graph_with(&[
+            ("a", StreamKind::Compute, 1.0, None, vec![]),
+            ("gather", StreamKind::Prefetch, 3.0, Some(LinkClass::Intra(0)), vec![]),
+            ("b", StreamKind::Compute, 1.0, None, vec![1]),
+        ]);
+        let d = decompose(&sched);
+        assert_eq!(d.makespan(), 4.0);
+        // path = gather (0..3) -> b (3..4); `a` overlaps inside gather
+        assert_eq!(d.comm_s()[&LinkClass::Intra(0)], 3.0);
+        assert_eq!(d.compute_s(), 1.0);
+        assert_eq!(d.conservation_error(), 0.0);
+        assert_eq!(d.dominant(), Category::Comm(LinkClass::Intra(0)));
+    }
+
+    #[test]
+    fn dominant_breaks_ties_toward_compute() {
+        let sched = graph_with(&[
+            ("gather", StreamKind::Prefetch, 2.0, Some(LinkClass::InterNode), vec![]),
+            ("fwd", StreamKind::Compute, 2.0, None, vec![0]),
+        ]);
+        let d = decompose(&sched);
+        assert_eq!(d.compute_s(), d.comm_s()[&LinkClass::InterNode]);
+        assert_eq!(d.dominant(), Category::Compute);
+    }
+
+    #[test]
+    fn wrapper_matches_canonical_walk() {
+        let sched = graph_with(&[
+            ("g0", StreamKind::Prefetch, 0.5, Some(LinkClass::InterNode), vec![]),
+            ("c0", StreamKind::Compute, 1.0, None, vec![0]),
+            ("g1", StreamKind::Prefetch, 2.0, Some(LinkClass::InterNode), vec![]),
+            ("c1", StreamKind::Compute, 1.0, None, vec![1, 2]),
+            ("sync", StreamKind::GradSync, 0.25, Some(LinkClass::InterNode), vec![3]),
+        ]);
+        assert_eq!(sched.critical_path(), critical_path(&sched));
+    }
+
+    #[test]
+    fn segments_tile_the_makespan() {
+        let sched = graph_with(&[
+            ("g", StreamKind::Prefetch, 0.7, Some(LinkClass::Intra(1)), vec![]),
+            ("c", StreamKind::Compute, 1.3, None, vec![0]),
+            ("s", StreamKind::GradSync, 0.9, Some(LinkClass::InterNode), vec![1]),
+        ]);
+        let d = decompose(&sched);
+        let mut cursor = 0.0;
+        for seg in d.segments() {
+            assert_eq!(seg.start, cursor, "gapless tiling");
+            assert!(seg.end >= seg.start);
+            cursor = seg.end;
+        }
+        assert_eq!(cursor, d.makespan());
+        assert!(d.conservation_error() <= 1e-12);
+    }
+}

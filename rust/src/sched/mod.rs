@@ -68,6 +68,7 @@
 //! assert!((sched.stall_by_class(0)[&LinkClass::InterNode] - 1.0).abs() < 1e-12);
 //! ```
 
+pub mod critical;
 pub mod multi;
 pub mod pipeline;
 pub mod plan;
@@ -655,51 +656,13 @@ impl Schedule {
     /// The critical path: from the last-finishing task, walk backwards
     /// through whichever blocker (dependency or same-stream predecessor)
     /// finished latest. Returned in execution order.
+    ///
+    /// Thin compat wrapper over the canonical walk in
+    /// [`critical::critical_path`] (which also owns the conserved makespan
+    /// ledger, [`critical::decompose`]); results are bit-for-bit identical
+    /// to the pre-`sched::critical` implementation.
     pub fn critical_path(&self) -> Vec<TaskId> {
-        if self.spans.is_empty() {
-            return Vec::new();
-        }
-        // same-(rank, stream) FIFO predecessor by insertion order
-        let n = self.graph.len();
-        let mut stream_pred: Vec<Option<TaskId>> = vec![None; n];
-        let mut last_on: BTreeMap<(usize, StreamKind), TaskId> = BTreeMap::new();
-        for (i, t) in self.graph.tasks().iter().enumerate() {
-            let key = (t.rank, t.stream);
-            stream_pred[i] = last_on.get(&key).copied();
-            last_on.insert(key, TaskId(i));
-        }
-        let mut cur = TaskId(0);
-        let mut best_end = f64::NEG_INFINITY;
-        for s in &self.spans {
-            if s.end > best_end {
-                best_end = s.end;
-                cur = s.task;
-            }
-        }
-        let mut path = vec![cur];
-        loop {
-            let t = self.graph.task(cur);
-            let mut blocker: Option<TaskId> = None;
-            let mut blocker_end = f64::NEG_INFINITY;
-            for &d in t.deps.iter().chain(stream_pred[cur.0].iter()) {
-                let e = self.span(d).end;
-                if e > blocker_end {
-                    blocker_end = e;
-                    blocker = Some(d);
-                }
-            }
-            match blocker {
-                // blockers always precede `cur` in insertion order, so the
-                // walk strictly decreases and terminates
-                Some(b) => {
-                    path.push(b);
-                    cur = b;
-                }
-                None => break,
-            }
-        }
-        path.reverse();
-        path
+        critical::critical_path(self)
     }
 }
 

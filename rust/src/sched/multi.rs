@@ -326,6 +326,28 @@ mod tests {
     }
 
     #[test]
+    fn multi_rank_schedules_conserve_the_makespan_ledger() {
+        // straggler + jitter break the congruence collapse, so the walk
+        // crosses ranks; the ledger must still tile the makespan exactly
+        let (p, cluster) = plan(Scheme::ZeroTopo { sec_degree: 2 }, 4, Depth::Bounded(1));
+        let sc = Scenario {
+            ranks: RankCount::Count(8),
+            stragglers: vec![(3, 1.7)],
+            jitter_sigma: 0.05,
+            seed: 7,
+            ..Default::default()
+        };
+        let sched = MultiRankPlan::new(&p, &cluster, &sc).simulate();
+        let d = crate::sched::critical::decompose(&sched);
+        assert!(
+            d.conservation_error() <= 1e-12,
+            "conservation error {:.3e}",
+            d.conservation_error()
+        );
+        assert_eq!(d.makespan(), sched.makespan());
+    }
+
+    #[test]
     fn trivial_scenario_collapses_to_one_rank() {
         let (p, cluster) = plan(Scheme::ZeroTopo { sec_degree: 2 }, 4, Depth::Infinite);
         let mr = MultiRankPlan::new(&p, &cluster, &Scenario::default());

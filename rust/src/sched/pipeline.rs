@@ -756,6 +756,31 @@ mod tests {
     }
 
     #[test]
+    fn pipeline_schedules_conserve_the_makespan_ledger() {
+        // 1F1B and interleaved, monolithic and layered: the critical-path
+        // ledger must tile the makespan exactly on every variant
+        for (interleave, layered) in [(1, false), (2, false), (1, true), (2, true)] {
+            let pipe = PipeConfig { stages: 4, microbatches: 8, interleave };
+            let pp = frontier_plan_opts(
+                Scheme::ZeroTopo { sec_degree: 2 },
+                4,
+                &pipe,
+                Depth::Bounded(1),
+                layered,
+            )
+            .unwrap();
+            let sched = pp.simulate();
+            let d = crate::sched::critical::decompose(&sched);
+            assert!(
+                d.conservation_error() <= 1e-12,
+                "V={interleave} layered={layered}: conservation error {:.3e}",
+                d.conservation_error()
+            );
+            assert_eq!(d.makespan(), sched.makespan());
+        }
+    }
+
+    #[test]
     fn one_stage_matches_step_plan_spans() {
         for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }] {
             for depth in [Depth::Bounded(0), Depth::Bounded(1), Depth::Infinite] {

@@ -48,6 +48,7 @@
 
 use crate::comm::cost::{CommEfficiency, CostModel};
 use crate::comm::{CommWorld, Wire};
+use crate::metrics::sensitivity::{self, Knob, SensitivityReport, ShadowPrice};
 use crate::metrics::Throughput;
 use crate::model::TransformerSpec;
 use crate::sched::multi::MultiRankPlan;
@@ -507,6 +508,86 @@ pub fn profile_step_pipeline(
     pipe: &PipeConfig,
 ) -> Result<(PipelineBreakdown, Schedule, PipelinePlan, SimProfile), PipelineError> {
     pipeline_point(model, scheme, cluster, cfg, pipe, None)
+}
+
+/// One evaluation of a (possibly perturbed) configuration point: the DP
+/// event-clock makespan, or the pipeline makespan when `pipe` is given.
+/// `None` when the pipeline point is infeasible under the perturbation.
+fn step_seconds(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+    pipe: Option<&PipeConfig>,
+) -> Option<f64> {
+    match pipe {
+        None => Some(simulate_step(model, scheme, cluster, cfg).step_s),
+        Some(p) => {
+            simulate_step_pipeline(model, scheme, cluster, cfg, p).ok().map(|(b, _, _)| b.step_s)
+        }
+    }
+}
+
+/// Link shadow prices for one configuration point (DESIGN.md §14): the
+/// [`crate::metrics::sensitivity`] sweep over every machine knob — peak
+/// compute, per-level bandwidths and latencies — re-simulating the step
+/// under the one-notch (×2 bandwidth/compute, ÷2 latency) improvement
+/// and the ε derivative probe, plus the discrete schedule knobs this
+/// module owns: prefetch depth +1 (bounded depths only), layer blocks ×2
+/// (layered runs only), and ZeRO-topo's secondary degree bumped to the
+/// next level span. `pipe` switches the evaluator to the pipeline
+/// makespan. Errors only when the *base* pipeline point is infeasible;
+/// infeasible perturbed points silently drop their knob.
+pub fn shadow_prices(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+    pipe: Option<&PipeConfig>,
+    epsilon: f64,
+) -> Result<SensitivityReport, PipelineError> {
+    let base_s = match pipe {
+        None => simulate_step(model, scheme, cluster, cfg).step_s,
+        Some(p) => simulate_step_pipeline(model, scheme, cluster, cfg, p)?.0.step_s,
+    };
+    let mut report = sensitivity::sweep(&cluster.spec, base_s, epsilon, |spec| {
+        let c = Cluster::new(spec.clone(), cluster.nodes);
+        step_seconds(model, scheme, &c, cfg, pipe)
+    });
+    let mut discrete = |knob: Knob, scheme2: Scheme, cfg2: &SimConfig| {
+        if let Some(t) = step_seconds(model, scheme2, cluster, cfg2, pipe) {
+            report.add(ShadowPrice {
+                knob,
+                label: knob.label(&cluster.spec),
+                improved_s: t,
+                saving: base_s - t,
+                derivative: None,
+            });
+        }
+    };
+    if let Depth::Bounded(d) = cfg.prefetch_depth {
+        let mut c2 = cfg.clone();
+        c2.prefetch_depth = Depth::Bounded(d + 1);
+        discrete(Knob::PrefetchDepth, scheme, &c2);
+    }
+    if cfg.layer_blocks > 1 {
+        let doubled = (cfg.layer_blocks * 2).min(model.n_layers);
+        if doubled != cfg.layer_blocks {
+            let mut c2 = cfg.clone();
+            c2.layer_blocks = doubled;
+            discrete(Knob::LayerBlocks, scheme, &c2);
+        }
+    }
+    if matches!(scheme, Scheme::ZeroTopo { .. }) {
+        if let Ok(resolved) = ShardingSpec::resolve(scheme, cluster) {
+            if let Some(next) =
+                cluster.spec.levels.iter().map(|l| l.span).find(|&s| s > resolved.secondary)
+            {
+                discrete(Knob::SecDegree, Scheme::ZeroTopo { sec_degree: next }, cfg);
+            }
+        }
+    }
+    Ok(report)
 }
 
 /// [`simulate_step_pipeline`] with a [`Scenario`] mapped onto stages:

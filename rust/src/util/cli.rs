@@ -59,6 +59,11 @@ impl Args {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// The `i`-th positional argument (0-based, after the subcommand).
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
@@ -119,6 +124,14 @@ mod tests {
         assert_eq!(a.get("gcds"), Some("384"));
         assert!(a.flag("verbose"));
         assert_eq!(a.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn positional_accessor() {
+        let a = args("explain --json a.jsonl b.jsonl");
+        assert_eq!(a.pos(0), Some("a.jsonl"));
+        assert_eq!(a.pos(1), Some("b.jsonl"));
+        assert_eq!(a.pos(2), None);
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! Bottleneck-attribution engine guarantees (DESIGN.md §14):
+//!
+//! 1. **Conservation**: the critical-path ledger (`sched::critical`)
+//!    tiles the makespan — `compute + idle + Σ comm == makespan` to
+//!    1e-12 absolute — on every schedule the simulator can produce
+//!    (random scheme x machine x depth x blocks x multi-rank x pipeline
+//!    graphs), and on every pinned `BENCH_baseline.json` entry.
+//! 2. **Shadow-price sanity**: a pure bandwidth (or compute) increase
+//!    can never slow the modeled step, so those savings are >= 0.
+//! 3. **The paper's attribution story** (Fig 7 at 20B / 384 GCDs on
+//!    frontier): ZeRO-3 is priced inter-node-bound — doubling B_inter
+//!    tops the table and the path is comm-dominated — while ZeRO-topo
+//!    is compute-bound: peak compute tops its table and B_inter drops
+//!    out of first place.
+
+use std::path::PathBuf;
+
+use zero_topo::metrics::sensitivity::{Knob, DEFAULT_EPSILON};
+use zero_topo::model::TransformerSpec;
+use zero_topo::sched::critical::{decompose, Category};
+use zero_topo::sched::pipeline::PipeConfig;
+use zero_topo::sched::scenario::{RankCount, Scenario};
+use zero_topo::sched::Depth;
+use zero_topo::sharding::Scheme;
+use zero_topo::sim::{
+    shadow_prices, simulate_step_pipeline, simulate_step_scenario, simulate_step_schedule,
+    SimConfig,
+};
+use zero_topo::testing::check;
+use zero_topo::topology::{Cluster, LinkClass, MachineSpec};
+use zero_topo::util::json::Json;
+
+const CONSERVATION_BUDGET: f64 = 1e-12;
+
+#[test]
+fn ledger_conserves_on_random_simulator_graphs() {
+    let machines = ["frontier", "dgx", "aurora"];
+    let schemes = [
+        Scheme::Zero3,
+        Scheme::ZeroPP,
+        Scheme::ZeroTopo { sec_degree: 0 },
+    ];
+    let depths = [Depth::Infinite, Depth::Bounded(0), Depth::Bounded(2)];
+    let model = TransformerSpec::by_name("125m").expect("125m model");
+    check("critical-path ledger conserves", 48, |g| {
+        let spec = MachineSpec::resolve(g.pick(&machines)).unwrap();
+        let scheme = *g.pick(&schemes);
+        let mut cfg = SimConfig::default();
+        cfg.prefetch_depth = *g.pick(&depths);
+        let sched = match g.usize_in(0, 2) {
+            // pipeline graphs: 1F1B and interleaved
+            0 => {
+                let cluster = Cluster::new(spec, 4);
+                let stages = *g.pick(&[2usize, 4]);
+                let pipe = PipeConfig {
+                    stages,
+                    // a multiple of stages keeps interleave=2 legal
+                    microbatches: stages * g.usize_in(1, 3),
+                    interleave: *g.pick(&[1usize, 2]),
+                };
+                simulate_step_pipeline(&model, scheme, &cluster, &cfg, &pipe)
+                    .expect("pipeline simulates")
+                    .1
+            }
+            // multi-rank graphs: stragglers + jitter break congruence
+            1 => {
+                let cluster = Cluster::new(spec, g.usize_in(1, 3));
+                let scenario = Scenario {
+                    ranks: RankCount::Count(g.usize_in(2, 6)),
+                    stragglers: vec![(1, 1.0 + g.f64_unit())],
+                    jitter_sigma: 0.1 * g.f64_unit(),
+                    seed: g.case as u64,
+                    ..Default::default()
+                };
+                simulate_step_scenario(&model, scheme, &cluster, &cfg, &scenario).1
+            }
+            // plain single-rank graphs, optionally layer-granular
+            _ => {
+                cfg.layer_blocks = *g.pick(&[1usize, 2, 4]);
+                let cluster = Cluster::new(spec, g.usize_in(1, 4));
+                simulate_step_schedule(&model, scheme, &cluster, &cfg).1
+            }
+        };
+        let d = decompose(&sched);
+        assert!(
+            d.conservation_error() <= CONSERVATION_BUDGET,
+            "conservation error {:.3e} (makespan {})",
+            d.conservation_error(),
+            d.makespan()
+        );
+        assert_eq!(d.makespan(), sched.makespan());
+        assert!(d.compute_s() >= 0.0 && d.idle_s() >= 0.0);
+        assert!(d.comm_s().values().all(|&v| v >= 0.0));
+    });
+}
+
+#[test]
+fn bandwidth_and_compute_shadow_prices_are_nonnegative() {
+    let model = TransformerSpec::by_name("125m").expect("125m model");
+    let cfg = SimConfig::default();
+    for mname in ["frontier", "dgx"] {
+        let cluster = Cluster::new(MachineSpec::resolve(mname).unwrap(), 2);
+        for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 0 }] {
+            let report =
+                shadow_prices(&model, scheme, &cluster, &cfg, None, DEFAULT_EPSILON).unwrap();
+            assert!(!report.prices.is_empty());
+            for p in &report.prices {
+                if matches!(p.knob, Knob::LinkBandwidth(_) | Knob::ComputeRate) {
+                    assert!(
+                        p.saving >= -1e-9,
+                        "{mname}/{scheme:?}: {} priced negative ({})",
+                        p.label,
+                        p.saving
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The acceptance pin: at 20B / 48 nodes (384 GCDs) on frontier, the
+/// engine attributes ZeRO-3 to the inter-node link and ZeRO-topo to
+/// compute — the paper's Fig 7 claim as a machine-checked fact.
+#[test]
+fn frontier_20b_attribution_story() {
+    let model = TransformerSpec::by_name("20b").expect("20b model");
+    let cfg = SimConfig::default();
+    let cluster = Cluster::new(MachineSpec::resolve("frontier").unwrap(), 48);
+    let inter_bw = |k: &Knob| matches!(k, Knob::LinkBandwidth(LinkClass::InterNode));
+    let inter_any = |k: &Knob| {
+        matches!(
+            k,
+            Knob::LinkBandwidth(LinkClass::InterNode) | Knob::LinkLatency(LinkClass::InterNode)
+        )
+    };
+
+    // ZeRO-3: inter-node bound — B_inter tops the shadow prices and the
+    // critical path is dominated by inter-node comm
+    let z3 = shadow_prices(&model, Scheme::Zero3, &cluster, &cfg, None, DEFAULT_EPSILON).unwrap();
+    assert_eq!(z3.rank_of(inter_bw), Some(0), "ZeRO-3 must rank BW B_inter first");
+    let top = z3.top().unwrap();
+    assert!(top.saving > 0.0 && top.derivative.unwrap() > 0.0);
+    let (_, sched) = simulate_step_schedule(&model, Scheme::Zero3, &cluster, &cfg);
+    let d3 = decompose(&sched);
+    assert_eq!(d3.dominant(), Category::Comm(LinkClass::InterNode));
+    assert!(d3.conservation_error() <= CONSERVATION_BUDGET);
+
+    // ZeRO-topo: compute bound — peak compute tops the table, no
+    // inter-node knob is first, and the path is compute-dominated
+    let scheme = Scheme::ZeroTopo { sec_degree: 0 };
+    let zt = shadow_prices(&model, scheme, &cluster, &cfg, None, DEFAULT_EPSILON).unwrap();
+    assert_eq!(zt.top().unwrap().knob, Knob::ComputeRate, "ZeRO-topo must be compute-bound");
+    assert!(!inter_any(&zt.top().unwrap().knob));
+    assert!(zt.rank_of(inter_bw).unwrap() > 0, "B_inter must NOT rank first for ZeRO-topo");
+    let (_, sched) = simulate_step_schedule(&model, scheme, &cluster, &cfg);
+    let dt = decompose(&sched);
+    assert_eq!(dt.dominant(), Category::Compute);
+    assert!(dt.conservation_error() <= CONSERVATION_BUDGET);
+
+    // the ranking key is consistent: rows sorted by descending saving
+    for r in [&z3, &zt] {
+        assert!(r.prices.windows(2).all(|w| w[0].saving >= w[1].saving));
+    }
+}
+
+#[test]
+fn committed_baseline_entries_all_conserve() {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_baseline.json");
+    let text = std::fs::read_to_string(path).expect("BENCH_baseline.json committed");
+    let json = Json::parse(&text).expect("valid baseline JSON");
+    let nodes = json.get("nodes").and_then(|n| n.as_usize()).expect("nodes");
+    let model = TransformerSpec::by_name(
+        json.get("model").and_then(|m| m.as_str()).expect("model"),
+    )
+    .expect("known model");
+    let entries = json.get("entries").and_then(|e| e.as_arr()).expect("entries");
+    assert!(entries.len() >= 8, "expected the 8 pinned entries");
+    let cfg = SimConfig::default();
+    for e in entries {
+        let mname = e.get("machine").and_then(|m| m.as_str()).expect("machine");
+        let sname = e.get("scheme").and_then(|s| s.as_str()).expect("scheme");
+        let pp = e.get("pp").and_then(|v| v.as_usize()).unwrap_or(1);
+        let mb = e.get("microbatches").and_then(|v| v.as_usize()).unwrap_or(0);
+        let scheme = Scheme::parse(sname).unwrap_or_else(|| panic!("unknown scheme {sname}"));
+        let cluster = Cluster::new(MachineSpec::resolve(mname).unwrap(), nodes);
+        let sched = if pp > 1 {
+            let pipe = PipeConfig { stages: pp, microbatches: mb, interleave: 1 };
+            simulate_step_pipeline(&model, scheme, &cluster, &cfg, &pipe)
+                .expect("pipeline simulates")
+                .1
+        } else {
+            simulate_step_schedule(&model, scheme, &cluster, &cfg).1
+        };
+        let d = decompose(&sched);
+        assert!(
+            d.conservation_error() <= CONSERVATION_BUDGET,
+            "{mname}/{sname} pp{pp} mb{mb}: conservation error {:.3e}",
+            d.conservation_error()
+        );
+        // the ledger's makespan is the pinned step time's schedule
+        assert_eq!(d.makespan(), sched.makespan());
+    }
+}
