@@ -211,6 +211,16 @@ impl RunConfig {
         Ok(Self::from_json(&Json::parse(&text)?)?)
     }
 
+    /// Write the config as JSON — the exact format [`RunConfig::load`]
+    /// reads back, so `plan --emit-config out.json` followed by
+    /// `train --config out.json` runs the planner's winner verbatim.
+    pub fn save(&self, path: &Path) -> Result<(), ConfigError> {
+        let mut text = self.to_json().to_string();
+        text.push('\n');
+        std::fs::write(path, text)?;
+        Ok(())
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("model", Json::str(self.model.clone())),
@@ -325,6 +335,29 @@ mod tests {
         let sc = c2.scenario();
         assert_eq!(sc.seed, 7);
         assert!(!sc.is_trivial());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let c = RunConfig {
+            model: "20b".into(),
+            scheme: Scheme::ZeroTopo { sec_degree: 2 },
+            nodes: 48,
+            layer_blocks: 44,
+            prefetch_depth: Depth::Bounded(2),
+            ..RunConfig::default()
+        };
+        let dir = std::env::temp_dir().join("zero_topo_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("emitted.json");
+        c.save(&path).unwrap();
+        let c2 = RunConfig::load(&path).unwrap();
+        assert_eq!(c2.model, "20b");
+        assert_eq!(c2.scheme, Scheme::ZeroTopo { sec_degree: 2 });
+        assert_eq!(c2.nodes, 48);
+        assert_eq!(c2.layer_blocks, 44);
+        assert_eq!(c2.prefetch_depth, Depth::Bounded(2));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

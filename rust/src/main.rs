@@ -7,6 +7,7 @@
 //!   capacity  --nodes N                          max-model-size claims (Section II / VII.B)
 //!   simulate  --model 20b|10b --nodes 8,16,...   Fig 7/8 scaling figures (analytical sim)
 //!   scale                                        alias of simulate (scaling sweeps)
+//!   plan      --model 20b --nodes 48             feasibility-aware schedule auto-planner
 //!   train     --model tiny|mini|... --scheme S   real-numerics training via PJRT artifacts
 //!   report                                       everything above, in order
 //!
@@ -23,8 +24,9 @@ use zero_topo::metrics::Throughput;
 use zero_topo::model::TransformerSpec;
 use zero_topo::metrics::sensitivity::DEFAULT_EPSILON;
 use zero_topo::report::{
-    category_label, render_critical_path, render_decomposition_table, render_pipeline_table,
-    render_rank_table, render_scaling_figure, render_shadow_price_table, render_stall_table,
+    capacity_frontier_markdown, category_label, render_capacity_frontier, render_critical_path,
+    render_decomposition_table, render_pipeline_table, render_plan_table, render_rank_table,
+    render_scaling_figure, render_shadow_price_table, render_stall_table,
     render_utilization_table, ScalingSeries,
 };
 use zero_topo::runtime::Runtime;
@@ -33,6 +35,7 @@ use zero_topo::sched::pipeline::PipeConfig;
 use zero_topo::sched::scenario::{RankCount, Scenario};
 use zero_topo::sched::{trace, Schedule};
 use zero_topo::sharding::{Scheme, ShardingSpec};
+use zero_topo::sim::plan::{plan_search, PlanSpace};
 use zero_topo::sim::{
     profile_step, profile_step_pipeline, scaling_series, scaling_series_pipeline,
     scaling_series_scenario, shadow_prices, simulate_step, simulate_step_pipeline,
@@ -56,7 +59,29 @@ JSON (see examples/machines/). Default: frontier.
   topo      [--machine M]                   node topology (paper Fig 2/3)
   sharding  [--machine M] [--nodes N]       Table IV sharding factors
   memory    [--model 20b] [--nodes N]       Tables V/VI memory per device
-  capacity  [--machine M] [--nodes N]       max model size per scheme (Sec II)
+                                            (static model states only — `plan`
+                                            adds the schedule-aware gather
+                                            window + activation terms)
+  capacity  [--machine M] [--nodes N]       max model size per scheme (Sec II;
+                                            states-only bound — `plan` prints
+                                            the schedule-aware frontier)
+  plan      [--machine M] [--model 20b] [--nodes 48] [--schemes S,...]
+            [--depths 1,2,inf] [--blocks 1,44] [--pp 1,2,4,8]
+            [--microbatches 0,8,16,32] [--interleave 1,2] [--mfu F]
+            [--top K] [--json] [--emit-config FILE] [--md FILE]
+                                            feasibility-aware auto-planner
+                                            (DESIGN.md Sec 15): sweep scheme x
+                                            depth x blocks x P x M x V, prune
+                                            anything whose schedule-aware
+                                            memory ledger (states + gather
+                                            window + in-flight activations)
+                                            exceeds HBM *before* pricing, rank
+                                            survivors by TFLOPS/GCD;
+                                            --emit-config writes the winner as
+                                            a RunConfig JSON that
+                                            `train --config` runs verbatim;
+                                            --md appends the capacity frontier
+                                            as markdown
   simulate  [--machine M] [--model 20b] [--nodes 8,16,32,48]
             [--schemes zero3,zeropp,zerotopo] [--depth N|inf] [--ranks N|auto]
             [--layer-granular] [--blocks B] [--pp P] [--microbatches M]
@@ -82,12 +107,16 @@ JSON (see examples/machines/). Default: frontier.
                                             markdown (CI: $GITHUB_STEP_SUMMARY);
                                             also self-profiles the simulator
                                             (tasks/sec, soft warn-only gate)
-  train     [--machine M] [--model tiny] [--scheme zerotopo] [--nodes 1]
-            [--steps 10] [--depth N|inf] [--layer-granular] [--blocks B]
-            [--ranks N|auto] [--jitter SIGMA] [--straggler R:MULT,...]
-            [--pp P] [--microbatches M] [--interleave V] [--artifacts DIR]
-            [--csv FILE] [--telemetry out.jsonl] [--prom out.prom]
-                                            real training via PJRT
+  train     [--config FILE] [--machine M] [--model tiny] [--scheme zerotopo]
+            [--nodes 1] [--steps 10] [--depth N|inf] [--layer-granular]
+            [--blocks B] [--ranks N|auto] [--jitter SIGMA]
+            [--straggler R:MULT,...] [--pp P] [--microbatches M]
+            [--interleave V] [--artifacts DIR] [--csv FILE]
+            [--telemetry out.jsonl] [--prom out.prom]
+                                            real training via PJRT; --config
+                                            seeds every knob from a RunConfig
+                                            JSON (e.g. plan --emit-config
+                                            output), explicit flags override
   explain   [--machine M] [--model 20b] [--nodes 48] [--schemes S,...]
             [--pp P] [--microbatches M] [--interleave V] [--depth N|inf]
             [--layer-granular] [--blocks B] [--eps 0.05] [--json]
@@ -146,6 +175,7 @@ fn main() {
         "sharding" => cmd_sharding(&args),
         "memory" => cmd_memory(&args),
         "capacity" => cmd_capacity(&args),
+        "plan" => cmd_plan(&args),
         "simulate" | "scale" => cmd_simulate(&args),
         "pipeline" => cmd_pipeline(&args),
         "scenario" => cmd_scenario(&args),
@@ -356,6 +386,168 @@ fn cmd_capacity(args: &Args) -> anyhow::Result<()> {
         ]);
     }
     println!("{}", t.render());
+    Ok(())
+}
+
+/// `plan` — the feasibility-aware auto-planner (DESIGN.md §15): sweep
+/// the joint schedule space under the user's bounds, prune every point
+/// whose schedule-aware memory ledger exceeds HBM before pricing, rank
+/// the survivors by token-normalized throughput.
+fn cmd_plan(args: &Args) -> anyhow::Result<()> {
+    let model = TransformerSpec::by_name(args.get_or("model", "20b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model (use 10b/20b/125m)"))?;
+    // keep the raw --machine string: the emitted RunConfig must resolve
+    // it again on load (builtin name or spec-JSON path, both round-trip)
+    let machine_raw = args.get_or("machine", "frontier").to_string();
+    let nodes = args.parse_opt("nodes", 48usize)?;
+    let cluster = Cluster::new(MachineSpec::resolve(&machine_raw)?, nodes);
+    // expand the auto secondary (sec=0) into one candidate per intra-node
+    // level span, exactly like the analytical tables do
+    let mut schemes: Vec<Scheme> = Vec::new();
+    for s in parse_schemes(args)? {
+        match s {
+            Scheme::ZeroTopo { sec_degree: 0 } => schemes.extend(topo_schemes(&cluster)),
+            other => schemes.push(other),
+        }
+    }
+    let mut cfg = SimConfig::default();
+    cfg.mfu = args.parse_opt("mfu", cfg.mfu)?;
+    let mut space = PlanSpace::default_for(schemes, &model);
+    space.depths = args.parse_list("depths", &space.depths)?;
+    space.blocks = args.parse_list("blocks", &space.blocks)?;
+    space.stages = args.parse_list("pp", &space.stages)?;
+    space.microbatches = args.parse_list("microbatches", &space.microbatches)?;
+    space.interleaves = args.parse_list("interleave", &space.interleaves)?;
+    let top = args.parse_opt("top", 8usize)?;
+
+    let out = plan_search(&model, &cluster, &cfg, &space);
+
+    let world = cluster.world_size();
+    let title = format!(
+        "Auto-planner — {} on {} x {} nodes ({} workers, {} HBM each)",
+        model.name,
+        cluster.spec.name,
+        nodes,
+        world,
+        human_bytes(cluster.hbm_per_worker())
+    );
+
+    if args.flag("json") {
+        let point_json = |p: &zero_topo::sim::plan::PlanPoint| {
+            Json::obj(vec![
+                ("scheme", Json::str(p.scheme.name())),
+                ("depth", Json::str(p.depth.to_string())),
+                ("blocks", Json::from(p.blocks)),
+                ("stages", Json::from(p.stages)),
+                ("microbatches", Json::from(p.microbatches)),
+                ("interleave", Json::from(p.interleave)),
+                ("step_s", Json::num(p.step_s)),
+                ("tokens_per_step", Json::num(p.tokens_per_step)),
+                ("tflops_per_gcd", Json::num(p.tflops_per_gcd)),
+                ("mem_bytes", Json::num(p.fit.total())),
+                ("headroom_bytes", Json::num(p.fit.headroom())),
+            ])
+        };
+        let json = Json::obj(vec![
+            ("model", Json::str(model.name.clone())),
+            ("machine", Json::str(machine_raw.clone())),
+            ("nodes", Json::from(nodes)),
+            ("world", Json::from(world)),
+            ("feasible", Json::from(out.ranked.len())),
+            ("pruned", Json::from(out.pruned.len())),
+            ("skipped", Json::from(out.skipped)),
+            ("winner", out.winner().map(point_json).unwrap_or(Json::Null)),
+            ("ranked", Json::arr(out.ranked.iter().take(top.max(1)).map(point_json))),
+            (
+                "frontier",
+                Json::arr(out.frontier.iter().map(|(s, cap)| {
+                    Json::obj(vec![
+                        ("scheme", Json::str(s.name())),
+                        ("max_model_params", Json::num(*cap)),
+                    ])
+                })),
+            ),
+            (
+                "smallest_overage_bytes",
+                out.smallest_overage()
+                    .map(|p| Json::num(p.fit.overage()))
+                    .unwrap_or(Json::Null),
+            ),
+        ]);
+        println!("{json}");
+    } else {
+        println!("{}", render_plan_table(&title, &out, top));
+        println!(
+            "{}",
+            render_capacity_frontier(
+                &format!(
+                    "Capacity frontier — {} x {} nodes (schedule-aware)",
+                    cluster.spec.name, nodes
+                ),
+                &out
+            )
+        );
+        if let Some(w) = out.winner() {
+            println!(
+                "winner: {} P={} M={} V={} depth={} blocks={} -> {:.3}s/step, \
+                 {:.2} TFLOPS/GCD, {:.2} GiB high-water ({:.2} GiB headroom)",
+                w.scheme.name(),
+                w.stages,
+                w.microbatches,
+                w.interleave,
+                w.depth,
+                w.blocks,
+                w.step_s,
+                w.tflops_per_gcd,
+                w.fit.total() / (1u64 << 30) as f64,
+                w.fit.headroom() / (1u64 << 30) as f64,
+            );
+        }
+    }
+
+    if let Some(path) = args.get("emit-config") {
+        let w = out.winner().ok_or_else(|| {
+            anyhow::anyhow!("nothing fits the HBM budget — no config to emit (see the ledger above)")
+        })?;
+        let rc = RunConfig {
+            model: model.name.clone(),
+            scheme: w.scheme,
+            machine: machine_raw.clone(),
+            nodes,
+            micro_batch: cfg.micro_batch,
+            // data-parallel winners carry their microbatch count as
+            // grad-accum; pipeline winners as M (the same split train uses)
+            grad_accum: if w.stages == 1 { w.microbatches } else { 1 },
+            quant_block: cfg.quant_block,
+            mfu: cfg.mfu,
+            prefetch_depth: w.depth,
+            layer_blocks: w.blocks,
+            pipeline_stages: w.stages,
+            microbatches: if w.stages > 1 { w.microbatches } else { 0 },
+            interleave: w.interleave,
+            ..RunConfig::default()
+        };
+        rc.save(std::path::Path::new(path))?;
+        println!("emitted winner config to {path} (run it: zero-topo train --config {path})");
+    }
+
+    if let Some(md_path) = args.get("md") {
+        use std::io::Write;
+        // append, never truncate: $GITHUB_STEP_SUMMARY is shared by steps
+        let md = capacity_frontier_markdown(
+            &format!(
+                "Capacity frontier — {} on {} x {} nodes (schedule-aware)",
+                model.name, cluster.spec.name, nodes
+            ),
+            &out,
+        );
+        std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(md_path)?
+            .write_all(md.as_bytes())?;
+        println!("appended capacity frontier markdown to {md_path}");
+    }
     Ok(())
 }
 
@@ -1569,28 +1761,45 @@ fn cmd_explain_diff(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    let mut cfg = RunConfig::default();
-    cfg.model = args.get_or("model", "tiny").to_string();
-    cfg.scheme = Scheme::parse(args.get_or("scheme", "zerotopo"))
-        .ok_or_else(|| anyhow::anyhow!("bad --scheme"))?;
-    cfg.machine = args.get_or("machine", "frontier").to_string();
-    cfg.nodes = args.parse_opt("nodes", 1usize)?;
-    cfg.steps = args.parse_opt("steps", 10usize)?;
-    cfg.grad_accum = args.parse_opt("grad-accum", 1usize)?;
-    cfg.seed = args.parse_opt("seed", 42u64)?;
-    cfg.lr = args.parse_opt("lr", 1e-3f32)?;
+    // --config FILE seeds every knob from a RunConfig JSON (notably the
+    // file `plan --emit-config` writes); explicit flags still override.
+    let mut cfg = match args.get("config") {
+        Some(p) => RunConfig::load(std::path::Path::new(p))
+            .map_err(|e| anyhow::anyhow!("cannot load --config {p}: {e}"))?,
+        None => RunConfig::default(),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(s) = args.get("scheme") {
+        cfg.scheme = Scheme::parse(s).ok_or_else(|| anyhow::anyhow!("bad --scheme"))?;
+    }
+    if let Some(m) = args.get("machine") {
+        cfg.machine = m.to_string();
+    }
+    cfg.nodes = args.parse_opt("nodes", cfg.nodes)?;
+    cfg.steps = args.parse_opt("steps", cfg.steps)?;
+    cfg.grad_accum = args.parse_opt("grad-accum", cfg.grad_accum)?;
+    cfg.seed = args.parse_opt("seed", cfg.seed)?;
+    cfg.lr = args.parse_opt("lr", cfg.lr)?;
     cfg.mfu = args.parse_opt("mfu", cfg.mfu)?;
     cfg.prefetch_depth = args.parse_opt("depth", cfg.prefetch_depth)?;
     cfg.ranks = args.parse_opt("ranks", cfg.ranks)?;
     cfg.jitter_sigma = args.parse_opt("jitter", cfg.jitter_sigma)?;
-    cfg.stragglers = Scenario::parse_stragglers(args.get_or("straggler", ""))
-        .map_err(|e| anyhow::anyhow!(e))?;
-    cfg.imbalance = Scenario::parse_imbalance(args.get_or("imbalance", ""))
-        .map_err(|e| anyhow::anyhow!(e))?;
-    cfg.pipeline_stages = parse_pp(args)?;
+    if args.get("straggler").is_some() {
+        cfg.stragglers = Scenario::parse_stragglers(args.get_or("straggler", ""))
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if args.get("imbalance").is_some() {
+        cfg.imbalance = Scenario::parse_imbalance(args.get_or("imbalance", ""))
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
+    cfg.pipeline_stages = parse_pp_default(args, cfg.pipeline_stages.max(1))?;
     cfg.microbatches = args.parse_opt("microbatches", cfg.microbatches)?;
     cfg.interleave = args.parse_opt("interleave", cfg.interleave)?;
-    cfg.telemetry = args.get("telemetry").map(String::from);
+    if let Some(t) = args.get("telemetry") {
+        cfg.telemetry = Some(t.to_string());
+    }
     let dir = args.get_or("artifacts", "artifacts");
     // fail fast on a bad --machine before the (expensive) artifact load
     let machine = MachineSpec::resolve(&cfg.machine)?;
@@ -1602,7 +1811,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     // per manifest layer (the flat parameter count still splits
     // near-evenly — manifests carry no per-layer parameter map)
     ensure_no_blocks_under_pipeline(args, cfg.pipeline_stages)?;
-    cfg.layer_blocks = parse_layer_blocks(args, runner.manifest.n_layers.max(1))?;
+    // only stomp a --config's layer_blocks when a block flag is present
+    if args.get("blocks").is_some() || args.flag("layer-granular") {
+        cfg.layer_blocks = parse_layer_blocks(args, runner.manifest.n_layers.max(1))?;
+    }
+    anyhow::ensure!(cfg.layer_blocks >= 1, "layer_blocks must be >= 1");
     eprintln!(
         "model {}: {} params, seq {}, mbs {}; scheme {}, {} {} nodes ({} workers)",
         cfg.model,

@@ -7,7 +7,12 @@
 //! bytes/param), fp16 gradients (2), optimizer states K = 12 bytes/param
 //! (fp32 master + momentum + variance).
 
-use crate::sharding::{Scheme, ShardingSpec};
+use crate::model::TransformerSpec;
+use crate::sched::pipeline::{in_flight_chunks, split_even};
+use crate::sched::plan::gather_window_params;
+use crate::sched::Depth;
+use crate::sharding::{Scheme, ShardingError, ShardingSpec};
+use crate::topology::Cluster;
 
 /// Bytes per parameter for each state component.
 pub const WEIGHT_BYTES: f64 = 2.0; // fp16
@@ -99,6 +104,219 @@ impl MemoryModel {
         let m = self.per_device(1.0);
         hbm / (m.weights + m.secondary + m.grads)
     }
+}
+
+/// Schedule knobs that shape the live-memory high-water mark beyond the
+/// persistent model states: prefetch window, layer-block split, and the
+/// pipeline shape. Mirrors the corresponding `sim::SimConfig` /
+/// `config::RunConfig` fields so a run description maps 1:1 onto a fit
+/// query (DESIGN.md §15).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FitConfig {
+    /// Micro-batch size per GCD (activation payload per layer).
+    pub micro_batch: usize,
+    /// Quantization block for INT8 secondary partitions.
+    pub quant_block: usize,
+    /// Prefetch depth gating the gather stream (units = layer blocks
+    /// when `layer_blocks > 1`, whole-model gathers otherwise).
+    pub prefetch_depth: Depth,
+    /// Layer blocks each microbatch gather is split into (1 =
+    /// monolithic: the full fp16 model materializes per gather).
+    pub layer_blocks: usize,
+    /// Pipeline stages `P` (1 = pure data-parallel).
+    pub stages: usize,
+    /// Pipeline microbatches `M` per step; 0 = unresolved (the 1F1B
+    /// in-flight bound then assumes steady state, `M ≥ P`).
+    pub microbatches: usize,
+    /// Virtual chunks per stage `V`.
+    pub interleave: usize,
+}
+
+impl Default for FitConfig {
+    fn default() -> Self {
+        FitConfig {
+            micro_batch: 1,
+            quant_block: crate::quant::DEFAULT_BLOCK,
+            prefetch_depth: Depth::Infinite,
+            layer_blocks: 1,
+            stages: 1,
+            microbatches: 0,
+            interleave: 1,
+        }
+    }
+}
+
+/// Why a fit query could not be evaluated (the same legality rules the
+/// simulator enforces, surfaced before any pricing).
+#[derive(Debug, thiserror::Error)]
+pub enum FitError {
+    /// The ZeRO scheme could not resolve on the (per-stage) DP group.
+    #[error(transparent)]
+    Sharding(#[from] ShardingError),
+    /// Stages are whole node groups; `P` must divide the node count.
+    #[error("{stages} pipeline stages do not divide {nodes} nodes")]
+    StagesDontDivideNodes {
+        /// Requested stage count `P`.
+        stages: usize,
+        /// Cluster node count.
+        nodes: usize,
+    },
+}
+
+/// The schedule-aware per-device memory ledger for one `(model, scheme,
+/// machine, schedule)` point: persistent model states (Tables V/VI)
+/// plus the two live terms the schedule controls — the prefetch gather
+/// window and the 1F1B in-flight activations. All byte fields are for
+/// the **binding** (max-total) pipeline stage; `P = 1` has exactly one
+/// stage. Produced by [`fit_report`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryFit {
+    /// The scheme the ledger prices.
+    pub scheme: Scheme,
+    /// Parameters owned by the binding stage (the whole model at `P=1`).
+    pub psi: f64,
+    /// Index of the binding stage (0 at `P = 1`).
+    pub stage: usize,
+    /// fp16 primary weight shard bytes (Table V).
+    pub weights: f64,
+    /// Secondary-partition copy bytes (ZeRO++ fp16 / ZeRO-topo INT8).
+    pub secondary: f64,
+    /// fp16 gradient shard bytes (Table VI).
+    pub grads: f64,
+    /// Adam optimizer-state shard bytes (K = 12 bytes/param).
+    pub optim: f64,
+    /// Live fp16 gathered-weight window: `2 ×` the largest parameter
+    /// count the prefetch gate lets onto the gather stream at once
+    /// (`sched::plan::gather_window_params`).
+    pub gather_window: f64,
+    /// Live activation bytes: in-flight microbatch chunks
+    /// (`sched::pipeline::in_flight_chunks`) × retained per-layer
+    /// hidden states of the stage's layers.
+    pub activations: f64,
+    /// HBM budget per device the verdict is judged against.
+    pub hbm: f64,
+}
+
+impl MemoryFit {
+    /// Persistent model-state bytes (weights + secondary + grads + optim).
+    pub fn state_bytes(&self) -> f64 {
+        self.weights + self.secondary + self.grads + self.optim
+    }
+
+    /// Total per-device high-water mark: states + gather window +
+    /// in-flight activations.
+    pub fn total(&self) -> f64 {
+        self.state_bytes() + self.gather_window + self.activations
+    }
+
+    /// The hard HBM verdict: does the high-water mark fit the budget?
+    pub fn fits(&self) -> bool {
+        self.total() <= self.hbm
+    }
+
+    /// Bytes over budget (0 when the point fits).
+    pub fn overage(&self) -> f64 {
+        (self.total() - self.hbm).max(0.0)
+    }
+
+    /// Bytes under budget (0 when the point is over).
+    pub fn headroom(&self) -> f64 {
+        (self.hbm - self.total()).max(0.0)
+    }
+
+    /// Largest model (total parameters Ψ) this `(scheme, schedule,
+    /// machine)` point could hold: states and window scale linearly in
+    /// Ψ while the activation term is pinned at this model's shape, so
+    /// the bound is closed-form. Returns 0 when activations alone
+    /// exceed the budget.
+    pub fn max_model_params(&self, total_psi: f64) -> f64 {
+        let per_psi = (self.state_bytes() + self.gather_window) / self.psi;
+        let budget = self.hbm - self.activations;
+        if budget <= 0.0 || per_psi <= 0.0 {
+            return 0.0;
+        }
+        // scale through the binding stage's share of the model
+        (budget / per_psi) * (total_psi / self.psi)
+    }
+}
+
+/// Evaluate the schedule-aware memory ledger for `(model, scheme,
+/// cluster)` under the schedule knobs in `cfg`, returning the binding
+/// (max-total) stage's [`MemoryFit`]. Pure arithmetic — no simulation,
+/// no cost model — so the planner can prune infeasible points before
+/// pricing anything (DESIGN.md §15):
+///
+/// * **states**: Tables V/VI via [`MemoryModel::per_device`] on the
+///   stage's parameter share, with the scheme resolved on the stage's
+///   `nodes / P` sub-cluster (exactly how `PipelinePlan` resolves it);
+/// * **gather window**: `2 ×` [`gather_window_params`] over the layer
+///   blocks of the stage (`P = 1`: `model.chunk_params(layer_blocks)`;
+///   `P > 1`: the stage's virtual chunks gather monolithically, as the
+///   pipeline plan schedules them);
+/// * **activations**: [`in_flight_chunks`] × the stage's retained
+///   per-layer hidden states (`2 · mbs · seq · d_model` each).
+pub fn fit_report(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    cluster: &Cluster,
+    cfg: &FitConfig,
+) -> Result<MemoryFit, FitError> {
+    let p = cfg.stages.max(1);
+    if cluster.nodes % p != 0 {
+        return Err(FitError::StagesDontDivideNodes { stages: p, nodes: cluster.nodes });
+    }
+    let v = if p == 1 { 1 } else { cfg.interleave.max(1) };
+    let sub = Cluster::new(cluster.spec.clone(), cluster.nodes / p);
+    let spec = ShardingSpec::resolve(scheme, &sub)?;
+    let mem = MemoryModel { scheme, spec, quant_block: cfg.quant_block.max(1) };
+
+    let chunk_psi = model.chunk_params(p * v);
+    let chunk_layers = split_even(model.n_layers, p * v);
+    let act_per_layer = model.activation_bytes(cfg.micro_batch.max(1)) as f64;
+    let hbm = cluster.hbm_per_worker();
+
+    let mut best: Option<MemoryFit> = None;
+    for s in 0..p {
+        // stage s owns virtual chunks j = v·P + s (pipeline.rs layout)
+        let owned: Vec<usize> = (0..v).map(|c| c * p + s).collect();
+        let psi: u64 = owned.iter().map(|&j| chunk_psi[j]).sum();
+        let states = mem.per_device(psi as f64);
+        let window_elems = if p == 1 {
+            // DP: the depth gate runs over the layer-block split
+            gather_window_params(
+                &model.chunk_params(cfg.layer_blocks.max(1)),
+                cfg.prefetch_depth,
+            )
+        } else {
+            // pipeline: each virtual chunk gathers monolithically; the
+            // depth gate spans the stage's chunk sequence
+            let elems: Vec<u64> = owned.iter().map(|&j| chunk_psi[j]).collect();
+            gather_window_params(&elems, cfg.prefetch_depth)
+        };
+        let max_chunk_layers =
+            owned.iter().map(|&j| chunk_layers[j]).max().unwrap_or(0);
+        let in_flight = in_flight_chunks(p, cfg.microbatches, v, s);
+        let fit = MemoryFit {
+            scheme,
+            psi: psi as f64,
+            stage: s,
+            weights: states.weights,
+            secondary: states.secondary,
+            grads: states.grads,
+            optim: states.optim,
+            gather_window: WEIGHT_BYTES * window_elems as f64,
+            activations: in_flight as f64 * max_chunk_layers as f64 * act_per_layer,
+            hbm,
+        };
+        let binding = match &best {
+            None => true,
+            Some(b) => fit.total() > b.total(),
+        };
+        if binding {
+            best = Some(fit);
+        }
+    }
+    Ok(best.expect("at least one stage"))
 }
 
 /// The ZeRO stage memory formulas of Section III (bytes per device for a
@@ -223,6 +441,125 @@ mod tests {
         let m = model(Scheme::Zero3, 2);
         let total = m.per_device(psi).total();
         assert!((total - zero_stage_total(3, psi, 16.0)).abs() < 1.0);
+    }
+
+    fn spec20b() -> TransformerSpec {
+        TransformerSpec::by_name("20b").unwrap()
+    }
+
+    #[test]
+    fn fit_report_p1_monolithic_degenerates_to_per_device() {
+        // blocks=1 / P=1: states reduce exactly to Tables V/VI and the
+        // window to the full 2Ψ fp16 gather
+        let c = Cluster::frontier(48);
+        let m = spec20b();
+        let psi = m.n_params() as f64;
+        for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }] {
+            let fit = fit_report(&m, scheme, &c, &FitConfig::default()).unwrap();
+            let dev = model(scheme, 48).per_device(psi);
+            assert!((fit.state_bytes() - dev.total()).abs() < 1.0, "{scheme:?}");
+            assert_eq!(fit.stage, 0);
+            assert_eq!(fit.psi, psi);
+            assert!((fit.gather_window - 2.0 * psi).abs() < 1.0, "{scheme:?}");
+            let act = m.n_layers as f64 * m.activation_bytes(1) as f64;
+            assert!((fit.activations - act).abs() < 1.0, "{scheme:?}");
+            assert_eq!(fit.hbm, 64.0 * GB);
+        }
+    }
+
+    #[test]
+    fn fit_report_window_monotone_in_depth() {
+        let c = Cluster::frontier(48);
+        let m = spec20b();
+        let mut prev = 0.0;
+        for d in 0..m.n_layers + 2 {
+            let cfg = FitConfig {
+                prefetch_depth: Depth::Bounded(d),
+                layer_blocks: m.n_layers,
+                ..FitConfig::default()
+            };
+            let f = fit_report(&m, Scheme::ZeroTopo { sec_degree: 2 }, &c, &cfg).unwrap();
+            assert!(f.gather_window >= prev, "depth {d}");
+            assert!(f.gather_window <= 2.0 * m.n_params() as f64 + 1.0);
+            prev = f.gather_window;
+        }
+        // deep enough == monolithic
+        assert!((prev - 2.0 * m.n_params() as f64).abs() < 1.0);
+    }
+
+    #[test]
+    fn fit_report_pipeline_stage_accounting() {
+        // P=4, M=8: stage 0 (embeddings chunk, deepest 1F1B warmup) binds
+        let c = Cluster::frontier(48);
+        let m = spec20b();
+        let cfg = FitConfig { stages: 4, microbatches: 8, ..FitConfig::default() };
+        let f = fit_report(&m, Scheme::ZeroTopo { sec_degree: 2 }, &c, &cfg).unwrap();
+        assert_eq!(f.stage, 0);
+        // 44 layers / 4 stages = 11 per stage, min(P - 0, M) = 4 in flight
+        let act1 = m.activation_bytes(1) as f64;
+        assert!((f.activations - 4.0 * 11.0 * act1).abs() < 1.0, "{}", f.activations);
+        // the stage's chunk gathers monolithically: window = 2 Ψ_stage
+        assert!((f.gather_window - 2.0 * f.psi).abs() < 1.0);
+        // stage owns about a quarter of the model (plus the embeddings)
+        let quarter = m.n_params() as f64 / 4.0;
+        assert!(f.psi > quarter && f.psi < 1.1 * quarter, "{}", f.psi);
+    }
+
+    #[test]
+    fn fit_report_legality_errors() {
+        let c = Cluster::frontier(48);
+        let m = spec20b();
+        let cfg = FitConfig { stages: 5, ..FitConfig::default() };
+        match fit_report(&m, Scheme::Zero3, &c, &cfg) {
+            Err(FitError::StagesDontDivideNodes { stages: 5, nodes: 48 }) => {}
+            other => panic!("want StagesDontDivideNodes, got {other:?}"),
+        }
+        // sec_degree 3 is not a frontier level span
+        let bad = fit_report(&m, Scheme::ZeroTopo { sec_degree: 3 }, &c, &FitConfig::default());
+        assert!(matches!(bad, Err(FitError::Sharding(_))));
+    }
+
+    #[test]
+    fn fit_report_monolithic_topo_overflows_but_layered_window_fits() {
+        // the planner's headline disagreement with the hand-tuned config:
+        // monolithic ZeRO-topo 20B @ 384 GCDs wants ~2Ψ of live gathered
+        // weights on top of ~37 GB of states — over the 64 GB budget —
+        // while a depth-2 window over 44 layer blocks fits easily
+        let c = Cluster::frontier(48);
+        let m = spec20b();
+        let scheme = Scheme::ZeroTopo { sec_degree: 2 };
+        let mono = fit_report(&m, scheme, &c, &FitConfig::default()).unwrap();
+        assert!(!mono.fits());
+        assert!(mono.overage() > 10.0 * GB, "{}", mono.overage());
+        let layered = fit_report(
+            &m,
+            scheme,
+            &c,
+            &FitConfig {
+                prefetch_depth: Depth::Bounded(2),
+                layer_blocks: m.n_layers,
+                ..FitConfig::default()
+            },
+        )
+        .unwrap();
+        assert!(layered.fits(), "{}", layered.total());
+        assert!(layered.headroom() > 10.0 * GB);
+        // ZeRO-3 fits even monolithically: tiny states
+        let z3 = fit_report(&m, Scheme::Zero3, &c, &FitConfig::default()).unwrap();
+        assert!(z3.fits());
+    }
+
+    #[test]
+    fn fit_report_max_model_params_inverts_the_ledger() {
+        // a model of exactly max_model_params() should sit at the budget
+        let c = Cluster::frontier(48);
+        let m = spec20b();
+        let f = fit_report(&m, Scheme::Zero3, &c, &FitConfig::default()).unwrap();
+        let cap = f.max_model_params(m.n_params() as f64);
+        // scale the ledger linearly to cap: states+window scale, act fixed
+        let scale = cap / m.n_params() as f64;
+        let scaled = (f.state_bytes() + f.gather_window) * scale + f.activations;
+        assert!((scaled - f.hbm).abs() < 1e-3 * f.hbm, "{scaled}");
     }
 
     #[test]

@@ -373,6 +373,117 @@ pub fn render_critical_path(sched: &Schedule, max_items: usize) -> String {
     out
 }
 
+const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Render the auto-planner's ranked table (DESIGN.md §15): the top-`top`
+/// feasible points with their schedule knobs, step time, token-normalized
+/// throughput, and memory ledger totals. An empty feasible set renders
+/// the "nothing fits" diagnosis (smallest overage and the point that
+/// achieved it) instead of an empty table.
+pub fn render_plan_table(
+    title: &str,
+    outcome: &crate::sim::plan::PlanOutcome,
+    top: usize,
+) -> String {
+    if outcome.ranked.is_empty() {
+        let mut s = format!("{title}\n");
+        match outcome.smallest_overage() {
+            Some(p) => s.push_str(&format!(
+                "nothing fits: every evaluated point exceeds the {:.1} GiB HBM budget; \
+                 smallest overage {:.2} GiB at {} P={} M={} V={} depth={} blocks={} \
+                 (high-water mark {:.2} GiB)\n",
+                p.fit.hbm / GIB,
+                p.fit.overage() / GIB,
+                p.scheme.name(),
+                p.stages,
+                p.microbatches,
+                p.interleave,
+                p.depth,
+                p.blocks,
+                p.fit.total() / GIB,
+            )),
+            None => {
+                s.push_str("nothing fits: the search space was empty (every combination was illegal)\n")
+            }
+        }
+        return s;
+    }
+    let mut t = Table::new(&[
+        "rank",
+        "scheme",
+        "P",
+        "M",
+        "V",
+        "depth",
+        "blocks",
+        "step (s)",
+        "TFLOPS/GCD",
+        "mem (GiB)",
+        "headroom (GiB)",
+    ])
+    .title(title.to_string())
+    .left_first();
+    for (i, p) in outcome.ranked.iter().take(top.max(1)).enumerate() {
+        t.row(vec![
+            format!("#{}", i + 1),
+            p.scheme.name(),
+            p.stages.to_string(),
+            p.microbatches.to_string(),
+            p.interleave.to_string(),
+            p.depth.to_string(),
+            p.blocks.to_string(),
+            fnum(p.step_s, 3),
+            fnum(p.tflops_per_gcd, 2),
+            fnum(p.fit.total() / GIB, 2),
+            fnum(p.fit.headroom() / GIB, 2),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "searched {} points: {} feasible, {} infeasible (pruned before pricing), {} skipped (illegal)\n",
+        outcome.evaluated() + outcome.skipped,
+        outcome.ranked.len(),
+        outcome.pruned.len(),
+        outcome.skipped,
+    ));
+    out
+}
+
+/// Render the capacity frontier: per scheme, the largest model the swept
+/// schedules admit on this machine at this world size
+/// (`MemoryFit::max_model_params` maximized over the sweep).
+pub fn render_capacity_frontier(
+    title: &str,
+    outcome: &crate::sim::plan::PlanOutcome,
+) -> String {
+    let mut t = Table::new(&["scheme", "max model (B params)"])
+        .title(title.to_string())
+        .left_first();
+    for (scheme, cap) in &outcome.frontier {
+        t.row(vec![scheme.name(), fnum(cap / 1e9, 1)]);
+    }
+    let mut out = t.render();
+    out.push_str(
+        "capacity = largest Ψ whose states + gather window + in-flight activations fit HBM, \
+         maximized over the swept schedules\n",
+    );
+    out
+}
+
+/// Markdown twin of [`render_capacity_frontier`] for CI step summaries
+/// (same append-only contract as `calibrate --md`).
+pub fn capacity_frontier_markdown(
+    title: &str,
+    outcome: &crate::sim::plan::PlanOutcome,
+) -> String {
+    let mut s = format!("### {title}\n\n| scheme | max model (B params) |\n|---|---|\n");
+    for (scheme, cap) in &outcome.frontier {
+        s.push_str(&format!("| {} | {:.1} |\n", scheme.name(), cap / 1e9));
+    }
+    s.push('\n');
+    s
+}
+
 /// CSV with one row per (scheme, scale) for plotting.
 pub fn scaling_csv(series: &[ScalingSeries]) -> String {
     let mut out = String::from("scheme,gcds,tflops_per_gpu,samples_per_sec,efficiency\n");
@@ -724,6 +835,75 @@ step 4.000s over 2 critical tasks; bound by comm B_inter (node-node); conservati
         assert!(out.lines().any(|l| l.contains("secondary degree") && l.ends_with("- |")), "{out}");
         assert!(out.contains("base step 33.501s"), "{out}");
         assert!(out.contains("eps=0.05"), "{out}");
+    }
+
+    #[test]
+    fn renders_plan_tables_and_empty_guard() {
+        use crate::memory::MemoryFit;
+        use crate::sched::Depth;
+        use crate::sim::plan::{PlanOutcome, PlanPoint, PrunedPoint};
+        let fit = MemoryFit {
+            scheme: Scheme::Zero3,
+            psi: 1e9,
+            stage: 0,
+            weights: 1e9,
+            secondary: 0.0,
+            grads: 1e9,
+            optim: 2e9,
+            gather_window: 2e9,
+            activations: 1e8,
+            hbm: 64e9,
+        };
+        let point = PlanPoint {
+            scheme: Scheme::Zero3,
+            depth: Depth::Bounded(2),
+            blocks: 44,
+            stages: 1,
+            microbatches: 3,
+            interleave: 1,
+            fit,
+            step_s: 12.97,
+            tokens_per_step: 2.4e6,
+            tflops_per_gcd: 61.0,
+        };
+        let outcome = PlanOutcome {
+            ranked: vec![point],
+            pruned: vec![],
+            skipped: 2,
+            frontier: vec![(Scheme::Zero3, 55e9)],
+        };
+        let out = render_plan_table("plan", &outcome, 5);
+        assert!(out.contains("#1") && out.contains("ZeRO-3"), "{out}");
+        assert!(out.contains("1 feasible") && out.contains("2 skipped"), "{out}");
+        let cf = render_capacity_frontier("frontier", &outcome);
+        assert!(cf.contains("55.0"), "{cf}");
+        let md = capacity_frontier_markdown("frontier", &outcome);
+        assert!(md.starts_with("### frontier"), "{md}");
+        assert!(md.contains("| ZeRO-3 | 55.0 |"), "{md}");
+        // empty feasible set: the "nothing fits" diagnosis, not a panic
+        let over = MemoryFit { gather_window: 80e9, ..fit };
+        let empty = PlanOutcome {
+            ranked: vec![],
+            pruned: vec![PrunedPoint {
+                scheme: Scheme::Zero3,
+                depth: Depth::Infinite,
+                blocks: 1,
+                stages: 1,
+                microbatches: 3,
+                interleave: 1,
+                fit: over,
+            }],
+            skipped: 0,
+            frontier: vec![],
+        };
+        let out = render_plan_table("plan", &empty, 5);
+        assert!(out.contains("nothing fits"), "{out}");
+        assert!(out.contains("smallest overage"), "{out}");
+        // fully illegal space: still a message, never an empty table
+        let none =
+            PlanOutcome { ranked: vec![], pruned: vec![], skipped: 4, frontier: vec![] };
+        let out = render_plan_table("plan", &none, 5);
+        assert!(out.contains("search space was empty"), "{out}");
     }
 
     #[test]

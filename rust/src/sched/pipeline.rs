@@ -708,6 +708,37 @@ pub fn split_even(n: usize, chunks: usize) -> Vec<usize> {
     (0..chunks).map(|c| base + usize::from(c < extra)).collect()
 }
 
+/// Upper bound on the microbatch chunks stage `stage` holds live
+/// activations for under the 1F1B / interleaved schedule: warmup depth
+/// plus the one chunk in flight (`v = 1`: the textbook `P − s` bound;
+/// `v > 1`: `2(P−1−s) + (V−1)P + 1`), capped at the `M·V` chunks the
+/// stage runs per step. `microbatches = 0` means "not yet resolved" and
+/// keeps the uncapped steady-state bound (`M ≥ P` assumed). `P = 1`
+/// degenerates to 1: data-parallel runs one microbatch's forward +
+/// backward at a time. This is the activation term of the
+/// schedule-aware memory ledger ([`crate::memory::fit_report`],
+/// DESIGN.md §15); the warmup formulas mirror `stage_order` exactly.
+pub fn in_flight_chunks(
+    stages: usize,
+    microbatches: usize,
+    interleave: usize,
+    stage: usize,
+) -> usize {
+    let p = stages.max(1);
+    if p == 1 {
+        return 1;
+    }
+    let s = stage.min(p - 1);
+    let v = interleave.max(1);
+    let warmup = if v == 1 { p - 1 - s } else { 2 * (p - 1 - s) + (v - 1) * p };
+    let in_flight = warmup + 1;
+    if microbatches > 0 {
+        in_flight.min(microbatches * v).max(1)
+    } else {
+        in_flight
+    }
+}
+
 /// Even `u64` parameter split for callers that know only a flat total
 /// (the engine's proxy manifests): near-even like [`split_even`], summing
 /// exactly to `total`.
@@ -1012,5 +1043,25 @@ mod tests {
         assert!((PipelinePlan::ideal_bubble(4, 8, 1) - 3.0 / 11.0).abs() < 1e-15);
         assert!((PipelinePlan::ideal_bubble(4, 8, 2) - 3.0 / 19.0).abs() < 1e-15);
         assert!((PipelinePlan::ideal_bubble(4, 1, 1) - 0.75).abs() < 1e-15);
+    }
+
+    #[test]
+    fn in_flight_chunks_matches_1f1b_bound() {
+        // textbook 1F1B: stage s holds min(P - s, M) microbatches
+        for s in 0..4 {
+            assert_eq!(in_flight_chunks(4, 8, 1, s), 4 - s);
+        }
+        // M caps the bound (short pipelines can't fill the warmup)
+        assert_eq!(in_flight_chunks(4, 2, 1, 0), 2);
+        // M = 0 (unresolved) keeps the steady-state bound
+        assert_eq!(in_flight_chunks(4, 0, 1, 0), 4);
+        // P = 1: one microbatch's activations at a time
+        assert_eq!(in_flight_chunks(1, 8, 1, 0), 1);
+        assert_eq!(in_flight_chunks(1, 0, 4, 0), 1);
+        // interleaved: warmup 2(P-1-s) + (V-1)P, plus the one in flight
+        assert_eq!(in_flight_chunks(4, 8, 2, 0), 2 * 3 + 4 + 1);
+        assert_eq!(in_flight_chunks(4, 8, 2, 3), 4 + 1);
+        // never exceeds the M*V chunks a stage runs
+        assert_eq!(in_flight_chunks(4, 2, 2, 0), 4);
     }
 }

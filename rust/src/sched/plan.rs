@@ -417,6 +417,30 @@ impl StepPlan {
     }
 }
 
+/// Largest parameter count simultaneously live on the gather stream: the
+/// maximum sum of `d + 1` consecutive entries of `block_elems` under
+/// [`Depth::Bounded`]`(d)` (the block being consumed plus up to `d`
+/// prefetched ahead of the compute cursor — the gate in
+/// [`StepPlan::build`]), or the whole model under [`Depth::Infinite`].
+/// A monolithic split (`block_elems.len() == 1`) returns the full
+/// parameter count at any depth: the one gather materializes everything.
+/// This is the window term of the schedule-aware memory ledger
+/// ([`crate::memory::fit_report`], DESIGN.md §15).
+pub fn gather_window_params(block_elems: &[u64], depth: Depth) -> u64 {
+    if block_elems.is_empty() {
+        return 0;
+    }
+    let w = match depth {
+        Depth::Infinite => block_elems.len(),
+        Depth::Bounded(d) => d.saturating_add(1).min(block_elems.len()),
+    };
+    block_elems
+        .windows(w)
+        .map(|win| win.iter().sum::<u64>())
+        .max()
+        .unwrap_or(0)
+}
+
 /// Split the plan's per-microbatch gather times over contiguous layer
 /// blocks: price each block's all-gather on its own wire bytes via
 /// [`CostModel::priced_all_gather`], then rescale so the block times sum
@@ -685,5 +709,33 @@ mod tests {
             .simulate()
             .makespan();
         assert!((lay - mono).abs() <= 0.01 * mono, "{lay} vs {mono}");
+    }
+
+    #[test]
+    fn gather_window_params_formula() {
+        let blocks = [4u64, 1, 3, 2];
+        // depth 0: the single largest block
+        assert_eq!(gather_window_params(&blocks, Depth::Bounded(0)), 4);
+        // depth 1: best 2-window is [4,1] vs [1,3] vs [3,2] -> 5
+        assert_eq!(gather_window_params(&blocks, Depth::Bounded(1)), 5);
+        // depth >= len-1 and infinite both cover everything
+        assert_eq!(gather_window_params(&blocks, Depth::Bounded(3)), 10);
+        assert_eq!(gather_window_params(&blocks, Depth::Bounded(99)), 10);
+        assert_eq!(gather_window_params(&blocks, Depth::Infinite), 10);
+        // monolithic split: full model at any depth
+        assert_eq!(gather_window_params(&[10], Depth::Bounded(0)), 10);
+        assert_eq!(gather_window_params(&[], Depth::Infinite), 0);
+    }
+
+    #[test]
+    fn gather_window_monotone_in_depth() {
+        let blocks: Vec<u64> = (1..=44).map(|i| 1000 + (i % 7) * 37).collect();
+        let mut prev = 0;
+        for d in 0..48 {
+            let w = gather_window_params(&blocks, Depth::Bounded(d));
+            assert!(w >= prev, "depth {d}: {w} < {prev}");
+            prev = w;
+        }
+        assert_eq!(prev, gather_window_params(&blocks, Depth::Infinite));
     }
 }

@@ -59,6 +59,8 @@ use crate::sched::{Depth, Schedule};
 use crate::sharding::{shard_groups, Scheme, ShardingSpec};
 use crate::topology::{Cluster, MachineSpec};
 
+pub mod plan;
+
 /// Simulation parameters. Defaults carry the calibration against the
 /// paper's measured 20B @ 384-GCD ratios.
 #[derive(Debug, Clone)]

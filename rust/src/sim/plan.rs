@@ -1,0 +1,427 @@
+//! The feasibility-aware auto-planner (DESIGN.md §15): sweep the joint
+//! schedule space (scheme × prefetch depth × layer blocks × P × M × V),
+//! prune every point whose [`crate::memory::fit_report`] ledger exceeds
+//! the device HBM **before** pricing anything, then price the survivors
+//! through the exact simulation entry points the CLI uses
+//! ([`simulate_step`] / [`simulate_step_pipeline`]) and rank them by
+//! token-normalized throughput (TFLOPS/GCD — raw step seconds would
+//! falsely favor small-`M` pipelines that run fewer tokens per step).
+//!
+//! The sweep is deliberately exhaustive over the user's bounds rather
+//! than heuristic: at the default bounds it is a few hundred cheap
+//! simulations, and every pruned point carries its full byte ledger so
+//! "why not X?" is always answerable.
+
+use crate::memory::{fit_report, FitConfig, MemoryFit};
+use crate::model::TransformerSpec;
+use crate::sched::pipeline::PipeConfig;
+use crate::sched::Depth;
+use crate::sharding::Scheme;
+use crate::topology::Cluster;
+
+use super::{simulate_step, simulate_step_pipeline, SimConfig};
+
+/// Bounds of the planner's sweep: the cartesian product of these axes is
+/// enumerated (pipeline axes only combine with `stages > 1`; the
+/// data-parallel axis `stages == 1` combines with `depths × blocks`).
+#[derive(Debug, Clone)]
+pub struct PlanSpace {
+    /// Candidate schemes (expand `ZeroTopo { sec_degree: 0 }` yourself
+    /// if you want one candidate per machine level — the CLI does).
+    pub schemes: Vec<Scheme>,
+    /// Prefetch depths to try (gather units / layer blocks ahead).
+    pub depths: Vec<Depth>,
+    /// Layer-block splits to try at `P = 1` (1 = monolithic).
+    pub blocks: Vec<usize>,
+    /// Pipeline stage counts to try (1 = pure data-parallel).
+    pub stages: Vec<usize>,
+    /// Microbatch counts `M` to try at `P > 1` (0 = derive from the
+    /// global batch, exactly like `pipeline --microbatches 0`).
+    pub microbatches: Vec<usize>,
+    /// Interleave factors `V` to try at `P > 1`.
+    pub interleaves: Vec<usize>,
+}
+
+impl PlanSpace {
+    /// The default bounds for `schemes` on `model`: depths {1, 2, ∞},
+    /// blocks {1, one-per-layer}, P {1, 2, 4, 8}, M {derived, 8, 16,
+    /// 32}, V {1, 2}.
+    pub fn default_for(schemes: Vec<Scheme>, model: &TransformerSpec) -> PlanSpace {
+        PlanSpace {
+            schemes,
+            depths: vec![Depth::Bounded(1), Depth::Bounded(2), Depth::Infinite],
+            blocks: vec![1, model.n_layers.max(1)],
+            stages: vec![1, 2, 4, 8],
+            microbatches: vec![0, 8, 16, 32],
+            interleaves: vec![1, 2],
+        }
+    }
+}
+
+/// One feasible, priced point of the sweep.
+#[derive(Debug, Clone)]
+pub struct PlanPoint {
+    /// The scheme at this point.
+    pub scheme: Scheme,
+    /// Prefetch depth used.
+    pub depth: Depth,
+    /// Layer blocks per microbatch gather (1 = monolithic; always 1
+    /// when `stages > 1`).
+    pub blocks: usize,
+    /// Pipeline stages `P`.
+    pub stages: usize,
+    /// Resolved microbatches per step: `M` for pipelines, the derived
+    /// grad-accum for `P = 1`.
+    pub microbatches: usize,
+    /// Interleave factor `V`.
+    pub interleave: usize,
+    /// The schedule-aware memory ledger that admitted the point.
+    pub fit: MemoryFit,
+    /// Simulated step seconds (event-clock makespan).
+    pub step_s: f64,
+    /// Global tokens processed per optimizer step.
+    pub tokens_per_step: f64,
+    /// Token-normalized model throughput per GCD — the ranking
+    /// objective.
+    pub tflops_per_gcd: f64,
+}
+
+impl PlanPoint {
+    /// Global tokens per second per GCD (an alternative normalization;
+    /// proportional to [`PlanPoint::tflops_per_gcd`] for a fixed model).
+    pub fn tokens_per_s_per_gcd(&self, world: usize) -> f64 {
+        self.tokens_per_step / self.step_s / world.max(1) as f64
+    }
+}
+
+/// A point the planner refused to price: its ledger exceeds HBM. The
+/// full [`MemoryFit`] is kept so the overage is provable per component.
+#[derive(Debug, Clone)]
+pub struct PrunedPoint {
+    /// The scheme at this point.
+    pub scheme: Scheme,
+    /// Prefetch depth requested.
+    pub depth: Depth,
+    /// Layer blocks requested.
+    pub blocks: usize,
+    /// Pipeline stages `P`.
+    pub stages: usize,
+    /// Resolved microbatches per step.
+    pub microbatches: usize,
+    /// Interleave factor `V`.
+    pub interleave: usize,
+    /// The over-budget ledger (its `overage()` is `> 0` by
+    /// construction).
+    pub fit: MemoryFit,
+}
+
+/// Result of a [`plan_search`] sweep.
+#[derive(Debug, Clone)]
+pub struct PlanOutcome {
+    /// Feasible points, best first (see [`plan_search`] for the exact
+    /// tie-break order).
+    pub ranked: Vec<PlanPoint>,
+    /// Infeasible points, pruned before pricing, smallest overage first.
+    pub pruned: Vec<PrunedPoint>,
+    /// Combinations rejected as illegal before the memory ledger was
+    /// even consulted (`P` not dividing the nodes, `M % P != 0` under
+    /// interleaving, a scheme that cannot resolve on the stage group).
+    pub skipped: usize,
+    /// Capacity frontier: for each scheme, the largest model (total
+    /// parameters Ψ) any swept schedule admits on this machine at this
+    /// world size, per the ledger's closed form
+    /// ([`MemoryFit::max_model_params`]).
+    pub frontier: Vec<(Scheme, f64)>,
+}
+
+impl PlanOutcome {
+    /// The fastest feasible point, if anything fit.
+    pub fn winner(&self) -> Option<&PlanPoint> {
+        self.ranked.first()
+    }
+
+    /// Points evaluated through the memory ledger (feasible + pruned).
+    pub fn evaluated(&self) -> usize {
+        self.ranked.len() + self.pruned.len()
+    }
+
+    /// When nothing fits: the pruned point closest to fitting, so the
+    /// "nothing fits, smallest overage X GiB" message can name it.
+    pub fn smallest_overage(&self) -> Option<&PrunedPoint> {
+        self.pruned.first()
+    }
+}
+
+fn depth_key(d: Depth) -> usize {
+    match d {
+        Depth::Bounded(x) => x,
+        Depth::Infinite => usize::MAX,
+    }
+}
+
+/// Sweep `space` for `(model, cluster)` under the simulation parameters
+/// in `cfg` (`cfg.prefetch_depth` / `cfg.layer_blocks` are overridden
+/// per point; everything else — micro-batch, global batch, MFU,
+/// efficiency, quant block — is held fixed).
+///
+/// Every combination is first run through [`fit_report`]; only points
+/// whose ledger fits the per-device HBM are simulated. Feasible points
+/// are ranked by `tflops_per_gcd` descending, ties broken by: smaller
+/// memory high-water mark, fewer pipeline stages, fewer layer blocks,
+/// shallower prefetch depth, scheme name — i.e. among equally fast
+/// points the planner prefers the simplest, most frugal schedule
+/// (DESIGN.md §15).
+pub fn plan_search(
+    model: &TransformerSpec,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+    space: &PlanSpace,
+) -> PlanOutcome {
+    let world = cluster.world_size();
+    let tokens_per_micro = (cfg.micro_batch * model.seq) as f64;
+    let total_psi = model.n_params() as f64;
+
+    let mut ranked: Vec<PlanPoint> = Vec::new();
+    let mut pruned: Vec<PrunedPoint> = Vec::new();
+    let mut skipped = 0usize;
+    let mut frontier: Vec<(Scheme, f64)> = Vec::new();
+
+    let mut note_frontier = |scheme: Scheme, cap: f64| match frontier
+        .iter_mut()
+        .find(|(s, _)| *s == scheme)
+    {
+        Some((_, best)) => *best = best.max(cap),
+        None => frontier.push((scheme, cap)),
+    };
+
+    for &scheme in &space.schemes {
+        for &p in &space.stages {
+            let p = p.max(1);
+            if cluster.nodes % p != 0 {
+                // stages are whole node groups: every sub-combo is illegal
+                skipped += if p == 1 {
+                    space.depths.len() * space.blocks.len()
+                } else {
+                    space.depths.len() * space.microbatches.len() * space.interleaves.len()
+                };
+                continue;
+            }
+            let dp = world / p;
+            let derived_m =
+                (cfg.global_batch_tokens / (tokens_per_micro * dp as f64)).round().max(1.0)
+                    as usize;
+
+            // (blocks, m, v) sub-axes: DP sweeps blocks, pipelines sweep M × V
+            let combos: Vec<(usize, usize, usize)> = if p == 1 {
+                space.blocks.iter().map(|&b| (b.max(1), derived_m, 1)).collect()
+            } else {
+                let mut c = Vec::new();
+                for &m in &space.microbatches {
+                    for &v in &space.interleaves {
+                        c.push((1, if m > 0 { m } else { derived_m }, v.max(1)));
+                    }
+                }
+                c
+            };
+
+            for &depth in &space.depths {
+                for &(blocks, m, v) in &combos {
+                    if p > 1 && v > 1 && m % p != 0 {
+                        // the interleaved schedule issues microbatches in
+                        // groups of P
+                        skipped += 1;
+                        continue;
+                    }
+                    let fit_cfg = FitConfig {
+                        micro_batch: cfg.micro_batch,
+                        quant_block: cfg.quant_block,
+                        prefetch_depth: depth,
+                        layer_blocks: blocks,
+                        stages: p,
+                        microbatches: m,
+                        interleave: v,
+                    };
+                    let fit = match fit_report(model, scheme, cluster, &fit_cfg) {
+                        Ok(f) => f,
+                        Err(_) => {
+                            skipped += 1;
+                            continue;
+                        }
+                    };
+                    note_frontier(scheme, fit.max_model_params(total_psi));
+                    if !fit.fits() {
+                        pruned.push(PrunedPoint {
+                            scheme,
+                            depth,
+                            blocks,
+                            stages: p,
+                            microbatches: m,
+                            interleave: v,
+                            fit,
+                        });
+                        continue;
+                    }
+                    let mut point_cfg = cfg.clone();
+                    point_cfg.prefetch_depth = depth;
+                    point_cfg.layer_blocks = if p == 1 { blocks } else { 1 };
+                    let (step_s, tokens) = if p == 1 {
+                        let b = simulate_step(model, scheme, cluster, &point_cfg);
+                        let tokens =
+                            b.grad_accum as f64 * tokens_per_micro * world as f64;
+                        (b.step_s, tokens)
+                    } else {
+                        let pipe =
+                            PipeConfig { stages: p, microbatches: m, interleave: v };
+                        match simulate_step_pipeline(
+                            model, scheme, cluster, &point_cfg, &pipe,
+                        ) {
+                            Ok((b, _, _)) => {
+                                (b.step_s, m as f64 * tokens_per_micro * dp as f64)
+                            }
+                            Err(_) => {
+                                skipped += 1;
+                                continue;
+                            }
+                        }
+                    };
+                    if !(step_s.is_finite() && step_s > 0.0) {
+                        // a degenerate simulation must not poison the
+                        // ranking (PR-6 zero-division satellite, planner
+                        // edition)
+                        skipped += 1;
+                        continue;
+                    }
+                    let tflops_per_gcd =
+                        model.flops_per_token() * tokens / step_s / world as f64 / 1e12;
+                    ranked.push(PlanPoint {
+                        scheme,
+                        depth,
+                        blocks,
+                        stages: p,
+                        microbatches: m,
+                        interleave: v,
+                        fit,
+                        step_s,
+                        tokens_per_step: tokens,
+                        tflops_per_gcd,
+                    });
+                }
+            }
+        }
+    }
+
+    ranked.sort_by(|a, b| {
+        b.tflops_per_gcd
+            .partial_cmp(&a.tflops_per_gcd)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| {
+                a.fit
+                    .total()
+                    .partial_cmp(&b.fit.total())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .then_with(|| a.stages.cmp(&b.stages))
+            .then_with(|| a.blocks.cmp(&b.blocks))
+            .then_with(|| depth_key(a.depth).cmp(&depth_key(b.depth)))
+            .then_with(|| a.scheme.name().cmp(&b.scheme.name()))
+    });
+    pruned.sort_by(|a, b| {
+        a.fit
+            .overage()
+            .partial_cmp(&b.fit.overage())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+
+    PlanOutcome { ranked, pruned, skipped, frontier }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> SimConfig {
+        // tiny global batch: derived grad-accum stays small, the sweep
+        // runs in milliseconds
+        SimConfig { global_batch_tokens: (1u64 << 15) as f64, ..SimConfig::default() }
+    }
+
+    fn small_space(schemes: Vec<Scheme>) -> PlanSpace {
+        PlanSpace {
+            schemes,
+            depths: vec![Depth::Bounded(1), Depth::Infinite],
+            blocks: vec![1, 12],
+            stages: vec![1, 2],
+            microbatches: vec![0, 4],
+            interleaves: vec![1, 2],
+        }
+    }
+
+    #[test]
+    fn winner_is_feasible_and_fastest() {
+        let model = TransformerSpec::gpt125m();
+        let cluster = Cluster::frontier(2);
+        let schemes =
+            vec![Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }];
+        let out = plan_search(&model, &cluster, &small_cfg(), &small_space(schemes));
+        let w = out.winner().expect("125m fits everywhere");
+        assert!(w.fit.fits());
+        for pt in &out.ranked {
+            assert!(pt.fit.fits());
+            assert!(pt.tflops_per_gcd <= w.tflops_per_gcd + 1e-12);
+            assert!(pt.step_s.is_finite() && pt.step_s > 0.0);
+        }
+        for pr in &out.pruned {
+            assert!(pr.fit.overage() > 0.0);
+        }
+        // every scheme earned a frontier entry
+        assert_eq!(out.frontier.len(), 3);
+        for &(_, cap) in &out.frontier {
+            assert!(cap > 0.0);
+        }
+    }
+
+    #[test]
+    fn bookkeeping_covers_the_whole_grid() {
+        let model = TransformerSpec::gpt125m();
+        let cluster = Cluster::frontier(2);
+        let space = small_space(vec![Scheme::Zero3]);
+        let out = plan_search(&model, &cluster, &small_cfg(), &space);
+        // P=1: depths×blocks; P=2: depths×M×V; all accounted for
+        let grid = 2 * 2 + 2 * 2 * 2;
+        assert_eq!(out.evaluated() + out.skipped, grid);
+    }
+
+    #[test]
+    fn interleave_requires_divisible_microbatches() {
+        let model = TransformerSpec::gpt125m();
+        let cluster = Cluster::frontier(3);
+        let space = PlanSpace {
+            schemes: vec![Scheme::Zero3],
+            depths: vec![Depth::Infinite],
+            blocks: vec![1],
+            stages: vec![3],
+            microbatches: vec![5],
+            interleaves: vec![2],
+        };
+        let out = plan_search(&model, &cluster, &small_cfg(), &space);
+        assert_eq!(out.skipped, 1);
+        assert_eq!(out.evaluated(), 0);
+    }
+
+    #[test]
+    fn stages_must_divide_nodes() {
+        let model = TransformerSpec::gpt125m();
+        let cluster = Cluster::frontier(2);
+        let space = PlanSpace {
+            schemes: vec![Scheme::Zero3],
+            depths: vec![Depth::Infinite],
+            blocks: vec![1],
+            stages: vec![3],
+            microbatches: vec![0, 4],
+            interleaves: vec![1],
+        };
+        let out = plan_search(&model, &cluster, &small_cfg(), &space);
+        assert_eq!(out.evaluated(), 0);
+        assert_eq!(out.skipped, 2);
+    }
+}

@@ -1,0 +1,251 @@
+//! Integration tests for the feasibility-aware auto-planner
+//! (DESIGN.md §15): the schedule-aware memory ledger (`fit_report`)
+//! must be monotone in the obvious directions, the `plan_search` winner
+//! must be feasible and beat every hand-picked pinned baseline that
+//! fits, and the ledger must degenerate to the static Tables V/VI
+//! accounting when the schedule terms are trivial.
+
+use zero_topo::memory::{fit_report, FitConfig, MemoryModel};
+use zero_topo::model::TransformerSpec;
+use zero_topo::sched::pipeline::PipeConfig;
+use zero_topo::sched::Depth;
+use zero_topo::sharding::{Scheme, ShardingSpec};
+use zero_topo::sim::plan::{plan_search, PlanSpace};
+use zero_topo::sim::{simulate_step, simulate_step_pipeline, SimConfig};
+use zero_topo::topology::{Cluster, MachineSpec};
+
+const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+fn schemes() -> Vec<Scheme> {
+    vec![Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }]
+}
+
+/// The trimmed sweep used by the 20B acceptance tests: covers every
+/// pinned BENCH_baseline.json shape (monolithic ∞-depth DP, pp4 mb8,
+/// pp4 mb32) plus the layered bounded-depth DP points that make
+/// ZeRO-topo feasible.
+fn acceptance_space(model: &TransformerSpec) -> PlanSpace {
+    PlanSpace {
+        schemes: schemes(),
+        depths: vec![Depth::Bounded(2), Depth::Infinite],
+        blocks: vec![1, model.n_layers.max(1)],
+        stages: vec![1, 4],
+        microbatches: vec![0, 8, 32],
+        interleaves: vec![1],
+    }
+}
+
+/// Growing the HBM budget can only grow the feasible set: every point
+/// that fits on stock Frontier must still fit (with identical ledger
+/// bytes) on a Frontier with twice the HBM per GCD.
+#[test]
+fn more_hbm_never_shrinks_the_feasible_set() {
+    let model = TransformerSpec::by_name("20b").unwrap();
+    let small = MachineSpec::resolve("frontier").unwrap();
+    let mut big = small.clone();
+    big.hbm_per_worker *= 2.0;
+    let small = Cluster::new(small, 48);
+    let big = Cluster::new(big, 48);
+
+    let mut feasible_small = 0usize;
+    let mut feasible_big = 0usize;
+    for scheme in schemes() {
+        for &stages in &[1usize, 4] {
+            for &depth in &[Depth::Bounded(1), Depth::Bounded(2), Depth::Infinite] {
+                for &blocks in &[1usize, 44] {
+                    let cfg = FitConfig {
+                        prefetch_depth: depth,
+                        layer_blocks: blocks,
+                        stages,
+                        microbatches: 8,
+                        ..FitConfig::default()
+                    };
+                    let a = fit_report(&model, scheme, &small, &cfg).unwrap();
+                    let b = fit_report(&model, scheme, &big, &cfg).unwrap();
+                    // the ledger is budget-independent; only the verdict moves
+                    assert!((a.total() - b.total()).abs() < 1e-6);
+                    if a.fits() {
+                        assert!(b.fits(), "{} fits 64G but not 128G?!", scheme.name());
+                    }
+                    feasible_small += a.fits() as usize;
+                    feasible_big += b.fits() as usize;
+                }
+            }
+        }
+    }
+    assert!(feasible_big >= feasible_small);
+    // 2x HBM must actually unlock something on 20B (the monolithic
+    // ZeRO-topo window, for one)
+    assert!(feasible_big > feasible_small);
+}
+
+/// A deeper prefetch window can only grow the gather-window term — and
+/// with it the ledger total. Monotone non-decreasing in depth.
+#[test]
+fn deeper_window_never_shrinks_the_ledger() {
+    let model = TransformerSpec::by_name("20b").unwrap();
+    let cluster = Cluster::frontier(48);
+    for scheme in schemes() {
+        let mut prev = 0.0f64;
+        for d in 0..=44usize {
+            let cfg = FitConfig {
+                prefetch_depth: Depth::Bounded(d),
+                layer_blocks: 44,
+                ..FitConfig::default()
+            };
+            let fit = fit_report(&model, scheme, &cluster, &cfg).unwrap();
+            assert!(
+                fit.total() >= prev - 1e-9,
+                "{} depth {d} shrank the ledger",
+                scheme.name()
+            );
+            prev = fit.total();
+        }
+        // Bounded(>= blocks-1) saturates at the Infinite-depth ledger
+        let inf = FitConfig {
+            prefetch_depth: Depth::Infinite,
+            layer_blocks: 44,
+            ..FitConfig::default()
+        };
+        let inf = fit_report(&model, scheme, &cluster, &inf).unwrap();
+        assert!((inf.total() - prev).abs() < 1e-6);
+    }
+}
+
+/// The winner of a small exhaustive grid is feasible, is ranked first,
+/// and re-simulating it independently reproduces its quoted step time
+/// bit-for-bit (the CI smoke gate relies on this).
+#[test]
+fn winner_is_feasible_and_re_simulates_exactly() {
+    let model = TransformerSpec::by_name("125m").unwrap();
+    let cluster = Cluster::frontier(2);
+    let cfg = SimConfig { global_batch_tokens: (1u64 << 15) as f64, ..SimConfig::default() };
+    let space = PlanSpace {
+        schemes: schemes(),
+        depths: vec![Depth::Bounded(1), Depth::Infinite],
+        blocks: vec![1, 12],
+        stages: vec![1, 2],
+        microbatches: vec![0, 4],
+        interleaves: vec![1, 2],
+    };
+    let out = plan_search(&model, &cluster, &cfg, &space);
+    let w = out.winner().expect("125m fits a 2-node frontier");
+    assert!(w.fit.fits());
+    for p in &out.ranked {
+        assert!(p.tflops_per_gcd <= w.tflops_per_gcd + 1e-12);
+    }
+    // independent re-simulation of the winner: 0.0 drift
+    let mut re_cfg = cfg.clone();
+    re_cfg.prefetch_depth = w.depth;
+    re_cfg.layer_blocks = if w.stages == 1 { w.blocks } else { 1 };
+    let step_s = if w.stages == 1 {
+        simulate_step(&model, w.scheme, &cluster, &re_cfg).step_s
+    } else {
+        let pipe = PipeConfig {
+            stages: w.stages,
+            microbatches: w.microbatches,
+            interleave: w.interleave,
+        };
+        simulate_step_pipeline(&model, w.scheme, &cluster, &re_cfg, &pipe).unwrap().0.step_s
+    };
+    assert_eq!(step_s, w.step_s, "winner must re-simulate bit-for-bit");
+}
+
+/// The 20B @ 48-node Frontier acceptance claim (ISSUE 8): the planner's
+/// winner is at least as fast (token-normalized) as every hand-picked
+/// pinned BENCH_baseline.json configuration **that fits** the
+/// schedule-aware ledger — and the one pinned config that does *not*
+/// fit (monolithic free-running ZeRO-topo DP) is provably over budget.
+#[test]
+fn planner_beats_every_fitting_pinned_baseline_20b_frontier() {
+    let model = TransformerSpec::by_name("20b").unwrap();
+    let cluster = Cluster::frontier(48);
+    let world = cluster.world_size() as f64;
+    let cfg = SimConfig::default();
+    let out = plan_search(&model, &cluster, &cfg, &acceptance_space(&model));
+    let w = out.winner().expect("something must fit 20B on 384 GCDs");
+    assert!(w.fit.fits());
+    // the winner restores the paper's ZeRO-topo operating point under the
+    // ledger: layer-granular gathers with a depth-2 window make the DP
+    // schedule fit (≈38 GiB high-water) at full DP throughput, where the
+    // monolithic free-running pin (pruned below) would not
+    assert_eq!(w.scheme, Scheme::ZeroTopo { sec_degree: 2 });
+    assert_eq!(w.stages, 1);
+    assert_eq!(w.blocks, 44);
+    assert_eq!(w.depth, Depth::Bounded(2));
+    assert!(w.step_s > 12.0 && w.step_s < 14.0, "winner step {}", w.step_s);
+
+    // the pinned DP entries: monolithic, free-running prefetch
+    for scheme in schemes() {
+        let fit =
+            fit_report(&model, scheme, &cluster, &FitConfig::default()).unwrap();
+        if !fit.fits() {
+            // documented planner-vs-paper disagreement: the monolithic
+            // ZeRO-topo DP pin keeps the full fp16 model live on top of
+            // its secondary copy — over budget on a 64 GB MI250X GCD
+            assert_eq!(scheme, Scheme::ZeroTopo { sec_degree: 2 });
+            assert!(fit.overage() > 10.0 * GIB);
+            continue;
+        }
+        let b = simulate_step(&model, scheme, &cluster, &cfg);
+        let tokens = b.grad_accum as f64 * model.seq as f64 * world;
+        let tflops = model.flops_per_token() * tokens / b.step_s / world / 1e12;
+        assert!(
+            w.tflops_per_gcd >= tflops - 1e-9,
+            "winner ({:.2}) slower than pinned {} DP ({:.2})",
+            w.tflops_per_gcd,
+            scheme.name(),
+            tflops
+        );
+    }
+
+    // the pinned pipeline entries: ZeRO-topo pp4, mb 8 and 32
+    for mb in [8usize, 32] {
+        let scheme = Scheme::ZeroTopo { sec_degree: 2 };
+        let fit_cfg = FitConfig { stages: 4, microbatches: mb, ..FitConfig::default() };
+        let fit = fit_report(&model, scheme, &cluster, &fit_cfg).unwrap();
+        assert!(fit.fits(), "pinned pp4 mb{mb} should fit");
+        let pipe = PipeConfig { stages: 4, microbatches: mb, interleave: 1 };
+        let b = simulate_step_pipeline(&model, scheme, &cluster, &cfg, &pipe).unwrap().0;
+        let tokens = mb as f64 * model.seq as f64 * (world / 4.0);
+        let tflops = model.flops_per_token() * tokens / b.step_s / world / 1e12;
+        assert!(
+            w.tflops_per_gcd >= tflops - 1e-9,
+            "winner ({:.2}) slower than pinned pp4 mb{mb} ({:.2})",
+            w.tflops_per_gcd,
+            tflops
+        );
+    }
+
+    // every pruned point is provably over budget, per its own ledger
+    for p in &out.pruned {
+        assert!(p.fit.overage() > 0.0);
+        assert!(p.fit.total() > p.fit.hbm);
+    }
+}
+
+/// With trivial schedule terms (P = 1, one block, depth ∞) the ledger's
+/// state bytes are exactly the static Tables V/VI accounting, the
+/// window is the full fp16 model, and activations are one microbatch
+/// through every layer.
+#[test]
+fn fit_report_degenerates_to_static_accounting() {
+    let model = TransformerSpec::by_name("20b").unwrap();
+    let cluster = Cluster::frontier(48);
+    let psi = model.n_params() as f64;
+    for scheme in schemes() {
+        let fit =
+            fit_report(&model, scheme, &cluster, &FitConfig::default()).unwrap();
+        let mm = MemoryModel::new(scheme, ShardingSpec::resolve(scheme, &cluster).unwrap());
+        let st = mm.per_device(psi);
+        assert!((fit.weights - st.weights).abs() < 1e-6);
+        assert!((fit.secondary - st.secondary).abs() < 1e-6);
+        assert!((fit.grads - st.grads).abs() < 1e-6);
+        assert!((fit.optim - st.optim).abs() < 1e-6);
+        assert!((fit.state_bytes() - st.total()).abs() < 1e-6);
+        // monolithic free-running window: the whole fp16 model, live
+        assert!((fit.gather_window - 2.0 * psi).abs() < 1e-6);
+        let act = model.n_layers as f64 * model.activation_bytes(1) as f64;
+        assert!((fit.activations - act).abs() < 1e-6);
+    }
+}
