@@ -1,0 +1,151 @@
+//! Event-loop wall-time bench (ISSUE 9): tasks/s of the optimized arena
+//! engine (`sched::simulate`) vs the preserved map-based reference
+//! (`sched::reference::simulate_reference`) on three graph families —
+//! the small pinned 384-GCD DP worlds, the pinned P=4 pipeline worlds,
+//! and a 48-modeled-rank × 44-block × P=4 stress pair. Prints benchkit
+//! lines plus a markdown table (CI tees it into $GITHUB_STEP_SUMMARY;
+//! EXPERIMENTS.md §Event-loop speed records the before/after numbers).
+//! Every timed graph is first checked for bit-identical makespans
+//! across the two loops, so the bench cannot race ahead of correctness.
+
+use zero_topo::comm::cost::{CommEfficiency, CostModel};
+use zero_topo::model::TransformerSpec;
+use zero_topo::sched::multi::MultiRankPlan;
+use zero_topo::sched::pipeline::{even_chunk_params, PipeConfig, PipelinePlan};
+use zero_topo::sched::plan::StepPlan;
+use zero_topo::sched::reference::simulate_reference;
+use zero_topo::sched::scenario::{RankCount, Scenario};
+use zero_topo::sched::{simulate, Depth, TaskGraph};
+use zero_topo::sharding::{Scheme, ShardingSpec};
+use zero_topo::sim::{simulate_step_pipeline, simulate_step_schedule, SimConfig};
+use zero_topo::topology::Cluster;
+use zero_topo::util::benchkit::{black_box, report, time_fn};
+
+/// 48 modeled ranks × 44 layer blocks under jitter: the multi-rank
+/// stress shape from ISSUE 9 (many streams, shared gradient domains,
+/// cross-rank sync chains).
+fn stress_multirank() -> TaskGraph {
+    let model = TransformerSpec::neox20b();
+    let cluster = Cluster::frontier(48);
+    let cost = CostModel::with_efficiency(cluster.clone(), CommEfficiency::rccl_frontier());
+    let scheme = Scheme::ZeroTopo { sec_degree: 2 };
+    let spec = ShardingSpec::resolve(scheme, &cluster).expect("zerotopo resolves at 48 nodes");
+    let blocks = even_chunk_params(model.n_params() as u64, 44);
+    let plan = StepPlan::from_protocol_layered(
+        &cost,
+        scheme,
+        &spec,
+        &blocks,
+        256,
+        2,
+        1.0,
+        Depth::Bounded(2),
+    );
+    let scenario = Scenario {
+        ranks: RankCount::Count(48),
+        jitter_sigma: 0.05,
+        seed: 42,
+        ..Default::default()
+    };
+    MultiRankPlan::new(&plan, &cluster, &scenario).build()
+}
+
+/// P=4 × M=32 layered 1F1B pipeline at 48 nodes — the other half of the
+/// ISSUE 9 stress pair.
+fn stress_pipeline() -> TaskGraph {
+    let model = TransformerSpec::neox20b();
+    let cluster = Cluster::frontier(48);
+    let cost = CostModel::with_efficiency(cluster.clone(), CommEfficiency::rccl_frontier());
+    let pipe = PipeConfig { stages: 4, microbatches: 32, interleave: 1 };
+    let chunks = even_chunk_params(model.n_params() as u64, 4);
+    PipelinePlan::from_protocol(
+        &cost,
+        Scheme::ZeroTopo { sec_degree: 2 },
+        &pipe,
+        &chunks,
+        256,
+        1 << 22,
+        1.0,
+        Depth::Bounded(2),
+        true,
+    )
+    .expect("stress pipeline plan builds")
+    .build()
+}
+
+struct Row {
+    name: &'static str,
+    tasks: usize,
+    ref_tps: f64,
+    opt_tps: f64,
+}
+
+fn bench_graph(name: &'static str, graph: TaskGraph, iters: usize) -> Row {
+    // correctness first: both loops must agree on this exact graph
+    let mk_ref = simulate_reference(graph.clone()).makespan();
+    let mk_opt = simulate(graph.clone()).makespan();
+    assert_eq!(mk_ref.to_bits(), mk_opt.to_bits(), "{name}: loops diverged");
+
+    let tasks = graph.len();
+    let g1 = graph.clone();
+    let s_ref = time_fn(2, iters, || {
+        black_box(simulate_reference(g1.clone()).makespan());
+    });
+    let s_opt = time_fn(2, iters, || {
+        black_box(simulate(graph.clone()).makespan());
+    });
+    report(&format!("{name} / reference"), &s_ref, None);
+    report(&format!("{name} / optimized"), &s_opt, None);
+    Row { name, tasks, ref_tps: tasks as f64 / s_ref.mean, opt_tps: tasks as f64 / s_opt.mean }
+}
+
+fn main() {
+    let model = TransformerSpec::neox20b();
+    let cfg = SimConfig::default();
+    let frontier = Cluster::frontier(48);
+
+    let mut rows = Vec::new();
+
+    // small pinned 384-GCD DP worlds (the calibrate pins)
+    for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 0 }] {
+        let (_, sched) = simulate_step_schedule(&model, scheme, &frontier, &cfg);
+        let name: &'static str = match scheme {
+            Scheme::Zero3 => "pin frontier/zero3",
+            Scheme::ZeroPP => "pin frontier/zeropp",
+            _ => "pin frontier/zerotopo",
+        };
+        rows.push(bench_graph(name, sched.graph().clone(), 500));
+    }
+    // pinned P=4 pipeline worlds
+    for (mb, name) in [(8usize, "pin pp4/mb8"), (32, "pin pp4/mb32")] {
+        let pipe = PipeConfig { stages: 4, microbatches: mb, interleave: 1 };
+        let (_, sched, _) = simulate_step_pipeline(
+            &model,
+            Scheme::ZeroTopo { sec_degree: 0 },
+            &frontier,
+            &cfg,
+            &pipe,
+        )
+        .expect("pinned pipeline world");
+        rows.push(bench_graph(name, sched.graph().clone(), 100));
+    }
+    // the ISSUE 9 stress pair
+    rows.push(bench_graph("stress 48rk x 44blk", stress_multirank(), 10));
+    rows.push(bench_graph("stress pp4 x mb32 layered", stress_pipeline(), 20));
+
+    println!();
+    println!("### Event-loop speed — reference vs optimized (tasks/s)");
+    println!();
+    println!("| graph | tasks | reference | optimized | speedup |");
+    println!("|---|---|---|---|---|");
+    for r in &rows {
+        println!(
+            "| {} | {} | {:.0} | {:.0} | {:.1}x |",
+            r.name,
+            r.tasks,
+            r.ref_tps,
+            r.opt_tps,
+            r.opt_tps / r.ref_tps
+        );
+    }
+}

@@ -35,10 +35,12 @@ use zero_topo::sched::pipeline::PipeConfig;
 use zero_topo::sched::scenario::{RankCount, Scenario};
 use zero_topo::sched::{trace, Schedule};
 use zero_topo::sharding::{Scheme, ShardingSpec};
-use zero_topo::sim::plan::{plan_search, PlanSpace};
+use zero_topo::sim::par::parallel_map;
+use zero_topo::sim::plan::{plan_search_threaded, PlanSpace};
 use zero_topo::sim::{
-    profile_step, profile_step_pipeline, scaling_series, scaling_series_pipeline,
-    scaling_series_scenario, shadow_prices, simulate_step, simulate_step_pipeline,
+    profile_step, profile_step_pipeline, scaling_series_pipeline_threaded,
+    scaling_series_scenario_threaded, scaling_series_threaded, shadow_prices, simulate_step,
+    simulate_step_pipeline,
     simulate_step_pipeline_scenario, simulate_step_scenario, simulate_step_schedule,
     simulate_step_telemetry, SimConfig, SimProfile,
 };
@@ -68,7 +70,7 @@ JSON (see examples/machines/). Default: frontier.
   plan      [--machine M] [--model 20b] [--nodes 48] [--schemes S,...]
             [--depths 1,2,inf] [--blocks 1,44] [--pp 1,2,4,8]
             [--microbatches 0,8,16,32] [--interleave 1,2] [--mfu F]
-            [--top K] [--json] [--emit-config FILE] [--md FILE]
+            [--top K] [--threads T] [--json] [--emit-config FILE] [--md FILE]
                                             feasibility-aware auto-planner
                                             (DESIGN.md Sec 15): sweep scheme x
                                             depth x blocks x P x M x V, prune
@@ -86,7 +88,10 @@ JSON (see examples/machines/). Default: frontier.
             [--schemes zero3,zeropp,zerotopo] [--depth N|inf] [--ranks N|auto]
             [--layer-granular] [--blocks B] [--pp P] [--microbatches M]
             [--interleave V] [--telemetry out.jsonl] [--prom out.prom]
-            [--stalls] [--trace out.json]   Fig 7/8 scaling (event-driven sim)
+            [--stalls] [--threads T]
+            [--trace out.json]              Fig 7/8 scaling (event-driven sim;
+                                            --threads T prices scales on T
+                                            workers, byte-identical output)
   scale     alias of simulate               cross-scale / cross-machine sweeps
   pipeline  [--machine M] [--model 20b] [--nodes 48] [--schemes S,...]
             [--pp 4] [--microbatches 8] [--interleave 2] [--depth N|inf]
@@ -98,15 +103,17 @@ JSON (see examples/machines/). Default: frontier.
   scenario  [--machine M] [--model 20b] [--nodes 48] [--schemes S,...]
             [--ranks N|auto] [--straggler R:MULT,...] [--jitter SIGMA]
             [--seed S] [--imbalance R:GA,...] [--depth N|inf]
-            [--layer-granular] [--blocks B] [--rank-rows K]
+            [--layer-granular] [--blocks B] [--rank-rows K] [--threads T]
             [--trace out.json]              multi-rank stragglers/jitter study
   calibrate [--check] [--write] [--baseline FILE] [--tolerance 0.01]
             [--md FILE]                     perf guardrail vs BENCH_baseline.json
                                             (incl. pinned P=4 pipeline points);
                                             --md appends the drift table as
                                             markdown (CI: $GITHUB_STEP_SUMMARY);
-                                            also self-profiles the simulator
-                                            (tasks/sec, soft warn-only gate)
+                                            also self-profiles the simulator —
+                                            tasks/sec is a gated column under
+                                            --check (>3x slowdown vs the
+                                            baseline's tasks_per_s fails)
   train     [--config FILE] [--machine M] [--model tiny] [--scheme zerotopo]
             [--nodes 1] [--steps 10] [--depth N|inf] [--layer-granular]
             [--blocks B] [--ranks N|auto] [--jitter SIGMA]
@@ -419,8 +426,9 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     space.microbatches = args.parse_list("microbatches", &space.microbatches)?;
     space.interleaves = args.parse_list("interleave", &space.interleaves)?;
     let top = args.parse_opt("top", 8usize)?;
+    let threads = args.parse_opt("threads", 1usize)?;
 
-    let out = plan_search(&model, &cluster, &cfg, &space);
+    let out = plan_search_threaded(&model, &cluster, &cfg, &space, threads);
 
     let world = cluster.world_size();
     let title = format!(
@@ -580,17 +588,39 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         anyhow::bail!("--pp composes with --straggler/--jitter via `pipeline`, not --ranks");
     }
     ensure_no_blocks_under_pipeline(args, pipe.stages)?;
+    let threads = args.parse_opt("threads", 1usize)?;
     let series: Vec<ScalingSeries> = schemes
         .iter()
         .map(|&scheme| -> anyhow::Result<ScalingSeries> {
             let points = if pipe.stages > 1 {
-                scaling_series_pipeline(&model, scheme, &machine, &node_counts, &cfg, &pipe)?
+                scaling_series_pipeline_threaded(
+                    &model,
+                    scheme,
+                    &machine,
+                    &node_counts,
+                    &cfg,
+                    &pipe,
+                    threads,
+                )?
             } else {
                 match &scenario {
-                    None => scaling_series(&model, scheme, &machine, &node_counts, &cfg),
-                    Some(sc) => {
-                        scaling_series_scenario(&model, scheme, &machine, &node_counts, &cfg, sc)
-                    }
+                    None => scaling_series_threaded(
+                        &model,
+                        scheme,
+                        &machine,
+                        &node_counts,
+                        &cfg,
+                        threads,
+                    ),
+                    Some(sc) => scaling_series_scenario_threaded(
+                        &model,
+                        scheme,
+                        &machine,
+                        &node_counts,
+                        &cfg,
+                        sc,
+                        threads,
+                    ),
                 }
             };
             Ok(ScalingSeries { scheme, points })
@@ -925,6 +955,7 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!(e))?,
     };
     let rank_rows = args.parse_opt("rank-rows", 12usize)?;
+    let threads = args.parse_opt("threads", 1usize)?;
     let cluster = Cluster::new(machine.clone(), nodes);
     println!(
         "scenario on {} x{} nodes ({} workers): ranks={} stragglers={:?} jitter={} seed={} imbalance={:?}",
@@ -948,10 +979,16 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
     ])
     .title(format!("Scenario impact — {} @ {} workers", model.name, cluster.world_size()))
     .left_first();
-    let mut scheds: Vec<(String, Schedule)> = Vec::new();
-    for &scheme in &schemes {
+    // each (baseline, scenario) pair is a pure sim — price them on the
+    // sweep driver; results come back in scheme order regardless of
+    // thread count, so the report is byte-identical at any --threads
+    let priced = parallel_map(threads, &schemes, |_, &scheme| {
         let base = simulate_step(&model, scheme, &cluster, &cfg);
         let (b, sched) = simulate_step_scenario(&model, scheme, &cluster, &cfg, &scenario);
+        (base, b, sched)
+    });
+    let mut scheds: Vec<(String, Schedule)> = Vec::new();
+    for (&scheme, (base, b, sched)) in schemes.iter().zip(priced) {
         summary.row(vec![
             scheme.name(),
             fnum(base.step_s, 3),
@@ -1057,8 +1094,9 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
                         fields.push(("microbatches", Json::from(*mb)));
                     }
                     fields.push(("step_s", Json::num(*t)));
-                    // wall-clock self-profile: soft reference only — the
-                    // drift gate never hard-fails on machine speed
+                    // wall-clock self-profile: tasks_per_s is the floor the
+                    // --check wall-time gate compares against (>3x under
+                    // this recorded rate fails); tasks/wall_s are context
                     fields.push(("tasks", Json::from(prof.tasks)));
                     fields.push(("wall_s", Json::num(prof.total_wall_s())));
                     fields.push(("tasks_per_s", Json::num(prof.tasks_per_sec())));
@@ -1115,8 +1153,8 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     // --md: the same drift table as GitHub-flavored markdown, appended to
     // FILE (CI points this at $GITHUB_STEP_SUMMARY so guardrail failures
     // are diagnosable from the run page without rerunning locally).
-    // tasks/s + speed are the wall-clock self-profile: a soft, warn-only
-    // signal — machine speed must never hard-fail the accuracy gate.
+    // tasks/s + speed are the wall-clock self-profile; under --check the
+    // speed column is gated (>3x slower than baseline fails, see below).
     let mut md = format!(
         "### Perf guardrail — {} @ {} nodes (tolerance {:.1}%)\n\n\
          | machine | scheme | baseline (s) | now (s) | drift | status | tasks/s | speed |\n\
@@ -1201,11 +1239,20 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
         "self-profile: {total_tasks} tasks in {total_wall:.3}s wall \
          ({agg_tps:.0} tasks/s event loop)"
     );
+    // wall-time gate (ISSUE 9): speed regressions fail `--check` like
+    // accuracy regressions do. The 3x threshold is deliberately generous —
+    // CI-runner speed varies maybe 2x, an accidental O(n^2) in the event
+    // loop costs 10-100x on the 384-GCD worlds — so the gate catches
+    // algorithmic regressions without flaking on machine noise.
     if !slowdowns.is_empty() {
-        eprintln!(
-            "warning: simulator >3x slower than baseline (soft gate, not failing):\n  {}",
+        let msg = format!(
+            "simulator >3x slower than baseline tasks/s:\n  {}\n(if intentional — e.g. a new fidelity feature — regenerate with `calibrate --write`)",
             slowdowns.join("\n  ")
         );
+        if args.flag("check") {
+            anyhow::bail!("{msg}");
+        }
+        eprintln!("warning: {msg}");
     }
     if let Some(md_path) = args.get("md") {
         use std::io::Write;

@@ -72,10 +72,12 @@ pub mod critical;
 pub mod multi;
 pub mod pipeline;
 pub mod plan;
+pub mod reference;
 pub mod scenario;
 pub mod trace;
 
-use std::collections::BTreeMap;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
 use std::fmt;
 use std::str::FromStr;
 
@@ -210,6 +212,18 @@ impl TaskGraph {
         TaskGraph::default()
     }
 
+    /// An empty graph whose task arena is pre-sized for `cap` tasks —
+    /// builders that know their task count up front avoid re-allocation
+    /// on the hot path (DESIGN.md §16).
+    pub fn with_capacity(cap: usize) -> TaskGraph {
+        TaskGraph { tasks: Vec::with_capacity(cap), rank_ids: None }
+    }
+
+    /// Reserve arena capacity for at least `additional` more tasks.
+    pub fn reserve(&mut self, additional: usize) {
+        self.tasks.reserve(additional);
+    }
+
     /// A graph with an explicit rank registry: every task added must name
     /// one of `ranks`, and [`Schedule::ranks`] reports exactly this set
     /// (even for ranks that end up owning only shared tasks).
@@ -303,47 +317,173 @@ pub struct Schedule {
     makespan: f64,
 }
 
+/// Dense, index-based image of a [`TaskGraph`], built once per
+/// simulation (DESIGN.md §16): interned stream and contention-domain
+/// ids, per-stream FIFO task lists, CSR dependents adjacency, and the
+/// initial unmet-dependency counters. Everything the event loop touches
+/// per round is a flat `Vec` indexed by task, stream, or domain id —
+/// no map lookups on the hot path.
+struct Arena {
+    /// Stream id per task; streams are the distinct `(rank, StreamKind)`
+    /// keys numbered in sorted order (the reference loop's scan order).
+    stream_of: Vec<usize>,
+    /// Per-stream task lists in insertion (= FIFO) order.
+    stream_tasks: Vec<Vec<usize>>,
+    /// Contention-domain id per task (`usize::MAX` = no link class); the
+    /// domains are the distinct `(LinkClass, instance)` pairs.
+    domain_of: Vec<usize>,
+    /// Number of interned contention domains.
+    n_domains: usize,
+    /// CSR dependents adjacency: `dep_edges[dep_start[i]..dep_start[i+1]]`
+    /// are the tasks whose unmet counter drops when task `i` completes.
+    dep_start: Vec<usize>,
+    dep_edges: Vec<usize>,
+    /// Incoming dependency-edge count per task (duplicates counted — a
+    /// duplicated dep contributes one initial unit and one decrement).
+    unmet_init: Vec<usize>,
+}
+
+impl Arena {
+    fn build(graph: &TaskGraph) -> Arena {
+        let n = graph.tasks.len();
+        let mut keys: Vec<(usize, StreamKind)> =
+            graph.tasks.iter().map(|t| (t.rank, t.stream)).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        let stream_of: Vec<usize> = graph
+            .tasks
+            .iter()
+            .map(|t| keys.binary_search(&(t.rank, t.stream)).expect("interned stream"))
+            .collect();
+        let mut stream_tasks: Vec<Vec<usize>> = vec![Vec::new(); keys.len()];
+        for (i, &s) in stream_of.iter().enumerate() {
+            stream_tasks[s].push(i);
+        }
+
+        let mut doms: Vec<(LinkClass, usize)> =
+            graph.tasks.iter().filter_map(|t| t.class.map(|c| (c, t.instance))).collect();
+        doms.sort_unstable();
+        doms.dedup();
+        let domain_of: Vec<usize> = graph
+            .tasks
+            .iter()
+            .map(|t| match t.class {
+                Some(c) => doms.binary_search(&(c, t.instance)).expect("interned domain"),
+                None => usize::MAX,
+            })
+            .collect();
+
+        let mut unmet_init = vec![0usize; n];
+        let mut dep_start = vec![0usize; n + 1];
+        for (i, t) in graph.tasks.iter().enumerate() {
+            unmet_init[i] = t.deps.len();
+            for d in &t.deps {
+                dep_start[d.0 + 1] += 1;
+            }
+        }
+        for i in 0..n {
+            dep_start[i + 1] += dep_start[i];
+        }
+        let mut cursor = dep_start.clone();
+        let mut dep_edges = vec![0usize; dep_start[n]];
+        for (i, t) in graph.tasks.iter().enumerate() {
+            for d in &t.deps {
+                dep_edges[cursor[d.0]] = i;
+                cursor[d.0] += 1;
+            }
+        }
+        Arena {
+            stream_of,
+            stream_tasks,
+            domain_of,
+            n_domains: doms.len(),
+            dep_start,
+            dep_edges,
+            unmet_init,
+        }
+    }
+}
+
 /// Run the discrete-event loop over `graph` and return the timeline.
+///
+/// This is the optimized arena engine (DESIGN.md §16): an [`Arena`] of
+/// index-based state built once, a binary-heap worklist of issue-ready
+/// streams fed incrementally by completion events, and processor-sharing
+/// rates cached per `(LinkClass, instance)` domain and re-priced *only*
+/// for the domains whose membership changed since the last round (the
+/// lazy contention-share recomputation). It is **bit-identical** to the
+/// preserved map-based loop, [`reference::simulate_reference`]: the same
+/// set of tasks issues each round (issue order within a round cannot
+/// affect the spans — every task issued in a round starts at the same
+/// `now`, and readiness depends only on completions), and every
+/// floating-point expression — `1.0 / n` shares, the min-fold of
+/// `remaining / rate`, the `1e-12`-scaled completion epsilon — is
+/// unchanged. `testing::differential` and `tests/differential.rs`
+/// enforce the equivalence on randomized and pinned worlds.
 pub fn simulate(graph: TaskGraph) -> Schedule {
     let n = graph.len();
+    let arena = Arena::build(&graph);
+    let n_streams = arena.stream_tasks.len();
+
     let mut remaining: Vec<f64> = graph.tasks.iter().map(|t| t.work).collect();
     let mut start = vec![f64::NAN; n];
     let mut end = vec![f64::NAN; n];
-    let mut done = vec![false; n];
+    let mut unmet = arena.unmet_init.clone();
 
-    // per-stream FIFO queues in insertion order
-    let mut queues: BTreeMap<(usize, StreamKind), Vec<usize>> = BTreeMap::new();
-    for (i, t) in graph.tasks.iter().enumerate() {
-        queues.entry((t.rank, t.stream)).or_default().push(i);
+    let mut stream_head = vec![0usize; n_streams];
+    let mut stream_busy = vec![false; n_streams];
+
+    // worklist of streams whose head may be issuable; `queued` dedups.
+    // Stale entries are harmless — the pop guard re-checks the state.
+    let mut ready: BinaryHeap<Reverse<usize>> = BinaryHeap::with_capacity(n_streams);
+    let mut queued = vec![false; n_streams];
+    for s in 0..n_streams {
+        if arena.stream_tasks[s].first().is_some_and(|&i| unmet[i] == 0) {
+            ready.push(Reverse(s));
+            queued[s] = true;
+        }
     }
-    let mut head: BTreeMap<(usize, StreamKind), usize> = BTreeMap::new();
-    let mut running: BTreeMap<(usize, StreamKind), usize> = BTreeMap::new();
+
+    // dense running set (order-independent: swap-removal is fine because
+    // the min-fold and the per-task decrement don't depend on order)
+    let mut running: Vec<usize> = Vec::with_capacity(n_streams);
+
+    // per-domain processor-sharing state, re-priced only when dirty
+    let mut dom_count = vec![0usize; arena.n_domains];
+    let mut dom_rate = vec![1.0f64; arena.n_domains];
+    let mut dom_dirty = vec![false; arena.n_domains];
+    let mut dirty: Vec<usize> = Vec::with_capacity(arena.n_domains);
 
     let mut now = 0.0f64;
     let mut n_done = 0usize;
     while n_done < n {
-        // issue every stream head whose dependencies are satisfied; repeat
-        // until a fixed point (a zero-work start may unblock another head)
-        loop {
-            let mut issued = false;
-            for (key, q) in queues.iter() {
-                if running.contains_key(key) {
-                    continue;
-                }
-                let h = head.entry(*key).or_insert(0);
-                if *h >= q.len() {
-                    continue;
-                }
-                let i = q[*h];
-                if graph.tasks[i].deps.iter().all(|d| done[d.0]) {
-                    start[i] = now;
-                    running.insert(*key, i);
-                    *h += 1;
-                    issued = true;
-                }
+        // issue phase: drain the worklist. Each stream issues at most one
+        // task (it is busy until that task completes), so one drain reaches
+        // the same fixed point as the reference's repeated full scans.
+        while let Some(Reverse(s)) = ready.pop() {
+            queued[s] = false;
+            if stream_busy[s] {
+                continue;
             }
-            if !issued {
-                break;
+            let h = stream_head[s];
+            if h >= arena.stream_tasks[s].len() {
+                continue;
+            }
+            let i = arena.stream_tasks[s][h];
+            if unmet[i] != 0 {
+                continue;
+            }
+            start[i] = now;
+            stream_head[s] = h + 1;
+            stream_busy[s] = true;
+            running.push(i);
+            let d = arena.domain_of[i];
+            if d != usize::MAX {
+                dom_count[d] += 1;
+                if !dom_dirty[d] {
+                    dom_dirty[d] = true;
+                    dirty.push(d);
+                }
             }
         }
         if running.is_empty() {
@@ -352,37 +492,78 @@ pub fn simulate(graph: TaskGraph) -> Schedule {
             panic!("scheduler deadlock: {} of {} tasks unreachable", n - n_done, n);
         }
 
-        // processor-sharing rates per (link class, instance) domain
-        let mut active: BTreeMap<(LinkClass, usize), usize> = BTreeMap::new();
-        for &i in running.values() {
-            if let Some(c) = graph.tasks[i].class {
-                *active.entry((c, graph.tasks[i].instance)).or_default() += 1;
+        // lazy re-pricing: only domains whose membership changed since the
+        // last round get a fresh 1/n share (same expression as the
+        // reference's full rebuild, so the value is bit-identical)
+        for &d in &dirty {
+            dom_dirty[d] = false;
+            if dom_count[d] > 0 {
+                dom_rate[d] = 1.0 / dom_count[d] as f64;
             }
         }
+        dirty.clear();
+
         let rate = |i: usize| -> f64 {
-            match graph.tasks[i].class {
-                Some(c) => 1.0 / active[&(c, graph.tasks[i].instance)] as f64,
-                None => 1.0,
+            let d = arena.domain_of[i];
+            if d == usize::MAX {
+                1.0
+            } else {
+                dom_rate[d]
             }
         };
 
         // advance to the earliest completion under current rates
         let dt = running
-            .values()
+            .iter()
             .map(|&i| remaining[i] / rate(i))
             .fold(f64::INFINITY, f64::min)
             .max(0.0);
         now += dt;
-        let keys: Vec<(usize, StreamKind)> = running.keys().copied().collect();
-        for key in keys {
-            let i = running[&key];
+
+        // completion sweep: rates stay frozen for the whole sweep (domain
+        // membership changes only re-price at the next round's start)
+        let mut k = 0;
+        while k < running.len() {
+            let i = running[k];
             remaining[i] -= rate(i) * dt;
             if remaining[i] <= 1e-12 * graph.tasks[i].work.max(1.0) {
-                running.remove(&key);
+                running.swap_remove(k);
                 remaining[i] = 0.0;
                 end[i] = now;
-                done[i] = true;
                 n_done += 1;
+                let d = arena.domain_of[i];
+                if d != usize::MAX {
+                    dom_count[d] -= 1;
+                    if !dom_dirty[d] {
+                        dom_dirty[d] = true;
+                        dirty.push(d);
+                    }
+                }
+                // the stream frees up: re-queue it if its next head is ready
+                let s = arena.stream_of[i];
+                stream_busy[s] = false;
+                let h = stream_head[s];
+                if h < arena.stream_tasks[s].len()
+                    && unmet[arena.stream_tasks[s][h]] == 0
+                    && !queued[s]
+                {
+                    ready.push(Reverse(s));
+                    queued[s] = true;
+                }
+                // dependents count down; queue their streams when unblocked
+                for e in arena.dep_start[i]..arena.dep_start[i + 1] {
+                    let j = arena.dep_edges[e];
+                    unmet[j] -= 1;
+                    if unmet[j] == 0 {
+                        let sj = arena.stream_of[j];
+                        if !stream_busy[sj] && !queued[sj] {
+                            ready.push(Reverse(sj));
+                            queued[sj] = true;
+                        }
+                    }
+                }
+            } else {
+                k += 1;
             }
         }
     }
@@ -1046,5 +1227,53 @@ mod tests {
         let c = g.add(task(StreamKind::GradSync, 1.0, vec![b, short]));
         let s = simulate(g);
         assert_eq!(s.critical_path(), vec![a, b, c]);
+    }
+
+    #[test]
+    fn lazy_repricing_matches_reference_on_two_instance_overlap() {
+        // the O(n^2) re-share fix: two instances of one class overlap, one
+        // instance's membership churns (its short task finishes mid-flight)
+        // while the other's stays constant — only the dirty instance may be
+        // re-priced, and spans must still match the full-rebuild reference
+        let build = || {
+            let mut g = TaskGraph::with_rank_ids(vec![0, 1]);
+            // instance 0: short + long share the link, membership changes
+            let mut short = comm(StreamKind::Prefetch, 1.0, LinkClass::Intra(0), vec![]);
+            short.instance = 0;
+            g.add(short);
+            let mut long = comm(StreamKind::GradSync, 3.0, LinkClass::Intra(0), vec![]);
+            long.instance = 0;
+            g.add(long);
+            // instance 1: a steady transfer on a different physical link,
+            // spanning both of instance 0's rate changes
+            let mut steady = comm(StreamKind::Prefetch, 2.5, LinkClass::Intra(0), vec![]);
+            steady.instance = 1;
+            steady.rank = 1;
+            let st = g.add(steady);
+            // and a successor that joins instance 1 after the churn
+            let mut late = comm(StreamKind::GradSync, 1.0, LinkClass::Intra(0), vec![st]);
+            late.instance = 1;
+            late.rank = 1;
+            g.add(late);
+            g
+        };
+        let r = reference::simulate_reference(build());
+        let o = simulate(build());
+        assert_eq!(r.makespan(), o.makespan());
+        for (x, y) in r.spans().iter().zip(o.spans()) {
+            assert_eq!((x.start, x.end), (y.start, y.end), "{x:?} vs {y:?}");
+        }
+        // sanity: instance 0 really contended (short took 2x solo time)
+        assert!((o.spans()[0].end - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduler deadlock")]
+    fn optimized_loop_panics_on_unreachable_task() {
+        // parity with the reference loop's deadlock guard (same message)
+        let mut g = TaskGraph::new();
+        g.add(task(StreamKind::Compute, 1.0, vec![]));
+        g.tasks[0].deps = vec![TaskId(0)];
+        simulate(g);
     }
 }

@@ -134,11 +134,21 @@ impl MultiRankPlan {
     }
 
     /// Build the multi-rank step DAG.
+    ///
+    /// Bookkeeping is index-based (DESIGN.md §16): rank→position is a
+    /// dense vector over the world-rank space, per-phase gather/sync
+    /// groups come from a single linear grouping pass (`self.modeled` is
+    /// sorted and every group key is non-decreasing in the rank, so this
+    /// reproduces the ascending-key map order bit-for-bit), and the
+    /// phase chain is a position-indexed vector. Task insertion order —
+    /// and therefore every simulated span — is unchanged.
     pub fn build(&self) -> TaskGraph {
         let p = &self.plan;
         let mut g = TaskGraph::with_rank_ids(self.modeled.clone());
-        let mpos: BTreeMap<usize, usize> =
-            self.modeled.iter().enumerate().map(|(i, &r)| (r, i)).collect();
+        let mut mpos = vec![usize::MAX; self.cluster.world_size()];
+        for (i, &r) in self.modeled.iter().enumerate() {
+            mpos[r] = i;
+        }
         // per modeled rank, its compute tasks in consumption order
         let mut consumers: Vec<Vec<TaskId>> = vec![Vec::new(); self.modeled.len()];
 
@@ -178,24 +188,41 @@ impl MultiRankPlan {
         };
 
         let max_ga = self.modeled.iter().map(|&r| self.ga[r]).max().expect("non-empty");
+        // pre-size the arena: every (microbatch, block, group) yields one
+        // gather plus a compute per member, plus the sync chain + update
+        g.reserve(
+            max_ga * per_micro * (self.modeled.len() + 1)
+                + p.sync.len() * self.modeled.len()
+                + 1,
+        );
         for m in 0..max_ga {
             for (deg, class, name, blocks) in [
                 (p.d_fwd, p.class_fwd, "fwd", &fwd_blocks),
                 (p.d_bwd, p.class_bwd, "bwd", &bwd_blocks),
             ] {
-                // modeled members still running microbatch m, by gather group
-                let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+                // modeled members still running microbatch m, by gather
+                // group — `r / deg` is non-decreasing over sorted ranks,
+                // so consecutive-key grouping matches the old map order
+                let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
                 for &r in &self.modeled {
                     if m < self.ga[r] {
-                        groups.entry(r / deg.max(1)).or_default().push(r);
+                        let key = r / deg.max(1);
+                        match groups.last_mut() {
+                            Some((k, members)) if *k == key => members.push(r),
+                            _ => {
+                                debug_assert!(groups.last().is_none_or(|(k, _)| *k < key));
+                                groups.push((key, vec![r]));
+                            }
+                        }
                     }
                 }
                 for &(bid, t_gather, t_compute) in blocks.iter() {
                     let suffix = if layered { format!("b{bid}") } else { String::new() };
-                    for (&gi, members) in &groups {
+                    for (gi, members) in &groups {
+                        let gi = *gi;
                         let mut deps: Vec<TaskId> = Vec::new();
                         for &r in members {
-                            for d in gate(&consumers, mpos[&r], self.ga[r]) {
+                            for d in gate(&consumers, mpos[r], self.ga[r]) {
                                 if !deps.contains(&d) {
                                     deps.push(d);
                                 }
@@ -220,7 +247,7 @@ impl MultiRankPlan {
                                 instance: 0,
                                 deps: vec![gather],
                             });
-                            consumers[mpos[&r]].push(c);
+                            consumers[mpos[r]].push(c);
                         }
                     }
                 }
@@ -229,22 +256,31 @@ impl MultiRankPlan {
 
         // gradient-sync phases: one task per synchronization group, gated
         // by every modeled member's readiness (phase 0: its last compute;
-        // later phases: its previous phase's task)
-        let mut prev_phase: BTreeMap<usize, TaskId> = BTreeMap::new();
+        // later phases: its previous phase's task). The chain is indexed
+        // by modeled-rank position; group mins are non-decreasing over
+        // sorted ranks, so linear grouping again matches the map order.
+        let mut prev_phase: Vec<TaskId> = vec![TaskId(usize::MAX); self.modeled.len()];
         for (k, phase) in p.sync.iter().enumerate() {
-            let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+            let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
             for &r in &self.modeled {
                 let grp = sync_group(&self.cluster, r, phase.class);
-                groups.entry(*grp.iter().min().expect("non-empty group")).or_default().push(r);
+                let gmin = *grp.iter().min().expect("non-empty group");
+                match groups.last_mut() {
+                    Some((key, members)) if *key == gmin => members.push(r),
+                    _ => {
+                        debug_assert!(groups.last().is_none_or(|(key, _)| *key < gmin));
+                        groups.push((gmin, vec![r]));
+                    }
+                }
             }
-            let mut next_phase: BTreeMap<usize, TaskId> = BTreeMap::new();
+            let mut next_phase: Vec<TaskId> = vec![TaskId(usize::MAX); self.modeled.len()];
             for (gmin, members) in groups {
                 let mut deps: Vec<TaskId> = Vec::new();
                 for &r in &members {
                     let d = if k == 0 {
-                        *consumers[mpos[&r]].last().expect("grad_accum >= 1")
+                        *consumers[mpos[r]].last().expect("grad_accum >= 1")
                     } else {
-                        prev_phase[&r]
+                        prev_phase[mpos[r]]
                     };
                     if !deps.contains(&d) {
                         deps.push(d);
@@ -260,7 +296,7 @@ impl MultiRankPlan {
                     deps,
                 });
                 for &r in &members {
-                    next_phase.insert(r, t);
+                    next_phase[mpos[r]] = t;
                 }
             }
             prev_phase = next_phase;

@@ -410,6 +410,10 @@ impl PipelinePlan {
         let v = self.interleave;
         let nvirt = p * v;
         let mut g = TaskGraph::with_rank_ids(self.rep_ranks.clone());
+        // pre-size the arena: each (virtual stage, microbatch, direction)
+        // unit adds at most a gather + compute + p2p transfer; per-stage
+        // refresh and the sync chains ride on top (DESIGN.md §16)
+        g.reserve(nvirt * m * 2 * 3 + p * (2 + self.stages[0].sync.len()));
 
         // previous step's §V.D refresh occupies each stage's grad head
         for (s, sp) in self.stages.iter().enumerate() {

@@ -350,6 +350,9 @@ impl StepPlan {
         let bwd = self.bwd_blocks();
         let layered = self.blocks.len() > 1;
         let total = (fwd.len() + bwd.len()) * self.grad_accum;
+        // pre-size the arena: gather + compute per consumer slot, plus the
+        // sync chain and the refresh task already added (DESIGN.md §16)
+        g.reserve(total * 2 + self.sync.len());
         let mut consumers: Vec<TaskId> = Vec::with_capacity(total);
         let gate = |consumers: &[TaskId], j: usize| -> Vec<TaskId> {
             match self.depth {

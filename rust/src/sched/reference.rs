@@ -1,0 +1,186 @@
+//! The reference event loop: the original map-based implementation of
+//! [`crate::sched::simulate`], preserved verbatim as the correctness
+//! oracle for the optimized arena engine (DESIGN.md §16).
+//!
+//! **Contract.** [`simulate_reference`] and [`crate::sched::simulate`]
+//! are *bit-identical*: same makespan, same per-task spans, and
+//! therefore the same stall ledgers, link usage, skew waits, and
+//! critical-path decompositions (all of which are derived post-hoc from
+//! the spans). The optimized engine changes bookkeeping — interned
+//! streams and contention domains, index-based dependency counters, a
+//! worklist of issue-ready streams, lazily re-priced processor-sharing
+//! rates — but never the floating-point expressions: rates are still
+//! `1.0 / n`, the time step is still the min-fold of `remaining / rate`,
+//! and the completion epsilon is unchanged. The equivalence is enforced
+//! by `testing::differential` + `tests/differential.rs` across
+//! randomized scheme × machine × ranks × depth × blocks × P/M/V ×
+//! scenario graphs and all pinned BENCH_baseline.json worlds.
+//!
+//! This loop is O(streams) per issue scan and rebuilds every contention
+//! domain's share each round — robust, obviously correct, and the thing
+//! the fast loop must match. Keep it boring.
+
+use std::collections::BTreeMap;
+
+use crate::sched::{Schedule, Span, StreamKind, TaskGraph, TaskId};
+use crate::topology::LinkClass;
+
+/// Run the reference (map-based) discrete-event loop over `graph`.
+///
+/// Semantics (shared with the optimized loop, see the module docs):
+/// per-`(rank, stream)` FIFO in-order issue, processor sharing per
+/// `(LinkClass, instance)` domain, time advancing to the earliest
+/// completion under the current rates.
+pub fn simulate_reference(graph: TaskGraph) -> Schedule {
+    let n = graph.len();
+    let mut remaining: Vec<f64> = graph.tasks.iter().map(|t| t.work).collect();
+    let mut start = vec![f64::NAN; n];
+    let mut end = vec![f64::NAN; n];
+    let mut done = vec![false; n];
+
+    // per-stream FIFO queues in insertion order
+    let mut queues: BTreeMap<(usize, StreamKind), Vec<usize>> = BTreeMap::new();
+    for (i, t) in graph.tasks.iter().enumerate() {
+        queues.entry((t.rank, t.stream)).or_default().push(i);
+    }
+    let mut head: BTreeMap<(usize, StreamKind), usize> = BTreeMap::new();
+    let mut running: BTreeMap<(usize, StreamKind), usize> = BTreeMap::new();
+
+    let mut now = 0.0f64;
+    let mut n_done = 0usize;
+    while n_done < n {
+        // issue every stream head whose dependencies are satisfied; repeat
+        // until a fixed point (a zero-work start may unblock another head)
+        loop {
+            let mut issued = false;
+            for (key, q) in queues.iter() {
+                if running.contains_key(key) {
+                    continue;
+                }
+                let h = head.entry(*key).or_insert(0);
+                if *h >= q.len() {
+                    continue;
+                }
+                let i = q[*h];
+                if graph.tasks[i].deps.iter().all(|d| done[d.0]) {
+                    start[i] = now;
+                    running.insert(*key, i);
+                    *h += 1;
+                    issued = true;
+                }
+            }
+            if !issued {
+                break;
+            }
+        }
+        if running.is_empty() {
+            // every remaining task waits on a dependency that can never
+            // finish — impossible for graphs built through `add`
+            panic!("scheduler deadlock: {} of {} tasks unreachable", n - n_done, n);
+        }
+
+        // processor-sharing rates per (link class, instance) domain
+        let mut active: BTreeMap<(LinkClass, usize), usize> = BTreeMap::new();
+        for &i in running.values() {
+            if let Some(c) = graph.tasks[i].class {
+                *active.entry((c, graph.tasks[i].instance)).or_default() += 1;
+            }
+        }
+        let rate = |i: usize| -> f64 {
+            match graph.tasks[i].class {
+                Some(c) => 1.0 / active[&(c, graph.tasks[i].instance)] as f64,
+                None => 1.0,
+            }
+        };
+
+        // advance to the earliest completion under current rates
+        let dt = running
+            .values()
+            .map(|&i| remaining[i] / rate(i))
+            .fold(f64::INFINITY, f64::min)
+            .max(0.0);
+        now += dt;
+        let keys: Vec<(usize, StreamKind)> = running.keys().copied().collect();
+        for key in keys {
+            let i = running[&key];
+            remaining[i] -= rate(i) * dt;
+            if remaining[i] <= 1e-12 * graph.tasks[i].work.max(1.0) {
+                running.remove(&key);
+                remaining[i] = 0.0;
+                end[i] = now;
+                done[i] = true;
+                n_done += 1;
+            }
+        }
+    }
+
+    let spans: Vec<Span> =
+        (0..n).map(|i| Span { task: TaskId(i), start: start[i], end: end[i] }).collect();
+    Schedule { graph, makespan: now, spans }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{simulate, Task};
+
+    fn comm(work: f64, class: LinkClass, instance: usize, deps: Vec<TaskId>) -> Task {
+        Task {
+            label: String::new(),
+            rank: 0,
+            stream: StreamKind::Prefetch,
+            work,
+            class: Some(class),
+            instance,
+            deps,
+        }
+    }
+
+    #[test]
+    fn reference_matches_optimized_on_contended_chain() {
+        let mut g = TaskGraph::new();
+        let a = g.add(comm(1.0, LinkClass::InterNode, 0, vec![]));
+        let mut b = comm(3.0, LinkClass::InterNode, 0, vec![]);
+        b.stream = StreamKind::GradSync;
+        g.add(b);
+        let c = g.add(Task {
+            label: String::new(),
+            rank: 0,
+            stream: StreamKind::Compute,
+            work: 2.0,
+            class: None,
+            instance: 0,
+            deps: vec![a],
+        });
+        let mut d = comm(0.5, LinkClass::Intra(0), 1, vec![c]);
+        d.stream = StreamKind::Prefetch;
+        g.add(d);
+
+        let r = simulate_reference(g.clone());
+        let o = simulate(g);
+        assert_eq!(r.makespan(), o.makespan());
+        assert_eq!(r.spans().len(), o.spans().len());
+        for (x, y) in r.spans().iter().zip(o.spans()) {
+            assert_eq!((x.start, x.end), (y.start, y.end));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduler deadlock")]
+    fn reference_panics_on_unreachable_task() {
+        // `add` forbids forward/self deps, so corrupt a legal graph into a
+        // self-cycle through the module-private field to hit the guard.
+        let mut g = TaskGraph::new();
+        g.add(Task {
+            label: "a".into(),
+            rank: 0,
+            stream: StreamKind::Compute,
+            work: 1.0,
+            class: None,
+            instance: 0,
+            deps: vec![],
+        });
+        g.tasks[0].deps = vec![TaskId(0)];
+        simulate_reference(g);
+    }
+}

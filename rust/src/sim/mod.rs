@@ -59,6 +59,7 @@ use crate::sched::{Depth, Schedule};
 use crate::sharding::{shard_groups, Scheme, ShardingSpec};
 use crate::topology::{Cluster, MachineSpec};
 
+pub mod par;
 pub mod plan;
 
 /// Simulation parameters. Defaults carry the calibration against the
@@ -619,22 +620,37 @@ pub fn scaling_series_pipeline(
     cfg: &SimConfig,
     pipe: &PipeConfig,
 ) -> Result<Vec<Throughput>, PipelineError> {
-    node_counts
-        .iter()
-        .map(|&nodes| {
-            let cluster = Cluster::new(machine.clone(), nodes);
-            let world = cluster.world_size();
-            let (b, _, _) = simulate_step_pipeline(model, scheme, &cluster, cfg, pipe)?;
-            let dp = world / b.stages;
-            let tokens = (b.microbatches * cfg.micro_batch * model.seq * dp) as f64;
-            Ok(Throughput {
-                gcds: world,
-                step_seconds: b.step_s,
-                flops_per_step: model.flops_per_token() * tokens,
-                sequences_per_step: tokens / model.seq as f64,
-            })
+    scaling_series_pipeline_threaded(model, scheme, machine, node_counts, cfg, pipe, 1)
+}
+
+/// [`scaling_series_pipeline`] over up to `threads` worker threads (one
+/// pure simulation per point; results in node-count order regardless of
+/// the thread count — see [`par::parallel_map`]).
+#[allow(clippy::too_many_arguments)]
+pub fn scaling_series_pipeline_threaded(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    machine: &MachineSpec,
+    node_counts: &[usize],
+    cfg: &SimConfig,
+    pipe: &PipeConfig,
+    threads: usize,
+) -> Result<Vec<Throughput>, PipelineError> {
+    par::parallel_map(threads, node_counts, |_, &nodes| {
+        let cluster = Cluster::new(machine.clone(), nodes);
+        let world = cluster.world_size();
+        let (b, _, _) = simulate_step_pipeline(model, scheme, &cluster, cfg, pipe)?;
+        let dp = world / b.stages;
+        let tokens = (b.microbatches * cfg.micro_batch * model.seq * dp) as f64;
+        Ok(Throughput {
+            gcds: world,
+            step_seconds: b.step_s,
+            flops_per_step: model.flops_per_token() * tokens,
+            sequences_per_step: tokens / model.seq as f64,
         })
-        .collect()
+    })
+    .into_iter()
+    .collect()
 }
 
 /// Produce the paper's per-scale Throughput series for one scheme on one
@@ -647,21 +663,31 @@ pub fn scaling_series(
     node_counts: &[usize],
     cfg: &SimConfig,
 ) -> Vec<Throughput> {
-    node_counts
-        .iter()
-        .map(|&nodes| {
-            let cluster = Cluster::new(machine.clone(), nodes);
-            let world = cluster.world_size();
-            let b = simulate_step(model, scheme, &cluster, cfg);
-            let tokens = (b.grad_accum * cfg.micro_batch * model.seq * world) as f64;
-            Throughput {
-                gcds: world,
-                step_seconds: b.step_s,
-                flops_per_step: model.flops_per_token() * tokens,
-                sequences_per_step: tokens / model.seq as f64,
-            }
-        })
-        .collect()
+    scaling_series_threaded(model, scheme, machine, node_counts, cfg, 1)
+}
+
+/// [`scaling_series`] over up to `threads` worker threads (one pure
+/// simulation per point; deterministic node-count result order).
+pub fn scaling_series_threaded(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    machine: &MachineSpec,
+    node_counts: &[usize],
+    cfg: &SimConfig,
+    threads: usize,
+) -> Vec<Throughput> {
+    par::parallel_map(threads, node_counts, |_, &nodes| {
+        let cluster = Cluster::new(machine.clone(), nodes);
+        let world = cluster.world_size();
+        let b = simulate_step(model, scheme, &cluster, cfg);
+        let tokens = (b.grad_accum * cfg.micro_batch * model.seq * world) as f64;
+        Throughput {
+            gcds: world,
+            step_seconds: b.step_s,
+            flops_per_step: model.flops_per_token() * tokens,
+            sequences_per_step: tokens / model.seq as f64,
+        }
+    })
 }
 
 /// [`scaling_series`] under a multi-rank scenario: every point's step time
@@ -675,21 +701,33 @@ pub fn scaling_series_scenario(
     cfg: &SimConfig,
     scenario: &Scenario,
 ) -> Vec<Throughput> {
-    node_counts
-        .iter()
-        .map(|&nodes| {
-            let cluster = Cluster::new(machine.clone(), nodes);
-            let world = cluster.world_size();
-            let (b, _) = simulate_step_scenario(model, scheme, &cluster, cfg, scenario);
-            let tokens = (b.grad_accum * cfg.micro_batch * model.seq * world) as f64;
-            Throughput {
-                gcds: world,
-                step_seconds: b.step_s,
-                flops_per_step: model.flops_per_token() * tokens,
-                sequences_per_step: tokens / model.seq as f64,
-            }
-        })
-        .collect()
+    scaling_series_scenario_threaded(model, scheme, machine, node_counts, cfg, scenario, 1)
+}
+
+/// [`scaling_series_scenario`] over up to `threads` worker threads (one
+/// pure simulation per point; deterministic node-count result order).
+#[allow(clippy::too_many_arguments)]
+pub fn scaling_series_scenario_threaded(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    machine: &MachineSpec,
+    node_counts: &[usize],
+    cfg: &SimConfig,
+    scenario: &Scenario,
+    threads: usize,
+) -> Vec<Throughput> {
+    par::parallel_map(threads, node_counts, |_, &nodes| {
+        let cluster = Cluster::new(machine.clone(), nodes);
+        let world = cluster.world_size();
+        let (b, _) = simulate_step_scenario(model, scheme, &cluster, cfg, scenario);
+        let tokens = (b.grad_accum * cfg.micro_batch * model.seq * world) as f64;
+        Throughput {
+            gcds: world,
+            step_seconds: b.step_s,
+            flops_per_step: model.flops_per_token() * tokens,
+            sequences_per_step: tokens / model.seq as f64,
+        }
+    })
 }
 
 #[cfg(test)]

@@ -1,0 +1,99 @@
+//! Deterministic parallel sweep driver (DESIGN.md §16).
+//!
+//! Every simulation in this crate is a pure function of its inputs, so a
+//! sweep over N points is embarrassingly parallel — the only thing that
+//! could break determinism is *result order*. [`parallel_map`] therefore
+//! dispatches points to a fixed pool of scoped workers via an atomic
+//! work index (no per-thread chunking, so stragglers can't skew the
+//! split), tags every result with its input index, and reassembles the
+//! output in input order. `threads == 1` degenerates to a plain serial
+//! map over the same closure — byte-identical output by construction,
+//! which is what the `plan`/`scale`/`scenario` determinism tests pin.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Map `f` over `items` on up to `threads` OS threads, returning results
+/// in input order. `f` receives `(index, &item)` and must be pure with
+/// respect to ordering: the call schedule across threads is
+/// nondeterministic, but since each result is keyed by its index the
+/// returned vector never is. A panic in any worker propagates.
+pub fn parallel_map<T, U, F>(threads: usize, items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> U + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut tagged: Vec<(usize, U)> = std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local: Vec<(usize, U)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        local.push((i, f(i, &items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        workers
+            .into_iter()
+            .flat_map(|w| w.join().expect("sweep worker panicked"))
+            .collect()
+    });
+    tagged.sort_by_key(|&(i, _)| i);
+    tagged.into_iter().map(|(_, u)| u).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(8, &items, |i, &x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let items: Vec<f64> = (0..50).map(|i| i as f64 * 0.1).collect();
+        let f = |_: usize, &x: &f64| (x.sin() * 1e6).to_bits();
+        let serial = parallel_map(1, &items, f);
+        for threads in [2, 4, 16] {
+            assert_eq!(parallel_map(threads, &items, f), serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        let none: Vec<usize> = Vec::new();
+        assert!(parallel_map(4, &none, |_, &x| x).is_empty());
+        assert_eq!(parallel_map(4, &[7usize], |_, &x| x), vec![7]);
+    }
+
+    #[test]
+    fn worker_panics_propagate() {
+        let r = std::panic::catch_unwind(|| {
+            parallel_map(2, &[1usize, 2, 3], |_, &x| {
+                if x == 2 {
+                    panic!("boom");
+                }
+                x
+            })
+        });
+        assert!(r.is_err());
+    }
+}

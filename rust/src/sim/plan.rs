@@ -3,7 +3,7 @@
 //! prune every point whose [`crate::memory::fit_report`] ledger exceeds
 //! the device HBM **before** pricing anything, then price the survivors
 //! through the exact simulation entry points the CLI uses
-//! ([`simulate_step`] / [`simulate_step_pipeline`]) and rank them by
+//! ([`super::simulate_step`] / [`simulate_step_pipeline`]) and rank them by
 //! token-normalized throughput (TFLOPS/GCD — raw step seconds would
 //! falsely favor small-`M` pipelines that run fewer tokens per step).
 //!
@@ -15,11 +15,13 @@
 use crate::memory::{fit_report, FitConfig, MemoryFit};
 use crate::model::TransformerSpec;
 use crate::sched::pipeline::PipeConfig;
+use crate::sched::plan::StepPlan;
 use crate::sched::Depth;
 use crate::sharding::Scheme;
 use crate::topology::Cluster;
 
-use super::{simulate_step, simulate_step_pipeline, SimConfig};
+use super::par::parallel_map;
+use super::{simulate_step_pipeline, SimConfig};
 
 /// Bounds of the planner's sweep: the cartesian product of these axes is
 /// enumerated (pipeline axes only combine with `stages > 1`; the
@@ -177,11 +179,45 @@ pub fn plan_search(
     cfg: &SimConfig,
     space: &PlanSpace,
 ) -> PlanOutcome {
+    plan_search_threaded(model, cluster, cfg, space, 1)
+}
+
+/// A feasible combination awaiting pricing: everything the simulation
+/// stage needs, captured during the (serial) enumeration pass.
+struct Candidate {
+    scheme: Scheme,
+    depth: Depth,
+    blocks: usize,
+    stages: usize,
+    m: usize,
+    v: usize,
+    fit: MemoryFit,
+    dp: usize,
+}
+
+/// [`plan_search`] with the pricing stage fanned out over up to
+/// `threads` worker threads (DESIGN.md §16). The sweep runs in three
+/// phases: a serial enumeration pass (memory-ledger gating, skip
+/// accounting, frontier bookkeeping — cheap), a serial plan-cache build
+/// (one [`StepPlan`] per distinct `(scheme, blocks)` among the feasible
+/// `P = 1` candidates; pricing is depth-independent, so each depth point
+/// reuses the cached plan with only its `depth` field overridden —
+/// bit-identical to rebuilding, gated by a test below), and a parallel
+/// pricing pass over the candidates in deterministic enumeration order.
+/// `threads == 1` is the plain serial sweep; any thread count produces
+/// byte-identical outcomes.
+pub fn plan_search_threaded(
+    model: &TransformerSpec,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+    space: &PlanSpace,
+    threads: usize,
+) -> PlanOutcome {
     let world = cluster.world_size();
     let tokens_per_micro = (cfg.micro_batch * model.seq) as f64;
     let total_psi = model.n_params() as f64;
 
-    let mut ranked: Vec<PlanPoint> = Vec::new();
+    let mut candidates: Vec<Candidate> = Vec::new();
     let mut pruned: Vec<PrunedPoint> = Vec::new();
     let mut skipped = 0usize;
     let mut frontier: Vec<(Scheme, f64)> = Vec::new();
@@ -194,6 +230,7 @@ pub fn plan_search(
         None => frontier.push((scheme, cap)),
     };
 
+    // phase 1: enumerate + gate on the memory ledger (serial — cheap)
     for &scheme in &space.schemes {
         for &p in &space.stages {
             let p = p.max(1);
@@ -261,52 +298,83 @@ pub fn plan_search(
                         });
                         continue;
                     }
-                    let mut point_cfg = cfg.clone();
-                    point_cfg.prefetch_depth = depth;
-                    point_cfg.layer_blocks = if p == 1 { blocks } else { 1 };
-                    let (step_s, tokens) = if p == 1 {
-                        let b = simulate_step(model, scheme, cluster, &point_cfg);
-                        let tokens =
-                            b.grad_accum as f64 * tokens_per_micro * world as f64;
-                        (b.step_s, tokens)
-                    } else {
-                        let pipe =
-                            PipeConfig { stages: p, microbatches: m, interleave: v };
-                        match simulate_step_pipeline(
-                            model, scheme, cluster, &point_cfg, &pipe,
-                        ) {
-                            Ok((b, _, _)) => {
-                                (b.step_s, m as f64 * tokens_per_micro * dp as f64)
-                            }
-                            Err(_) => {
-                                skipped += 1;
-                                continue;
-                            }
-                        }
-                    };
-                    if !(step_s.is_finite() && step_s > 0.0) {
-                        // a degenerate simulation must not poison the
-                        // ranking (PR-6 zero-division satellite, planner
-                        // edition)
-                        skipped += 1;
-                        continue;
-                    }
-                    let tflops_per_gcd =
-                        model.flops_per_token() * tokens / step_s / world as f64 / 1e12;
-                    ranked.push(PlanPoint {
+                    candidates.push(Candidate {
                         scheme,
                         depth,
                         blocks,
                         stages: p,
-                        microbatches: m,
-                        interleave: v,
+                        m,
+                        v,
                         fit,
-                        step_s,
-                        tokens_per_step: tokens,
-                        tflops_per_gcd,
+                        dp,
                     });
                 }
             }
+        }
+    }
+
+    // phase 2: plan cache — one priced StepPlan per distinct (scheme,
+    // blocks) among the P = 1 candidates. `charge_and_plan` only stores
+    // the prefetch depth on the plan (every priced duration is
+    // depth-independent), so the depth axis reuses the cached plan.
+    let mut cache: Vec<(Scheme, usize, StepPlan)> = Vec::new();
+    for c in candidates.iter().filter(|c| c.stages == 1) {
+        if !cache.iter().any(|(s, b, _)| *s == c.scheme && *b == c.blocks) {
+            let mut point_cfg = cfg.clone();
+            point_cfg.prefetch_depth = c.depth;
+            point_cfg.layer_blocks = c.blocks;
+            let (plan, _, _) = super::charge_and_plan(model, c.scheme, cluster, &point_cfg);
+            cache.push((c.scheme, c.blocks, plan));
+        }
+    }
+
+    // phase 3: price the survivors — one pure simulation per candidate,
+    // results in enumeration order regardless of the thread count
+    let priced: Vec<Option<PlanPoint>> = parallel_map(threads, &candidates, |_, c| {
+        let (step_s, tokens) = if c.stages == 1 {
+            let (_, _, base) = cache
+                .iter()
+                .find(|(s, b, _)| *s == c.scheme && *b == c.blocks)
+                .expect("every P=1 candidate has a cached plan");
+            let mut plan = base.clone();
+            plan.depth = c.depth;
+            let step_s = plan.simulate().makespan();
+            let tokens = plan.grad_accum as f64 * tokens_per_micro * world as f64;
+            (step_s, tokens)
+        } else {
+            let mut point_cfg = cfg.clone();
+            point_cfg.prefetch_depth = c.depth;
+            point_cfg.layer_blocks = 1;
+            let pipe = PipeConfig { stages: c.stages, microbatches: c.m, interleave: c.v };
+            match simulate_step_pipeline(model, c.scheme, cluster, &point_cfg, &pipe) {
+                Ok((b, _, _)) => (b.step_s, c.m as f64 * tokens_per_micro * c.dp as f64),
+                Err(_) => return None,
+            }
+        };
+        if !(step_s.is_finite() && step_s > 0.0) {
+            // a degenerate simulation must not poison the ranking (PR-6
+            // zero-division satellite, planner edition)
+            return None;
+        }
+        let tflops_per_gcd = model.flops_per_token() * tokens / step_s / world as f64 / 1e12;
+        Some(PlanPoint {
+            scheme: c.scheme,
+            depth: c.depth,
+            blocks: c.blocks,
+            stages: c.stages,
+            microbatches: c.m,
+            interleave: c.v,
+            fit: c.fit.clone(),
+            step_s,
+            tokens_per_step: tokens,
+            tflops_per_gcd,
+        })
+    });
+    let mut ranked: Vec<PlanPoint> = Vec::with_capacity(candidates.len());
+    for point in priced {
+        match point {
+            Some(pt) => ranked.push(pt),
+            None => skipped += 1,
         }
     }
 
@@ -406,6 +474,70 @@ mod tests {
         let out = plan_search(&model, &cluster, &small_cfg(), &space);
         assert_eq!(out.skipped, 1);
         assert_eq!(out.evaluated(), 0);
+    }
+
+    #[test]
+    fn depth_override_matches_rebuild_bit_for_bit() {
+        // the plan cache's contract: charge_and_plan only *stores* the
+        // prefetch depth, so cached-plan-with-depth-overridden must equal
+        // a from-scratch rebuild at that depth, monolithic and layered
+        let model = TransformerSpec::gpt125m();
+        let cluster = Cluster::frontier(2);
+        let scheme = Scheme::ZeroTopo { sec_degree: 2 };
+        for blocks in [1usize, 12] {
+            let mut cfg = small_cfg();
+            cfg.layer_blocks = blocks;
+            cfg.prefetch_depth = Depth::Infinite;
+            let (base, _, _) = super::super::charge_and_plan(&model, scheme, &cluster, &cfg);
+            for depth in [Depth::Bounded(0), Depth::Bounded(1), Depth::Bounded(2)] {
+                let mut cfg2 = cfg.clone();
+                cfg2.prefetch_depth = depth;
+                let (rebuilt, _, _) =
+                    super::super::charge_and_plan(&model, scheme, &cluster, &cfg2);
+                let mut overridden = base.clone();
+                overridden.depth = depth;
+                let a = rebuilt.simulate();
+                let b = overridden.simulate();
+                assert_eq!(
+                    a.makespan().to_bits(),
+                    b.makespan().to_bits(),
+                    "blocks={blocks} depth={depth}"
+                );
+                for (x, y) in a.spans().iter().zip(b.spans()) {
+                    assert_eq!((x.start, x.end), (y.start, y.end));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_sweep_is_deterministic() {
+        let model = TransformerSpec::gpt125m();
+        let cluster = Cluster::frontier(2);
+        let schemes =
+            vec![Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }];
+        let space = small_space(schemes);
+        let cfg = small_cfg();
+        let serial = plan_search_threaded(&model, &cluster, &cfg, &space, 1);
+        for threads in [2, 8] {
+            let par = plan_search_threaded(&model, &cluster, &cfg, &space, threads);
+            assert_eq!(serial.skipped, par.skipped, "threads={threads}");
+            assert_eq!(serial.pruned.len(), par.pruned.len());
+            assert_eq!(serial.ranked.len(), par.ranked.len());
+            for (a, b) in serial.ranked.iter().zip(&par.ranked) {
+                assert_eq!(a.scheme, b.scheme);
+                assert_eq!(
+                    (a.stages, a.microbatches, a.interleave, a.blocks),
+                    (b.stages, b.microbatches, b.interleave, b.blocks)
+                );
+                assert_eq!(a.step_s.to_bits(), b.step_s.to_bits());
+                assert_eq!(a.tflops_per_gcd.to_bits(), b.tflops_per_gcd.to_bits());
+            }
+            for ((s1, c1), (s2, c2)) in serial.frontier.iter().zip(&par.frontier) {
+                assert_eq!(s1, s2);
+                assert_eq!(c1.to_bits(), c2.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,283 @@
+//! Differential harness for the event loop: generators for random task
+//! graphs — raw DAGs and full plan-level worlds (scheme × machine ×
+//! ranks × depth × blocks × P/M/V × scenario) — plus the bit-for-bit
+//! comparator that pins the optimized arena engine
+//! ([`crate::sched::simulate`]) to the preserved map-based oracle
+//! ([`crate::sched::reference::simulate_reference`]). See DESIGN.md §16
+//! for the equivalence contract; `tests/differential.rs` drives this
+//! module across hundreds of seeded cases and every `BENCH_baseline.json`
+//! pin.
+//!
+//! "Bit-for-bit" means exactly that: makespans and span endpoints are
+//! compared via [`f64::to_bits`], and every derived ledger — per-rank
+//! stall attribution, link usage, skew waits, the critical-path
+//! decomposition — must match on the same terms. Any divergence in
+//! issue order, contention re-pricing, or completion sweeps shows up
+//! here before it can silently move a calibrated pin.
+
+use crate::comm::cost::{CommEfficiency, CostModel};
+use crate::sched::critical;
+use crate::sched::multi::MultiRankPlan;
+use crate::sched::pipeline::{even_chunk_params, PipeConfig, PipelinePlan};
+use crate::sched::plan::StepPlan;
+use crate::sched::reference::simulate_reference;
+use crate::sched::scenario::{RankCount, Scenario};
+use crate::sched::{simulate, Depth, Schedule, StreamKind, Task, TaskGraph, TaskId};
+use crate::sharding::{Scheme, ShardingSpec};
+use crate::testing::Gen;
+use crate::topology::{Cluster, LinkClass};
+
+/// A raw random DAG: arbitrary ranks, all four stream kinds, a mix of
+/// zero/tied/fractional works, optional link classes over several
+/// contention instances, and random backward dependency edges. This is
+/// the adversarial shape the plan builders never produce — simultaneous
+/// completions, zero-work cascades, cross-rank dep webs.
+pub fn random_graph(g: &mut Gen) -> TaskGraph {
+    const STREAMS: [StreamKind; 4] = [
+        StreamKind::Compute,
+        StreamKind::Prefetch,
+        StreamKind::GradSync,
+        StreamKind::PipeTransfer,
+    ];
+    const CLASSES: [LinkClass; 4] =
+        [LinkClass::Local, LinkClass::Intra(0), LinkClass::Intra(1), LinkClass::InterNode];
+    let n = g.usize_in(1, 120);
+    let n_ranks = g.usize_in(1, 6);
+    let mut graph = TaskGraph::with_capacity(n);
+    for i in 0..n {
+        // works with deliberate ties and zeros to stress the completion
+        // epsilon and the dt = 0 rounds
+        let work = match g.usize_in(0, 4) {
+            0 => 0.0,
+            1 => 1.0,
+            2 => 0.5 + g.f64_unit(),
+            _ => (g.usize_in(1, 8) as f64) * 0.25,
+        };
+        let class = if g.bool() { Some(*g.pick(&CLASSES)) } else { None };
+        let mut deps: Vec<TaskId> = Vec::new();
+        if i > 0 {
+            for _ in 0..g.usize_in(0, 3) {
+                let d = TaskId(g.usize_in(0, i - 1));
+                if !deps.contains(&d) {
+                    deps.push(d);
+                }
+            }
+        }
+        graph.add(Task {
+            label: format!("t{i}"),
+            rank: g.usize_in(0, n_ranks - 1),
+            stream: *g.pick(&STREAMS),
+            work,
+            class,
+            instance: g.usize_in(0, 2),
+            deps,
+        });
+    }
+    graph
+}
+
+/// A random *plan-level* world: a real machine, scheme, and sharding
+/// spec expanded through either the multi-rank builder (with a random
+/// straggler / jitter / imbalance scenario) or the pipeline builder
+/// (random P/M/V, optionally layered). These are the graphs production
+/// sweeps actually simulate.
+pub fn random_plan_graph(g: &mut Gen) -> TaskGraph {
+    let nodes = *g.pick(&[1usize, 2, 4]);
+    let cluster = if g.bool() { Cluster::frontier(nodes) } else { Cluster::dgx(nodes) };
+    let cost = CostModel::with_efficiency(cluster.clone(), CommEfficiency::rccl_frontier());
+    let scheme = *g.pick(&[
+        Scheme::Zero1,
+        Scheme::Zero2,
+        Scheme::Zero3,
+        Scheme::ZeroPP,
+        Scheme::ZeroTopo { sec_degree: 2 },
+    ]);
+    let spec = ShardingSpec::resolve(scheme, &cluster).expect("builtin schemes resolve");
+    let n_elems = 1_000_000 * g.usize_in(1, 500) as u64;
+    let ga = g.usize_in(1, 4);
+    let compute_s = 0.5 + g.f64_unit() * 2.0;
+    let depth = *g.pick(&[Depth::Infinite, Depth::Bounded(1), Depth::Bounded(2)]);
+
+    if g.bool() {
+        // pipeline axis: P/M/V with the interleave constraint m % p == 0
+        let p = *g.pick(&[1usize, 2, 4]);
+        let v = if p > 1 && g.bool() { 2 } else { 1 };
+        let m = p * g.usize_in(1, 3);
+        let pipe = PipeConfig { stages: p, microbatches: m, interleave: v };
+        let chunks = even_chunk_params(n_elems, p * v);
+        let layered = g.bool();
+        let plan = PipelinePlan::from_protocol(
+            &cost,
+            scheme,
+            &pipe,
+            &chunks,
+            256,
+            1 << g.usize_in(20, 24),
+            compute_s,
+            depth,
+            layered,
+        )
+        .expect("generated pipe configs are valid");
+        let plan = if g.bool() {
+            let mult: Vec<f64> = (0..p).map(|_| 1.0 + g.f64_unit() * 0.5).collect();
+            plan.with_stage_multipliers(mult)
+        } else {
+            plan
+        };
+        plan.build()
+    } else {
+        // data-parallel axis: multi-rank expansion under a scenario
+        let blocks = *g.pick(&[1usize, 1, 4, 8]);
+        let plan = if blocks > 1 {
+            let elems = even_chunk_params(n_elems, blocks);
+            StepPlan::from_protocol_layered(
+                &cost, scheme, &spec, &elems, 256, ga, compute_s, depth,
+            )
+        } else {
+            StepPlan::from_protocol(
+                &cost,
+                scheme,
+                &spec,
+                n_elems as usize,
+                256,
+                ga,
+                compute_s,
+                depth,
+            )
+        };
+        let world = cluster.world_size();
+        let mut scenario = Scenario {
+            ranks: if g.bool() {
+                RankCount::Auto
+            } else {
+                RankCount::Count(g.usize_in(1, world.min(8)))
+            },
+            seed: g.usize_in(0, 1000) as u64,
+            ..Default::default()
+        };
+        if g.bool() {
+            scenario.stragglers =
+                vec![(g.usize_in(0, world - 1), 1.0 + g.f64_unit())];
+        }
+        if g.bool() {
+            scenario.jitter_sigma = g.f64_unit() * 0.1;
+        }
+        if g.bool() {
+            scenario.imbalance = vec![(g.usize_in(0, world - 1), ga + g.usize_in(1, 3))];
+        }
+        MultiRankPlan::new(&plan, &cluster, &scenario).build()
+    }
+}
+
+/// Run `graph` through both event loops and assert bit-identity on
+/// every observable (see [`assert_identical`]). Returns the optimized
+/// schedule for further inspection.
+pub fn simulate_both(graph: TaskGraph) -> Schedule {
+    let reference = simulate_reference(graph.clone());
+    let optimized = simulate(graph);
+    assert_identical(&reference, &optimized);
+    optimized
+}
+
+/// Exact-bits equality for a pair of floats, with a labeled panic.
+fn assert_bits(what: &str, a: f64, b: f64) {
+    assert!(
+        a.to_bits() == b.to_bits(),
+        "{what}: reference {a:?} ({:#x}) != optimized {b:?} ({:#x})",
+        a.to_bits(),
+        b.to_bits()
+    );
+}
+
+/// Assert that two schedules of the same graph are bit-identical:
+/// makespan, every span, per-rank stall ledgers and skew waits, link
+/// usage, and the critical-path decomposition. Panics with the first
+/// divergence, labeled by task/rank/link.
+pub fn assert_identical(reference: &Schedule, optimized: &Schedule) {
+    assert_bits("makespan", reference.makespan(), optimized.makespan());
+    assert_eq!(reference.spans().len(), optimized.spans().len(), "span count");
+    for (r, o) in reference.spans().iter().zip(optimized.spans()) {
+        assert_eq!(r.task, o.task, "span task order");
+        assert_bits(&format!("span start of task {}", r.task.0), r.start, o.start);
+        assert_bits(&format!("span end of task {}", r.task.0), r.end, o.end);
+    }
+
+    // stall + skew ledgers, per rank
+    assert_eq!(reference.ranks(), optimized.ranks(), "rank sets");
+    for rank in reference.ranks() {
+        let rs = reference.stall_by_class(rank);
+        let os = optimized.stall_by_class(rank);
+        assert_eq!(
+            rs.keys().collect::<Vec<_>>(),
+            os.keys().collect::<Vec<_>>(),
+            "stall classes of rank {rank}"
+        );
+        for (class, &stall) in &rs {
+            assert_bits(&format!("stall[{class}] of rank {rank}"), stall, os[class]);
+        }
+        assert_bits(
+            &format!("skew wait of rank {rank}"),
+            reference.skew_wait(rank),
+            optimized.skew_wait(rank),
+        );
+    }
+
+    // link-usage ledger
+    let ru = reference.link_usage();
+    let ou = optimized.link_usage();
+    assert_eq!(ru.keys().collect::<Vec<_>>(), ou.keys().collect::<Vec<_>>(), "link keys");
+    for (key, r) in &ru {
+        let o = &ou[key];
+        assert_bits(&format!("busy of {key:?}"), r.busy, o.busy);
+        assert_bits(&format!("task-seconds of {key:?}"), r.task_seconds, o.task_seconds);
+        assert_eq!(r.tasks, o.tasks, "task count of {key:?}");
+        assert_eq!(r.peak_in_flight, o.peak_in_flight, "peak of {key:?}");
+    }
+
+    // critical-path decomposition
+    let rd = critical::decompose(reference);
+    let od = critical::decompose(optimized);
+    assert_bits("decomposition makespan", rd.makespan(), od.makespan());
+    assert_bits("decomposition compute", rd.compute_s(), od.compute_s());
+    assert_bits("decomposition idle", rd.idle_s(), od.idle_s());
+    assert_eq!(
+        rd.comm_s().keys().collect::<Vec<_>>(),
+        od.comm_s().keys().collect::<Vec<_>>(),
+        "decomposition comm classes"
+    );
+    for (class, &s) in rd.comm_s() {
+        assert_bits(&format!("decomposition comm[{class}]"), s, od.comm_s()[class]);
+    }
+    assert_eq!(rd.segments().len(), od.segments().len(), "segment count");
+    for (r, o) in rd.segments().iter().zip(od.segments()) {
+        assert_eq!(r.task, o.task, "segment task");
+        assert_eq!(r.category, o.category, "segment category of task {}", r.task.0);
+        assert_bits(&format!("segment start of task {}", r.task.0), r.start, o.start);
+        assert_bits(&format!("segment end of task {}", r.task.0), r.end, o.end);
+        assert_bits(
+            &format!("segment idle-before of task {}", r.task.0),
+            r.idle_before,
+            o.idle_before,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn raw_graphs_are_valid_and_loops_agree() {
+        check("differential: raw random DAGs", 40, |g| {
+            simulate_both(random_graph(g));
+        });
+    }
+
+    #[test]
+    fn plan_graphs_are_valid_and_loops_agree() {
+        check("differential: plan-level worlds", 15, |g| {
+            simulate_both(random_plan_graph(g));
+        });
+    }
+}

@@ -17,6 +17,8 @@
 
 use crate::util::rng::Rng;
 
+pub mod differential;
+
 /// Random-input generator handed to each property case.
 pub struct Gen {
     rng: Rng,

@@ -1,0 +1,224 @@
+//! Differential suite for the fast event loop (DESIGN.md §16): the
+//! optimized arena engine (`sched::simulate`) must be bit-for-bit
+//! identical to the preserved map-based oracle
+//! (`sched::reference::simulate_reference`) — makespans, per-task spans,
+//! stall ledgers, link usage, and critical-path decompositions — across
+//! hundreds of randomized configurations, every `BENCH_baseline.json`
+//! pin, and explicit straggler/jitter/imbalance scenarios. The parallel
+//! sweep driver must produce byte-identical reports at any thread count.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use zero_topo::comm::cost::{CommEfficiency, CostModel};
+use zero_topo::model::TransformerSpec;
+use zero_topo::sched::multi::MultiRankPlan;
+use zero_topo::sched::pipeline::PipeConfig;
+use zero_topo::sched::plan::StepPlan;
+use zero_topo::sched::scenario::{RankCount, Scenario};
+use zero_topo::sched::Depth;
+use zero_topo::sharding::{Scheme, ShardingSpec};
+use zero_topo::sim::{
+    scaling_series, scaling_series_threaded, simulate_step_pipeline, simulate_step_schedule,
+    SimConfig,
+};
+use zero_topo::testing::{check, differential};
+use zero_topo::topology::{Cluster, MachineSpec};
+use zero_topo::util::json::Json;
+
+/// 200 seeded random configurations through both loops: 120 adversarial
+/// raw DAGs (ties, zero-work cascades, multi-instance contention,
+/// cross-rank dependency webs) + 80 plan-level worlds (scheme × machine
+/// × ranks × depth × blocks × P/M/V × scenario). Every observable is
+/// compared on `f64::to_bits` terms — see `testing::differential`.
+#[test]
+fn randomized_graphs_are_bit_identical_across_loops() {
+    check("differential: raw DAGs (integration)", 120, |g| {
+        differential::simulate_both(differential::random_graph(g));
+    });
+    check("differential: plan worlds (integration)", 80, |g| {
+        differential::simulate_both(differential::random_plan_graph(g));
+    });
+}
+
+/// Explicit straggler / jitter / imbalance scenarios (not just the
+/// randomly-drawn ones): each shape exercises a different multi-rank
+/// expansion path, and each must agree bit-for-bit across the loops.
+#[test]
+fn scenario_shapes_are_bit_identical_across_loops() {
+    let cluster = Cluster::frontier(2);
+    let cost = CostModel::with_efficiency(cluster.clone(), CommEfficiency::rccl_frontier());
+    let shapes: Vec<Scenario> = vec![
+        Scenario {
+            ranks: RankCount::Count(6),
+            stragglers: vec![(3, 1.7), (0, 1.2)],
+            ..Default::default()
+        },
+        Scenario { ranks: RankCount::Count(6), jitter_sigma: 0.08, seed: 7, ..Default::default() },
+        Scenario {
+            ranks: RankCount::Count(6),
+            imbalance: vec![(1, 4), (5, 3)],
+            ..Default::default()
+        },
+        Scenario {
+            ranks: RankCount::Auto,
+            stragglers: vec![(2, 2.0)],
+            jitter_sigma: 0.05,
+            imbalance: vec![(0, 3)],
+            seed: 99,
+            ..Default::default()
+        },
+    ];
+    for scheme in [Scheme::Zero3, Scheme::ZeroPP, Scheme::ZeroTopo { sec_degree: 2 }] {
+        let spec = ShardingSpec::resolve(scheme, &cluster).expect("builtin scheme resolves");
+        let plan = StepPlan::from_protocol(
+            &cost,
+            scheme,
+            &spec,
+            64_000_000,
+            256,
+            2,
+            1.0,
+            Depth::Bounded(1),
+        );
+        for scenario in &shapes {
+            differential::simulate_both(MultiRankPlan::new(&plan, &cluster, scenario).build());
+        }
+    }
+}
+
+fn baseline_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_baseline.json")
+}
+
+/// Every `BENCH_baseline.json` pin must reproduce at exactly 0.0 drift
+/// through the optimized loop (`to_bits` equality, far stronger than the
+/// calibrate tolerance), and each pinned world's task graph must agree
+/// bit-for-bit between the two loops on all observables.
+#[test]
+fn bench_pins_reproduce_exactly_through_the_optimized_loop() {
+    let text = std::fs::read_to_string(baseline_path()).expect("BENCH_baseline.json committed");
+    let json = Json::parse(&text).expect("valid baseline JSON");
+    let nodes = json.get("nodes").and_then(|n| n.as_usize()).expect("nodes");
+    let model = TransformerSpec::by_name(
+        json.get("model").and_then(|m| m.as_str()).expect("model"),
+    )
+    .expect("known model");
+    let entries = json.get("entries").and_then(|e| e.as_arr()).expect("entries");
+    assert!(entries.len() >= 8, "all 8 pins present");
+
+    let cfg = SimConfig::default();
+    for e in entries {
+        let mname = e.get("machine").and_then(|m| m.as_str()).expect("machine");
+        let sname = e.get("scheme").and_then(|s| s.as_str()).expect("scheme");
+        let pp = e.get("pp").and_then(|v| v.as_usize()).unwrap_or(1);
+        let mb = e.get("microbatches").and_then(|v| v.as_usize()).unwrap_or(0);
+        let pin = e.get("step_s").and_then(|s| s.as_f64()).expect("step_s");
+        let scheme = Scheme::parse(sname).unwrap_or_else(|| panic!("unknown scheme {sname}"));
+        let cluster = Cluster::new(MachineSpec::resolve(mname).expect("machine"), nodes);
+        let sched = if pp > 1 {
+            let pipe = PipeConfig { stages: pp, microbatches: mb, interleave: 1 };
+            simulate_step_pipeline(&model, scheme, &cluster, &cfg, &pipe)
+                .expect("pinned pipeline point prices")
+                .1
+        } else {
+            simulate_step_schedule(&model, scheme, &cluster, &cfg).1
+        };
+        assert_eq!(
+            sched.makespan().to_bits(),
+            pin.to_bits(),
+            "{mname}/{sname} pp{pp} mb{mb}: optimized loop moved the pin \
+             ({pin:?} -> {:?})",
+            sched.makespan()
+        );
+        // the pinned world itself must agree across both loops
+        let optimized = differential::simulate_both(sched.graph().clone());
+        assert_eq!(optimized.makespan().to_bits(), pin.to_bits());
+    }
+}
+
+/// The threaded scaling sweep returns bitwise the same series as the
+/// serial one at any thread count (one pure sim per point, results in
+/// node-count order).
+#[test]
+fn threaded_scaling_series_is_deterministic() {
+    let model = TransformerSpec::by_name("20b").unwrap();
+    let machine = MachineSpec::resolve("frontier").unwrap();
+    let node_counts = [4usize, 8, 12, 16];
+    let cfg = SimConfig::default();
+    let serial = scaling_series(&model, Scheme::Zero3, &machine, &node_counts, &cfg);
+    for threads in [2usize, 4, 16] {
+        let par =
+            scaling_series_threaded(&model, Scheme::Zero3, &machine, &node_counts, &cfg, threads);
+        assert_eq!(serial.len(), par.len());
+        for (s, p) in serial.iter().zip(&par) {
+            assert_eq!(s.gcds, p.gcds, "threads={threads}");
+            assert_eq!(
+                s.step_seconds.to_bits(),
+                p.step_seconds.to_bits(),
+                "threads={threads}"
+            );
+            assert_eq!(
+                s.flops_per_step.to_bits(),
+                p.flops_per_step.to_bits(),
+                "threads={threads}"
+            );
+            assert_eq!(
+                s.sequences_per_step.to_bits(),
+                p.sequences_per_step.to_bits(),
+                "threads={threads}"
+            );
+        }
+    }
+}
+
+fn run_bin(args: &[&str]) -> Vec<u8> {
+    let out = Command::new(env!("CARGO_BIN_EXE_zero-topo"))
+        .args(args)
+        .output()
+        .expect("zero-topo binary runs");
+    assert!(
+        out.status.success(),
+        "zero-topo {args:?} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    out.stdout
+}
+
+/// End-to-end determinism of the CLI sweep drivers: `plan --json` and
+/// `scale` must emit byte-identical reports (ranking, tie-breaks,
+/// ledgers, rendered tables) at --threads 1 vs N.
+#[test]
+fn cli_reports_are_byte_identical_across_thread_counts() {
+    let plan_args = [
+        "plan",
+        "--model",
+        "20b",
+        "--nodes",
+        "8",
+        "--schemes",
+        "zero3,zerotopo",
+        "--depths",
+        "1,inf",
+        "--blocks",
+        "1",
+        "--pp",
+        "1,2",
+        "--microbatches",
+        "8",
+        "--interleave",
+        "1",
+        "--json",
+    ];
+    let plan_serial = run_bin(&[&plan_args[..], &["--threads", "1"]].concat());
+    for t in ["4", "13"] {
+        let plan_par = run_bin(&[&plan_args[..], &["--threads", t]].concat());
+        assert_eq!(plan_serial, plan_par, "plan --json diverged at --threads {t}");
+    }
+
+    let scale_args =
+        ["scale", "--model", "20b", "--nodes", "4,8,12", "--schemes", "zero3,zerotopo"];
+    let scale_serial = run_bin(&[&scale_args[..], &["--threads", "1"]].concat());
+    let scale_par = run_bin(&[&scale_args[..], &["--threads", "8"]].concat());
+    assert_eq!(scale_serial, scale_par, "scale output diverged at --threads 8");
+}
