@@ -203,6 +203,9 @@ impl RunConfig {
             jitter_sigma: self.jitter_sigma,
             seed: self.seed,
             imbalance: self.imbalance.clone(),
+            // run-level fault events are CLI/goodput concerns, not part
+            // of the per-step clock a RunConfig describes
+            faults: Vec::new(),
         }
     }
 

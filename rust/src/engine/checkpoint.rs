@@ -18,12 +18,18 @@ const MAGIC: &[u8; 8] = b"ZTCKPT01";
 /// A snapshot of engine training state.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
+    /// Sharding-scheme name the state was trained under
+    /// (`Scheme::name()`); restore refuses a mismatch.
     pub scheme: String,
+    /// Optimizer step the snapshot was taken after.
     pub step: u64,
+    /// Canonical fp32 weights, flat.
     pub weights: Vec<f32>,
     /// Per-rank optimizer shards, flattened per field.
     pub master: Vec<Vec<f32>>,
+    /// Per-rank Adam first-moment shards (same geometry as `master`).
     pub m: Vec<Vec<f32>>,
+    /// Per-rank Adam second-moment shards (same geometry as `master`).
     pub v: Vec<Vec<f32>>,
 }
 
@@ -68,6 +74,21 @@ impl F32Bits for f32 {
 }
 
 impl Checkpoint {
+    /// Total persisted payload bytes (weights + every optimizer shard,
+    /// 4 bytes per f32) — what storage-path pricing charges for this
+    /// snapshot (`TrainEngine::checkpoint_save_seconds`). Header and
+    /// checksum framing are excluded: they are O(ranks), noise next to
+    /// the state itself.
+    pub fn state_bytes(&self) -> u64 {
+        let shard: usize = [&self.master, &self.m, &self.v]
+            .iter()
+            .flat_map(|g| g.iter())
+            .map(|s| s.len())
+            .sum();
+        4 * (self.weights.len() + shard) as u64
+    }
+
+    /// Encode as the self-describing binary format (see module doc).
     pub fn serialize(&self) -> Vec<u8> {
         let header = Json::obj(vec![
             ("scheme", Json::str(self.scheme.clone())),
@@ -94,6 +115,10 @@ impl Checkpoint {
         buf
     }
 
+    /// Decode and verify a [`Checkpoint::serialize`] buffer: magic,
+    /// Fletcher-64 checksum, header geometry, and exact payload length
+    /// are all checked — truncation, corruption, and geometry mismatches
+    /// are errors, never silently misread state.
     pub fn deserialize(data: &[u8]) -> Result<Checkpoint> {
         if data.len() < 24 || &data[..8] != MAGIC {
             bail!("not a zero-topo checkpoint");
@@ -135,6 +160,7 @@ impl Checkpoint {
         Ok(Checkpoint { scheme, step, weights, master, m, v })
     }
 
+    /// Write the serialized snapshot to a file.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let bytes = self.serialize();
         let mut f = std::fs::File::create(path.as_ref())
@@ -143,6 +169,7 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Read and verify a snapshot from a file.
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
         let mut data = Vec::new();
         std::fs::File::open(path.as_ref())
@@ -193,6 +220,42 @@ mod tests {
     #[test]
     fn rejects_foreign_files() {
         assert!(Checkpoint::deserialize(b"not a checkpoint at all...").is_err());
+    }
+
+    #[test]
+    fn detects_geometry_mismatch() {
+        // the header records shard lengths from `master`; a snapshot whose
+        // moment shards disagree serializes to a payload the header can't
+        // account for — deserialize must diagnose it, not misread state
+        let mut c = sample();
+        c.m[0].push(9.9); // m geometry no longer matches master
+        let bytes = c.serialize();
+        let err = Checkpoint::deserialize(&bytes).unwrap_err();
+        assert!(err.to_string().contains("trailing bytes"), "{err}");
+        let mut c = sample();
+        c.v[1].pop(); // shorter v: payload runs out before the header says
+        let bytes = c.serialize();
+        let err = Checkpoint::deserialize(&bytes).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn corruption_in_every_section_is_detected() {
+        // flip one byte at several structurally distinct offsets: magic,
+        // header, weights payload, shard payload, checksum itself
+        let bytes = sample().serialize();
+        for off in [0, 20, 16 + 60, bytes.len() - 12, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[off] ^= 0x40;
+            assert!(Checkpoint::deserialize(&bad).is_err(), "offset {off} undetected");
+        }
+    }
+
+    #[test]
+    fn state_bytes_counts_weights_and_all_shards() {
+        let c = sample();
+        // 100 weights + (2+3) master + (2+3) m + (2+3) v = 115 f32s
+        assert_eq!(c.state_bytes(), 4 * 115);
     }
 
     #[test]

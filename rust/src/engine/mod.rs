@@ -52,9 +52,13 @@ use crate::topology::{Cluster, LinkClass, MachineSpec};
 
 /// The engine over a PJRT-compiled model.
 pub struct TrainEngine<'a> {
+    /// The run description this engine was built from.
     pub cfg: RunConfig,
+    /// The simulated cluster (machine spec × node count).
     pub cluster: Cluster,
+    /// Resolved per-state sharding factors for `cfg.scheme` on `cluster`.
     pub spec: ShardingSpec,
+    /// The collective world: moves real data AND charges the cost model.
     pub comm: CommWorld,
     runner: &'a ModelRunner,
     /// Canonical fp16-rounded flat weights (identical on every replica).
@@ -71,10 +75,15 @@ pub struct TrainEngine<'a> {
     /// The priced per-step schedule behind `step_sim_s` — kept for the
     /// telemetry views (stall attribution, link utilization, trace).
     step_schedule: Option<Schedule>,
+    /// Loss curve + simulated-seconds accumulator for the run.
     pub log: TrainLog,
 }
 
 impl<'a> TrainEngine<'a> {
+    /// Build an engine for `cfg` over `runner`'s AOT-compiled model:
+    /// resolves the machine and sharding, initializes weights and
+    /// sharded optimizer state deterministically from the seed, and
+    /// prices the per-step event clock once (it is constant per run).
     pub fn new(cfg: RunConfig, runner: &'a ModelRunner) -> Result<TrainEngine<'a>> {
         let cluster = Cluster::new(MachineSpec::resolve(&cfg.machine)?, cfg.nodes);
         let spec = ShardingSpec::resolve(cfg.scheme, &cluster)?;
@@ -547,6 +556,62 @@ impl<'a> TrainEngine<'a> {
             m: self.opt.iter().map(|o| o.m.clone()).collect(),
             v: self.opt.iter().map(|o| o.v.clone()).collect(),
         }
+    }
+
+    /// Simulated seconds to persist `ck` through the machine's storage
+    /// path (DESIGN.md §17): per-rank bytes = the snapshot's real
+    /// `state_bytes / world` (dedup-and-rebalance — every rank writes
+    /// its shard), funneled through the node-shared write path by all
+    /// `workers_per_node` ranks concurrently, plus the path latency.
+    pub fn checkpoint_save_seconds(&self, ck: &checkpoint::Checkpoint) -> f64 {
+        let storage = self.cluster.spec.storage;
+        let bytes_per_rank = ck.state_bytes() as f64 / self.world() as f64;
+        storage.latency
+            + bytes_per_rank * self.cluster.workers_per_node() as f64 / storage.write_bandwidth
+    }
+
+    /// Simulated seconds to restore from `ck`: the storage read mirror
+    /// of [`TrainEngine::checkpoint_save_seconds`], plus — for schemes
+    /// with a secondary partition (ZeRO++ / ZeRO-topo) — the
+    /// rematerialization all-gather that rebuilds the quantized
+    /// secondary copies (a full-world INT8 gather of Ψ, the same
+    /// collective as the §V.D refresh, priced but not re-executed: the
+    /// canonical weights already hold the restored values).
+    pub fn checkpoint_restore_seconds(&self, ck: &checkpoint::Checkpoint) -> f64 {
+        let storage = self.cluster.spec.storage;
+        let bytes_per_rank = ck.state_bytes() as f64 / self.world() as f64;
+        let load = storage.latency
+            + bytes_per_rank * self.cluster.workers_per_node() as f64 / storage.read_bandwidth;
+        let remat = if self.spec.secondary > 0 {
+            let full: Vec<usize> = (0..self.world()).collect();
+            let wire = Wire::Int8 { block: self.quant_block() }.wire_bytes(self.weights.len());
+            self.comm.cost.all_gather_time(&full, wire as u64)
+        } else {
+            0.0
+        };
+        load + remat
+    }
+
+    /// Snapshot the training state AND advance the simulated clock by
+    /// the priced save — the checkpointing tax the goodput layer
+    /// (`sim::goodput`) models analytically, paid here on the engine's
+    /// own event clock. Returns the snapshot and the charged seconds.
+    pub fn checkpoint_priced(&mut self) -> (checkpoint::Checkpoint, f64) {
+        let ck = self.checkpoint();
+        let save_s = self.checkpoint_save_seconds(&ck);
+        self.log.sim_seconds += save_s;
+        (ck, save_s)
+    }
+
+    /// Restore training state AND advance the simulated clock by the
+    /// priced restore (storage read + secondary rematerialization).
+    /// Returns the charged seconds; the state restoration itself is
+    /// exactly [`TrainEngine::restore`] — bit-identical numerics.
+    pub fn restore_priced(&mut self, ck: &checkpoint::Checkpoint) -> Result<f64> {
+        self.restore(ck)?;
+        let restore_s = self.checkpoint_restore_seconds(ck);
+        self.log.sim_seconds += restore_s;
+        Ok(restore_s)
     }
 
     /// Restore training state from a checkpoint (scheme + world must match).

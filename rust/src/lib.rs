@@ -34,18 +34,22 @@ pub mod comm;
 pub mod config;
 pub mod data;
 pub mod dtype;
+// the documented public surface (ISSUEs 4 and 10): every public item in
+// the engine, memory, metrics, scheduler, simulator, and topology-spec
+// modules must carry rustdoc — `cargo doc` runs with
+// RUSTDOCFLAGS="-D warnings" in CI, so a missing doc or broken
+// intra-doc link fails the build
+#[warn(missing_docs)]
 pub mod engine;
+#[warn(missing_docs)]
 pub mod memory;
+#[warn(missing_docs)]
 pub mod metrics;
 pub mod model;
 pub mod optimizer;
 pub mod quant;
 pub mod report;
 pub mod runtime;
-// the documented public surface (ISSUE 4): every public item in the
-// scheduler, simulator, and topology-spec modules must carry rustdoc —
-// `cargo doc` runs with RUSTDOCFLAGS="-D warnings" in CI, so a missing
-// doc or broken intra-doc link fails the build
 #[warn(missing_docs)]
 pub mod sched;
 pub mod sharding;

@@ -24,10 +24,11 @@ use zero_topo::metrics::Throughput;
 use zero_topo::model::TransformerSpec;
 use zero_topo::metrics::sensitivity::DEFAULT_EPSILON;
 use zero_topo::report::{
-    capacity_frontier_markdown, category_label, render_capacity_frontier, render_critical_path,
-    render_decomposition_table, render_pipeline_table, render_plan_table, render_rank_table,
+    capacity_frontier_markdown, category_label, goodput_markdown, render_capacity_frontier,
+    render_critical_path, render_decomposition_table, render_goodput_sweep,
+    render_goodput_table, render_pipeline_table, render_plan_table, render_rank_table,
     render_scaling_figure, render_shadow_price_table, render_stall_table,
-    render_utilization_table, ScalingSeries,
+    render_utilization_table, GoodputRow, ScalingSeries,
 };
 use zero_topo::runtime::Runtime;
 use zero_topo::sched::critical::{decompose, Decomposition};
@@ -35,6 +36,9 @@ use zero_topo::sched::pipeline::PipeConfig;
 use zero_topo::sched::scenario::{RankCount, Scenario};
 use zero_topo::sched::{trace, Schedule};
 use zero_topo::sharding::{Scheme, ShardingSpec};
+use zero_topo::sim::goodput::{
+    checkpoint_cost, goodput, optimal_interval, price_timeline, sweep,
+};
 use zero_topo::sim::par::parallel_map;
 use zero_topo::sim::plan::{plan_search_threaded, PlanSpace};
 use zero_topo::sim::{
@@ -71,6 +75,7 @@ JSON (see examples/machines/). Default: frontier.
             [--depths 1,2,inf] [--blocks 1,44] [--pp 1,2,4,8]
             [--microbatches 0,8,16,32] [--interleave 1,2] [--mfu F]
             [--top K] [--threads T] [--json] [--emit-config FILE] [--md FILE]
+            [--objective tflops|goodput] [--mtbf 21600]
                                             feasibility-aware auto-planner
                                             (DESIGN.md Sec 15): sweep scheme x
                                             depth x blocks x P x M x V, prune
@@ -83,7 +88,9 @@ JSON (see examples/machines/). Default: frontier.
                                             a RunConfig JSON that
                                             `train --config` runs verbatim;
                                             --md appends the capacity frontier
-                                            as markdown
+                                            as markdown; --objective goodput
+                                            re-ranks survivors by net tokens/s
+                                            under failure (DESIGN.md §17)
   simulate  [--machine M] [--model 20b] [--nodes 8,16,32,48]
             [--schemes zero3,zeropp,zerotopo] [--depth N|inf] [--ranks N|auto]
             [--layer-granular] [--blocks B] [--pp P] [--microbatches M]
@@ -104,7 +111,15 @@ JSON (see examples/machines/). Default: frontier.
             [--ranks N|auto] [--straggler R:MULT,...] [--jitter SIGMA]
             [--seed S] [--imbalance R:GA,...] [--depth N|inf]
             [--layer-granular] [--blocks B] [--rank-rows K] [--threads T]
-            [--trace out.json]              multi-rank stragglers/jitter study
+            [--faults STEP:fail|STEP:preempt:GRACE|STEP:resize:NODES,...]
+            [--steps 20] [--ckpt-every 5] [--mtbf 21600]
+            [--trace out.json]              multi-rank stragglers/jitter study;
+                                            --faults walks a priced multi-step
+                                            timeline under deterministic node
+                                            failures / preemptions / elastic
+                                            resizes with checkpoint save +
+                                            lost-work + restore accounting
+                                            (DESIGN.md §17)
   calibrate [--check] [--write] [--baseline FILE] [--tolerance 0.01]
             [--md FILE]                     perf guardrail vs BENCH_baseline.json
                                             (incl. pinned P=4 pipeline points);
@@ -113,7 +128,21 @@ JSON (see examples/machines/). Default: frontier.
                                             also self-profiles the simulator —
                                             tasks/sec is a gated column under
                                             --check (>3x slowdown vs the
-                                            baseline's tasks_per_s fails)
+                                            baseline's tasks_per_s fails);
+                                            also pins goodput (tok/s) for the
+                                            frontier DP points at the default
+                                            MTBF when the baseline records it
+  goodput   [--machines frontier,dgx | --machine M] [--model 20b] [--nodes 48]
+            [--schemes S,...] [--mtbf 21600] [--interval S] [--sweep]
+            [--json] [--md FILE]            goodput under failure (DESIGN.md
+                                            §17): price checkpoint save/load
+                                            against each machine's storage
+                                            path, derive the Young/Daly
+                                            optimal interval tau*, and report
+                                            expected tokens/s net of saves,
+                                            lost work, and restarts; --sweep
+                                            grids tau* x {1/8..8}; --interval
+                                            overrides tau*
   train     [--config FILE] [--machine M] [--model tiny] [--scheme zerotopo]
             [--nodes 1] [--steps 10] [--depth N|inf] [--layer-granular]
             [--blocks B] [--ranks N|auto] [--jitter SIGMA]
@@ -160,11 +189,17 @@ text-format snapshot of the same run's metrics registry. All quantities
 are simulated seconds/bytes; only calibrate's tasks/sec is wall time.
 ";
 
+/// Default cluster-level MTBF for goodput pricing: 6 hours — the right
+/// order of magnitude for a ~50-node Frontier-class allocation (per-node
+/// MTBF of ~10^6 s divided across the job), and the value the pinned
+/// `goodput_tokens_per_s` baseline entries are computed at.
+const DEFAULT_MTBF_S: f64 = 21_600.0;
+
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = match Args::parse(
         raw,
-        &["verbose", "json", "help", "stalls", "check", "write", "layer-granular", "diff"],
+        &["verbose", "json", "help", "stalls", "check", "write", "layer-granular", "diff", "sweep"],
     ) {
         Ok(a) => a,
         Err(e) => {
@@ -187,6 +222,7 @@ fn main() {
         "pipeline" => cmd_pipeline(&args),
         "scenario" => cmd_scenario(&args),
         "calibrate" => cmd_calibrate(&args),
+        "goodput" => cmd_goodput(&args),
         "explain" => cmd_explain(&args),
         "train" => cmd_train(&args),
         "report" => cmd_report(&args),
@@ -428,7 +464,41 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     let top = args.parse_opt("top", 8usize)?;
     let threads = args.parse_opt("threads", 1usize)?;
 
-    let out = plan_search_threaded(&model, &cluster, &cfg, &space, threads);
+    let mut out = plan_search_threaded(&model, &cluster, &cfg, &space, threads);
+
+    // --objective goodput: re-rank the feasible points by expected net
+    // tokens/s under failure at --mtbf (DESIGN.md §17) instead of raw
+    // TFLOPS/GCD. Checkpoint restore cost is scheme-dependent (secondary
+    // partitions rematerialize over a full-world quantized all-gather),
+    // so the ranking can genuinely flip between schemes.
+    let objective = args.get_or("objective", "tflops").to_string();
+    match objective.as_str() {
+        "tflops" => {}
+        "goodput" => {
+            let mtbf = args.parse_opt("mtbf", DEFAULT_MTBF_S)?;
+            let mut keyed: Vec<(f64, zero_topo::sim::plan::PlanPoint)> =
+                Vec::with_capacity(out.ranked.len());
+            for p in out.ranked.drain(..) {
+                // degenerate goodput inputs rank last instead of aborting
+                // the whole plan — a point that cannot even checkpoint is
+                // still feasible, just undesirable
+                let g = checkpoint_cost(&model, p.scheme, &cluster, &cfg)
+                    .and_then(|ck| {
+                        let tau = optimal_interval(mtbf, &ck)?;
+                        goodput(p.step_s, p.tokens_per_step, &ck, mtbf, tau)
+                    })
+                    .map(|r| r.goodput_tokens_per_s)
+                    .unwrap_or(f64::NEG_INFINITY);
+                keyed.push((g, p));
+            }
+            keyed.sort_by(|a, b| b.0.partial_cmp(&a.0).expect("goodput keys are never NaN"));
+            out.ranked = keyed.into_iter().map(|(_, p)| p).collect();
+            println!(
+                "objective: goodput (MTBF {mtbf:.0}s, interval tau*) — ranking by net tokens/s"
+            );
+        }
+        other => anyhow::bail!("unknown --objective '{other}' (use tflops|goodput)"),
+    }
 
     let world = cluster.world_size();
     let title = format!(
@@ -953,6 +1023,8 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
         seed: args.parse_opt("seed", 42u64)?,
         imbalance: Scenario::parse_imbalance(args.get_or("imbalance", ""))
             .map_err(|e| anyhow::anyhow!(e))?,
+        faults: Scenario::parse_faults(args.get_or("faults", ""))
+            .map_err(|e| anyhow::anyhow!(e))?,
     };
     let rank_rows = args.parse_opt("rank-rows", 12usize)?;
     let threads = args.parse_opt("threads", 1usize)?;
@@ -1001,6 +1073,66 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
     }
     println!("{}", summary.render());
 
+    // --faults: walk a priced multi-step timeline under the deterministic
+    // injectors and account every simulated second (DESIGN.md §17). The
+    // per-step clock above is untouched — with no faults the run is
+    // bit-identical to before the injectors existed.
+    if !scenario.faults.is_empty() {
+        let steps = args.parse_opt("steps", 20usize)?;
+        let every = args.parse_opt("ckpt-every", 5usize)?;
+        let mut tl = Table::new(&[
+            "scheme",
+            "useful (s)",
+            "saves (s)",
+            "lost (s)",
+            "overhead (s)",
+            "total (s)",
+            "goodput (tok/s)",
+            "tax",
+        ])
+        .title(format!(
+            "Fault timeline — {steps} steps, checkpoint every {every}, {} fault(s)",
+            scenario.faults.len()
+        ))
+        .left_first();
+        let mut event_lines = String::new();
+        for &scheme in &schemes {
+            let tr = price_timeline(
+                &model, scheme, &machine, nodes, &cfg, &scenario, None, steps, every,
+            )?;
+            tl.row(vec![
+                scheme.name(),
+                fnum(tr.useful_s, 3),
+                fnum(tr.save_s_total, 3),
+                fnum(tr.lost_work_s_total, 3),
+                fnum(tr.overhead_s_total, 3),
+                fnum(tr.total_s, 3),
+                fnum(tr.goodput_tokens_per_s, 0),
+                format!("{:.2}%", (1.0 - tr.goodput_tokens_per_s / tr.tokens_per_s) * 100.0),
+            ]);
+            for ev in &tr.events {
+                event_lines.push_str(&format!(
+                    "  {} @ step {}: {} — overhead {:.3}s, lost work {:.3}s\n",
+                    scheme.name(),
+                    ev.at_step,
+                    ev.label,
+                    ev.overhead_s,
+                    ev.lost_work_s
+                ));
+            }
+            if tr.final_nodes != nodes {
+                event_lines.push_str(&format!(
+                    "  {} finished on {} nodes (step time {:.3}s after resize)\n",
+                    scheme.name(),
+                    tr.final_nodes,
+                    tr.final_step_s
+                ));
+            }
+        }
+        println!("{}", tl.render());
+        print!("{event_lines}");
+    }
+
     for (name, sched) in &scheds {
         let title = format!("{name} — per-rank attribution");
         println!("{}", render_rank_table(&title, sched, &machine, rank_rows));
@@ -1045,13 +1177,24 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     // (1, 0) marks the plain data-parallel entries. Each point carries
     // its wall-clock self-profile (sim::SimProfile) — real time, strictly
     // apart from the simulated step_s it sits next to.
-    let mut entries: Vec<(String, String, usize, usize, f64, SimProfile)> = Vec::new();
+    let mut entries: Vec<(String, String, usize, usize, f64, SimProfile, Option<f64>)> =
+        Vec::new();
     for mname in &machines {
         let spec = MachineSpec::resolve(mname)?;
         let cluster = Cluster::new(spec, nodes);
         for &scheme in &schemes {
             let (b, _, prof) = profile_step(&model, scheme, &cluster, &cfg);
-            entries.push((mname.clone(), scheme.name(), 1, 0, b.step_s, prof));
+            // goodput pin (ISSUE 10): net tokens/s at the Young/Daly
+            // optimal interval under the default MTBF — gated like step_s,
+            // but only when the committed baseline records the field
+            let g = {
+                let ck = checkpoint_cost(&model, scheme, &cluster, &cfg)?;
+                let tau = optimal_interval(DEFAULT_MTBF_S, &ck)?;
+                let tokens =
+                    (b.grad_accum * cfg.micro_batch * model.seq * cluster.world_size()) as f64;
+                goodput(b.step_s, tokens, &ck, DEFAULT_MTBF_S, tau)?.goodput_tokens_per_s
+            };
+            entries.push((mname.clone(), scheme.name(), 1, 0, b.step_s, prof, Some(g)));
         }
     }
     // pinned pipeline points (ISSUE 4): ZeRO-topo 1F1B at P=4, M ∈ {8, 32}
@@ -1073,7 +1216,10 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
                 &cfg,
                 &pipe,
             )?;
-            entries.push((mname.clone(), "ZeRO-topo".into(), pp, mb, b.step_s, prof));
+            // pipeline points carry no goodput pin: the timeline pricer
+            // handles pipelines, but the pinned guardrail keeps the DP
+            // points as its goodput surface
+            entries.push((mname.clone(), "ZeRO-topo".into(), pp, mb, b.step_s, prof, None));
         }
     }
 
@@ -1084,7 +1230,7 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
             ("tolerance", Json::num(tolerance)),
             (
                 "entries",
-                Json::arr(entries.iter().map(|(m, s, pp, mb, t, prof)| {
+                Json::arr(entries.iter().map(|(m, s, pp, mb, t, prof, g)| {
                     let mut fields = vec![
                         ("machine", Json::str(m.clone())),
                         ("scheme", Json::str(s.clone())),
@@ -1094,6 +1240,9 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
                         fields.push(("microbatches", Json::from(*mb)));
                     }
                     fields.push(("step_s", Json::num(*t)));
+                    if let Some(g) = g {
+                        fields.push(("goodput_tokens_per_s", Json::num(*g)));
+                    }
                     // wall-clock self-profile: tasks_per_s is the floor the
                     // --check wall-time gate compares against (>3x under
                     // this recorded rate fails); tasks/wall_s are context
@@ -1113,10 +1262,11 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
         anyhow::anyhow!("cannot read baseline {path}: {e} (run `calibrate --write`)")
     })?;
     let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad baseline {path}: {e}"))?;
-    // value: (step_s, optional baseline tasks_per_s) — old baselines
-    // without the self-profile fields still parse (speed column shows —)
+    // value: (step_s, optional baseline tasks_per_s, optional goodput pin)
+    // — old baselines without the newer fields still parse (the speed
+    // column shows — and the goodput gate stays off for that entry)
     type BaselineKey = (String, String, usize, usize);
-    let mut baseline: std::collections::BTreeMap<BaselineKey, (f64, Option<f64>)> =
+    let mut baseline: std::collections::BTreeMap<BaselineKey, (f64, Option<f64>, Option<f64>)> =
         std::collections::BTreeMap::new();
     for e in json
         .get("entries")
@@ -1132,7 +1282,8 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
             .and_then(|v| v.as_f64())
             .ok_or_else(|| anyhow::anyhow!("baseline entry without step_s"))?;
         let tps = e.get("tasks_per_s").and_then(|v| v.as_f64()).filter(|&v| v > 0.0);
-        baseline.insert((m, s, pp, mb), (t, tps));
+        let gpin = e.get("goodput_tokens_per_s").and_then(|v| v.as_f64()).filter(|&v| v > 0.0);
+        baseline.insert((m, s, pp, mb), (t, tps, gpin));
     }
     // precedence: explicit --tolerance > baseline's recorded field > default
     let tol = if args.get("tolerance").is_some() {
@@ -1165,7 +1316,7 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     );
     let mut failures = Vec::new();
     let mut slowdowns = Vec::new();
-    for (m, s, pp, mb, now, prof) in &entries {
+    for (m, s, pp, mb, now, prof, gnow) in &entries {
         let label = if *pp > 1 { format!("{s} [pp{pp} mb{mb}]") } else { s.clone() };
         let now_tps = prof.tasks_per_sec();
         let tps_cell = if now_tps > 0.0 {
@@ -1174,7 +1325,7 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
             "—".to_string()
         };
         match baseline.get(&(m.clone(), s.clone(), *pp, *mb)) {
-            Some(&(base, base_tps)) => {
+            Some(&(base, base_tps, base_g)) => {
                 let drift = (now - base) / base;
                 t.row(vec![
                     m.clone(),
@@ -1204,6 +1355,18 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
                     if now_tps > 0.0 && now_tps < b_tps / 3.0 {
                         slowdowns.push(format!(
                             "{m}/{label}: {b_tps:.0} -> {now_tps:.0} tasks/s"
+                        ));
+                    }
+                }
+                // goodput gate: only when both the baseline pin and the
+                // freshly-computed value exist for this entry — the drift
+                // tolerance is shared with step_s
+                if let (Some(bg), Some(ng)) = (base_g, *gnow) {
+                    let gdrift = (ng - bg) / bg;
+                    if gdrift.abs() > tol {
+                        failures.push(format!(
+                            "{m}/{label} goodput: {bg:.6} -> {ng:.6} tok/s ({:+.2}%)",
+                            gdrift * 100.0
                         ));
                     }
                 }
@@ -1277,6 +1440,151 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
         eprintln!("warning: {msg}");
     } else {
         println!("all {} points within {:.1}% of baseline", entries.len(), tol * 100.0);
+    }
+    Ok(())
+}
+
+/// Goodput under failure (DESIGN.md §17): per machine x scheme, price the
+/// checkpoint save/restore path against the machine's storage spec, derive
+/// the Young/Daly optimal interval tau*, and report expected tokens/s net
+/// of saves, lost work, and restarts at the given MTBF.
+fn cmd_goodput(args: &Args) -> anyhow::Result<()> {
+    let model = TransformerSpec::by_name(args.get_or("model", "20b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model (use 10b/20b/125m)"))?;
+    let nodes = args.parse_opt("nodes", 48usize)?;
+    let schemes = parse_schemes(args)?;
+    let mut cfg = SimConfig::default();
+    cfg.mfu = args.parse_opt("mfu", cfg.mfu)?;
+    let mtbf = args.parse_opt("mtbf", DEFAULT_MTBF_S)?;
+    // --interval overrides the closed-form tau* (e.g. to price a fixed
+    // operational cadence); degenerate values come back as diagnosed
+    // errors from the goodput layer, not NaN
+    let interval: Option<f64> = match args.get("interval") {
+        Some(_) => Some(args.parse_opt("interval", 0.0f64)?),
+        None => None,
+    };
+    // --machine (single, accepts spec JSON paths) wins over the
+    // calibrate-style --machines comma list
+    let machines: Vec<String> = match args.get("machine") {
+        Some(m) => vec![m.to_string()],
+        None => args
+            .get_or("machines", "frontier,dgx")
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .collect(),
+    };
+
+    let mut machine_json = Vec::new();
+    let mut md_all = String::new();
+    for mname in &machines {
+        let spec = MachineSpec::resolve(mname)?;
+        let cluster = Cluster::new(spec, nodes);
+        let world = cluster.world_size();
+        let mut rows = Vec::new();
+        let mut scheme_json = Vec::new();
+        // (scheme name, tau*, interval grid) — rendered after the table
+        let mut sweeps: Vec<(
+            String,
+            f64,
+            Vec<(f64, Result<zero_topo::sim::goodput::GoodputReport, zero_topo::sim::goodput::GoodputError>)>,
+        )> = Vec::new();
+        for &scheme in &schemes {
+            let b = simulate_step(&model, scheme, &cluster, &cfg);
+            let ck = checkpoint_cost(&model, scheme, &cluster, &cfg)?;
+            let tau = optimal_interval(mtbf, &ck)?;
+            let tokens = (b.grad_accum * cfg.micro_batch * model.seq * world) as f64;
+            let used = interval.unwrap_or(tau);
+            let g = goodput(b.step_s, tokens, &ck, mtbf, used)?;
+            rows.push(GoodputRow {
+                scheme: scheme.name(),
+                step_s: b.step_s,
+                tokens_per_s: g.tokens_per_s,
+                save_s: ck.save_s,
+                restore_s: ck.restore_s(),
+                tau_opt_s: tau,
+                availability: g.availability,
+                goodput_tokens_per_s: g.goodput_tokens_per_s,
+            });
+            let mut fields = vec![
+                ("scheme", Json::str(scheme.name())),
+                ("step_s", Json::num(b.step_s)),
+                ("tokens_per_step", Json::num(tokens)),
+                ("save_s", Json::num(ck.save_s)),
+                ("load_s", Json::num(ck.load_s)),
+                ("remat_s", Json::num(ck.remat_s)),
+                ("restore_s", Json::num(ck.restore_s())),
+                ("tau_opt_s", Json::num(tau)),
+                ("interval_s", Json::num(used)),
+                ("availability", Json::num(g.availability)),
+                ("tokens_per_s", Json::num(g.tokens_per_s)),
+                ("goodput_tokens_per_s", Json::num(g.goodput_tokens_per_s)),
+            ];
+            if args.flag("sweep") {
+                let grid = sweep(b.step_s, tokens, &ck, mtbf)?;
+                fields.push((
+                    "sweep",
+                    Json::arr(grid.iter().map(|(i, r)| match r {
+                        Ok(g) => Json::obj(vec![
+                            ("interval_s", Json::num(*i)),
+                            ("availability", Json::num(g.availability)),
+                            ("goodput_tokens_per_s", Json::num(g.goodput_tokens_per_s)),
+                        ]),
+                        Err(e) => Json::obj(vec![
+                            ("interval_s", Json::num(*i)),
+                            ("error", Json::str(e.to_string())),
+                        ]),
+                    })),
+                ));
+                sweeps.push((scheme.name(), tau, grid));
+            }
+            scheme_json.push(Json::obj(fields));
+        }
+        let title = format!(
+            "Goodput — {} on {} x{} nodes ({} workers), MTBF {:.0}s, interval {}",
+            model.name,
+            cluster.spec.name,
+            nodes,
+            world,
+            mtbf,
+            interval.map(|i| format!("{i:.0}s")).unwrap_or_else(|| "tau*".into()),
+        );
+        if args.flag("json") {
+            machine_json.push(Json::obj(vec![
+                ("machine", Json::str(mname.clone())),
+                ("world", Json::from(world)),
+                ("schemes", Json::arr(scheme_json.into_iter())),
+            ]));
+        } else {
+            println!("{}", render_goodput_table(&title, mtbf, &rows));
+            for (name, tau, grid) in &sweeps {
+                println!(
+                    "{}",
+                    render_goodput_sweep(&format!("{name} — interval sweep"), *tau, grid)
+                );
+            }
+        }
+        if args.get("md").is_some() {
+            md_all.push_str(&goodput_markdown(&title, mtbf, &rows));
+        }
+    }
+    if args.flag("json") {
+        let json = Json::obj(vec![
+            ("model", Json::str(model.name.clone())),
+            ("nodes", Json::from(nodes)),
+            ("mtbf_s", Json::num(mtbf)),
+            ("machines", Json::arr(machine_json.into_iter())),
+        ]);
+        println!("{json}");
+    }
+    if let Some(md_path) = args.get("md") {
+        use std::io::Write;
+        // append, never truncate: $GITHUB_STEP_SUMMARY is shared by steps
+        std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(md_path)?
+            .write_all(md_all.as_bytes())?;
+        println!("appended goodput markdown to {md_path}");
     }
     Ok(())
 }

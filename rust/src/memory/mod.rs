@@ -14,10 +14,13 @@ use crate::sched::Depth;
 use crate::sharding::{Scheme, ShardingError, ShardingSpec};
 use crate::topology::Cluster;
 
-/// Bytes per parameter for each state component.
-pub const WEIGHT_BYTES: f64 = 2.0; // fp16
-pub const GRAD_BYTES: f64 = 2.0; // fp16
-pub const OPTIM_BYTES: f64 = 12.0; // Adam: fp32 master + m + v
+/// fp16 weight bytes per parameter.
+pub const WEIGHT_BYTES: f64 = 2.0;
+/// fp16 gradient bytes per parameter.
+pub const GRAD_BYTES: f64 = 2.0;
+/// Adam optimizer-state bytes per parameter (fp32 master + m + v), the
+/// paper's K = 12.
+pub const OPTIM_BYTES: f64 = 12.0;
 /// INT8 secondary partition: 1 byte/param + one f32 scale per block.
 pub fn int8_bytes(block: usize) -> f64 {
     1.0 + 4.0 / block as f64
@@ -26,13 +29,18 @@ pub fn int8_bytes(block: usize) -> f64 {
 /// Per-device memory breakdown in bytes for model states.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DeviceMemory {
+    /// fp16 primary weight shard bytes (Table V).
     pub weights: f64,
+    /// Secondary-partition copy bytes (ZeRO++ fp16 / ZeRO-topo INT8).
     pub secondary: f64,
+    /// fp16 gradient shard bytes (Table VI).
     pub grads: f64,
+    /// Adam optimizer-state shard bytes (K = 12 bytes/param).
     pub optim: f64,
 }
 
 impl DeviceMemory {
+    /// Sum of all model-state components per device.
     pub fn total(&self) -> f64 {
         self.weights + self.secondary + self.grads + self.optim
     }
@@ -42,12 +50,17 @@ impl DeviceMemory {
 /// schemes with a quantized secondary partition (ZeRO-topo).
 #[derive(Debug, Clone)]
 pub struct MemoryModel {
+    /// The ZeRO variant whose partitioning the model prices.
     pub scheme: Scheme,
+    /// Resolved partition degrees for weights/grads/optimizer/secondary.
     pub spec: ShardingSpec,
+    /// INT8 quantization block size for the secondary partition.
     pub quant_block: usize,
 }
 
 impl MemoryModel {
+    /// Build a model with the default quantization block
+    /// (`quant::DEFAULT_BLOCK`).
     pub fn new(scheme: Scheme, spec: ShardingSpec) -> Self {
         MemoryModel { scheme, spec, quant_block: crate::quant::DEFAULT_BLOCK }
     }
@@ -80,6 +93,7 @@ impl MemoryModel {
         OPTIM_BYTES * psi / self.spec.optim as f64
     }
 
+    /// Full per-device breakdown for a model of Ψ = `psi` parameters.
     pub fn per_device(&self, psi: f64) -> DeviceMemory {
         let (weights, secondary) = self.weight_bytes_per_device(psi);
         DeviceMemory {

@@ -12,6 +12,7 @@ pub mod telemetry;
 /// Throughput metrics for one configuration point (one bar of Fig 7/8).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Throughput {
+    /// Worker (GCD) count at this point.
     pub gcds: usize,
     /// Simulated seconds per optimizer step.
     pub step_seconds: f64,
@@ -95,21 +96,29 @@ impl StepUtilization {
 /// A recorded loss-curve sample.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LossPoint {
+    /// Optimizer step the sample was taken after.
     pub step: usize,
+    /// Cumulative tokens consumed by that step.
     pub tokens: u64,
+    /// Training loss value.
     pub loss: f64,
 }
 
 /// Running training log for one scheme.
 #[derive(Debug, Clone, Default)]
 pub struct TrainLog {
+    /// Sharding scheme name the run trained under.
     pub scheme: String,
+    /// Recorded loss-curve samples, in step order.
     pub losses: Vec<LossPoint>,
+    /// Accumulated simulated (event-clock) seconds.
     pub sim_seconds: f64,
+    /// Accumulated wall-clock seconds the simulation itself took.
     pub wall_seconds: f64,
 }
 
 impl TrainLog {
+    /// Loss of the last recorded sample, if any.
     pub fn final_loss(&self) -> Option<f64> {
         self.losses.last().map(|p| p.loss)
     }
@@ -123,6 +132,7 @@ impl TrainLog {
         Some(tail.iter().map(|p| p.loss).sum::<f64>() / tail.len() as f64)
     }
 
+    /// Render the loss curve as `step,tokens,loss` CSV.
     pub fn to_csv(&self) -> String {
         let mut s = String::from("step,tokens,loss\n");
         for p in &self.losses {

@@ -152,6 +152,11 @@ pub struct StepRecord {
     pub bubble_fraction: Option<f64>,
     /// Training loss after this step (train records only).
     pub loss: Option<f64>,
+    /// Expected goodput (tokens/s net of checkpoint + failure costs)
+    /// under the run's MTBF/interval assumptions (`sim::goodput`).
+    pub goodput_tokens_per_s: Option<f64>,
+    /// Availability factor `goodput / raw tokens-per-second` in [0, 1].
+    pub availability: Option<f64>,
 }
 
 impl StepRecord {
@@ -184,6 +189,8 @@ impl StepRecord {
             streams: None,
             bubble_fraction: None,
             loss: None,
+            goodput_tokens_per_s: None,
+            availability: None,
         }
     }
 
@@ -282,6 +289,14 @@ impl StepRecord {
         self
     }
 
+    /// Attach the goodput view: expected net tokens/s and the
+    /// availability factor from a `sim::goodput` analysis.
+    pub fn with_goodput(mut self, goodput_tokens_per_s: f64, availability: f64) -> StepRecord {
+        self.goodput_tokens_per_s = Some(goodput_tokens_per_s);
+        self.availability = Some(availability);
+        self
+    }
+
     /// Serialize to the one-object-per-line JSON shape of DESIGN.md §13.
     pub fn to_json(&self) -> Json {
         let mut fields: Vec<(&str, Json)> = vec![
@@ -365,6 +380,12 @@ impl StepRecord {
         }
         if let Some(l) = self.loss {
             fields.push(("loss", Json::num(l)));
+        }
+        if let Some(g) = self.goodput_tokens_per_s {
+            fields.push(("goodput_tokens_per_s", Json::num(g)));
+        }
+        if let Some(a) = self.availability {
+            fields.push(("availability", Json::num(a)));
         }
         Json::obj(fields)
     }
@@ -520,6 +541,20 @@ mod tests {
         }
         let last = Json::parse(lines[1]).unwrap();
         assert_eq!(last.get("loss").and_then(|v| v.as_f64()), Some(3.5));
+    }
+
+    #[test]
+    fn goodput_fields_are_optional_and_serialize_together() {
+        let rec = tiny_record();
+        let j = rec.to_json();
+        assert!(j.get("goodput_tokens_per_s").is_none());
+        assert!(j.get("availability").is_none());
+        let with = rec.with_goodput(1.8e5, 0.989);
+        let j = with.to_json();
+        assert_eq!(j.get("goodput_tokens_per_s").and_then(|v| v.as_f64()), Some(1.8e5));
+        assert_eq!(j.get("availability").and_then(|v| v.as_f64()), Some(0.989));
+        let back = Json::parse(&j.to_string()).expect("valid JSON");
+        assert_eq!(back, j);
     }
 
     #[test]

@@ -484,6 +484,117 @@ pub fn capacity_frontier_markdown(
     s
 }
 
+/// One scheme's goodput summary line for [`render_goodput_table`]:
+/// checkpoint-path costs, the optimal interval, and the resulting
+/// net tokens/s at that interval.
+#[derive(Debug, Clone)]
+pub struct GoodputRow {
+    /// Scheme name.
+    pub scheme: String,
+    /// Event-clock seconds per optimizer step.
+    pub step_s: f64,
+    /// Failure-free throughput (tokens/s).
+    pub tokens_per_s: f64,
+    /// Checkpoint save seconds δ.
+    pub save_s: f64,
+    /// Restart seconds R (load + rematerialization).
+    pub restore_s: f64,
+    /// Optimal checkpoint interval τ* = sqrt(2δ(M−R)).
+    pub tau_opt_s: f64,
+    /// Availability A(τ*) in (0, 1].
+    pub availability: f64,
+    /// Net tokens/s at τ*.
+    pub goodput_tokens_per_s: f64,
+}
+
+/// Render the per-scheme goodput comparison at one MTBF: checkpoint
+/// costs, the Young/Daly optimal interval, and the net tokens/s.
+pub fn render_goodput_table(title: &str, mtbf_s: f64, rows: &[GoodputRow]) -> String {
+    let mut t = Table::new(&[
+        "scheme",
+        "step (s)",
+        "save (s)",
+        "restore (s)",
+        "tau* (s)",
+        "avail",
+        "goodput (tok/s)",
+    ])
+    .title(title.to_string())
+    .left_first();
+    for r in rows {
+        t.row(vec![
+            r.scheme.clone(),
+            fnum(r.step_s, 3),
+            fnum(r.save_s, 3),
+            fnum(r.restore_s, 3),
+            fnum(r.tau_opt_s, 1),
+            fnum(r.availability, 4),
+            fnum(r.goodput_tokens_per_s, 0),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "MTBF {mtbf_s:.0}s; tau* = sqrt(2*save*(MTBF - restore)) (Young/Daly); \
+         goodput = availability x tokens/s (DESIGN.md Sec 17)\n"
+    ));
+    out
+}
+
+/// Markdown twin of [`render_goodput_table`] for CI step summaries
+/// (same append-only contract as `calibrate --md`).
+pub fn goodput_markdown(title: &str, mtbf_s: f64, rows: &[GoodputRow]) -> String {
+    let mut s = format!(
+        "### {title}\n\n| scheme | step (s) | save (s) | restore (s) | tau* (s) | avail | goodput (tok/s) |\n\
+         |---|---|---|---|---|---|---|\n"
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "| {} | {:.3} | {:.3} | {:.3} | {:.1} | {:.4} | {:.0} |\n",
+            r.scheme,
+            r.step_s,
+            r.save_s,
+            r.restore_s,
+            r.tau_opt_s,
+            r.availability,
+            r.goodput_tokens_per_s
+        ));
+    }
+    s.push_str(&format!("\nMTBF {mtbf_s:.0}s; tau\\* per Young/Daly.\n\n"));
+    s
+}
+
+/// Render an MTBF×interval sweep grid ([`crate::sim::goodput::sweep`]):
+/// one row per interval, with grid edges that degenerate (e.g.
+/// `8τ* >= MTBF`) shown as diagnosed notes rather than dropped.
+pub fn render_goodput_sweep(
+    title: &str,
+    tau_opt_s: f64,
+    grid: &[(f64, Result<crate::sim::goodput::GoodputReport, crate::sim::goodput::GoodputError>)],
+) -> String {
+    let mut t = Table::new(&["interval (s)", "avail", "goodput (tok/s)", "note"])
+        .title(title.to_string());
+    for (interval, res) in grid {
+        let star = if (interval - tau_opt_s).abs() < 1e-9 { " *" } else { "" };
+        match res {
+            Ok(g) => t.row(vec![
+                format!("{}{star}", fnum(*interval, 1)),
+                fnum(g.availability, 4),
+                fnum(g.goodput_tokens_per_s, 0),
+                "".into(),
+            ]),
+            Err(e) => t.row(vec![
+                format!("{}{star}", fnum(*interval, 1)),
+                "—".into(),
+                "—".into(),
+                format!("{e}"),
+            ]),
+        }
+    }
+    let mut out = t.render();
+    out.push_str("* = tau* (closed-form optimum); grid is tau* x {1/8 .. 8}\n");
+    out
+}
+
 /// CSV with one row per (scheme, scale) for plotting.
 pub fn scaling_csv(series: &[ScalingSeries]) -> String {
     let mut out = String::from("scheme,gcds,tflops_per_gpu,samples_per_sec,efficiency\n");
@@ -538,6 +649,60 @@ mod tests {
         let piped = StepUtilization { pipe_busy: 0.5, ..util };
         let out = render_stall_table("stalls", &stalls, &piped, &MachineSpec::frontier_mi250x());
         assert!(out.contains("pipe-transfer busy 0.500s"), "{out}");
+    }
+
+    #[test]
+    fn renders_goodput_table_and_markdown_twin() {
+        let rows = vec![
+            GoodputRow {
+                scheme: "ZeRO-3".into(),
+                step_s: 33.501,
+                tokens_per_s: 70425.0,
+                save_s: 0.961,
+                restore_s: 0.481,
+                tau_opt_s: 203.8,
+                availability: 0.9905,
+                goodput_tokens_per_s: 69756.0,
+            },
+            GoodputRow {
+                scheme: "ZeRO-topo".into(),
+                step_s: 12.973,
+                tokens_per_s: 181869.0,
+                save_s: 0.961,
+                restore_s: 2.724,
+                tau_opt_s: 203.8,
+                availability: 0.9904,
+                goodput_tokens_per_s: 180123.0,
+            },
+        ];
+        let out = render_goodput_table("goodput @ frontier", 21_600.0, &rows);
+        assert!(out.contains("goodput @ frontier"), "{out}");
+        assert!(out.contains("ZeRO-topo"), "{out}");
+        assert!(out.contains("180123"), "{out}");
+        assert!(out.contains("MTBF 21600s"), "{out}");
+        let md = goodput_markdown("goodput @ frontier", 21_600.0, &rows);
+        assert!(md.starts_with("### goodput @ frontier"), "{md}");
+        assert!(md.contains("| ZeRO-3 | 33.501 |"), "{md}");
+        assert!(md.contains("| ZeRO-topo |"), "{md}");
+        // same append-only contract as the other markdown twins
+        assert!(md.ends_with("\n\n"), "{md:?}");
+    }
+
+    #[test]
+    fn renders_goodput_sweep_with_diagnosed_edges() {
+        use crate::sim::goodput::{goodput, optimal_interval, sweep, CheckpointCost};
+        let ck = CheckpointCost { bytes_per_rank: 1e9, save_s: 5.0, load_s: 2.0, remat_s: 1.0 };
+        let tau = optimal_interval(3600.0, &ck).unwrap();
+        let grid = sweep(1.0, 1e6, &ck, 3600.0).unwrap();
+        let out = render_goodput_sweep("sweep", tau, &grid);
+        // the optimum row is starred and every grid point prints a row
+        assert!(out.contains('*'), "{out}");
+        assert_eq!(out.matches('\n').count() >= grid.len() + 2, true, "{out}");
+        // a degenerate edge shows its diagnosis, not a blank or NaN
+        let bad = vec![(10_000.0, goodput(1.0, 1e6, &ck, 3600.0, 10_000.0))];
+        let out = render_goodput_sweep("edge", tau, &bad);
+        assert!(out.contains("below the MTBF"), "{out}");
+        assert!(!out.contains("NaN"), "{out}");
     }
 
     #[test]

@@ -2,11 +2,16 @@
 //! compute multipliers), seeded per-node jitter, and imbalanced
 //! grad-accumulation groups — the asymmetries Dash et al. and Wang et al.
 //! identify as the real limiters of scaling efficiency, which a
-//! single-representative-rank step graph cannot express.
+//! single-representative-rank step graph cannot express — plus
+//! deterministic **fault events** ([`FaultEvent`]: node failure,
+//! spot-style preemption, elastic world-resize) that the goodput layer
+//! (`sim::goodput::price_timeline`, DESIGN.md §17) prices over a run.
 //!
 //! Everything is deterministic: jitter multipliers derive from a seeded
 //! [`Rng`] (one lognormal draw per node, in node order), never from wall
 //! clocks, so two simulations of the same scenario are bit-identical.
+//! Faults fire at fixed step indices, not sampled times, for the same
+//! reason.
 
 use std::fmt;
 use std::str::FromStr;
@@ -55,6 +60,41 @@ impl fmt::Display for RankCount {
     }
 }
 
+/// What kind of fault strikes at a [`FaultEvent`]'s step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// A node dies: work since the last checkpoint is lost and the run
+    /// pays a restore (load + rematerialization).
+    NodeFailure,
+    /// A spot-style preemption with advance notice: if the grace window
+    /// fits a checkpoint save, the run flushes and loses nothing;
+    /// otherwise it degenerates to a failure.
+    Preemption {
+        /// Seconds of notice before the node is reclaimed.
+        grace_s: f64,
+    },
+    /// An elastic world-resize: the run continues on `new_nodes` nodes
+    /// after paying a re-shard (an all-to-all of the per-rank optimizer
+    /// state over the new world, priced through the collective cost
+    /// model). No work is lost.
+    Resize {
+        /// Node count after the resize (must leave >= 2 workers).
+        new_nodes: usize,
+    },
+}
+
+/// One deterministic fault: `kind` strikes immediately before step
+/// `at_step` executes. Priced by `sim::goodput::price_timeline`; events
+/// never perturb the per-step clock itself (the step schedule stays
+/// bit-identical), only the run-level time accounting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Zero-based optimizer-step index the fault fires before.
+    pub at_step: usize,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
 /// A deterministic asymmetry recipe for one simulated step.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Scenario {
@@ -71,6 +111,10 @@ pub struct Scenario {
     /// `(rank, grad_accum)` overrides — imbalanced accumulation groups
     /// (some ranks run more microbatches before the sync boundary).
     pub imbalance: Vec<(usize, usize)>,
+    /// Deterministic fault events, priced at the run level by the
+    /// goodput layer. Does **not** affect [`Scenario::is_trivial`]: the
+    /// per-step clock is identical with or without faults.
+    pub faults: Vec<FaultEvent>,
 }
 
 impl Default for Scenario {
@@ -81,6 +125,7 @@ impl Default for Scenario {
             jitter_sigma: 0.0,
             seed: 42,
             imbalance: Vec::new(),
+            faults: Vec::new(),
         }
     }
 }
@@ -152,6 +197,66 @@ impl Scenario {
     /// Parse a `rank:grad_accum[,...]` list (e.g. `3:4`).
     pub fn parse_imbalance(s: &str) -> Result<Vec<(usize, usize)>, String> {
         parse_pairs(s, "imbalance", |v: usize| v >= 1)
+    }
+
+    /// Parse a comma-separated fault list. Each entry is one of
+    ///
+    /// * `STEP:fail` — node failure before step `STEP`;
+    /// * `STEP:preempt:GRACE` — preemption with `GRACE` seconds notice;
+    /// * `STEP:resize:NODES` — elastic resize to `NODES` nodes.
+    ///
+    /// Example: `"10:fail,25:preempt:30,40:resize:24"`.
+    pub fn parse_faults(s: &str) -> Result<Vec<FaultEvent>, String> {
+        let mut out = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let mut fields = part.split(':');
+            let step = fields
+                .next()
+                .and_then(|f| f.trim().parse::<usize>().ok())
+                .ok_or_else(|| format!("bad fault '{part}' (want STEP:kind[:arg])"))?;
+            let kind = match fields.next().map(|f| f.trim().to_ascii_lowercase()) {
+                Some(k) if k == "fail" => {
+                    if fields.next().is_some() {
+                        return Err(format!("fault '{part}': 'fail' takes no argument"));
+                    }
+                    FaultKind::NodeFailure
+                }
+                Some(k) if k == "preempt" => {
+                    let grace = fields
+                        .next()
+                        .and_then(|f| f.trim().parse::<f64>().ok())
+                        .filter(|g| g.is_finite() && *g >= 0.0)
+                        .ok_or_else(|| {
+                            format!("fault '{part}': want STEP:preempt:GRACE_SECONDS (>= 0)")
+                        })?;
+                    FaultKind::Preemption { grace_s: grace }
+                }
+                Some(k) if k == "resize" => {
+                    let nodes = fields
+                        .next()
+                        .and_then(|f| f.trim().parse::<usize>().ok())
+                        .filter(|n| *n >= 1)
+                        .ok_or_else(|| {
+                            format!("fault '{part}': want STEP:resize:NODES (>= 1)")
+                        })?;
+                    FaultKind::Resize { new_nodes: nodes }
+                }
+                _ => {
+                    return Err(format!(
+                        "bad fault '{part}' (kinds: fail, preempt:GRACE, resize:NODES)"
+                    ))
+                }
+            };
+            if fields.next().is_some() {
+                return Err(format!("fault '{part}': trailing fields"));
+            }
+            out.push(FaultEvent { at_step: step, kind });
+        }
+        Ok(out)
     }
 }
 
@@ -247,6 +352,40 @@ mod tests {
             .stage_multipliers(&cluster, 2)
             .iter()
             .all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn fault_lists_parse() {
+        let faults = Scenario::parse_faults("10:fail, 25:preempt:30, 40:resize:24").unwrap();
+        assert_eq!(
+            faults,
+            vec![
+                FaultEvent { at_step: 10, kind: FaultKind::NodeFailure },
+                FaultEvent { at_step: 25, kind: FaultKind::Preemption { grace_s: 30.0 } },
+                FaultEvent { at_step: 40, kind: FaultKind::Resize { new_nodes: 24 } },
+            ]
+        );
+        assert_eq!(Scenario::parse_faults("").unwrap(), vec![]);
+        assert!(Scenario::parse_faults("10").is_err());
+        assert!(Scenario::parse_faults("10:explode").is_err());
+        assert!(Scenario::parse_faults("10:fail:3").is_err());
+        assert!(Scenario::parse_faults("10:preempt").is_err());
+        assert!(Scenario::parse_faults("10:preempt:-5").is_err());
+        assert!(Scenario::parse_faults("10:preempt:nan").is_err());
+        assert!(Scenario::parse_faults("10:resize:0").is_err());
+        assert!(Scenario::parse_faults("x:fail").is_err());
+        assert!(Scenario::parse_faults("10:resize:24:7").is_err());
+    }
+
+    #[test]
+    fn faults_do_not_make_a_scenario_nontrivial() {
+        // the per-step clock is unchanged by faults; only the run-level
+        // goodput accounting sees them
+        let sc = Scenario {
+            faults: vec![FaultEvent { at_step: 1, kind: FaultKind::NodeFailure }],
+            ..Default::default()
+        };
+        assert!(sc.is_trivial());
     }
 
     #[test]

@@ -1,0 +1,796 @@
+//! Goodput under failure (DESIGN.md §17): expected tokens/s **net of**
+//! checkpoint saves, failure-lost work, and restart recovery.
+//!
+//! At production scale the dominant "scenario" is failure, not bubbles:
+//! across thousands of GCDs the cluster-level MTBF shrinks until the
+//! reliability tax — periodic checkpoint saves, work lost since the last
+//! checkpoint, and restore/rematerialization on restart — rivals the
+//! communication stalls the paper optimizes. This module prices that tax
+//! on the same machine specs and cost model as everything else:
+//!
+//! * [`checkpoint_cost`] derives save/load time from the Tables V/VI
+//!   sharded-state bytes per rank
+//!   ([`state_bytes_per_rank`]: `(2+K)Ψ/W = 14Ψ/W`) against the
+//!   machine's [`crate::topology::StorageSpec`] storage path, plus the
+//!   secondary-partition **rematerialization** collective schemes with a
+//!   secondary copy (ZeRO++ / ZeRO-topo) replay on restore (a §V.D-style
+//!   full-world INT8 all-gather, priced through the α–β
+//!   [`CostModel`]);
+//! * [`goodput`] converts an MTBF + checkpoint interval into the
+//!   first-order Young/Daly availability
+//!   `A(τ) = (1 − δ/τ)(1 − (τ/2 + R)/M)` and the resulting goodput
+//!   `A · tokens_per_step / step_s`;
+//! * [`optimal_interval`] is the exact stationary point of that model,
+//!   `τ* = sqrt(2δ(M − R))` (Daly's correction of Young's
+//!   `sqrt(2δM)`, [`young_interval`]);
+//! * [`price_timeline`] walks a run of `steps` optimizer steps under the
+//!   deterministic fault injectors of [`crate::sched::scenario`]
+//!   (node failure, spot preemption, elastic resize) and accounts every
+//!   simulated second — useful work, saves, lost work, recovery,
+//!   re-shard — composing with stragglers/jitter and pipeline schedules
+//!   exactly like the scenario paths do today.
+//!
+//! All quantities are **simulated event-clock seconds**; nothing here
+//! touches the wall-clock `SimProfile` time base (DESIGN.md §13/§16).
+//! The failure-free path is pure post-processing over the existing step
+//! clock: no `simulate_step` pin moves.
+//!
+//! # Example
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the libxla rpath in this offline env)
+//! use zero_topo::model::TransformerSpec;
+//! use zero_topo::sharding::Scheme;
+//! use zero_topo::sim::goodput::{checkpoint_cost, goodput, optimal_interval};
+//! use zero_topo::sim::{simulate_step, SimConfig};
+//! use zero_topo::topology::Cluster;
+//!
+//! let model = TransformerSpec::neox20b();
+//! let cluster = Cluster::frontier(48);
+//! let cfg = SimConfig::default();
+//! let scheme = Scheme::ZeroTopo { sec_degree: 2 };
+//! let b = simulate_step(&model, scheme, &cluster, &cfg);
+//! let ck = checkpoint_cost(&model, scheme, &cluster, &cfg).unwrap();
+//! let tau = optimal_interval(21_600.0, &ck).unwrap();
+//! let tokens = (b.grad_accum * model.seq * cluster.world_size()) as f64;
+//! let g = goodput(b.step_s, tokens, &ck, 21_600.0, tau).unwrap();
+//! assert!(g.goodput_tokens_per_s < tokens / b.step_s); // the tax is real
+//! ```
+
+use crate::comm::cost::CostModel;
+use crate::comm::Wire;
+use crate::memory::{OPTIM_BYTES, WEIGHT_BYTES};
+use crate::model::TransformerSpec;
+use crate::sched::pipeline::{PipeConfig, PipelineError};
+use crate::sched::scenario::{FaultEvent, FaultKind, Scenario};
+use crate::sharding::{Scheme, ShardingError, ShardingSpec};
+use crate::topology::{Cluster, MachineSpec};
+
+use super::{
+    simulate_step, simulate_step_pipeline, simulate_step_pipeline_scenario,
+    simulate_step_scenario, SimConfig,
+};
+
+/// Why a goodput query could not be evaluated. Degenerate inputs
+/// (`mtbf = 0`, `interval >= mtbf`, a resize to a single-worker world)
+/// are **diagnosed errors**, never NaN tables or panics.
+#[derive(Debug, thiserror::Error)]
+pub enum GoodputError {
+    /// MTBF must be a positive finite number of seconds.
+    #[error("MTBF must be positive and finite, got {0}s")]
+    BadMtbf(f64),
+    /// The checkpoint interval must be positive, finite, and strictly
+    /// below the MTBF — at `interval >= mtbf` the Young/Daly first-order
+    /// model has no useful-work regime.
+    #[error("checkpoint interval {interval}s must be positive, finite, and below the MTBF {mtbf}s")]
+    BadInterval {
+        /// Requested checkpoint interval (seconds of useful work).
+        interval: f64,
+        /// Mean time between failures.
+        mtbf: f64,
+    },
+    /// The interval must exceed the save cost, or the run checkpoints
+    /// faster than it computes.
+    #[error("checkpoint interval {interval}s does not exceed the save cost {save_s}s")]
+    IntervalBelowSave {
+        /// Requested checkpoint interval.
+        interval: f64,
+        /// Checkpoint save seconds.
+        save_s: f64,
+    },
+    /// Expected lost work plus recovery fills the whole MTBF window:
+    /// the machine fails faster than it can recover.
+    #[error("recovery {restore_s}s plus expected lost work {lost_s}s does not fit the MTBF {mtbf}s")]
+    RecoveryExceedsMtbf {
+        /// Restore (load + rematerialization) seconds.
+        restore_s: f64,
+        /// Expected lost work (`interval / 2`) seconds.
+        lost_s: f64,
+        /// Mean time between failures.
+        mtbf: f64,
+    },
+    /// The step clock fed to the model must be positive and finite.
+    #[error("step time must be positive and finite, got {0}s")]
+    BadStep(f64),
+    /// Tokens per step must be positive and finite.
+    #[error("tokens per step must be positive and finite, got {0}")]
+    BadTokens(f64),
+    /// An elastic resize must leave at least two workers to re-shard
+    /// onto (`W = 1` has no peers to exchange shards with).
+    #[error("elastic resize to {nodes} nodes leaves {workers} worker(s); need at least 2")]
+    BadResize {
+        /// Requested node count.
+        nodes: usize,
+        /// Resulting worker count.
+        workers: usize,
+    },
+    /// A timeline walk needs at least one step and a positive
+    /// checkpoint cadence.
+    #[error("timeline needs steps >= 1 and interval_steps >= 1 (got steps={steps}, interval_steps={interval_steps})")]
+    BadTimeline {
+        /// Requested optimizer-step count.
+        steps: usize,
+        /// Requested checkpoint cadence in steps.
+        interval_steps: usize,
+    },
+    /// The scheme could not resolve on the (possibly resized) cluster.
+    #[error(transparent)]
+    Sharding(#[from] ShardingError),
+    /// The pipeline point could not be priced on the (possibly resized)
+    /// cluster.
+    #[error(transparent)]
+    Pipeline(#[from] PipelineError),
+}
+
+/// Analytic checkpoint state bytes **per rank**: the Tables V/VI model
+/// states that must be persisted — fp16 weights (2Ψ) and Adam optimizer
+/// states (KΨ = 12Ψ) — deduplicated and rebalanced across the `W` ranks:
+/// `(2 + 12)Ψ / W`. Gradients are transient (recomputed next step) and
+/// secondary partitions are *derived* (rebuilt on restore, see
+/// [`CheckpointCost::remat_s`]), so neither is persisted. The persisted
+/// footprint is scheme-independent; schemes differ in what they must
+/// rematerialize.
+pub fn state_bytes_per_rank(psi: f64, world: usize) -> f64 {
+    (WEIGHT_BYTES + OPTIM_BYTES) * psi / world.max(1) as f64
+}
+
+/// The priced checkpoint path for one `(model, scheme, cluster)` point:
+/// save/load against the machine's node-shared storage path plus the
+/// scheme's restore-time rematerialization collective. Produced by
+/// [`checkpoint_cost`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CheckpointCost {
+    /// Persisted bytes per rank ([`state_bytes_per_rank`]).
+    pub bytes_per_rank: f64,
+    /// Seconds to persist one checkpoint: storage latency + per-rank
+    /// bytes through the node's write path, shared by its
+    /// `workers_per_node` concurrent writers.
+    pub save_s: f64,
+    /// Seconds to read the persisted state back on restart (same NIC
+    /// sharing, read bandwidth).
+    pub load_s: f64,
+    /// Seconds to rematerialize derived state after a load: schemes with
+    /// a secondary weight partition (ZeRO++ / ZeRO-topo) replay a
+    /// full-world INT8 all-gather of Ψ (the §V.D refresh) to rebuild
+    /// their quantized copies; ZeRO-3 restores exactly what it persisted
+    /// and pays 0.
+    pub remat_s: f64,
+}
+
+impl CheckpointCost {
+    /// Total restart seconds: load + rematerialization. This is the `R`
+    /// of the Young/Daly model.
+    pub fn restore_s(&self) -> f64 {
+        self.load_s + self.remat_s
+    }
+}
+
+/// Price the checkpoint save/load path for `(model, scheme, cluster)`
+/// against the cluster machine's [`crate::topology::StorageSpec`]:
+///
+/// * per-rank persisted bytes from Tables V/VI
+///   ([`state_bytes_per_rank`]);
+/// * save = `latency + bytes_per_rank · workers_per_node / write_bw`
+///   (every worker of a node funnels through the node's storage path
+///   concurrently — the same NIC-sharing argument as DESIGN.md §4);
+/// * load mirrors save at the read bandwidth;
+/// * rematerialization for secondary-partition schemes through the same
+///   α–β collective cost model (`cfg.efficiency` calibration included).
+///
+/// Fails with [`GoodputError::Sharding`] when the scheme does not
+/// resolve on the cluster — before any pricing.
+pub fn checkpoint_cost(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+) -> Result<CheckpointCost, GoodputError> {
+    let spec = ShardingSpec::resolve(scheme, cluster)?;
+    let world = cluster.world_size();
+    let psi = model.n_params() as f64;
+    let storage = cluster.spec.storage;
+    let wpn = cluster.workers_per_node() as f64;
+    let bytes_per_rank = state_bytes_per_rank(psi, world);
+    let save_s = storage.latency + bytes_per_rank * wpn / storage.write_bandwidth;
+    let load_s = storage.latency + bytes_per_rank * wpn / storage.read_bandwidth;
+    let remat_s = if spec.secondary > 0 {
+        let cost = CostModel::with_efficiency(cluster.clone(), cfg.efficiency);
+        let group: Vec<usize> = (0..world).collect();
+        let wire = Wire::Int8 { block: cfg.quant_block }.wire_bytes(model.n_params() as usize);
+        cost.all_gather_time(&group, wire as u64)
+    } else {
+        0.0
+    };
+    Ok(CheckpointCost { bytes_per_rank, save_s, load_s, remat_s })
+}
+
+/// One evaluated goodput point: the Young/Daly availability at a given
+/// MTBF and checkpoint interval, and the tokens/s it nets out to.
+/// Produced by [`goodput`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GoodputReport {
+    /// Mean time between failures (seconds).
+    pub mtbf_s: f64,
+    /// Checkpoint interval τ (seconds of useful work between saves).
+    pub interval_s: f64,
+    /// Event-clock seconds per optimizer step.
+    pub step_s: f64,
+    /// Tokens per optimizer step.
+    pub tokens_per_step: f64,
+    /// Checkpoint save seconds δ.
+    pub save_s: f64,
+    /// Restart seconds R (load + rematerialization).
+    pub restore_s: f64,
+    /// First-order availability `A(τ) = (1 − δ/τ)(1 − (τ/2 + R)/M)`:
+    /// the fraction of wall time spent on useful forward progress.
+    pub availability: f64,
+    /// Failure-free throughput `tokens_per_step / step_s`.
+    pub tokens_per_s: f64,
+    /// Goodput: `availability × tokens_per_s`.
+    pub goodput_tokens_per_s: f64,
+}
+
+/// Evaluate the Young/Daly goodput model at one `(mtbf, interval)`
+/// point. The first factor of the availability charges the periodic
+/// save tax (`δ/τ` of the time is spent writing checkpoints); the
+/// second charges failures (each failure costs the expected `τ/2` of
+/// lost work plus `R` of recovery, once per MTBF window).
+///
+/// Degenerate inputs return diagnosed [`GoodputError`]s: non-positive
+/// or non-finite MTBF/interval/step/tokens, `interval >= mtbf`,
+/// `interval <= save`, and recovery that cannot fit the MTBF window.
+/// Valid inputs always yield a finite `availability` in `(0, 1]`.
+pub fn goodput(
+    step_s: f64,
+    tokens_per_step: f64,
+    ckpt: &CheckpointCost,
+    mtbf_s: f64,
+    interval_s: f64,
+) -> Result<GoodputReport, GoodputError> {
+    if !(step_s.is_finite() && step_s > 0.0) {
+        return Err(GoodputError::BadStep(step_s));
+    }
+    if !(tokens_per_step.is_finite() && tokens_per_step > 0.0) {
+        return Err(GoodputError::BadTokens(tokens_per_step));
+    }
+    if !(mtbf_s.is_finite() && mtbf_s > 0.0) {
+        return Err(GoodputError::BadMtbf(mtbf_s));
+    }
+    if !(interval_s.is_finite() && interval_s > 0.0) || interval_s >= mtbf_s {
+        return Err(GoodputError::BadInterval { interval: interval_s, mtbf: mtbf_s });
+    }
+    if interval_s <= ckpt.save_s {
+        return Err(GoodputError::IntervalBelowSave {
+            interval: interval_s,
+            save_s: ckpt.save_s,
+        });
+    }
+    let restore_s = ckpt.restore_s();
+    let lost_s = interval_s / 2.0;
+    if lost_s + restore_s >= mtbf_s {
+        return Err(GoodputError::RecoveryExceedsMtbf { restore_s, lost_s, mtbf: mtbf_s });
+    }
+    let availability =
+        (1.0 - ckpt.save_s / interval_s) * (1.0 - (interval_s / 2.0 + restore_s) / mtbf_s);
+    let tokens_per_s = tokens_per_step / step_s;
+    Ok(GoodputReport {
+        mtbf_s,
+        interval_s,
+        step_s,
+        tokens_per_step,
+        save_s: ckpt.save_s,
+        restore_s,
+        availability,
+        tokens_per_s,
+        goodput_tokens_per_s: availability * tokens_per_s,
+    })
+}
+
+/// The exact stationary point of the first-order availability model:
+/// `τ* = sqrt(2δ(M − R))` — Daly's correction of Young's approximation.
+/// Requires `M > R` (a machine that fails faster than it restores has
+/// no optimum) and a positive save cost.
+pub fn optimal_interval(mtbf_s: f64, ckpt: &CheckpointCost) -> Result<f64, GoodputError> {
+    if !(mtbf_s.is_finite() && mtbf_s > 0.0) {
+        return Err(GoodputError::BadMtbf(mtbf_s));
+    }
+    let restore_s = ckpt.restore_s();
+    if restore_s >= mtbf_s {
+        return Err(GoodputError::RecoveryExceedsMtbf {
+            restore_s,
+            lost_s: 0.0,
+            mtbf: mtbf_s,
+        });
+    }
+    Ok((2.0 * ckpt.save_s * (mtbf_s - restore_s)).sqrt())
+}
+
+/// Young's original closed-form approximation `sqrt(2δM)` — the
+/// cross-check oracle [`optimal_interval`] must agree with to within 5%
+/// whenever `R ≪ M` (the acceptance criterion; gated by
+/// `tests/goodput.rs`).
+pub fn young_interval(mtbf_s: f64, save_s: f64) -> f64 {
+    (2.0 * save_s * mtbf_s).sqrt()
+}
+
+/// The geometric interval grid a sweep evaluates: `τ*` scaled by
+/// `{1/8, 1/4, 1/2, 1, 2, 4, 8}`, centered so the optimum sits mid-grid
+/// and the curvature on both sides is visible.
+pub const SWEEP_FACTORS: [f64; 7] = [0.125, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0];
+
+/// Sweep the goodput model over an interval grid around the optimum
+/// ([`SWEEP_FACTORS`] × `τ*`). Each point carries its own
+/// `Result` — grid edges can legitimately be degenerate (e.g.
+/// `8τ* >= M` at short MTBFs) and are reported as diagnosed errors
+/// rather than dropped, so tables always show the full grid.
+pub fn sweep(
+    step_s: f64,
+    tokens_per_step: f64,
+    ckpt: &CheckpointCost,
+    mtbf_s: f64,
+) -> Result<Vec<(f64, Result<GoodputReport, GoodputError>)>, GoodputError> {
+    let tau = optimal_interval(mtbf_s, ckpt)?;
+    Ok(SWEEP_FACTORS
+        .iter()
+        .map(|f| {
+            let interval = f * tau;
+            (interval, goodput(step_s, tokens_per_step, ckpt, mtbf_s, interval))
+        })
+        .collect())
+}
+
+/// One priced fault in a [`TimelineReport`]: what the event cost in
+/// overhead (recovery, re-shard, emergency save) and in lost work.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultImpact {
+    /// Step index the fault struck at.
+    pub at_step: usize,
+    /// Human label (`node-failure`, `preemption(grace=30s)`,
+    /// `resize(48->24 nodes)`).
+    pub label: String,
+    /// Non-productive seconds the event added (restore, re-shard,
+    /// flush).
+    pub overhead_s: f64,
+    /// Useful seconds destroyed (work since the last checkpoint that
+    /// must be re-run).
+    pub lost_work_s: f64,
+}
+
+/// The fully-accounted timeline of a run under deterministic fault
+/// injection: every simulated second is attributed to useful work,
+/// checkpoint saves, lost work, or fault overhead, and the goodput is
+/// the token total over the wall total. Produced by
+/// [`price_timeline`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineReport {
+    /// Optimizer steps of useful forward progress.
+    pub steps: usize,
+    /// Checkpoint cadence in steps.
+    pub interval_steps: usize,
+    /// Step seconds at the end of the run (elastic resizes re-price it).
+    pub final_step_s: f64,
+    /// Node count at the end of the run.
+    pub final_nodes: usize,
+    /// Seconds of useful forward progress.
+    pub useful_s: f64,
+    /// Seconds spent writing periodic checkpoints.
+    pub save_s_total: f64,
+    /// Seconds of destroyed work re-run after failures.
+    pub lost_work_s_total: f64,
+    /// Seconds of fault overhead (restores, re-shards, flushes).
+    pub overhead_s_total: f64,
+    /// Total simulated wall seconds
+    /// (`useful + saves + lost + overhead`).
+    pub total_s: f64,
+    /// Tokens of net forward progress.
+    pub tokens: f64,
+    /// `tokens / total_s`.
+    pub goodput_tokens_per_s: f64,
+    /// Failure-free throughput of the same run
+    /// (`tokens / useful_s`), for the tax comparison.
+    pub tokens_per_s: f64,
+    /// Each fault's priced impact, in timeline order.
+    pub events: Vec<FaultImpact>,
+}
+
+/// Price one `(step_s, tokens_per_step)` point for the timeline walk,
+/// composing with the scenario's stragglers/jitter/imbalance and the
+/// optional pipeline shape exactly like the `scenario` CLI does.
+fn timeline_point(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+    scenario: &Scenario,
+    pipe: Option<&PipeConfig>,
+) -> Result<(f64, f64), GoodputError> {
+    // resolve first: a diagnosed ShardingError, not simulate_step's panic
+    ShardingSpec::resolve(scheme, cluster)?;
+    let world = cluster.world_size();
+    match pipe {
+        None => {
+            let b = if scenario.is_trivial() {
+                simulate_step(model, scheme, cluster, cfg)
+            } else {
+                simulate_step_scenario(model, scheme, cluster, cfg, scenario).0
+            };
+            let tokens = (b.grad_accum * cfg.micro_batch * model.seq * world) as f64;
+            Ok((b.step_s, tokens))
+        }
+        Some(p) => {
+            let b = if scenario.is_trivial() {
+                simulate_step_pipeline(model, scheme, cluster, cfg, p)?.0
+            } else {
+                simulate_step_pipeline_scenario(model, scheme, cluster, cfg, p, scenario)?.0
+            };
+            let dp = world / b.stages;
+            let tokens = (b.microbatches * cfg.micro_batch * model.seq * dp) as f64;
+            Ok((b.step_s, tokens))
+        }
+    }
+}
+
+/// Walk `steps` optimizer steps with a checkpoint every
+/// `interval_steps` steps, applying the scenario's deterministic
+/// [`FaultEvent`]s as they strike (a fault at step `i` fires before
+/// step `i` executes; events past the end of the run are ignored):
+///
+/// * **node failure** — work since the last checkpoint is destroyed
+///   and re-run; the run pays one restore (load + remat);
+/// * **preemption** — with `grace_s >= save_s` the run flushes a
+///   checkpoint inside the grace window (no lost work, pays
+///   `save + restore`); a shorter grace degenerates to a failure;
+/// * **elastic resize** — no work is lost; the run pays a re-shard
+///   (all-to-all of the per-rank state bytes over the **new** world,
+///   priced through the collective cost model) and subsequent steps
+///   re-price on the resized cluster (re-resolving the scheme; a
+///   resize to fewer than 2 workers is a diagnosed error).
+///
+/// Returns the conserving ledger: `total_s` is exactly
+/// `useful + saves + lost + overhead`, and the goodput is
+/// `tokens / total_s`.
+#[allow(clippy::too_many_arguments)]
+pub fn price_timeline(
+    model: &TransformerSpec,
+    scheme: Scheme,
+    machine: &MachineSpec,
+    nodes: usize,
+    cfg: &SimConfig,
+    scenario: &Scenario,
+    pipe: Option<&PipeConfig>,
+    steps: usize,
+    interval_steps: usize,
+) -> Result<TimelineReport, GoodputError> {
+    if steps == 0 || interval_steps == 0 {
+        return Err(GoodputError::BadTimeline { steps, interval_steps });
+    }
+    let mut cluster = Cluster::new(machine.clone(), nodes);
+    let (mut step_s, mut tokens_per_step) =
+        timeline_point(model, scheme, &cluster, cfg, scenario, pipe)?;
+    let mut ckpt = checkpoint_cost(model, scheme, &cluster, cfg)?;
+
+    let mut faults: Vec<&FaultEvent> =
+        scenario.faults.iter().filter(|f| f.at_step < steps).collect();
+    faults.sort_by_key(|f| f.at_step);
+
+    let mut events = Vec::new();
+    let (mut useful_s, mut saves_s, mut lost_s, mut overhead_s, mut tokens) =
+        (0.0f64, 0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut since_ckpt = 0usize; // steps of work not yet persisted
+    let mut fi = 0usize;
+
+    for i in 0..steps {
+        while fi < faults.len() && faults[fi].at_step == i {
+            let f = faults[fi];
+            fi += 1;
+            match f.kind {
+                FaultKind::NodeFailure => {
+                    let lost = since_ckpt as f64 * step_s;
+                    lost_s += lost;
+                    overhead_s += ckpt.restore_s();
+                    since_ckpt = 0;
+                    events.push(FaultImpact {
+                        at_step: i,
+                        label: "node-failure".into(),
+                        overhead_s: ckpt.restore_s(),
+                        lost_work_s: lost,
+                    });
+                }
+                FaultKind::Preemption { grace_s } => {
+                    let (over, lost) = if grace_s >= ckpt.save_s {
+                        // the grace window fits a flush: nothing is lost
+                        (ckpt.save_s + ckpt.restore_s(), 0.0)
+                    } else {
+                        (ckpt.restore_s(), since_ckpt as f64 * step_s)
+                    };
+                    lost_s += lost;
+                    overhead_s += over;
+                    since_ckpt = 0;
+                    events.push(FaultImpact {
+                        at_step: i,
+                        label: format!("preemption(grace={grace_s}s)"),
+                        overhead_s: over,
+                        lost_work_s: lost,
+                    });
+                }
+                FaultKind::Resize { new_nodes } => {
+                    let workers = new_nodes * machine.workers_per_node;
+                    if workers < 2 {
+                        return Err(GoodputError::BadResize { nodes: new_nodes, workers });
+                    }
+                    let old_nodes = cluster.nodes;
+                    cluster = Cluster::new(machine.clone(), new_nodes);
+                    // re-shard: every rank exchanges its state shard over
+                    // the new world (one all-to-all of the per-rank bytes)
+                    let cost = CostModel::with_efficiency(cluster.clone(), cfg.efficiency);
+                    let group: Vec<usize> = (0..workers).collect();
+                    let bytes = state_bytes_per_rank(model.n_params() as f64, workers);
+                    let reshard = cost.all_to_all_time(&group, bytes as u64);
+                    overhead_s += reshard;
+                    (step_s, tokens_per_step) =
+                        timeline_point(model, scheme, &cluster, cfg, scenario, pipe)?;
+                    ckpt = checkpoint_cost(model, scheme, &cluster, cfg)?;
+                    events.push(FaultImpact {
+                        at_step: i,
+                        label: format!("resize({old_nodes}->{new_nodes} nodes)"),
+                        overhead_s: reshard,
+                        lost_work_s: 0.0,
+                    });
+                }
+            }
+        }
+        useful_s += step_s;
+        tokens += tokens_per_step;
+        since_ckpt += 1;
+        if since_ckpt == interval_steps {
+            saves_s += ckpt.save_s;
+            since_ckpt = 0;
+        }
+    }
+
+    let total_s = useful_s + saves_s + lost_s + overhead_s;
+    Ok(TimelineReport {
+        steps,
+        interval_steps,
+        final_step_s: step_s,
+        final_nodes: cluster.nodes,
+        useful_s,
+        save_s_total: saves_s,
+        lost_work_s_total: lost_s,
+        overhead_s_total: overhead_s,
+        total_s,
+        tokens,
+        goodput_tokens_per_s: tokens / total_s,
+        tokens_per_s: tokens / useful_s,
+        events,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ck(save_s: f64, load_s: f64, remat_s: f64) -> CheckpointCost {
+        CheckpointCost { bytes_per_rank: 1e9, save_s, load_s, remat_s }
+    }
+
+    #[test]
+    fn degenerate_inputs_are_diagnosed_not_nan() {
+        let c = ck(1.0, 0.5, 0.0);
+        assert!(matches!(goodput(1.0, 1e6, &c, 0.0, 10.0), Err(GoodputError::BadMtbf(_))));
+        assert!(matches!(
+            goodput(1.0, 1e6, &c, f64::NAN, 10.0),
+            Err(GoodputError::BadMtbf(_))
+        ));
+        // interval >= mtbf
+        assert!(matches!(
+            goodput(1.0, 1e6, &c, 100.0, 100.0),
+            Err(GoodputError::BadInterval { .. })
+        ));
+        assert!(matches!(
+            goodput(1.0, 1e6, &c, 100.0, -5.0),
+            Err(GoodputError::BadInterval { .. })
+        ));
+        // interval <= save
+        assert!(matches!(
+            goodput(1.0, 1e6, &c, 100.0, 0.5),
+            Err(GoodputError::IntervalBelowSave { .. })
+        ));
+        // degenerate step/tokens
+        assert!(matches!(goodput(0.0, 1e6, &c, 100.0, 10.0), Err(GoodputError::BadStep(_))));
+        assert!(matches!(goodput(1.0, 0.0, &c, 100.0, 10.0), Err(GoodputError::BadTokens(_))));
+        // recovery cannot fit the window
+        let slow = ck(1.0, 80.0, 30.0);
+        assert!(matches!(
+            goodput(1.0, 1e6, &slow, 100.0, 50.0),
+            Err(GoodputError::RecoveryExceedsMtbf { .. })
+        ));
+        assert!(matches!(optimal_interval(50.0, &slow), Err(GoodputError::RecoveryExceedsMtbf { .. })));
+        assert!(matches!(optimal_interval(f64::INFINITY, &c), Err(GoodputError::BadMtbf(_))));
+    }
+
+    #[test]
+    fn availability_is_finite_and_bounded() {
+        let c = ck(2.0, 1.0, 1.0);
+        let g = goodput(1.0, 1e6, &c, 10_000.0, 200.0).unwrap();
+        assert!(g.availability > 0.0 && g.availability < 1.0);
+        assert!(g.goodput_tokens_per_s < g.tokens_per_s);
+        assert!(g.goodput_tokens_per_s.is_finite());
+        // availability -> 1 as the machine becomes reliable and saves cheap
+        let cheap = ck(1e-6, 1e-6, 0.0);
+        let g2 = goodput(1.0, 1e6, &cheap, 1e12, 1.0).unwrap();
+        assert!(g2.availability > 0.999999);
+    }
+
+    #[test]
+    fn optimal_interval_is_the_argmax_of_the_model() {
+        // dense numeric argmax must agree with the closed form within 5%
+        let c = ck(30.0, 60.0, 40.0);
+        let mtbf = 86_400.0;
+        let tau = optimal_interval(mtbf, &c).unwrap();
+        let (mut best_tau, mut best) = (0.0, 0.0);
+        let mut t = c.save_s * 1.01;
+        while t < mtbf * 0.5 {
+            if let Ok(g) = goodput(1.0, 1e6, &c, mtbf, t) {
+                if g.goodput_tokens_per_s > best {
+                    best = g.goodput_tokens_per_s;
+                    best_tau = t;
+                }
+            }
+            t *= 1.001;
+        }
+        assert!((best_tau - tau).abs() / tau < 0.05, "argmax {best_tau} vs closed form {tau}");
+        // exact stationary point: tau^2 = 2*save*(M - R)
+        assert!((tau * tau - 2.0 * c.save_s * (mtbf - c.restore_s())).abs() < 1e-6);
+    }
+
+    #[test]
+    fn daly_matches_young_when_restart_is_small() {
+        let c = ck(10.0, 1.0, 0.0);
+        let mtbf = 100_000.0;
+        let tau = optimal_interval(mtbf, &c).unwrap();
+        let young = young_interval(mtbf, c.save_s);
+        assert!((tau - young).abs() / young < 0.05, "{tau} vs {young}");
+    }
+
+    #[test]
+    fn sweep_reports_the_full_grid() {
+        let c = ck(5.0, 2.0, 1.0);
+        let grid = sweep(1.0, 1e6, &c, 3600.0).unwrap();
+        assert_eq!(grid.len(), SWEEP_FACTORS.len());
+        // mid-grid (the optimum) must evaluate; it beats its neighbors
+        let at = |i: usize| grid[i].1.as_ref().unwrap().goodput_tokens_per_s;
+        assert!(at(3) >= at(2) && at(3) >= at(4));
+        // the grid is geometric around tau*
+        let tau = optimal_interval(3600.0, &c).unwrap();
+        assert!((grid[3].0 - tau).abs() < 1e-9);
+        assert!((grid[4].0 - 2.0 * tau).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timeline_ledger_conserves() {
+        use crate::sched::scenario::{FaultEvent, FaultKind};
+        let model = TransformerSpec::gpt125m();
+        let machine = MachineSpec::frontier_mi250x();
+        let cfg = SimConfig::default();
+        let scheme = Scheme::ZeroTopo { sec_degree: 2 };
+        let sc = Scenario {
+            faults: vec![
+                FaultEvent { at_step: 3, kind: FaultKind::NodeFailure },
+                FaultEvent { at_step: 7, kind: FaultKind::Preemption { grace_s: 1e9 } },
+            ],
+            ..Scenario::default()
+        };
+        let t =
+            price_timeline(&model, scheme, &machine, 2, &cfg, &sc, None, 10, 4).unwrap();
+        assert_eq!(t.steps, 10);
+        assert_eq!(t.events.len(), 2);
+        let sum = t.useful_s + t.save_s_total + t.lost_work_s_total + t.overhead_s_total;
+        assert!((t.total_s - sum).abs() < 1e-9);
+        // failure at step 3 with cadence 4: 3 unsaved steps destroyed
+        assert!((t.events[0].lost_work_s - 3.0 * t.final_step_s).abs() < 1e-9);
+        // long-grace preemption flushes: no lost work, pays save+restore
+        assert_eq!(t.events[1].lost_work_s, 0.0);
+        assert!(t.events[1].overhead_s > t.events[0].overhead_s);
+        assert!(t.goodput_tokens_per_s < t.tokens_per_s);
+    }
+
+    #[test]
+    fn failure_free_timeline_is_pure_step_clock_plus_saves() {
+        let model = TransformerSpec::gpt125m();
+        let machine = MachineSpec::frontier_mi250x();
+        let cfg = SimConfig::default();
+        let scheme = Scheme::Zero3;
+        let sc = Scenario::default();
+        let t = price_timeline(&model, scheme, &machine, 1, &cfg, &sc, None, 8, 4).unwrap();
+        let b = simulate_step(&model, scheme, &Cluster::new(machine.clone(), 1), &cfg);
+        assert_eq!(t.final_step_s.to_bits(), b.step_s.to_bits(), "step clock must not move");
+        assert!((t.useful_s - 8.0 * b.step_s).abs() < 1e-9);
+        let ck = checkpoint_cost(&model, scheme, &Cluster::new(machine, 1), &cfg).unwrap();
+        assert!((t.save_s_total - 2.0 * ck.save_s).abs() < 1e-12);
+        assert_eq!(t.lost_work_s_total, 0.0);
+        assert_eq!(t.overhead_s_total, 0.0);
+    }
+
+    #[test]
+    fn resize_reprices_and_rejects_single_worker_worlds() {
+        use crate::sched::scenario::{FaultEvent, FaultKind};
+        let model = TransformerSpec::gpt125m();
+        let machine = MachineSpec::frontier_mi250x();
+        let cfg = SimConfig::default();
+        let scheme = Scheme::Zero3;
+        let mut sc = Scenario {
+            faults: vec![FaultEvent { at_step: 2, kind: FaultKind::Resize { new_nodes: 1 } }],
+            ..Scenario::default()
+        };
+        let t = price_timeline(&model, scheme, &machine, 2, &cfg, &sc, None, 4, 2).unwrap();
+        assert_eq!(t.final_nodes, 1);
+        assert!(t.events[0].label.contains("2->1"));
+        assert!(t.events[0].overhead_s > 0.0);
+        assert_eq!(t.events[0].lost_work_s, 0.0);
+        // shrinking the world slows the step (fewer workers, same batch)
+        // and the re-priced clock is the 1-node clock exactly
+        let b1 = simulate_step(&model, scheme, &Cluster::new(machine.clone(), 1), &cfg);
+        assert_eq!(t.final_step_s.to_bits(), b1.step_s.to_bits());
+        // resize to a single-worker world is a diagnosed error
+        sc.faults = vec![FaultEvent { at_step: 2, kind: FaultKind::Resize { new_nodes: 0 } }];
+        assert!(matches!(
+            price_timeline(&model, scheme, &machine, 2, &cfg, &sc, None, 4, 2),
+            Err(GoodputError::BadResize { .. })
+        ));
+    }
+
+    #[test]
+    fn timeline_rejects_empty_runs() {
+        let model = TransformerSpec::gpt125m();
+        let machine = MachineSpec::frontier_mi250x();
+        let cfg = SimConfig::default();
+        let sc = Scenario::default();
+        assert!(matches!(
+            price_timeline(&model, Scheme::Zero3, &machine, 1, &cfg, &sc, None, 0, 4),
+            Err(GoodputError::BadTimeline { .. })
+        ));
+        assert!(matches!(
+            price_timeline(&model, Scheme::Zero3, &machine, 1, &cfg, &sc, None, 4, 0),
+            Err(GoodputError::BadTimeline { .. })
+        ));
+    }
+
+    #[test]
+    fn secondary_schemes_pay_remat_zero3_does_not() {
+        let model = TransformerSpec::neox20b();
+        let cluster = Cluster::frontier(48);
+        let cfg = SimConfig::default();
+        let z3 = checkpoint_cost(&model, Scheme::Zero3, &cluster, &cfg).unwrap();
+        let zpp = checkpoint_cost(&model, Scheme::ZeroPP, &cluster, &cfg).unwrap();
+        let topo =
+            checkpoint_cost(&model, Scheme::ZeroTopo { sec_degree: 2 }, &cluster, &cfg).unwrap();
+        assert_eq!(z3.remat_s, 0.0);
+        assert!(zpp.remat_s > 0.0 && topo.remat_s > 0.0);
+        // persisted bytes are dedup-and-rebalance: scheme-independent
+        assert_eq!(z3.bytes_per_rank.to_bits(), topo.bytes_per_rank.to_bits());
+        assert_eq!(z3.save_s.to_bits(), topo.save_s.to_bits());
+        // restore therefore ranks ZeRO-3 cheapest
+        assert!(z3.restore_s() < topo.restore_s());
+    }
+}

@@ -59,6 +59,7 @@ use crate::sched::{Depth, Schedule};
 use crate::sharding::{shard_groups, Scheme, ShardingSpec};
 use crate::topology::{Cluster, MachineSpec};
 
+pub mod goodput;
 pub mod par;
 pub mod plan;
 

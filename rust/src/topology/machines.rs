@@ -7,7 +7,7 @@
 //! TPU-pod-like spec. JSON twins of the non-paper machines live in
 //! `examples/machines/` and are load-tested by `tests/machine_json.rs`.
 
-use super::spec::{LinkSpec, MachineLevel, MachineSpec};
+use super::spec::{LinkSpec, MachineLevel, MachineSpec, StorageSpec};
 
 const GB: f64 = 1e9;
 
@@ -35,6 +35,13 @@ impl MachineSpec {
                 level("B_intra (cross MI250X)", 8, 50.0 * GB, 3e-6),
             ],
             inter_node: LinkSpec { bandwidth: 100.0 * GB, latency: 10e-6 },
+            // Orion (Lustre): ~5 GB/s sustained write, ~10 GB/s read per
+            // node through the burst path, ~1 ms metadata latency.
+            storage: StorageSpec {
+                write_bandwidth: 5.0 * GB,
+                read_bandwidth: 10.0 * GB,
+                latency: 1e-3,
+            },
         }
     }
 
@@ -48,6 +55,12 @@ impl MachineSpec {
             hbm_per_worker: 80e9,
             levels: vec![level("NVLink", 8, 600.0 * GB, 2e-6)],
             inter_node: LinkSpec { bandwidth: 200.0 * GB, latency: 8e-6 },
+            // local NVMe RAID: ~8 GB/s write, ~16 GB/s read, ~0.1 ms.
+            storage: StorageSpec {
+                write_bandwidth: 8.0 * GB,
+                read_bandwidth: 16.0 * GB,
+                latency: 1e-4,
+            },
         }
     }
 
@@ -66,6 +79,10 @@ impl MachineSpec {
                 level("Xe-Link (node)", 12, 100.0 * GB, 3e-6),
             ],
             inter_node: LinkSpec { bandwidth: 200.0 * GB, latency: 10e-6 },
+            // non-paper machines keep the generic default storage path so
+            // their committed JSON twins (which predate the field) still
+            // parse to identical specs.
+            storage: StorageSpec::default(),
         }
     }
 
@@ -79,6 +96,7 @@ impl MachineSpec {
             hbm_per_worker: 128e9,
             levels: vec![level("IF (APU-APU)", 4, 256.0 * GB, 2e-6)],
             inter_node: LinkSpec { bandwidth: 200.0 * GB, latency: 10e-6 },
+            storage: StorageSpec::default(),
         }
     }
 
@@ -93,6 +111,7 @@ impl MachineSpec {
             hbm_per_worker: 32e9,
             levels: vec![level("ICI (tray)", 4, 600.0 * GB, 1e-6)],
             inter_node: LinkSpec { bandwidth: 50.0 * GB, latency: 5e-6 },
+            storage: StorageSpec::default(),
         }
     }
 
@@ -154,6 +173,23 @@ mod tests {
         let f = MachineSpec::frontier_mi250x();
         assert_eq!(d.levels[0].link.bandwidth / f.levels[0].link.bandwidth, 3.0);
         assert_eq!(d.inter_node.bandwidth / f.inter_node.bandwidth, 2.0);
+    }
+
+    #[test]
+    fn storage_paths_match_their_filesystems() {
+        // paper machines get realistic checkpoint paths...
+        let f = MachineSpec::frontier_mi250x();
+        assert_eq!(f.storage.write_bandwidth, 5.0 * GB);
+        assert_eq!(f.storage.read_bandwidth, 10.0 * GB);
+        let d = MachineSpec::dgx_a100();
+        assert_eq!(d.storage.write_bandwidth, 8.0 * GB);
+        assert!(d.storage.latency < f.storage.latency); // NVMe vs Lustre
+        // ...while the data-only machines keep the default so their
+        // committed JSON twins (no "storage" key) parse to equal specs
+        for name in ["aurora", "elcapitan", "tpu-pod"] {
+            let m = MachineSpec::builtin(name).unwrap();
+            assert_eq!(m.storage, StorageSpec::default(), "{name}");
+        }
     }
 
     #[test]

@@ -25,7 +25,7 @@ use std::fmt;
 pub mod machines;
 pub mod spec;
 
-pub use spec::{LinkSpec, MachineLevel, MachineSpec, SpecError};
+pub use spec::{LinkSpec, MachineLevel, MachineSpec, SpecError, StorageSpec};
 
 /// The link class a pair (or group) of ranks communicates over. Generic
 /// over machines: `Intra(k)` is level `k` of the machine's intra-node
@@ -232,6 +232,7 @@ mod tests {
                 },
             ],
             inter_node: LinkSpec { bandwidth: 40.0 * GB, latency: 8e-6 },
+            storage: StorageSpec::default(),
         }
     }
 

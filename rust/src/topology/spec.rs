@@ -27,9 +27,16 @@
 //!     {"name": "B_intra (adjacent MI250X)", "span": 4, "bandwidth": 100e9, "latency": 3e-6},
 //!     {"name": "B_intra (cross MI250X)", "span": 8, "bandwidth": 50e9, "latency": 3e-6}
 //!   ],
-//!   "inter_node": {"bandwidth": 100e9, "latency": 10e-6}
+//!   "inter_node": {"bandwidth": 100e9, "latency": 10e-6},
+//!   "storage": {"write_bandwidth": 5e9, "read_bandwidth": 10e9, "latency": 1e-3}
 //! }
 //! ```
+//!
+//! `storage` is the node's checkpoint I/O path (DESIGN.md §17) and is
+//! **optional** in JSON: specs written before it existed parse with
+//! [`StorageSpec::default`] (a generic parallel-filesystem estimate) and
+//! re-emit it explicitly on save, keeping JSON specs pure data with no
+//! code-side special cases.
 
 use std::path::Path;
 
@@ -44,6 +51,29 @@ pub struct LinkSpec {
     pub bandwidth: f64,
     /// Latency (α) in seconds per message.
     pub latency: f64,
+}
+
+/// The node's checkpoint storage path: what save/restore pricing
+/// (DESIGN.md §17, `sim::goodput`) charges per byte of persisted state.
+/// Bandwidths are **per node** — all `workers_per_node` ranks of a node
+/// funnel through it concurrently, the same sharing rule as the NIC.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StorageSpec {
+    /// Sustained write bandwidth per node, bytes/second.
+    pub write_bandwidth: f64,
+    /// Sustained read bandwidth per node, bytes/second.
+    pub read_bandwidth: f64,
+    /// Fixed per-operation latency (metadata + open/close), seconds.
+    pub latency: f64,
+}
+
+impl Default for StorageSpec {
+    /// A conservative generic parallel-filesystem estimate (2 GB/s
+    /// write, 4 GB/s read, 1 ms latency per node) — what specs that
+    /// predate the storage field get.
+    fn default() -> Self {
+        StorageSpec { write_bandwidth: 2e9, read_bandwidth: 4e9, latency: 1e-3 }
+    }
 }
 
 /// One intra-node hierarchy level: `span` consecutive workers share this
@@ -75,6 +105,8 @@ pub struct MachineSpec {
     pub levels: Vec<MachineLevel>,
     /// Inter-node fabric (the node's aggregate NIC bandwidth).
     pub inter_node: LinkSpec,
+    /// Checkpoint storage path (optional in JSON; defaults when absent).
+    pub storage: StorageSpec,
 }
 
 /// Why a machine spec failed to load, parse, or validate.
@@ -215,6 +247,15 @@ impl MachineSpec {
         if !(self.hbm_per_worker > 0.0 && self.hbm_per_worker.is_finite()) {
             return fail("hbm_per_worker must be finite and > 0".into());
         }
+        if !(self.storage.write_bandwidth > 0.0 && self.storage.write_bandwidth.is_finite()) {
+            return fail("storage write_bandwidth must be finite and > 0".into());
+        }
+        if !(self.storage.read_bandwidth > 0.0 && self.storage.read_bandwidth.is_finite()) {
+            return fail("storage read_bandwidth must be finite and > 0".into());
+        }
+        if !(self.storage.latency >= 0.0 && self.storage.latency.is_finite()) {
+            return fail("storage latency must be finite and >= 0".into());
+        }
         Ok(())
     }
 
@@ -301,6 +342,16 @@ impl MachineSpec {
         let peak_flops_per_worker = num(j, "peak_flops_per_worker").map_err(&invalid)?;
         let hbm_per_worker = num(j, "hbm_per_worker").map_err(&invalid)?;
         let inter_node = link(inter, "inter_node").map_err(&invalid)?;
+        let storage = match j.get("storage") {
+            None => StorageSpec::default(),
+            Some(sj) => StorageSpec {
+                write_bandwidth: num(sj, "write_bandwidth")
+                    .map_err(|e| invalid(format!("storage: {e}")))?,
+                read_bandwidth: num(sj, "read_bandwidth")
+                    .map_err(|e| invalid(format!("storage: {e}")))?,
+                latency: num(sj, "latency").map_err(|e| invalid(format!("storage: {e}")))?,
+            },
+        };
         let spec = MachineSpec {
             name,
             workers_per_node,
@@ -308,6 +359,7 @@ impl MachineSpec {
             hbm_per_worker,
             levels,
             inter_node,
+            storage,
         };
         spec.validate()?;
         Ok(spec)
@@ -336,6 +388,14 @@ impl MachineSpec {
                 Json::obj(vec![
                     ("bandwidth", Json::num(self.inter_node.bandwidth)),
                     ("latency", Json::num(self.inter_node.latency)),
+                ]),
+            ),
+            (
+                "storage",
+                Json::obj(vec![
+                    ("write_bandwidth", Json::num(self.storage.write_bandwidth)),
+                    ("read_bandwidth", Json::num(self.storage.read_bandwidth)),
+                    ("latency", Json::num(self.storage.latency)),
                 ]),
             ),
         ])
@@ -392,6 +452,7 @@ mod tests {
                 },
             ],
             inter_node: LinkSpec { bandwidth: 50e9, latency: 9e-6 },
+            storage: StorageSpec { write_bandwidth: 3e9, read_bandwidth: 6e9, latency: 5e-4 },
         }
     }
 
@@ -451,6 +512,50 @@ mod tests {
         let mut s = sample();
         s.hbm_per_worker = f64::NAN;
         assert!(s.validate().is_err());
+
+        let mut s = sample();
+        s.storage.write_bandwidth = 0.0;
+        assert!(s.validate().is_err());
+
+        let mut s = sample();
+        s.storage.read_bandwidth = f64::INFINITY;
+        assert!(s.validate().is_err());
+
+        let mut s = sample();
+        s.storage.latency = -1.0;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn storage_defaults_when_absent_and_always_emits() {
+        // a pre-storage spec parses with the default path...
+        let j = Json::parse(
+            r#"{"name": "legacy", "workers_per_node": 2,
+                "peak_flops_per_worker": 1e12, "hbm_per_worker": 1e9,
+                "levels": [{"name": "l", "span": 2, "bandwidth": 1e9, "latency": 1e-6}],
+                "inter_node": {"bandwidth": 1e9, "latency": 1e-6}}"#,
+        )
+        .unwrap();
+        let spec = MachineSpec::from_json(&j).unwrap();
+        assert_eq!(spec.storage, StorageSpec::default());
+        // ...and re-emits it explicitly
+        let out = spec.to_json().to_string();
+        assert!(out.contains("\"storage\""), "{out}");
+        assert!(out.contains("\"write_bandwidth\""), "{out}");
+        // an explicit storage object round-trips verbatim
+        let s = sample();
+        let re = MachineSpec::from_json(&Json::parse(&s.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(re.storage, s.storage);
+        // a partial storage object is a diagnosed error, not a silent default
+        let bad = Json::parse(
+            r#"{"name": "x", "workers_per_node": 2,
+                "peak_flops_per_worker": 1e12, "hbm_per_worker": 1e9,
+                "levels": [{"name": "l", "span": 2, "bandwidth": 1e9, "latency": 1e-6}],
+                "inter_node": {"bandwidth": 1e9, "latency": 1e-6},
+                "storage": {"write_bandwidth": 1e9}}"#,
+        )
+        .unwrap();
+        assert!(MachineSpec::from_json(&bad).is_err());
     }
 
     #[test]

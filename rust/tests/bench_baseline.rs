@@ -9,6 +9,7 @@ use std::path::PathBuf;
 use zero_topo::model::TransformerSpec;
 use zero_topo::sched::pipeline::PipeConfig;
 use zero_topo::sharding::Scheme;
+use zero_topo::sim::goodput::{checkpoint_cost, goodput, optimal_interval};
 use zero_topo::sim::{simulate_step, simulate_step_pipeline, SimConfig};
 use zero_topo::topology::{Cluster, MachineSpec};
 use zero_topo::util::json::Json;
@@ -59,6 +60,28 @@ fn committed_baseline_matches_simulator() {
             drift * 100.0,
             tol * 100.0
         );
+        // goodput pin (ISSUE 10): the DP entries also record net tokens/s
+        // at the Young/Daly optimal interval under the default 6h MTBF —
+        // gated with the same tolerance as step_s
+        if let Some(gbase) = e.get("goodput_tokens_per_s").and_then(|v| v.as_f64()) {
+            assert_eq!(pp, 1, "goodput pins cover the data-parallel entries");
+            let cluster = Cluster::new(MachineSpec::resolve(mname).unwrap(), nodes);
+            let b = simulate_step(&model, scheme, &cluster, &cfg);
+            let ck = checkpoint_cost(&model, scheme, &cluster, &cfg).expect("ckpt prices");
+            let mtbf = 21_600.0;
+            let tau = optimal_interval(mtbf, &ck).expect("tau* exists");
+            let tokens =
+                (b.grad_accum * cfg.micro_batch * model.seq * cluster.world_size()) as f64;
+            let g = goodput(b.step_s, tokens, &ck, mtbf, tau).expect("goodput prices");
+            let gdrift = (g.goodput_tokens_per_s - gbase) / gbase;
+            assert!(
+                gdrift.abs() <= tol,
+                "{mname}/{sname} goodput: {gbase} -> {} tok/s ({:+.3}% > {:.1}%)",
+                g.goodput_tokens_per_s,
+                gdrift * 100.0,
+                tol * 100.0
+            );
+        }
     }
     assert_eq!(pipeline_entries, 2, "the two pinned P=4 pipeline points must be present");
 }

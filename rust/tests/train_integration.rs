@@ -240,6 +240,33 @@ fn checkpoint_roundtrip_resumes_identically() {
 }
 
 #[test]
+fn failure_recovery_via_priced_checkpoint_matches_uninterrupted_run() {
+    // save -> node failure (the engine is dropped) -> restore into a fresh
+    // engine via the *priced* paths: the resumed losses must match the
+    // uninterrupted run bit-for-bit, and both legs must charge simulated
+    // seconds against the machine's storage path (DESIGN.md §17)
+    CTX.with(|ctx| {
+        let scheme = Scheme::ZeroTopo { sec_degree: 2 };
+        let mut full = TrainEngine::new(cfg(scheme, 4, 91), &ctx.tiny).unwrap();
+        let mut straight = Vec::new();
+        for _ in 0..4 {
+            straight.push(full.step().unwrap());
+        }
+        let mut first = TrainEngine::new(cfg(scheme, 4, 91), &ctx.tiny).unwrap();
+        first.step().unwrap();
+        first.step().unwrap();
+        let (ck, save_s) = first.checkpoint_priced();
+        assert!(save_s > 0.0, "save must cost simulated time, got {save_s}");
+        drop(first); // the failure: that engine and its state are gone
+        let mut resumed = TrainEngine::new(cfg(scheme, 4, 91), &ctx.tiny).unwrap();
+        let restore_s = resumed.restore_priced(&ck).unwrap();
+        assert!(restore_s > 0.0, "restore must cost simulated time, got {restore_s}");
+        assert_eq!(resumed.step().unwrap(), straight[2], "step 3 must be bit-identical");
+        assert_eq!(resumed.step().unwrap(), straight[3], "step 4 must be bit-identical");
+    });
+}
+
+#[test]
 fn grad_accumulation_equals_bigger_batch_direction() {
     // 2 accumulation steps halve per-micro noise; loss after N optimizer
     // steps should still decrease and stay finite
